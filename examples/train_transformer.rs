@@ -1,0 +1,83 @@
+//! End-to-end driver (DESIGN.md §E2E): train the real JAX/Pallas transformer
+//! LM from Rust via PJRT, with OLLA planning the training-step memory.
+//!
+//! Proves all three layers compose:
+//!   L1  the Pallas attention kernel is inside the lowered HLO;
+//!   L2  the JAX train step was AOT-compiled by `make artifacts`;
+//!   L3  this Rust binary loads the artifact, plans memory with OLLA over
+//!       the jaxpr-exported dataflow graph, and runs the training loop —
+//!       no Python anywhere on this path.
+//!
+//! Run with: `make artifacts && cargo run --release --example train_transformer`
+//! Flags: --steps N (default 300), --seed S, --artifacts DIR.
+
+use olla::runtime::{Engine, Manifest, Trainer};
+use olla::util::human_bytes;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn flag(name: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+fn main() -> anyhow::Result<()> {
+    let steps: u64 = flag("--steps").and_then(|s| s.parse().ok()).unwrap_or(300);
+    let seed: u64 = flag("--seed").and_then(|s| s.parse().ok()).unwrap_or(0);
+    let dir = PathBuf::from(flag("--artifacts").unwrap_or_else(|| "artifacts".into()));
+
+    let manifest = Manifest::load(&dir)?;
+    let cfg = manifest.config.clone();
+    let engine = Engine::cpu()?;
+    println!(
+        "artifacts: {} params ({} layers, d={}, seq={}, batch={}), platform={}",
+        manifest.param_count,
+        cfg.n_layers,
+        cfg.d_model,
+        cfg.seq_len,
+        cfg.batch,
+        engine.platform()
+    );
+
+    let mut trainer = Trainer::new(&engine, manifest, seed)?;
+
+    // OLLA plans the memory of the real captured training step.
+    let report = trainer.plan_memory(Duration::from_secs(30))?;
+    println!(
+        "\nOLLA memory plan over the jaxpr graph ({} nodes, {} tensors):",
+        report.nodes, report.edges
+    );
+    println!("  definition-order peak : {}", human_bytes(report.pytorch_peak));
+    println!(
+        "  OLLA schedule peak    : {} ({:.1}% reduction)",
+        human_bytes(report.olla_peak),
+        report.reduction_pct()
+    );
+    println!(
+        "  OLLA arena            : {} (fragmentation {:.2}%), planned in {:.2}s\n",
+        human_bytes(report.arena_size),
+        100.0 * report.fragmentation,
+        report.plan_secs
+    );
+
+    // Train, logging the loss curve.
+    let start = std::time::Instant::now();
+    let mut first = None;
+    for s in 1..=steps {
+        let loss = trainer.step()?;
+        first.get_or_insert(loss);
+        if s % 20 == 0 || s == 1 {
+            println!("step {s:>5}  loss {loss:.4}");
+        }
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+    let first = first.unwrap();
+    let last = trainer.losses.last().unwrap().1;
+    println!(
+        "\ntrained {steps} steps in {elapsed:.1}s ({:.2} steps/s): loss {first:.4} -> {last:.4}",
+        steps as f64 / elapsed
+    );
+    anyhow::ensure!(last < first, "loss did not decrease — training is broken");
+    println!("loss decreased ✓ — full three-layer stack verified");
+    Ok(())
+}

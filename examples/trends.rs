@@ -1,0 +1,41 @@
+//! Figures 1–2 background data: DNN parameter counts vs GPU memory capacity
+//! over the decade the paper covers. Static, well-known public data points
+//! (the paper's figures are motivation, not results).
+//!
+//! Run with: `cargo run --release --example trends`
+
+use olla::coordinator::Table;
+
+fn main() {
+    println!("Figure 1 — parameter counts of landmark DNNs (log-scale growth):\n");
+    let mut t = Table::new(&["year", "model", "parameters"]);
+    for (y, m, p) in [
+        (2012, "AlexNet", "61M"),
+        (2014, "VGG-19", "144M"),
+        (2015, "ResNet-152", "60M"),
+        (2018, "BERT-large", "340M"),
+        (2019, "GPT-2", "1.5B"),
+        (2020, "GPT-3", "175B"),
+        (2021, "Switch-C", "1.6T"),
+    ] {
+        t.row(vec![y.to_string(), m.into(), p.into()]);
+    }
+    t.print();
+
+    println!("\nFigure 2 — NVidia datacenter GPU memory (linear growth):\n");
+    let mut t = Table::new(&["year", "gpu", "memory"]);
+    for (y, g, m) in [
+        (2012, "K10", "8 GB"),
+        (2014, "K80", "24 GB"),
+        (2016, "P100", "16 GB"),
+        (2017, "V100", "16/32 GB"),
+        (2020, "A100", "40/80 GB"),
+    ] {
+        t.row(vec![y.to_string(), g.into(), m.into()]);
+    }
+    t.print();
+    println!(
+        "\n100,000x parameter growth vs 10x memory growth over the same\n\
+         decade — the \"memory wall\" motivating OLLA (§1)."
+    );
+}

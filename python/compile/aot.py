@@ -1,0 +1,135 @@
+"""AOT compile path: lower the L2 train step (with the L1 Pallas kernel
+inside) to HLO *text* plus a JSON manifest, for the Rust PJRT runtime.
+
+HLO text — NOT ``lowered.compiler_ir("hlo")`` protos or ``.serialize()`` —
+is the interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (what the published ``xla`` crate
+binds) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Outputs (under --out-dir, default ../artifacts):
+  train_step.hlo.txt   the jitted train step
+  predict.hlo.txt      forward-only logits (for the serving example)
+  manifest.json        arg/result specs + model config + param tree order
+  train_graph.json     jaxpr-derived dataflow graph for the OLLA optimizer
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as m
+from .graph_export import export_train_step_graph
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--n-heads", type=int, default=4)
+    ap.add_argument("--n-layers", type=int, default=2)
+    ap.add_argument("--d-ffn", type=int, default=256)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = m.ModelConfig(
+        vocab=args.vocab,
+        d_model=args.d_model,
+        n_heads=args.n_heads,
+        n_layers=args.n_layers,
+        d_ffn=args.d_ffn,
+        seq_len=args.seq_len,
+        batch=args.batch,
+    )
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    params = m.init_params(cfg, jax.random.PRNGKey(0))
+    momentum = m.init_momentum(params)
+    tokens = jnp.zeros((cfg.batch, cfg.seq_len), jnp.int32)
+    param_names = sorted(params.keys())
+    flat_params = [params[k] for k in param_names]
+    flat_momentum = [momentum[k] for k in param_names]
+
+    # Flat-argument wrappers make the Rust call convention trivial:
+    # train_step(flat_params..., flat_momentum..., tokens, targets)
+    #   -> (loss, new_params..., new_momentum...)
+    n = len(param_names)
+
+    def flat_train_step(*flat_args):
+        ps = dict(zip(param_names, flat_args[:n]))
+        ms = dict(zip(param_names, flat_args[n : 2 * n]))
+        toks, tgts = flat_args[2 * n], flat_args[2 * n + 1]
+        loss, new_p, new_m = m.make_train_step(cfg)(ps, ms, toks, tgts)
+        return (loss, *[new_p[k] for k in param_names], *[new_m[k] for k in param_names])
+
+    def flat_predict(*flat_args):
+        ps = dict(zip(param_names, flat_args[:n]))
+        toks = flat_args[n]
+        return (m.forward(cfg, ps, toks),)
+
+    example_train = [*flat_params, *flat_momentum, tokens, tokens]
+    lowered_train = jax.jit(flat_train_step).lower(*example_train)
+    train_hlo = to_hlo_text(lowered_train)
+    with open(os.path.join(args.out_dir, "train_step.hlo.txt"), "w") as f:
+        f.write(train_hlo)
+
+    lowered_pred = jax.jit(flat_predict).lower(*flat_params, tokens)
+    with open(os.path.join(args.out_dir, "predict.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered_pred))
+
+    graph = export_train_step_graph(cfg, os.path.join(args.out_dir, "train_graph.json"))
+
+    def spec(x):
+        return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+    manifest = {
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers,
+            "d_ffn": cfg.d_ffn,
+            "seq_len": cfg.seq_len,
+            "batch": cfg.batch,
+            "lr": cfg.lr,
+            "momentum": cfg.momentum,
+        },
+        "param_names": param_names,
+        "param_specs": [spec(params[k]) for k in param_names],
+        "param_count": int(sum(p.size for p in flat_params)),
+        "train_step": {
+            "args": [spec(a) for a in example_train],
+            "results": ["loss"] + [f"p:{k}" for k in param_names] + [f"m:{k}" for k in param_names],
+        },
+        "predict": {"args": [spec(a) for a in [*flat_params, tokens]]},
+        "graph_nodes": len(graph["nodes"]),
+        "graph_edges": len(graph["edges"]),
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+    print(
+        f"wrote artifacts to {args.out_dir}: "
+        f"train_step.hlo.txt ({len(train_hlo)} chars), predict.hlo.txt, "
+        f"manifest.json ({manifest['param_count']} params), "
+        f"train_graph.json ({len(graph['nodes'])} nodes / {len(graph['edges'])} edges)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Extract the OLLA dataflow graph from a jaxpr.
+
+The paper captures training graphs from PyTorch with torch.FX (§5.1). Our
+equivalent "real framework capture" path walks the closed jaxpr of the jitted
+train step and emits the graph-interchange JSON consumed by
+``olla::graph::json_io`` on the Rust side:
+
+* one node per jaxpr equation (primitive application);
+* one `Input`/`Parameter` node per invar (classified by the caller);
+* one edge per var, sized as ``aval.size * dtype.itemsize``, with the
+  producing equation as source and every consuming equation as a sink.
+
+Constants (literals) occupy no graph edge — they are baked into the
+executable, matching how the Rust optimizer treats weights vs. immediates.
+"""
+
+import json
+
+import jax
+
+
+def jaxpr_to_graph(closed_jaxpr, name, n_param_leaves):
+    """Convert a ClosedJaxpr into the interchange dict.
+
+    Args:
+      closed_jaxpr: from ``jax.make_jaxpr(fn)(*args)``.
+      name: graph name.
+      n_param_leaves: the first N flat invars are parameters (the rest are
+        optimizer state / batch inputs).
+    """
+    jaxpr = closed_jaxpr.jaxpr
+    nodes = []
+    edges = []
+    producer = {}  # var -> edge index
+
+    def size_of(var):
+        aval = var.aval
+        return int(aval.size) * aval.dtype.itemsize
+
+    # Source nodes for the invars.
+    for i, var in enumerate(jaxpr.invars):
+        kind = "parameter" if i < n_param_leaves else "input"
+        node_id = len(nodes)
+        nodes.append({"name": f"{kind}{i}", "kind": kind})
+        producer[var] = len(edges)
+        edges.append(
+            {
+                "name": f"in{i}",
+                "src": node_id,
+                "snks": [],
+                "size": size_of(var),
+            }
+        )
+
+    # One node per equation.
+    for ei, eqn in enumerate(jaxpr.eqns):
+        node_id = len(nodes)
+        nodes.append({"name": f"{eqn.primitive.name}_{ei}", "kind": "compute"})
+        for var in eqn.invars:
+            if hasattr(var, "val"):
+                continue  # literal
+            if var in producer:
+                snks = edges[producer[var]]["snks"]
+                if node_id not in snks:
+                    snks.append(node_id)
+        for var in eqn.outvars:
+            producer[var] = len(edges)
+            edges.append(
+                {
+                    "name": f"t{len(edges)}",
+                    "src": node_id,
+                    "snks": [],
+                    "size": size_of(var),
+                }
+            )
+
+    # A terminal output node consuming the jaxpr outputs keeps result
+    # tensors live to the end of the program.
+    out_id = len(nodes)
+    nodes.append({"name": "outputs", "kind": "output"})
+    for var in jaxpr.outvars:
+        if hasattr(var, "val"):
+            continue
+        if var in producer:
+            snks = edges[producer[var]]["snks"]
+            if out_id not in snks:
+                snks.append(out_id)
+
+    return {"name": name, "nodes": nodes, "edges": edges}
+
+
+def export_train_step_graph(cfg, path):
+    """Trace the train step and write its graph JSON. Returns the dict."""
+    from . import model as m
+
+    params = m.init_params(cfg, jax.random.PRNGKey(0))
+    momentum = m.init_momentum(params)
+    tokens = jax.numpy.zeros((cfg.batch, cfg.seq_len), jax.numpy.int32)
+    targets = tokens
+    step = m.make_train_step(cfg)
+    n_params = len(jax.tree.leaves(params))
+    closed = jax.make_jaxpr(step)(params, momentum, tokens, targets)
+    g = jaxpr_to_graph(closed, f"transformer-train-bs{cfg.batch}", n_params)
+    with open(path, "w") as f:
+        json.dump(g, f)
+    return g

@@ -1,0 +1,126 @@
+"""L1: fused scaled-dot-product attention as a Pallas kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): instead of a
+CUDA-style threadblock decomposition with shared-memory staging, the kernel
+tiles the query sequence into VMEM-resident blocks via ``BlockSpec`` (grid =
+(batch*heads, seq/block_q)); each grid step streams the full K/V panels for
+one head into VMEM and computes a numerically-stable softmax in registers.
+The B*H*S*S score tensor — the transformer's largest transient, and the
+motivating hot-spot for OLLA's lifetime analysis — only ever materializes
+one (block_q, S) tile at a time in VMEM, never in HBM.
+
+The kernel MUST run with ``interpret=True`` on this image: real-TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+``interpret=True`` lowers to plain HLO, so the same computation compiles
+into the AOT artifact the Rust runtime loads.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, scale):
+    """One (block_q, head_dim) output tile.
+
+    q_ref: [block_q, d] VMEM tile of queries.
+    k_ref/v_ref: [seq, d] VMEM panels for this batch*head.
+    o_ref: [block_q, d] output tile.
+    """
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    # [block_q, seq] score tile — the only materialization of the scores.
+    scores = jnp.dot(q, k.T) * scale
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(e / denom, v).astype(o_ref.dtype)
+
+
+def _attention_bwd_kernel(q_ref, k_ref, v_ref, do_ref, dq_ref, dk_ref, dv_ref, *, scale):
+    """Backward pass for one batch*head (full-sequence tile).
+
+    Recomputes the probability tile (rematerialization — cheaper than
+    keeping B*H*S*S probabilities alive, the same trade the paper's §6
+    rematerialization discussion describes) and produces dQ/dK/dV.
+    """
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    do = do_ref[0]
+    scores = jnp.dot(q, k.T) * scale
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)  # [s, s]
+    dv = jnp.dot(p.T, do)
+    dp = jnp.dot(do, v.T)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True)) * scale
+    dq = jnp.dot(ds, k)
+    dk = jnp.dot(ds.T, q)
+    dq_ref[0] = dq.astype(dq_ref.dtype)
+    dk_ref[0] = dk.astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def attention(q, k, v, block_q=32):
+    """Fused attention over [bh, seq, d] inputs (bh = batch*heads).
+
+    VMEM footprint per grid step (f32): block_q*d (Q tile) + 2*seq*d (K/V
+    panels) + block_q*seq (score tile) + block_q*d (output). With the
+    defaults (block_q=32, seq<=512, d<=128) this stays well under 1 MiB —
+    see DESIGN.md §9 for the TPU estimate.
+    """
+    bh, seq, d = q.shape
+    block_q = min(block_q, seq)
+    # Pad seq to a multiple of block_q so the grid tiles exactly.
+    pad = (-seq) % block_q
+    if pad:
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0)))
+    else:
+        qp = q
+    padded_seq = seq + pad
+    scale = 1.0 / math.sqrt(d)
+
+    out = pl.pallas_call(
+        functools.partial(_attention_kernel, scale=scale),
+        grid=(bh, padded_seq // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, seq, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, seq, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, padded_seq, d), q.dtype),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(qp, k, v)
+    return out[:, :seq, :]
+
+
+def _attention_fwd(q, k, v, block_q):
+    return attention(q, k, v, block_q), (q, k, v)
+
+
+def _attention_bwd(block_q, res, do):
+    q, k, v = res
+    del block_q  # backward uses full-sequence tiles
+    bh, seq, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+    spec = pl.BlockSpec((1, seq, d), lambda b: (b, 0, 0))
+    shape = jax.ShapeDtypeStruct((bh, seq, d), q.dtype)
+    dq, dk, dv = pl.pallas_call(
+        functools.partial(_attention_bwd_kernel, scale=scale),
+        grid=(bh,),
+        in_specs=[spec, spec, spec, spec],
+        out_specs=[spec, spec, spec],
+        out_shape=[shape, shape, shape],
+        interpret=True,
+    )(q, k, v, do)
+    return dq, dk, dv
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)

@@ -1,0 +1,38 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest/hypothesis suites compare the kernels
+against. The paper's L1 hot-spot in a transformer training step is
+attention: the B*H*S*S score tensor is the largest transient activation.
+"""
+
+import jax.numpy as jnp
+
+
+def _softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def attention_ref(q, k, v, scale=None):
+    """Reference scaled-dot-product attention.
+
+    Args:
+      q, k, v: [batch*heads, seq, head_dim] arrays.
+      scale: optional softmax temperature; defaults to 1/sqrt(head_dim).
+
+    Returns:
+      [batch*heads, seq, head_dim] attention output.
+    """
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=q.dtype))
+    scores = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    probs = _softmax(scores)
+    return jnp.einsum("bqk,bkd->bqd", probs, v)
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    """Reference LayerNorm over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta

@@ -1,0 +1,133 @@
+"""L2: transformer language model and its training step, in JAX.
+
+This is the real workload whose memory OLLA plans end-to-end: a pre-norm
+decoder-only transformer LM trained with SGD+momentum on next-token
+prediction. Attention is computed by the L1 Pallas kernel
+(:mod:`compile.kernels.attention`), so the kernel lowers into the same HLO
+artifact the Rust runtime executes.
+
+Build-time only: nothing in this package is imported on the request path.
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer hyper-parameters."""
+
+    vocab: int = 512
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ffn: int = 256
+    seq_len: int = 32
+    batch: int = 8
+    lr: float = 0.1
+    momentum: float = 0.9
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+    def param_count(self, params=None):
+        params = params or init_params(self, jax.random.PRNGKey(0))
+        return sum(p.size for p in jax.tree.leaves(params))
+
+
+def init_params(cfg: ModelConfig, key):
+    """Initialize the parameter pytree (a flat dict of arrays)."""
+    params = {}
+    k = iter(jax.random.split(key, 4 + 8 * cfg.n_layers))
+
+    def glorot(key, shape):
+        fan = sum(shape)
+        return jax.random.normal(key, shape, jnp.float32) * math.sqrt(2.0 / fan)
+
+    params["embed"] = glorot(next(k), (cfg.vocab, cfg.d_model))
+    params["pos"] = glorot(next(k), (cfg.seq_len, cfg.d_model))
+    for i in range(cfg.n_layers):
+        p = f"l{i}."
+        params[p + "ln1_g"] = jnp.ones((cfg.d_model,))
+        params[p + "ln1_b"] = jnp.zeros((cfg.d_model,))
+        params[p + "qkv"] = glorot(next(k), (cfg.d_model, 3 * cfg.d_model))
+        params[p + "proj"] = glorot(next(k), (cfg.d_model, cfg.d_model))
+        params[p + "ln2_g"] = jnp.ones((cfg.d_model,))
+        params[p + "ln2_b"] = jnp.zeros((cfg.d_model,))
+        params[p + "fc1"] = glorot(next(k), (cfg.d_model, cfg.d_ffn))
+        params[p + "fc2"] = glorot(next(k), (cfg.d_ffn, cfg.d_model))
+    params["ln_f_g"] = jnp.ones((cfg.d_model,))
+    params["ln_f_b"] = jnp.zeros((cfg.d_model,))
+    params["head"] = glorot(next(k), (cfg.d_model, cfg.vocab))
+    return params
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    """Logits for a [batch, seq] int32 token tensor."""
+    b, s = tokens.shape
+    x = params["embed"][tokens] + params["pos"][None, :s, :]
+    for i in range(cfg.n_layers):
+        p = f"l{i}."
+        h = _layernorm(x, params[p + "ln1_g"], params[p + "ln1_b"])
+        qkv = h @ params[p + "qkv"]  # [b, s, 3d]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(t):
+            return (
+                t.reshape(b, s, cfg.n_heads, cfg.head_dim)
+                .transpose(0, 2, 1, 3)
+                .reshape(b * cfg.n_heads, s, cfg.head_dim)
+            )
+
+        ctx = attention(heads(q), heads(k), heads(v))  # L1 Pallas kernel
+        ctx = (
+            ctx.reshape(b, cfg.n_heads, s, cfg.head_dim)
+            .transpose(0, 2, 1, 3)
+            .reshape(b, s, cfg.d_model)
+        )
+        x = x + ctx @ params[p + "proj"]
+        h2 = _layernorm(x, params[p + "ln2_g"], params[p + "ln2_b"])
+        ff = jax.nn.gelu(h2 @ params[p + "fc1"]) @ params[p + "fc2"]
+        x = x + ff
+    x = _layernorm(x, params["ln_f_g"], params["ln_f_b"])
+    return x @ params["head"]
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, targets):
+    """Mean next-token cross-entropy."""
+    logits = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def make_train_step(cfg: ModelConfig):
+    """Build the jittable train step:
+    (params, momentum, tokens, targets) -> (loss, params', momentum')."""
+
+    def train_step(params, momentum, tokens, targets):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens, targets))(
+            params
+        )
+        new_m = jax.tree.map(lambda m, g: cfg.momentum * m + g, momentum, grads)
+        new_p = jax.tree.map(lambda p, m: p - cfg.lr * m, params, new_m)
+        return loss, new_p, new_m
+
+    return train_step
+
+
+def init_momentum(params):
+    """Zero momentum pytree matching params."""
+    return jax.tree.map(jnp.zeros_like, params)

@@ -1,0 +1,114 @@
+"""L1 kernel correctness: Pallas attention vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref.py is the
+core correctness signal for the AOT artifact (the same kernel lowers into
+train_step.hlo.txt).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import attention
+from compile.kernels.ref import attention_ref, layernorm_ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def tol(dtype):
+    return dict(rtol=3e-5, atol=3e-5) if dtype == jnp.float32 else dict(rtol=2e-2, atol=2e-2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bh=st.integers(1, 4),
+    seq=st.integers(1, 65),
+    d=st.sampled_from([4, 8, 16, 64]),
+    block_q=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref_f32(bh, seq, d, block_q, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q, k, v = (rand(ks[i], (bh, seq, d), jnp.float32) for i in range(3))
+    out = attention(q, k, v, block_q)
+    ref = attention_ref(q, k, v)
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **tol(jnp.float32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seq=st.integers(2, 40),
+    d=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_bf16(seq, d, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q, k, v = (rand(ks[i], (2, seq, d), jnp.bfloat16) for i in range(3))
+    out = attention(q, k, v)
+    ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))
+    np.testing.assert_allclose(
+        np.asarray(out, dtype=np.float32), np.asarray(ref), **tol(jnp.bfloat16)
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seq=st.integers(2, 48),
+    d=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_gradients_match_ref(seq, d, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q, k, v = (rand(ks[i], (2, seq, d), jnp.float32) for i in range(3))
+    do = rand(ks[3], (2, seq, d), jnp.float32)
+
+    g = jax.grad(lambda q, k, v: jnp.sum(attention(q, k, v) * do), argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(lambda q, k, v: jnp.sum(attention_ref(q, k, v) * do), argnums=(0, 1, 2))(
+        q, k, v
+    )
+    for a, b in zip(g, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_attention_rows_sum_to_convex_combination():
+    # Each output row is a convex combination of V rows: with constant V,
+    # the output must equal that constant.
+    q = jax.random.normal(jax.random.PRNGKey(0), (3, 20, 8))
+    k = jax.random.normal(jax.random.PRNGKey(1), (3, 20, 8))
+    v = jnp.ones((3, 20, 8)) * 2.5
+    out = attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), 2.5 * np.ones_like(out), rtol=1e-5)
+
+
+def test_attention_permutation_equivariance_over_kv():
+    # Softmax attention is invariant to a joint permutation of K and V rows.
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q, k, v = (jax.random.normal(ks[i], (1, 16, 8)) for i in range(3))
+    perm = np.random.RandomState(0).permutation(16)
+    out1 = attention(q, k, v)
+    out2 = attention(q, k[:, perm, :], v[:, perm, :])
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=2e-5, atol=2e-5)
+
+
+def test_layernorm_ref_properties():
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 32))
+    out = layernorm_ref(x, jnp.ones((32,)), jnp.zeros((32,)))
+    np.testing.assert_allclose(np.asarray(jnp.mean(out, -1)), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(jnp.std(out, -1)), 1.0, atol=1e-2)
+
+
+@pytest.mark.parametrize("block_q", [1, 7, 32, 64])
+def test_block_q_never_changes_results(block_q):
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q, k, v = (jax.random.normal(ks[i], (2, 33, 16)) for i in range(3))
+    base = attention(q, k, v, 16)
+    out = attention(q, k, v, block_q)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base), rtol=2e-5, atol=2e-5)

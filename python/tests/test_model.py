@@ -1,0 +1,96 @@
+"""L2 model tests: shapes, loss behaviour, train-step updates, graph export."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as m
+from compile.graph_export import jaxpr_to_graph
+
+CFG = m.ModelConfig(
+    vocab=64, d_model=32, n_heads=2, n_layers=2, d_ffn=64, seq_len=16, batch=2
+)
+
+
+def _data(key):
+    kt, kg = jax.random.split(key)
+    tokens = jax.random.randint(kt, (CFG.batch, CFG.seq_len), 0, CFG.vocab)
+    targets = jax.random.randint(kg, (CFG.batch, CFG.seq_len), 0, CFG.vocab)
+    return tokens, targets
+
+
+def test_forward_shapes():
+    params = m.init_params(CFG, jax.random.PRNGKey(0))
+    tokens, _ = _data(jax.random.PRNGKey(1))
+    logits = m.forward(CFG, params, tokens)
+    assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_initial_loss_near_uniform():
+    params = m.init_params(CFG, jax.random.PRNGKey(0))
+    tokens, targets = _data(jax.random.PRNGKey(1))
+    loss = m.loss_fn(CFG, params, tokens, targets)
+    uniform = np.log(CFG.vocab)
+    assert abs(float(loss) - uniform) < 1.0, f"loss {loss} vs ln(V) {uniform}"
+
+
+def test_train_step_reduces_loss_on_fixed_batch():
+    params = m.init_params(CFG, jax.random.PRNGKey(0))
+    momentum = m.init_momentum(params)
+    tokens, targets = _data(jax.random.PRNGKey(2))
+    step = jax.jit(m.make_train_step(CFG))
+    first = None
+    loss = None
+    for _ in range(10):
+        loss, params, momentum = step(params, momentum, tokens, targets)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first, f"{float(loss)} !< {first}"
+
+
+def test_train_step_updates_every_parameter():
+    params = m.init_params(CFG, jax.random.PRNGKey(0))
+    momentum = m.init_momentum(params)
+    tokens, targets = _data(jax.random.PRNGKey(3))
+    step = jax.jit(m.make_train_step(CFG))
+    _, new_params, _ = step(params, momentum, tokens, targets)
+    for k in params:
+        delta = float(jnp.max(jnp.abs(new_params[k] - params[k])))
+        assert delta > 0, f"parameter {k} did not move"
+
+
+def test_graph_export_matches_interchange_schema():
+    params = m.init_params(CFG, jax.random.PRNGKey(0))
+    momentum = m.init_momentum(params)
+    tokens, targets = _data(jax.random.PRNGKey(4))
+    step = m.make_train_step(CFG)
+    n_leaves = len(jax.tree.leaves(params))
+    closed = jax.make_jaxpr(step)(params, momentum, tokens, targets)
+    g = jaxpr_to_graph(closed, "t", n_leaves)
+    assert g["nodes"] and g["edges"]
+    n = len(g["nodes"])
+    names = set()
+    for node in g["nodes"]:
+        assert node["name"] not in names, "duplicate node name"
+        names.add(node["name"])
+    for e in g["edges"]:
+        assert 0 <= e["src"] < n
+        assert all(0 <= s < n for s in e["snks"])
+        assert e["size"] >= 0
+        # acyclic by construction: sinks always have larger ids than sources
+        assert all(s > e["src"] for s in e["snks"])
+    kinds = {nd["kind"] for nd in g["nodes"]}
+    assert {"parameter", "input", "compute", "output"} <= kinds
+
+
+def test_graph_export_edge_sizes_are_bytes():
+    params = m.init_params(CFG, jax.random.PRNGKey(0))
+    momentum = m.init_momentum(params)
+    tokens, targets = _data(jax.random.PRNGKey(5))
+    n_leaves = len(jax.tree.leaves(params))
+    closed = jax.make_jaxpr(m.make_train_step(CFG))(params, momentum, tokens, targets)
+    g = jaxpr_to_graph(closed, "t", n_leaves)
+    # The embedding table invar must appear with its full byte size.
+    embed_bytes = CFG.vocab * CFG.d_model * 4
+    assert any(e["size"] == embed_bytes for e in g["edges"])

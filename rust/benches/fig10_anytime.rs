@@ -1,0 +1,41 @@
+//! Figure 10: memory saved (%) as a function of solver time — the anytime
+//! behaviour of the scheduling ILP on its hardest instance (EfficientNet).
+//!
+//! Paper reference: EfficientNet needs ~2 min (bs1) for optimal and ~5 min
+//! (bs32) for within-1%-of-optimal; the curve climbs quickly then plateaus.
+
+use olla::bench_support::section;
+use olla::coordinator::{reorder_experiment, ModelCase};
+use olla::models::{build_graph, ModelScale};
+use olla::olla::ScheduleOptions;
+use std::time::Duration;
+
+fn main() {
+    section("Figure 10 — memory saved over solver time (EfficientNet)");
+    let cap = std::env::var("OLLA_BENCH_CAP_SECS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(45.0);
+    for batch in [1usize, 32] {
+        let graph = build_graph("efficientnet", batch, ModelScale::Reduced).unwrap();
+        let case = ModelCase { name: "efficientnet".into(), batch, graph };
+        let opts = ScheduleOptions {
+            time_limit: Duration::from_secs_f64(cap),
+            ..Default::default()
+        };
+        let row = reorder_experiment(&case, &opts);
+        println!(
+            "\nefficientnet bs{batch}: pytorch={} final olla={} ({:.1}%), status={}",
+            row.pytorch_peak, row.olla_peak, row.reduction_pct, row.status
+        );
+        println!("  t(secs)   ilp objective(bytes)   saved vs pytorch");
+        for (t, obj) in &row.incumbents {
+            println!(
+                "  {:>7.2}   {:>20.0}   {:>6.1}%",
+                t,
+                obj,
+                100.0 * (1.0 - obj / row.pytorch_peak as f64)
+            );
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! Figure 11: fragmentation-elimination (address generation) times at batch
+//! 1 and 32.
+//!
+//! Paper reference: median 5.7 ± 0.6 s; GoogleNet and EfficientNet are the
+//! hard cases (Figure 12) but reach <1% fragmentation within 5 minutes.
+
+use olla::bench_support::{fmt_secs, phase_cap, section};
+use olla::coordinator::{fragmentation_experiment, zoo_cases, Table};
+use olla::models::ModelScale;
+use olla::olla::PlacementOptions;
+use olla::util::median;
+
+fn main() {
+    section("Figure 11 — fragmentation elimination (address generation) times");
+    let opts = PlacementOptions { time_limit: phase_cap(), ..Default::default() };
+    let mut table = Table::new(&["model", "batch", "method", "frag", "time"]);
+    let mut times = Vec::new();
+    for case in zoo_cases(&[1, 32], ModelScale::Reduced) {
+        let row = fragmentation_experiment(&case, &opts);
+        if !matches!(case.name.as_str(), "efficientnet" | "googlenet") {
+            times.push(row.addr_secs);
+        }
+        table.row(vec![
+            row.model,
+            row.batch.to_string(),
+            row.method,
+            format!("{:.2}%", row.olla_frag_pct),
+            fmt_secs(row.addr_secs),
+        ]);
+    }
+    table.print();
+    println!(
+        "median address-generation time (excl. googlenet/efficientnet): {} (paper: 5.7s)",
+        fmt_secs(median(&times))
+    );
+}

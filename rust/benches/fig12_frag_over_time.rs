@@ -1,0 +1,48 @@
+//! Figure 12: memory fragmentation (%) vs optimization time for the two
+//! hard placement instances (GoogleNet, EfficientNet).
+//!
+//! Paper reference: fragmentation decreases quickly towards 0 as the solver
+//! gets more time; <1% within 5 minutes.
+//!
+//! The zero-fragmentation fast path (heuristic == lower bound) is disabled
+//! here so the ILP's anytime trajectory is visible.
+
+use olla::bench_support::section;
+use olla::coordinator::{fragmentation_experiment, ModelCase};
+use olla::models::{build_graph, ModelScale};
+use olla::olla::PlacementOptions;
+use std::time::Duration;
+
+fn main() {
+    section("Figure 12 — fragmentation over optimization time");
+    let cap = std::env::var("OLLA_BENCH_CAP_SECS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(45.0);
+    for name in ["googlenet", "efficientnet"] {
+        for batch in [1usize, 32] {
+            let graph = build_graph(name, batch, ModelScale::Reduced).unwrap();
+            let case = ModelCase { name: name.into(), batch, graph };
+            let opts = PlacementOptions {
+                time_limit: Duration::from_secs_f64(cap),
+                skip_ilp_if_tight: false, // expose the anytime curve
+                ..Default::default()
+            };
+            let row = fragmentation_experiment(&case, &opts);
+            println!(
+                "\n{name} bs{batch}: final frag {:.2}% via {} in {:.2}s",
+                row.olla_frag_pct, row.method, row.addr_secs
+            );
+            println!("  t(secs)   arena(bytes)    frag");
+            let lb = row.olla_arena as f64 * (1.0 - row.olla_frag_pct / 100.0);
+            for (t, arena) in &row.incumbents {
+                println!(
+                    "  {:>7.2}   {:>12.0}   {:>5.2}%",
+                    t,
+                    arena,
+                    100.0 * (1.0 - lb / arena).max(0.0)
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,41 @@
+//! Figure 13: total reduction in peak training memory — both optimizations
+//! combined, against PyTorch (definition order + caching allocator), under
+//! the paper's capped-time protocol.
+//!
+//! Paper reference: average 30.4% (bs1) and 36.1% (bs32) within the cap.
+
+use olla::bench_support::{fmt_pct, fmt_secs, phase_cap, section};
+use olla::coordinator::{total_experiment, zoo_cases, Table};
+use olla::models::ModelScale;
+use olla::olla::{PlacementOptions, ScheduleOptions};
+use olla::util::{human_bytes, mean};
+
+fn main() {
+    section("Figure 13 — total peak memory reduction (lifetime + location)");
+    let sched = ScheduleOptions { time_limit: phase_cap(), ..Default::default() };
+    let place = PlacementOptions { time_limit: phase_cap(), ..Default::default() };
+    let mut table = Table::new(&[
+        "model", "batch", "pytorch total", "olla total", "reduction", "plan time",
+    ]);
+    let mut per_batch: std::collections::BTreeMap<usize, Vec<f64>> = Default::default();
+    for case in zoo_cases(&[1, 32], ModelScale::Reduced) {
+        let row = total_experiment(&case, &sched, &place);
+        per_batch.entry(row.batch).or_default().push(row.reduction_pct);
+        table.row(vec![
+            row.model,
+            row.batch.to_string(),
+            human_bytes(row.pytorch_total),
+            human_bytes(row.olla_total),
+            fmt_pct(row.reduction_pct),
+            fmt_secs(row.plan_secs),
+        ]);
+    }
+    table.print();
+    for (batch, reds) in &per_batch {
+        println!(
+            "average total reduction @ bs{batch}: {} (paper: {})",
+            fmt_pct(mean(reds)),
+            if *batch == 1 { "30.4%" } else { "36.1%" }
+        );
+    }
+}

@@ -1,0 +1,37 @@
+//! Figure 9: node-ordering (scheduling ILP) solve times at batch 1 and 32.
+//!
+//! Paper reference: median 1.4 ± 0.2 s; worst non-EfficientNet case 5.2 s;
+//! EfficientNet is tracked separately (Figure 10).
+
+use olla::bench_support::{fmt_secs, phase_cap, section};
+use olla::coordinator::{reorder_experiment, zoo_cases, Table};
+use olla::models::ModelScale;
+use olla::olla::ScheduleOptions;
+use olla::util::median;
+
+fn main() {
+    section("Figure 9 — node ordering times");
+    let opts = ScheduleOptions { time_limit: phase_cap(), ..Default::default() };
+    let mut table =
+        Table::new(&["model", "batch", "ilp vars", "ilp rows", "status", "time"]);
+    let mut times = Vec::new();
+    for case in zoo_cases(&[1, 32], ModelScale::Reduced) {
+        let row = reorder_experiment(&case, &opts);
+        if case.name != "efficientnet" {
+            times.push(row.solve_secs);
+        }
+        table.row(vec![
+            row.model,
+            row.batch.to_string(),
+            row.model_size.0.to_string(),
+            row.model_size.1.to_string(),
+            row.status,
+            fmt_secs(row.solve_secs),
+        ]);
+    }
+    table.print();
+    println!(
+        "median ordering time (excl. efficientnet): {} (paper: 1.4s median, 5.2s worst)",
+        fmt_secs(median(&times))
+    );
+}

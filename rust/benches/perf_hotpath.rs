@@ -1,0 +1,79 @@
+//! §Perf microbenchmarks for the L3 hot paths (EXPERIMENTS.md §Perf):
+//! graph analyses, formulation build, one LP relaxation, heuristic
+//! schedulers, placement, allocators. These are the numbers the performance
+//! pass tracks before/after each optimization.
+
+use olla::alloc::arena::Arena;
+use olla::alloc::caching::CachingAllocator;
+use olla::alloc::items_from_trace;
+use olla::bench_support::{section, time_median, time_once};
+use olla::graph::analysis::{ReachMatrix, Spans};
+use olla::ilp::simplex::{solve_lp_default, LpOptions};
+use olla::models::{build_graph, ModelScale};
+use olla::olla::scheduling::build_scheduling_model;
+use olla::olla::{optimize, PlannerOptions};
+use olla::sched::orders::pytorch_order;
+use olla::sched::sim::simulate;
+use olla::sched::greedy_order;
+use olla::util::human_duration;
+
+fn main() {
+    section("perf: L3 hot paths");
+    let g = build_graph("resnet50", 32, ModelScale::Full).unwrap();
+    println!("workload: resnet50-bs32 full scale: {} nodes, {} edges", g.num_nodes(), g.num_edges());
+
+    let d = time_median(5, || Spans::compute(&g));
+    println!("spans (ASAP/ALAP)          : {}", human_duration(d));
+    let d = time_median(5, || ReachMatrix::build(&g));
+    println!("reachability matrix        : {}", human_duration(d));
+    let d = time_median(5, || pytorch_order(&g));
+    println!("pytorch order              : {}", human_duration(d));
+    let d = time_median(5, || greedy_order(&g));
+    println!("greedy order               : {}", human_duration(d));
+    let d = time_median(5, || simulate(&g, &pytorch_order(&g)));
+    println!("resident-set simulation    : {}", human_duration(d));
+
+    let (sm, d) = time_once(|| build_scheduling_model(&g, Some(120)));
+    println!(
+        "eq.14 model build (T=120)  : {} ({} vars, {} rows)",
+        human_duration(d),
+        sm.model.num_vars(),
+        sm.model.num_cons()
+    );
+
+    // One LP relaxation on a mid-size instance (alexnet engages the ILP).
+    let ga = build_graph("alexnet", 1, ModelScale::Full).unwrap();
+    let mut work = ga.clone();
+    olla::olla::control_edges::enforce_early_weight_updates(&mut work);
+    let crit = olla::graph::analysis::forward_levels(&work)
+        .iter()
+        .copied()
+        .max()
+        .unwrap()
+        + 1;
+    let sma = build_scheduling_model(&work, Some(work.num_nodes().min(crit + 6)));
+    let (r, d) = time_once(|| solve_lp_default(&sma.model, &LpOptions::default()));
+    println!(
+        "eq.14 LP relaxation (alexnet): {} ({} simplex iters, status {:?})",
+        human_duration(d),
+        r.iters,
+        r.status
+    );
+
+    // Placement heuristic + allocator replays on the big trace.
+    let trace = simulate(&g, &pytorch_order(&g));
+    let items = items_from_trace(&g, &trace);
+    let d = time_median(3, || olla::alloc::bestfit::best_fit_multi(&items, 1));
+    println!("best-fit placement ({} items): {}", items.len(), human_duration(d));
+    let d = time_median(3, || {
+        let mut ca = CachingAllocator::new();
+        ca.replay(&trace.events);
+        ca
+    });
+    println!("caching-allocator replay   : {}", human_duration(d));
+    let plan = optimize(&g, &PlannerOptions::fast_test());
+    let ptrace = simulate(&g, &plan.order);
+    let mut arena = Arena::new(plan.arena_plan());
+    let d = time_median(5, || arena.replay(&ptrace.events));
+    println!("arena replay               : {}", human_duration(d));
+}

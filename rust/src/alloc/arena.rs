@@ -1,0 +1,95 @@
+//! The OLLA runtime allocator (§3.5): all tensors live in one preallocated
+//! buffer `B`; the k-th allocation request of a training iteration maps to a
+//! precomputed offset, and deallocation is a no-op. This is what makes
+//! OLLA *faster* than a dynamic allocator at run time (Figure 14).
+
+use crate::graph::EdgeId;
+use crate::sched::sim::AllocEvent;
+use std::collections::HashMap;
+
+/// A static memory plan: one offset per planned tensor plus the arena size.
+#[derive(Debug, Clone)]
+pub struct ArenaPlan {
+    /// Offset of each planned tensor within the arena.
+    pub offsets: HashMap<EdgeId, u64>,
+    /// Total arena bytes (`peak_mem` in the paper).
+    pub arena_size: u64,
+}
+
+/// Runtime arena executing a plan. Allocation is a single table lookup and
+/// deallocation does nothing — the contrast with
+/// [`crate::alloc::caching::CachingAllocator`] measured in Figure 14.
+#[derive(Debug)]
+pub struct Arena {
+    plan: ArenaPlan,
+    /// Allocation requests served.
+    pub alloc_calls: u64,
+}
+
+impl Arena {
+    /// Create an arena for a plan.
+    pub fn new(plan: ArenaPlan) -> Self {
+        Arena { plan, alloc_calls: 0 }
+    }
+
+    /// Arena size in bytes.
+    pub fn size(&self) -> u64 {
+        self.plan.arena_size
+    }
+
+    /// "Allocate" a tensor: return its planned offset.
+    #[inline]
+    pub fn alloc(&mut self, id: EdgeId) -> u64 {
+        self.alloc_calls += 1;
+        self.plan.offsets[&id]
+    }
+
+    /// "Free" a tensor: a no-op by design.
+    #[inline]
+    pub fn free(&mut self, _id: EdgeId) {}
+
+    /// Replay an event trace, returning the offsets served (for
+    /// verification against the plan).
+    pub fn replay(&mut self, events: &[AllocEvent]) -> Vec<u64> {
+        let mut served = Vec::new();
+        for ev in events {
+            match *ev {
+                AllocEvent::Alloc(e, _) => served.push(self.alloc(e)),
+                AllocEvent::Free(e) => self.free(e),
+            }
+        }
+        served
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_returns_planned_offsets_and_free_is_noop() {
+        let mut offsets = HashMap::new();
+        offsets.insert(EdgeId(0), 0u64);
+        offsets.insert(EdgeId(1), 128u64);
+        let mut a = Arena::new(ArenaPlan { offsets, arena_size: 256 });
+        assert_eq!(a.alloc(EdgeId(0)), 0);
+        assert_eq!(a.alloc(EdgeId(1)), 128);
+        a.free(EdgeId(0));
+        assert_eq!(a.alloc_calls, 2);
+        assert_eq!(a.size(), 256);
+    }
+
+    #[test]
+    fn replay_serves_in_trace_order() {
+        let mut offsets = HashMap::new();
+        offsets.insert(EdgeId(0), 64u64);
+        offsets.insert(EdgeId(1), 0u64);
+        let mut a = Arena::new(ArenaPlan { offsets, arena_size: 128 });
+        let trace = vec![
+            AllocEvent::Alloc(EdgeId(0), 10),
+            AllocEvent::Alloc(EdgeId(1), 10),
+            AllocEvent::Free(EdgeId(0)),
+        ];
+        assert_eq!(a.replay(&trace), vec![64, 0]);
+    }
+}

@@ -1,0 +1,319 @@
+//! Static best-fit-by-offset placement (the classic ahead-of-time memory
+//! planner used by TFLite/TVM). Given tensor sizes and live intervals, it
+//! assigns byte offsets greedily. OLLA uses the result as the placement
+//! ILP's warm-start incumbent; when the heuristic already reaches the
+//! resident-set lower bound the ILP is skipped (the bound proves
+//! optimality — this is the empirical observation of §4.4).
+
+use super::PlacementItem;
+
+/// Ordering strategy for the greedy sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FitOrder {
+    /// Largest tensors first (TFLite's "greedy by size").
+    SizeDesc,
+    /// Allocation-time order (what an online allocator would see).
+    StartTime,
+    /// Longest-lived first (pairs with the §4.5 pyramid intuition).
+    DurationDesc,
+}
+
+/// Place `items`, honoring `preplaced` (item index → fixed offset) if given.
+/// Returns offsets aligned to `align` bytes (use 1 for exact packing).
+pub fn best_fit_offsets(
+    items: &[PlacementItem],
+    preplaced: &[(usize, u64)],
+    order: FitOrder,
+    align: u64,
+) -> Vec<u64> {
+    let n = items.len();
+    let align = align.max(1);
+    let mut offsets = vec![u64::MAX; n];
+    let mut placed: Vec<usize> = Vec::with_capacity(n);
+    for &(i, off) in preplaced {
+        offsets[i] = off;
+        placed.push(i);
+    }
+    let mut todo: Vec<usize> =
+        (0..n).filter(|i| !preplaced.iter().any(|(p, _)| p == i)).collect();
+    match order {
+        FitOrder::SizeDesc => todo.sort_by_key(|&i| {
+            (std::cmp::Reverse(items[i].size), items[i].start, items[i].edge.0)
+        }),
+        FitOrder::StartTime => {
+            todo.sort_by_key(|&i| (items[i].start, std::cmp::Reverse(items[i].size)))
+        }
+        FitOrder::DurationDesc => todo.sort_by_key(|&i| {
+            (
+                std::cmp::Reverse(items[i].end - items[i].start),
+                std::cmp::Reverse(items[i].size),
+                items[i].edge.0,
+            )
+        }),
+    }
+
+    for &i in &todo {
+        // Forbidden address intervals: placed items overlapping in time.
+        let mut blocked: Vec<(u64, u64)> = placed
+            .iter()
+            .filter(|&&j| items[i].overlaps(&items[j]))
+            .map(|&j| (offsets[j], offsets[j] + items[j].size))
+            .collect();
+        blocked.sort();
+        // First-fit: lowest aligned offset with room for `size`.
+        let size = items[i].size;
+        let mut candidate = 0u64;
+        for &(lo, hi) in &blocked {
+            if candidate + size <= lo {
+                break;
+            }
+            if hi > candidate {
+                candidate = next_aligned(hi, align);
+            }
+        }
+        offsets[i] = candidate;
+        placed.push(i);
+    }
+    offsets
+}
+
+fn next_aligned(v: u64, align: u64) -> u64 {
+    v.div_ceil(align) * align
+}
+
+/// Arena size implied by a placement.
+pub fn arena_size(items: &[PlacementItem], offsets: &[u64]) -> u64 {
+    items
+        .iter()
+        .zip(offsets)
+        .map(|(it, &o)| o + it.size)
+        .max()
+        .unwrap_or(0)
+}
+
+/// Try all [`FitOrder`] strategies and keep the smallest arena; if none
+/// reaches the resident-set lower bound, run seeded randomized-restart
+/// sweeps (perturbed size-desc orders) to close the last sliver — in
+/// practice this restores the paper's 0%-fragmentation result on instances
+/// too large for the placement ILP.
+pub fn best_fit_multi(items: &[PlacementItem], align: u64) -> (Vec<u64>, u64) {
+    let mut best: Option<(Vec<u64>, u64)> = None;
+    for order in [FitOrder::SizeDesc, FitOrder::DurationDesc, FitOrder::StartTime] {
+        let offs = best_fit_offsets(items, &[], order, align);
+        let sz = arena_size(items, &offs);
+        if best.as_ref().map_or(true, |(_, b)| sz < *b) {
+            best = Some((offs, sz));
+        }
+    }
+    let lb = crate::alloc::resident_lower_bound(items);
+    // Targeted repair: hoist the item that tops the arena to the front of
+    // the placement order (it then gets offset 0) and re-pack. Iterate while
+    // it keeps helping — this alone closes most residual gaps.
+    for _ in 0..32 {
+        let Some((offs, sz)) = &best else { break };
+        if *sz == lb {
+            break;
+        }
+        let top = (0..items.len())
+            .max_by_key(|&i| offs[i] + items[i].size)
+            .expect("non-empty");
+        let mut order: Vec<usize> = (0..items.len()).collect();
+        order.sort_by_key(|&i| (i != top, std::cmp::Reverse(items[i].size)));
+        let offs2 = place_in_order(items, &order, align);
+        let sz2 = arena_size(items, &offs2);
+        if sz2 < *sz {
+            best = Some((offs2, sz2));
+        } else {
+            break;
+        }
+    }
+    if let Some((_, sz)) = &best {
+        if *sz > lb && items.len() <= 4096 {
+            let mut rng = crate::util::rng::Rng::new(0x0FF5E75);
+            let mut idx: Vec<usize> = (0..items.len()).collect();
+            idx.sort_by_key(|&i| std::cmp::Reverse(items[i].size));
+            for _try in 0..64 {
+                // Perturb: swap a few nearby positions in the size order.
+                for _ in 0..(items.len() / 4).max(1) {
+                    let a = rng.range(0, items.len() - 1);
+                    let b = (a + rng.range(1, 3)).min(items.len() - 1);
+                    idx.swap(a, b);
+                }
+                let offs = place_in_order(items, &idx, align);
+                let sz = arena_size(items, &offs);
+                if best.as_ref().map_or(true, |(_, b)| sz < *b) {
+                    best = Some((offs, sz));
+                    if sz == lb {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    // Final compaction: repeatedly drop every item to its lowest feasible
+    // offset given all the others (multi-pass until fixpoint).
+    if let Some((offs, sz)) = best.take() {
+        let mut offs = offs;
+        for _pass in 0..8 {
+            let mut changed = false;
+            let mut by_off: Vec<usize> = (0..items.len()).collect();
+            by_off.sort_by_key(|&i| offs[i]);
+            for &i in &by_off {
+                let mut blocked: Vec<(u64, u64)> = (0..items.len())
+                    .filter(|&j| j != i && items[i].overlaps(&items[j]))
+                    .map(|j| (offs[j], offs[j] + items[j].size))
+                    .collect();
+                blocked.sort();
+                let size = items[i].size;
+                let mut candidate = 0u64;
+                for &(lo, hi) in &blocked {
+                    if candidate + size <= lo {
+                        break;
+                    }
+                    if hi > candidate {
+                        candidate = next_aligned(hi, align);
+                    }
+                }
+                if candidate < offs[i] {
+                    offs[i] = candidate;
+                    changed = true;
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        // Offsets only ever decrease, so the arena cannot grow.
+        let new_sz = arena_size(items, &offs);
+        debug_assert!(new_sz <= sz);
+        best = Some((offs, new_sz));
+    }
+    best.unwrap_or((Vec::new(), 0))
+}
+
+/// First-fit-by-offset following an explicit item order.
+fn place_in_order(items: &[PlacementItem], order: &[usize], align: u64) -> Vec<u64> {
+    let n = items.len();
+    let align = align.max(1);
+    let mut offsets = vec![u64::MAX; n];
+    let mut placed: Vec<usize> = Vec::with_capacity(n);
+    for &i in order {
+        let mut blocked: Vec<(u64, u64)> = placed
+            .iter()
+            .filter(|&&j| items[i].overlaps(&items[j]))
+            .map(|&j| (offsets[j], offsets[j] + items[j].size))
+            .collect();
+        blocked.sort();
+        let size = items[i].size;
+        let mut candidate = 0u64;
+        for &(lo, hi) in &blocked {
+            if candidate + size <= lo {
+                break;
+            }
+            if hi > candidate {
+                candidate = next_aligned(hi, align);
+            }
+        }
+        offsets[i] = candidate;
+        placed.push(i);
+    }
+    offsets
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::{check_placement, resident_lower_bound};
+    use crate::graph::EdgeId;
+    use crate::util::quickcheck::{check, ensure};
+    use crate::util::rng::Rng;
+
+    fn item(id: u32, size: u64, start: usize, end: usize) -> PlacementItem {
+        PlacementItem { edge: EdgeId(id), size, start, end }
+    }
+
+    #[test]
+    fn non_overlapping_share_space() {
+        let items = vec![item(0, 100, 0, 2), item(1, 100, 2, 4)];
+        let (offs, sz) = best_fit_multi(&items, 1);
+        assert_eq!(sz, 100);
+        assert!(check_placement(&items, &offs, sz).is_ok());
+    }
+
+    #[test]
+    fn overlapping_stack_up() {
+        let items = vec![item(0, 100, 0, 4), item(1, 50, 1, 3)];
+        let (offs, sz) = best_fit_multi(&items, 1);
+        assert_eq!(sz, 150);
+        assert!(check_placement(&items, &offs, sz).is_ok());
+    }
+
+    #[test]
+    fn fig4_case_reaches_lower_bound() {
+        let a = item(0, 32, 0, 2);
+        let b = item(1, 64, 0, 4);
+        let c = item(2, 48, 2, 4);
+        let items = vec![a, b, c];
+        let (offs, sz) = best_fit_multi(&items, 1);
+        assert!(check_placement(&items, &offs, sz).is_ok());
+        assert_eq!(sz, resident_lower_bound(&items), "zero fragmentation expected");
+    }
+
+    #[test]
+    fn preplaced_offsets_are_respected() {
+        let items = vec![item(0, 10, 0, 4), item(1, 10, 0, 4)];
+        let offs = best_fit_offsets(&items, &[(0, 100)], FitOrder::SizeDesc, 1);
+        assert_eq!(offs[0], 100);
+        assert!(offs[1] != u64::MAX);
+        assert!(check_placement(&items, &offs, 200).is_ok());
+    }
+
+    #[test]
+    fn alignment_is_honored() {
+        let items = vec![item(0, 100, 0, 4), item(1, 33, 0, 4), item(2, 20, 0, 4)];
+        let offs = best_fit_offsets(&items, &[], FitOrder::SizeDesc, 64);
+        for (it, &o) in items.iter().zip(&offs) {
+            let _ = it;
+            assert_eq!(o % 64, 0, "offset {o} not aligned");
+        }
+        assert!(check_placement(&items, &offs, 1000).is_ok());
+    }
+
+    #[test]
+    fn random_placements_are_always_valid() {
+        check("bestfit_valid", 50, |rng: &mut Rng| {
+            let n = rng.range(1, 40);
+            let items: Vec<PlacementItem> = (0..n)
+                .map(|i| {
+                    let start = rng.range(0, 20);
+                    let len = rng.range(1, 10);
+                    item(i as u32, rng.range(1, 500) as u64, start, start + len)
+                })
+                .collect();
+            let (offs, sz) = best_fit_multi(&items, 1);
+            ensure(check_placement(&items, &offs, sz).is_ok(), || {
+                format!("{:?}", check_placement(&items, &offs, sz))
+            })
+        });
+    }
+
+    #[test]
+    fn bestfit_usually_reaches_lower_bound_on_loose_instances() {
+        // Not a theorem — but on interval patterns typical of DNN traces the
+        // heuristic should hit the bound most of the time. We assert it
+        // stays within 1.5x on random instances.
+        check("bestfit_quality", 30, |rng: &mut Rng| {
+            let n = rng.range(2, 25);
+            let items: Vec<PlacementItem> = (0..n)
+                .map(|i| {
+                    let start = rng.range(0, 10);
+                    let len = rng.range(1, 8);
+                    item(i as u32, 8 * rng.range(1, 64) as u64, start, start + len)
+                })
+                .collect();
+            let (_, sz) = best_fit_multi(&items, 1);
+            let lb = resident_lower_bound(&items);
+            ensure(sz as f64 <= lb as f64 * 1.5, || format!("sz={sz} lb={lb}"))
+        });
+    }
+}

@@ -1,0 +1,294 @@
+//! Simulation of the PyTorch CUDA caching allocator — the baseline of
+//! Figures 8 (fragmentation) and 14 (runtime overhead).
+//!
+//! Faithful to the policy described in `c10/cuda/CUDACachingAllocator.cpp`
+//! (PyTorch 1.11, the version the paper used):
+//!
+//! * request sizes are rounded up to 512-byte multiples;
+//! * requests < 1 MiB are served from 2 MiB "small" segments, requests
+//!   between 1 MiB and 10 MiB from 20 MiB "large" segments, and bigger
+//!   requests get a dedicated segment rounded to 2 MiB;
+//! * free blocks live in per-pool best-fit free lists; blocks are split on
+//!   allocation (small pool: remainder ≥ 512 B; large pool: ≥ 1 MiB) and
+//!   coalesced with free neighbors on deallocation;
+//! * segments are never returned to the device while the program runs.
+//!
+//! "Reserved" memory is the sum of segment sizes obtained from the device;
+//! fragmentation is `(reserved - requested_live) / reserved` at peak
+//! reserved, per §5.4.
+
+use crate::graph::EdgeId;
+use crate::sched::sim::AllocEvent;
+use std::collections::HashMap;
+
+const ROUND: u64 = 512;
+const SMALL_SIZE: u64 = 1 << 20; // 1 MiB: boundary small/large
+const SMALL_SEGMENT: u64 = 2 << 20; // 2 MiB
+const LARGE_SEGMENT: u64 = 20 << 20; // 20 MiB
+const MIN_LARGE_ALLOC: u64 = 10 << 20; // >10 MiB: dedicated segment
+const ROUND_LARGE: u64 = 2 << 20; // dedicated segments round to 2 MiB
+const SMALL_SPLIT_REMAINDER: u64 = 512;
+const LARGE_SPLIT_REMAINDER: u64 = 1 << 20;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Pool {
+    Small,
+    Large,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Block {
+    segment: usize,
+    offset: u64,
+    size: u64,
+}
+
+/// The simulated caching allocator.
+#[derive(Debug)]
+pub struct CachingAllocator {
+    /// (pool, segment size) per segment obtained from the "device".
+    segments: Vec<(Pool, u64)>,
+    /// Free blocks per pool.
+    free: Vec<Block>,
+    /// Live blocks by tensor.
+    live: HashMap<EdgeId, (Block, u64)>, // (block, requested bytes)
+    /// Currently reserved bytes (sum of segments).
+    pub reserved: u64,
+    /// Currently requested live bytes (pre-rounding).
+    pub requested_live: u64,
+    /// Peak reserved bytes.
+    pub peak_reserved: u64,
+    /// Requested live bytes at the moment reserved peaked.
+    pub live_at_peak_reserved: u64,
+    /// Peak requested live bytes.
+    pub peak_requested: u64,
+    /// Total number of alloc calls served.
+    pub alloc_calls: u64,
+    /// Free-list nodes inspected (a proxy for allocator CPU work).
+    pub blocks_scanned: u64,
+}
+
+impl Default for CachingAllocator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CachingAllocator {
+    /// Fresh allocator with an empty cache.
+    pub fn new() -> Self {
+        CachingAllocator {
+            segments: Vec::new(),
+            free: Vec::new(),
+            live: HashMap::new(),
+            reserved: 0,
+            requested_live: 0,
+            peak_reserved: 0,
+            live_at_peak_reserved: 0,
+            peak_requested: 0,
+            alloc_calls: 0,
+            blocks_scanned: 0,
+        }
+    }
+
+    fn pool_of(rounded: u64) -> Pool {
+        if rounded < SMALL_SIZE {
+            Pool::Small
+        } else {
+            Pool::Large
+        }
+    }
+
+
+    /// Allocate a tensor.
+    pub fn alloc(&mut self, id: EdgeId, bytes: u64) {
+        assert!(!self.live.contains_key(&id), "double alloc {id}");
+        self.alloc_calls += 1;
+        let rounded = bytes.max(1).div_ceil(ROUND) * ROUND;
+        let pool = Self::pool_of(rounded);
+
+        // Best-fit search in the pool's free blocks.
+        let mut best: Option<(usize, u64)> = None;
+        for (i, b) in self.free.iter().enumerate() {
+            self.blocks_scanned += 1;
+            if self.segments[b.segment].0 != pool || b.size < rounded {
+                continue;
+            }
+            if best.map_or(true, |(_, sz)| b.size < sz) {
+                best = Some((i, b.size));
+            }
+        }
+        let block = match best {
+            Some((i, _)) => self.free.swap_remove(i),
+            None => {
+                // Obtain a new segment from the device.
+                let seg_size = if rounded < SMALL_SIZE {
+                    SMALL_SEGMENT
+                } else if rounded < MIN_LARGE_ALLOC {
+                    LARGE_SEGMENT
+                } else {
+                    rounded.div_ceil(ROUND_LARGE) * ROUND_LARGE
+                };
+                let seg = self.segments.len();
+                self.segments.push((pool, seg_size));
+                self.reserved += seg_size;
+                Block { segment: seg, offset: 0, size: seg_size }
+            }
+        };
+        // Split if the remainder is worth keeping.
+        let split_min = match pool {
+            Pool::Small => SMALL_SPLIT_REMAINDER,
+            Pool::Large => LARGE_SPLIT_REMAINDER,
+        };
+        let used = if block.size >= rounded + split_min {
+            self.free.push(Block {
+                segment: block.segment,
+                offset: block.offset + rounded,
+                size: block.size - rounded,
+            });
+            Block { segment: block.segment, offset: block.offset, size: rounded }
+        } else {
+            block
+        };
+        self.live.insert(id, (used, bytes));
+        self.requested_live += bytes;
+        self.peak_requested = self.peak_requested.max(self.requested_live);
+        if self.reserved >= self.peak_reserved {
+            self.peak_reserved = self.reserved;
+            self.live_at_peak_reserved = self.live_at_peak_reserved.max(self.requested_live);
+        }
+    }
+
+    /// Free a tensor, coalescing with free neighbors in the same segment.
+    pub fn free(&mut self, id: EdgeId) {
+        let (mut block, bytes) = self.live.remove(&id).expect("free of dead tensor");
+        self.requested_live -= bytes;
+        // Coalesce: absorb free neighbors (linear scan; fine at sim scale).
+        loop {
+            let mut merged = false;
+            let mut i = 0;
+            while i < self.free.len() {
+                let b = self.free[i];
+                if b.segment == block.segment
+                    && (b.offset + b.size == block.offset || block.offset + block.size == b.offset)
+                {
+                    block = Block {
+                        segment: block.segment,
+                        offset: block.offset.min(b.offset),
+                        size: block.size + b.size,
+                    };
+                    self.free.swap_remove(i);
+                    merged = true;
+                } else {
+                    i += 1;
+                }
+            }
+            if !merged {
+                break;
+            }
+        }
+        self.free.push(block);
+    }
+
+    /// Fragmentation at peak reserved memory, per §5.4.
+    pub fn fragmentation_at_peak(&self) -> f64 {
+        super::fragmentation(self.peak_reserved, self.live_at_peak_reserved)
+    }
+
+    /// Replay an event trace (from [`crate::sched::sim::simulate`]).
+    pub fn replay(&mut self, events: &[AllocEvent]) {
+        for ev in events {
+            match *ev {
+                AllocEvent::Alloc(e, sz) => self.alloc(e, sz),
+                AllocEvent::Free(e) => self.free(e),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn e(i: u32) -> EdgeId {
+        EdgeId(i)
+    }
+
+    #[test]
+    fn small_allocations_share_a_segment() {
+        let mut a = CachingAllocator::new();
+        a.alloc(e(0), 1000);
+        a.alloc(e(1), 1000);
+        assert_eq!(a.reserved, SMALL_SEGMENT);
+        assert_eq!(a.segments.len(), 1);
+    }
+
+    #[test]
+    fn rounding_to_512() {
+        let mut a = CachingAllocator::new();
+        a.alloc(e(0), 1);
+        let (b, _) = a.live[&e(0)];
+        assert_eq!(b.size, 512);
+    }
+
+    #[test]
+    fn large_allocation_gets_20mb_segment() {
+        let mut a = CachingAllocator::new();
+        a.alloc(e(0), 2 << 20);
+        assert_eq!(a.reserved, LARGE_SEGMENT);
+    }
+
+    #[test]
+    fn huge_allocation_rounds_to_2mb() {
+        let mut a = CachingAllocator::new();
+        a.alloc(e(0), (15 << 20) + 7);
+        assert_eq!(a.reserved, 16 << 20);
+    }
+
+    #[test]
+    fn free_and_reuse_without_new_segment() {
+        let mut a = CachingAllocator::new();
+        a.alloc(e(0), 4 << 20);
+        a.free(e(0));
+        a.alloc(e(1), 4 << 20);
+        assert_eq!(a.reserved, LARGE_SEGMENT, "cache hit expected");
+    }
+
+    #[test]
+    fn coalescing_rebuilds_big_blocks() {
+        let mut a = CachingAllocator::new();
+        a.alloc(e(0), 2 << 20);
+        a.alloc(e(1), 2 << 20);
+        a.alloc(e(2), 2 << 20);
+        assert_eq!(a.reserved, LARGE_SEGMENT);
+        a.free(e(0));
+        a.free(e(2));
+        a.free(e(1)); // middle free must coalesce everything
+        assert_eq!(a.free.len(), 1);
+        assert_eq!(a.free[0].size, LARGE_SEGMENT);
+    }
+
+    #[test]
+    fn fragmentation_example() {
+        // Allocate many interleaved small tensors, free half: reserved stays,
+        // requested drops -> fragmentation > 0.
+        let mut a = CachingAllocator::new();
+        for i in 0..512 {
+            a.alloc(e(i), 512 * 1024); // 0.5 MiB each
+        }
+        for i in (0..512).step_by(2) {
+            a.free(e(i));
+        }
+        // force peak reserved to now
+        a.alloc(e(9999), 700 * 1024);
+        assert!(a.fragmentation_at_peak() > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "double alloc")]
+    fn double_alloc_panics() {
+        let mut a = CachingAllocator::new();
+        a.alloc(e(0), 100);
+        a.alloc(e(0), 100);
+    }
+}

@@ -1,0 +1,77 @@
+//! Hand-rolled benchmark harness (criterion is unavailable offline).
+//!
+//! Each file in `rust/benches/` is a `harness = false` binary that uses
+//! these helpers to time work, print paper-style rows, and append a summary
+//! to `bench_output` when invoked by `cargo bench`.
+
+use crate::util::{human_duration, Stopwatch};
+use std::time::Duration;
+
+/// Print a bench section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Time one invocation of `f`.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let w = Stopwatch::start();
+    let out = f();
+    (out, w.elapsed())
+}
+
+/// Median wall-clock of `reps` invocations (for microbench-style rows).
+pub fn time_median<T>(reps: usize, mut f: impl FnMut() -> T) -> Duration {
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let w = Stopwatch::start();
+        std::hint::black_box(f());
+        times.push(w.secs());
+    }
+    Duration::from_secs_f64(crate::util::median(&times))
+}
+
+/// Format seconds for a table cell.
+pub fn fmt_secs(s: f64) -> String {
+    human_duration(Duration::from_secs_f64(s.max(0.0)))
+}
+
+/// Format a percentage.
+pub fn fmt_pct(p: f64) -> String {
+    format!("{:.1}%", p)
+}
+
+/// Parse `--quick` style flags passed through `cargo bench -- --quick`.
+pub fn has_flag(flag: &str) -> bool {
+    std::env::args().any(|a| a == flag)
+}
+
+/// Time-limit scale for the bench protocol: the paper caps optimizations at
+/// 5 minutes on a Xeon; `OLLA_BENCH_CAP_SECS` overrides (default 20 s per
+/// phase so `cargo bench` completes on one core — see EXPERIMENTS.md §Scale).
+pub fn phase_cap() -> Duration {
+    let secs = std::env::var("OLLA_BENCH_CAP_SECS")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(20.0);
+    Duration::from_secs_f64(secs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_helpers_work() {
+        let (v, d) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(d.as_secs() < 5);
+        let m = time_median(3, || std::thread::sleep(Duration::from_millis(1)));
+        assert!(m >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_pct(12.34), "12.3%");
+        assert!(fmt_secs(0.001).ends_with("ms"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Experiment coordinator: the shared machinery behind the CLI and the
+//! per-figure benchmark harnesses. Builds zoo cases, runs the paper's
+//! experiments (reordering, fragmentation, total reduction, runtime
+//! overhead), and renders fixed-width report tables.
+
+pub mod experiments;
+pub mod table;
+
+pub use experiments::{
+    fragmentation_experiment, reorder_experiment, runtime_overhead_experiment,
+    total_experiment, zoo_cases, FragRow, ModelCase, ReorderRow, RuntimeRow, TotalRow,
+};
+pub use table::Table;

@@ -1,0 +1,406 @@
+//! Graph analyses used by the OLLA formulation (§4.1–§4.3).
+//!
+//! * topological ordering (Kahn) and cycle detection;
+//! * forward/backward levelization (longest-path levels);
+//! * ASAP/ALAP timestep spans for nodes (eq. 10) and the derived
+//!   MUL/PRES ranges for tensors (eqs. 11–12);
+//! * transitive-fanin reachability, both as the paper's memoized DFS
+//!   (Function 2) and as a bitset matrix (our fast path);
+//! * the `≺prec` edge-precedence test of §4.2 (Figure 5).
+
+use super::{EdgeId, Graph, NodeId};
+use std::collections::HashMap;
+
+/// A topological order of node ids, or `None` if the graph has a cycle.
+pub fn topo_order(g: &Graph) -> Option<Vec<NodeId>> {
+    let n = g.num_nodes();
+    let mut indeg = vec![0usize; n];
+    for e in &g.edges {
+        for &s in &e.snks {
+            indeg[s.idx()] += 1;
+        }
+    }
+    let mut queue: Vec<NodeId> = g.node_ids().filter(|v| indeg[v.idx()] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    let mut head = 0;
+    while head < queue.len() {
+        let v = queue[head];
+        head += 1;
+        order.push(v);
+        for &e in &g.node(v).fanout {
+            for &s in &g.edge(e).snks {
+                indeg[s.idx()] -= 1;
+                if indeg[s.idx()] == 0 {
+                    queue.push(s);
+                }
+            }
+        }
+    }
+    if order.len() == n {
+        Some(order)
+    } else {
+        None
+    }
+}
+
+/// Forward levelization: `lvl[v]` = longest path (in hops) from any source
+/// node to `v`. Sources get level 0. This is the paper's ASAP(v).
+pub fn forward_levels(g: &Graph) -> Vec<usize> {
+    let order = topo_order(g).expect("forward_levels requires a DAG");
+    let mut lvl = vec![0usize; g.num_nodes()];
+    for &v in &order {
+        for &e in &g.node(v).fanin {
+            let p = g.edge(e).src;
+            lvl[v.idx()] = lvl[v.idx()].max(lvl[p.idx()] + 1);
+        }
+    }
+    lvl
+}
+
+/// Backward levelization: `lvl[v]` = longest path (in hops) from `v` to any
+/// sink node. Terminal nodes get level 0. (Used by §4.3's anchor search and
+/// to derive ALAP.)
+pub fn backward_levels(g: &Graph) -> Vec<usize> {
+    let order = topo_order(g).expect("backward_levels requires a DAG");
+    let mut lvl = vec![0usize; g.num_nodes()];
+    for &v in order.iter().rev() {
+        for &e in &g.node(v).fanout {
+            for &s in &g.edge(e).snks {
+                lvl[v.idx()] = lvl[v.idx()].max(lvl[s.idx()] + 1);
+            }
+        }
+    }
+    lvl
+}
+
+/// ASAP/ALAP spans over `T = 0..num_timesteps` (eq. 10).
+///
+/// `asap[v]` is the forward level; `alap[v] = T - 1 - backward_level[v]`.
+/// With `T = |V|` every node's span is non-empty and any topological order
+/// is representable.
+#[derive(Debug, Clone)]
+pub struct Spans {
+    /// Earliest feasible timestep per node.
+    pub asap: Vec<usize>,
+    /// Latest feasible timestep per node.
+    pub alap: Vec<usize>,
+    /// Total number of timesteps `T`.
+    pub num_timesteps: usize,
+}
+
+impl Spans {
+    /// Compute spans with `T = |V|` timesteps (the paper's default).
+    pub fn compute(g: &Graph) -> Spans {
+        Self::compute_with_timesteps(g, g.num_nodes())
+    }
+
+    /// Compute spans for a caller-chosen horizon `T >= critical path length`.
+    pub fn compute_with_timesteps(g: &Graph, num_timesteps: usize) -> Spans {
+        let asap = forward_levels(g);
+        let bwd = backward_levels(g);
+        let t = num_timesteps.max(asap.iter().copied().max().unwrap_or(0) + 1);
+        let alap: Vec<usize> = bwd.iter().map(|&b| t - 1 - b).collect();
+        Spans { asap, alap, num_timesteps: t }
+    }
+
+    /// Node span `[ASAP(v), ALAP(v)]`, inclusive.
+    pub fn node_span(&self, v: NodeId) -> (usize, usize) {
+        (self.asap[v.idx()], self.alap[v.idx()])
+    }
+
+    /// Tensor Maximum Useful Lifetime (eq. 11):
+    /// `[ASAP(src(e)), max over sinks of ALAP(sink)]`. Sink-less edges are
+    /// program results and stay live until the end of the horizon.
+    pub fn mul(&self, g: &Graph, e: EdgeId) -> (usize, usize) {
+        let ed = g.edge(e);
+        let lo = self.asap[ed.src.idx()];
+        let hi = ed
+            .snks
+            .iter()
+            .map(|s| self.alap[s.idx()])
+            .max()
+            .unwrap_or(self.num_timesteps - 1);
+        (lo, hi)
+    }
+
+    /// Forced-preservation range (eq. 12):
+    /// `[ALAP(src(e)) + 1, max over sinks of ASAP(sink)]`; may be empty.
+    /// Within this range `P[e,t]` must be 1.
+    pub fn pres(&self, g: &Graph, e: EdgeId) -> Option<(usize, usize)> {
+        let ed = g.edge(e);
+        let lo = self.alap[ed.src.idx()] + 1;
+        let hi = ed.snks.iter().map(|s| self.asap[s.idx()]).max()?;
+        if lo <= hi {
+            Some((lo, hi))
+        } else {
+            None
+        }
+    }
+
+    /// True when the MUL ranges of two tensors are disjoint, i.e. they can
+    /// never be live at the same time (first §4.2 condition).
+    pub fn mul_disjoint(&self, g: &Graph, a: EdgeId, b: EdgeId) -> bool {
+        let (alo, ahi) = self.mul(g, a);
+        let (blo, bhi) = self.mul(g, b);
+        ahi < blo || bhi < alo
+    }
+}
+
+/// Dense reachability matrix: `reaches(a, b)` iff there is a directed path
+/// `a -> ... -> b` (b is in the transitive *fanout* of a; equivalently a is
+/// in the transitive fanin of b). Built in O(V·E/64) via bitset propagation.
+pub struct ReachMatrix {
+    n: usize,
+    words: usize,
+    /// `bits[v]` = ancestor set of v (nodes that reach v), little-endian bitset.
+    bits: Vec<u64>,
+}
+
+impl ReachMatrix {
+    /// Build the matrix for a DAG.
+    pub fn build(g: &Graph) -> ReachMatrix {
+        let n = g.num_nodes();
+        let words = n.div_ceil(64);
+        let mut bits = vec![0u64; n * words];
+        let order = topo_order(g).expect("ReachMatrix requires a DAG");
+        for &v in &order {
+            let vi = v.idx();
+            for &e in &g.node(v).fanin {
+                let p = g.edge(e).src.idx();
+                // ancestors(v) |= ancestors(p) | {p}
+                let (dst, src) = if vi * words > p * words {
+                    let (a, b) = bits.split_at_mut(vi * words);
+                    (&mut b[..words], &a[p * words..p * words + words])
+                } else {
+                    let (a, b) = bits.split_at_mut(p * words);
+                    (&mut a[vi * words..vi * words + words], &b[..words])
+                };
+                for w in 0..words {
+                    dst[w] |= src[w];
+                }
+                bits[vi * words + p / 64] |= 1u64 << (p % 64);
+            }
+        }
+        ReachMatrix { n, words, bits }
+    }
+
+    /// True iff `from` reaches `to` through a non-empty directed path.
+    pub fn reaches(&self, from: NodeId, to: NodeId) -> bool {
+        debug_assert!(from.idx() < self.n && to.idx() < self.n);
+        self.bits[to.idx() * self.words + from.idx() / 64] >> (from.idx() % 64) & 1 == 1
+    }
+
+    /// Number of ancestors of `v`.
+    pub fn num_ancestors(&self, v: NodeId) -> usize {
+        self.bits[v.idx() * self.words..(v.idx() + 1) * self.words]
+            .iter()
+            .map(|w| w.count_ones() as usize)
+            .sum()
+    }
+}
+
+/// The paper's Function 2: memoized DFS transitive-fanin query.
+/// Kept for fidelity and as a cross-check of [`ReachMatrix`]; the matrix is
+/// what the formulation builder uses.
+pub struct TransitiveFaninCache {
+    cache: HashMap<(NodeId, NodeId), bool>,
+}
+
+impl TransitiveFaninCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        TransitiveFaninCache { cache: HashMap::new() }
+    }
+
+    /// Returns true iff `v2` can be reached from `v1` (i.e. `v1` is in the
+    /// transitive fanin of `v2`).
+    pub fn is_in_transitive_fanin(&mut self, g: &Graph, v1: NodeId, v2: NodeId) -> bool {
+        if let Some(&hit) = self.cache.get(&(v1, v2)) {
+            return hit;
+        }
+        for &f in &g.node(v2).fanin {
+            let p = g.edge(f).src;
+            if p == v1 || self.is_in_transitive_fanin(g, v1, p) {
+                self.cache.insert((v1, v2), true);
+                return true;
+            }
+        }
+        self.cache.insert((v1, v2), false);
+        false
+    }
+}
+
+impl Default for TransitiveFaninCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The `≺prec` relation of §4.2 (Figure 5): `e1 ≺prec e2` iff every sink of
+/// `e1` is in the transitive fanin of `src(e2)`, and the two edges share no
+/// vertex. When it holds (in either direction) the tensors can never be
+/// resident simultaneously, so the pairwise non-overlap constraints can be
+/// skipped.
+pub fn edge_precedes(g: &Graph, reach: &ReachMatrix, e1: EdgeId, e2: EdgeId) -> bool {
+    let a = g.edge(e1);
+    let b = g.edge(e2);
+    if a.snks.is_empty() {
+        return false;
+    }
+    // Shared-vertex exclusion: if e2's source produces e2 while consuming e1,
+    // both must be in memory at that step.
+    if a.snks.contains(&b.src) || a.src == b.src {
+        return false;
+    }
+    a.snks.iter().all(|&s| s == b.src || reach.reaches(s, b.src))
+}
+
+/// True when two tensors can never be live concurrently, combining both §4.2
+/// sufficient conditions (MUL disjointness and `≺prec` either way).
+pub fn never_coresident(
+    g: &Graph,
+    spans: &Spans,
+    reach: &ReachMatrix,
+    e1: EdgeId,
+    e2: EdgeId,
+) -> bool {
+    spans.mul_disjoint(g, e1, e2)
+        || edge_precedes(g, reach, e1, e2)
+        || edge_precedes(g, reach, e2, e1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::testutil::{chain, diamond, fig3_graph};
+    use crate::graph::OpKind;
+
+    #[test]
+    fn topo_order_is_topological() {
+        let g = fig3_graph();
+        let order = topo_order(&g).unwrap();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; g.num_nodes()];
+            for (i, v) in order.iter().enumerate() {
+                p[v.idx()] = i;
+            }
+            p
+        };
+        for e in &g.edges {
+            for s in &e.snks {
+                assert!(pos[e.src.idx()] < pos[s.idx()]);
+            }
+        }
+    }
+
+    #[test]
+    fn chain_spans_are_singletons() {
+        let g = chain(6);
+        let s = Spans::compute(&g);
+        for v in g.node_ids() {
+            let (lo, hi) = s.node_span(v);
+            assert_eq!(lo, hi, "chain node should have a fixed timestep");
+            assert_eq!(lo, v.idx());
+        }
+    }
+
+    #[test]
+    fn fig3_spans() {
+        let g = fig3_graph();
+        let s = Spans::compute(&g);
+        // Critical path is 3 nodes (v1 -> v2|v3 -> v4) over T=4 timesteps,
+        // so every node has one timestep of slack.
+        assert_eq!(s.node_span(g.find_node("v1").unwrap()), (0, 1));
+        assert_eq!(s.node_span(g.find_node("v4").unwrap()), (2, 3));
+        assert_eq!(s.node_span(g.find_node("v2").unwrap()), (1, 2));
+        assert_eq!(s.node_span(g.find_node("v3").unwrap()), (1, 2));
+    }
+
+    #[test]
+    fn mul_and_pres_ranges() {
+        let g = fig3_graph();
+        let s = Spans::compute(&g);
+        let e2 = g.find_edge("e2").unwrap();
+        // e2 goes v1 -> v4: MUL spans the whole horizon; it MUST be resident
+        // between v1's last possible step (1) and v4's earliest step (2).
+        assert_eq!(s.mul(&g, e2), (0, 3));
+        assert_eq!(s.pres(&g, e2), Some((2, 2)));
+        // e1 goes v1 -> v2 (ALAP 2); there is slack, so no forced range.
+        let e1 = g.find_edge("e1").unwrap();
+        assert_eq!(s.mul(&g, e1), (0, 2));
+        assert_eq!(s.pres(&g, e1), None);
+    }
+
+    #[test]
+    fn reach_matrix_matches_function2() {
+        let g = fig3_graph();
+        let m = ReachMatrix::build(&g);
+        let mut f2 = TransitiveFaninCache::new();
+        for a in g.node_ids() {
+            for b in g.node_ids() {
+                assert_eq!(
+                    m.reaches(a, b),
+                    f2.is_in_transitive_fanin(&g, a, b),
+                    "mismatch for {a}->{b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reachability_diamond() {
+        let g = diamond();
+        let m = ReachMatrix::build(&g);
+        let a = g.find_node("a").unwrap();
+        let b = g.find_node("b").unwrap();
+        let c = g.find_node("c").unwrap();
+        let d = g.find_node("d").unwrap();
+        assert!(m.reaches(a, d));
+        assert!(m.reaches(a, b));
+        assert!(!m.reaches(b, c));
+        assert!(!m.reaches(d, a));
+        assert!(!m.reaches(a, a));
+        assert_eq!(m.num_ancestors(d), 3);
+    }
+
+    #[test]
+    fn edge_precedence_chain() {
+        // chain: n0 -e0-> n1 -e1-> n2 -e2-> n3: e0 ≺prec e2 (sink n1 reaches
+        // src n2... wait e2's src is n2; e0's sink n1 reaches n2) but e0 and
+        // e1 share vertex n1, so NOT e0 ≺prec e1.
+        let g = chain(4);
+        let s = Spans::compute(&g);
+        let reach = ReachMatrix::build(&g);
+        let e0 = g.find_edge("t0").unwrap();
+        let e1 = g.find_edge("t1").unwrap();
+        let e2 = g.find_edge("t2").unwrap();
+        assert!(edge_precedes(&g, &reach, e0, e2));
+        assert!(!edge_precedes(&g, &reach, e0, e1), "shared vertex n1");
+        assert!(!edge_precedes(&g, &reach, e2, e0));
+        assert!(never_coresident(&g, &s, &reach, e0, e2));
+        assert!(!never_coresident(&g, &s, &reach, e0, e1));
+    }
+
+    #[test]
+    fn control_edges_constrain_alap() {
+        // a -> b, plus control edge a -> c forces c after a.
+        let mut g = crate::graph::Graph::new("ctl");
+        let a = g.add_node("a", OpKind::Compute);
+        let b = g.add_node("b", OpKind::Compute);
+        let c = g.add_node("c", OpKind::WeightUpdate);
+        g.add_edge("ab", a, &[b], 4);
+        g.add_edge("ctl", a, &[c], 0);
+        let s = Spans::compute(&g);
+        assert_eq!(s.asap[c.idx()], 1);
+        assert_eq!(s.asap[b.idx()], 1);
+    }
+
+    #[test]
+    fn large_chain_reachability_is_fast_and_correct() {
+        let g = chain(500);
+        let m = ReachMatrix::build(&g);
+        assert!(m.reaches(NodeId(0), NodeId(499)));
+        assert!(!m.reaches(NodeId(499), NodeId(0)));
+        assert_eq!(m.num_ancestors(NodeId(499)), 499);
+    }
+}

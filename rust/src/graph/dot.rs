@@ -1,0 +1,76 @@
+//! Graphviz DOT export, for debugging and documentation figures.
+
+use super::{Graph, OpKind};
+use crate::util::human_bytes;
+use std::fmt::Write as _;
+
+/// Render the graph in DOT format. Control edges are dashed; node colors
+/// follow the operator kind.
+pub fn to_dot(g: &Graph) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "digraph \"{}\" {{", g.name);
+    let _ = writeln!(out, "  rankdir=TB; node [shape=box, fontsize=10];");
+    for (i, n) in g.nodes.iter().enumerate() {
+        let color = match n.kind {
+            OpKind::Parameter => "lightgoldenrod",
+            OpKind::Input => "lightblue",
+            OpKind::Compute => "white",
+            OpKind::WeightUpdate => "lightpink",
+            OpKind::Output => "lightgray",
+        };
+        let _ = writeln!(
+            out,
+            "  n{i} [label=\"{}\", style=filled, fillcolor={color}];",
+            n.name
+        );
+    }
+    for e in &g.edges {
+        for s in &e.snks {
+            if e.is_control() {
+                let _ = writeln!(
+                    out,
+                    "  n{} -> n{} [style=dashed, label=\"ctl\"];",
+                    e.src.0, s.0
+                );
+            } else {
+                let _ = writeln!(
+                    out,
+                    "  n{} -> n{} [label=\"{} ({})\"];",
+                    e.src.0,
+                    s.0,
+                    e.name,
+                    human_bytes(e.size)
+                );
+            }
+        }
+    }
+    out.push_str("}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::testutil::fig3_graph;
+
+    #[test]
+    fn dot_contains_all_nodes_and_edges() {
+        let g = fig3_graph();
+        let dot = to_dot(&g);
+        for n in &g.nodes {
+            assert!(dot.contains(&format!("\"{}\"", n.name)));
+        }
+        assert!(dot.contains("e3 (20 B)"));
+        assert!(dot.starts_with("digraph"));
+        assert!(dot.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn control_edges_are_dashed() {
+        let mut g = fig3_graph();
+        let v1 = g.find_node("v1").unwrap();
+        let v4 = g.find_node("v4").unwrap();
+        g.add_edge("ctl", v1, &[v4], 0);
+        assert!(to_dot(&g).contains("style=dashed"));
+    }
+}

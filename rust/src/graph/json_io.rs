@@ -1,0 +1,192 @@
+//! JSON interchange for dataflow graphs.
+//!
+//! This is the contract between the Python compile path
+//! (`python/compile/graph_export.py`, which extracts the operator/tensor DAG
+//! from a jaxpr) and the Rust optimizer. Format:
+//!
+//! ```json
+//! {
+//!   "name": "transformer-train",
+//!   "nodes": [{"name": "matmul_0", "kind": "compute"}, ...],
+//!   "edges": [{"name": "t0", "src": 0, "snks": [1, 2], "size": 4096}, ...]
+//! }
+//! ```
+
+use super::{Graph, GraphError, NodeId, OpKind};
+use crate::util::json::{num, obj, s, Json};
+
+fn kind_str(k: OpKind) -> &'static str {
+    match k {
+        OpKind::Parameter => "parameter",
+        OpKind::Input => "input",
+        OpKind::Compute => "compute",
+        OpKind::WeightUpdate => "weight_update",
+        OpKind::Output => "output",
+    }
+}
+
+fn kind_from_str(t: &str) -> Option<OpKind> {
+    Some(match t {
+        "parameter" => OpKind::Parameter,
+        "input" => OpKind::Input,
+        "compute" => OpKind::Compute,
+        "weight_update" => OpKind::WeightUpdate,
+        "output" => OpKind::Output,
+        _ => return None,
+    })
+}
+
+/// Serialize a graph to the interchange JSON.
+pub fn to_json(g: &Graph) -> Json {
+    let nodes: Vec<Json> = g
+        .nodes
+        .iter()
+        .map(|n| obj(vec![("name", s(&n.name)), ("kind", s(kind_str(n.kind)))]))
+        .collect();
+    let edges: Vec<Json> = g
+        .edges
+        .iter()
+        .map(|e| {
+            obj(vec![
+                ("name", s(&e.name)),
+                ("src", num(e.src.0 as f64)),
+                (
+                    "snks",
+                    Json::Arr(e.snks.iter().map(|v| num(v.0 as f64)).collect()),
+                ),
+                ("size", num(e.size as f64)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("name", s(&g.name)),
+        ("nodes", Json::Arr(nodes)),
+        ("edges", Json::Arr(edges)),
+    ])
+}
+
+/// Parse a graph from interchange JSON and validate it.
+pub fn from_json(v: &Json) -> Result<Graph, GraphError> {
+    let name = v
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| GraphError("missing 'name'".into()))?;
+    let mut g = Graph::new(name);
+    let nodes = v
+        .get("nodes")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| GraphError("missing 'nodes'".into()))?;
+    for (i, n) in nodes.iter().enumerate() {
+        let nm = n
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| GraphError(format!("node {i}: missing 'name'")))?;
+        let kind = n
+            .get("kind")
+            .and_then(Json::as_str)
+            .and_then(kind_from_str)
+            .unwrap_or(OpKind::Compute);
+        g.add_node(nm, kind);
+    }
+    let edges = v
+        .get("edges")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| GraphError("missing 'edges'".into()))?;
+    for (i, e) in edges.iter().enumerate() {
+        let nm = e
+            .get("name")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("e{i}"));
+        let src = e
+            .get("src")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| GraphError(format!("edge {i}: missing 'src'")))?;
+        if src >= g.num_nodes() {
+            return Err(GraphError(format!("edge {i}: src {src} out of range")));
+        }
+        let snks: Vec<NodeId> = e
+            .get("snks")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| GraphError(format!("edge {i}: missing 'snks'")))?
+            .iter()
+            .map(|x| {
+                x.as_usize()
+                    .filter(|&k| k < g.num_nodes())
+                    .map(|k| NodeId(k as u32))
+                    .ok_or_else(|| GraphError(format!("edge {i}: bad sink")))
+            })
+            .collect::<Result<_, _>>()?;
+        let size = e.get("size").and_then(Json::as_u64).unwrap_or(0);
+        g.add_edge(nm, NodeId(src as u32), &snks, size);
+    }
+    g.validate()?;
+    Ok(g)
+}
+
+/// Load a graph from a JSON file on disk.
+pub fn load(path: &std::path::Path) -> anyhow::Result<Graph> {
+    let text = std::fs::read_to_string(path)?;
+    let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+    Ok(from_json(&v).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?)
+}
+
+/// Save a graph as pretty-printed JSON.
+pub fn save(g: &Graph, path: &std::path::Path) -> anyhow::Result<()> {
+    std::fs::write(path, to_json(g).to_string_pretty())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::testutil::fig3_graph;
+
+    #[test]
+    fn roundtrip() {
+        let g = fig3_graph();
+        let j = to_json(&g);
+        let g2 = from_json(&j).unwrap();
+        assert_eq!(g2.num_nodes(), g.num_nodes());
+        assert_eq!(g2.num_edges(), g.num_edges());
+        for (a, b) in g.edges.iter().zip(g2.edges.iter()) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.size, b.size);
+            assert_eq!(a.src, b.src);
+            assert_eq!(a.snks, b.snks);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_bad_refs() {
+        let j = Json::parse(
+            r#"{"name":"x","nodes":[{"name":"a","kind":"compute"}],
+                "edges":[{"name":"e","src":5,"snks":[],"size":1}]}"#,
+        )
+        .unwrap();
+        assert!(from_json(&j).is_err());
+    }
+
+    #[test]
+    fn parse_accepts_unknown_kind_as_compute() {
+        let j = Json::parse(
+            r#"{"name":"x","nodes":[{"name":"a","kind":"??"},{"name":"b","kind":"compute"}],
+                "edges":[{"name":"e","src":0,"snks":[1],"size":1}]}"#,
+        )
+        .unwrap();
+        let g = from_json(&j).unwrap();
+        assert_eq!(g.node(NodeId(0)).kind, OpKind::Compute);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let g = fig3_graph();
+        let dir = std::env::temp_dir().join("olla_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.json");
+        save(&g, &p).unwrap();
+        let g2 = load(&p).unwrap();
+        assert_eq!(g2.name, g.name);
+        assert_eq!(g2.num_edges(), 6);
+    }
+}

@@ -1,0 +1,403 @@
+//! Dataflow-graph representation of a neural network (OLLA §2.1, §3.1).
+//!
+//! Nodes are operators; edges are tensors. Each edge has exactly one source
+//! (the operator that produces it) and possibly many sinks (its consumers).
+//! Edge sizes are in bytes. Control edges (size 0) only constrain ordering —
+//! they are the mechanism of OLLA §4.3 (forcing early weight updates).
+
+pub mod analysis;
+pub mod dot;
+pub mod json_io;
+pub mod random;
+
+use std::collections::HashMap;
+use std::fmt;
+
+/// Index of a node (operator) in a [`Graph`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+/// Index of an edge (tensor) in a [`Graph`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct EdgeId(pub u32);
+
+impl NodeId {
+    /// Index as usize.
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl EdgeId {
+    /// Index as usize.
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "v{}", self.0)
+    }
+}
+
+impl fmt::Display for EdgeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "e{}", self.0)
+    }
+}
+
+/// Role of an operator in the training graph. OLLA's formulation treats all
+/// nodes uniformly; the role is used by the §4.3 control-edge pass (which
+/// targets weight updates) and by reporting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// Source of a parameter tensor (resident for the whole program).
+    Parameter,
+    /// Source of a program input (batch data, labels, rng state...).
+    Input,
+    /// Ordinary computation (forward or backward op).
+    Compute,
+    /// Applies a gradient to a weight (the §4.3 targets).
+    WeightUpdate,
+    /// Graph output (loss read-out, updated weights...).
+    Output,
+}
+
+/// An operator.
+#[derive(Debug, Clone)]
+pub struct Node {
+    /// Unique human-readable name.
+    pub name: String,
+    /// Role in the training graph.
+    pub kind: OpKind,
+    /// Tensors this operator consumes (fi(v) in the paper).
+    pub fanin: Vec<EdgeId>,
+    /// Tensors this operator produces (fo(v) in the paper).
+    pub fanout: Vec<EdgeId>,
+}
+
+/// A tensor.
+#[derive(Debug, Clone)]
+pub struct Edge {
+    /// Unique human-readable name.
+    pub name: String,
+    /// Size in bytes (0 for control edges).
+    pub size: u64,
+    /// Producing operator (src(e)).
+    pub src: NodeId,
+    /// Consuming operators (snks(e)); may be empty for terminal outputs.
+    pub snks: Vec<NodeId>,
+}
+
+impl Edge {
+    /// True for §4.3 control edges (pure ordering constraints).
+    pub fn is_control(&self) -> bool {
+        self.size == 0
+    }
+}
+
+/// A dataflow graph: the input to every OLLA optimization.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    /// Graph name (model id, e.g. `resnet18-bs32`).
+    pub name: String,
+    /// Operators.
+    pub nodes: Vec<Node>,
+    /// Tensors.
+    pub edges: Vec<Edge>,
+}
+
+/// Error produced by [`Graph::validate`].
+#[derive(Debug, Clone)]
+pub struct GraphError(pub String);
+
+impl fmt::Display for GraphError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "invalid graph: {}", self.0)
+    }
+}
+
+impl std::error::Error for GraphError {}
+
+impl Graph {
+    /// Empty graph with a name.
+    pub fn new(name: impl Into<String>) -> Self {
+        Graph { name: name.into(), nodes: Vec::new(), edges: Vec::new() }
+    }
+
+    /// Number of operators (|V|).
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Number of tensors (|E|).
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Add an operator; returns its id.
+    pub fn add_node(&mut self, name: impl Into<String>, kind: OpKind) -> NodeId {
+        let id = NodeId(self.nodes.len() as u32);
+        self.nodes.push(Node { name: name.into(), kind, fanin: Vec::new(), fanout: Vec::new() });
+        id
+    }
+
+    /// Add a tensor produced by `src` with the given consumers; returns its id.
+    pub fn add_edge(
+        &mut self,
+        name: impl Into<String>,
+        src: NodeId,
+        snks: &[NodeId],
+        size: u64,
+    ) -> EdgeId {
+        let id = EdgeId(self.edges.len() as u32);
+        self.edges.push(Edge { name: name.into(), size, src, snks: snks.to_vec() });
+        self.nodes[src.idx()].fanout.push(id);
+        for &s in snks {
+            self.nodes[s.idx()].fanin.push(id);
+        }
+        id
+    }
+
+    /// Append an extra consumer to an existing tensor.
+    pub fn add_sink(&mut self, edge: EdgeId, sink: NodeId) {
+        if !self.edges[edge.idx()].snks.contains(&sink) {
+            self.edges[edge.idx()].snks.push(sink);
+            self.nodes[sink.idx()].fanin.push(edge);
+        }
+    }
+
+    /// Node lookup.
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.idx()]
+    }
+
+    /// Edge lookup.
+    pub fn edge(&self, id: EdgeId) -> &Edge {
+        &self.edges[id.idx()]
+    }
+
+    /// All node ids.
+    pub fn node_ids(&self) -> impl Iterator<Item = NodeId> {
+        (0..self.nodes.len() as u32).map(NodeId)
+    }
+
+    /// All edge ids.
+    pub fn edge_ids(&self) -> impl Iterator<Item = EdgeId> {
+        (0..self.edges.len() as u32).map(EdgeId)
+    }
+
+    /// Sibling edges of `e`: all edges driven by the same source, including
+    /// `e` itself (sib(e) in the paper, eq. 5).
+    pub fn siblings(&self, e: EdgeId) -> &[EdgeId] {
+        &self.nodes[self.edge(e).src.idx()].fanout
+    }
+
+    /// Sum of all tensor sizes: the paper's worst-case arena bound `M`.
+    pub fn total_bytes(&self) -> u64 {
+        self.edges.iter().map(|e| e.size).sum()
+    }
+
+    /// Node id by name (linear scan; for tests and CLI convenience).
+    pub fn find_node(&self, name: &str) -> Option<NodeId> {
+        self.nodes.iter().position(|n| n.name == name).map(|i| NodeId(i as u32))
+    }
+
+    /// Edge id by name (linear scan; for tests and CLI convenience).
+    pub fn find_edge(&self, name: &str) -> Option<EdgeId> {
+        self.edges.iter().position(|e| e.name == name).map(|i| EdgeId(i as u32))
+    }
+
+    /// Check structural invariants: index consistency, unique names, and
+    /// acyclicity (OLLA assumes a DAG, §2.1).
+    pub fn validate(&self) -> Result<(), GraphError> {
+        let mut names = HashMap::new();
+        for (i, n) in self.nodes.iter().enumerate() {
+            if let Some(prev) = names.insert(&n.name, i) {
+                return Err(GraphError(format!(
+                    "duplicate node name '{}' (nodes {prev} and {i})",
+                    n.name
+                )));
+            }
+            for &e in n.fanin.iter() {
+                if e.idx() >= self.edges.len() {
+                    return Err(GraphError(format!("node '{}' fanin {e} out of range", n.name)));
+                }
+                if !self.edges[e.idx()].snks.contains(&NodeId(i as u32)) {
+                    return Err(GraphError(format!(
+                        "node '{}' lists {e} as fanin but is not a sink of it",
+                        n.name
+                    )));
+                }
+            }
+            for &e in n.fanout.iter() {
+                if e.idx() >= self.edges.len() {
+                    return Err(GraphError(format!("node '{}' fanout {e} out of range", n.name)));
+                }
+                if self.edges[e.idx()].src != NodeId(i as u32) {
+                    return Err(GraphError(format!(
+                        "node '{}' lists {e} as fanout but is not its source",
+                        n.name
+                    )));
+                }
+            }
+        }
+        let mut enames = HashMap::new();
+        for (i, e) in self.edges.iter().enumerate() {
+            if let Some(prev) = enames.insert(&e.name, i) {
+                return Err(GraphError(format!(
+                    "duplicate edge name '{}' (edges {prev} and {i})",
+                    e.name
+                )));
+            }
+            if e.src.idx() >= self.nodes.len() {
+                return Err(GraphError(format!("edge '{}' src out of range", e.name)));
+            }
+            for &s in e.snks.iter() {
+                if s.idx() >= self.nodes.len() {
+                    return Err(GraphError(format!("edge '{}' sink out of range", e.name)));
+                }
+                if s == e.src {
+                    return Err(GraphError(format!("edge '{}' is a self-loop", e.name)));
+                }
+            }
+        }
+        if analysis::topo_order(self).is_none() {
+            return Err(GraphError("graph contains a cycle".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// The 4-node example of the paper's Figure 3. The figure's resident-set
+    /// tables are internally inconsistent (a duplicated row label and set
+    /// memberships that disagree with the printed totals), so we solved the
+    /// printed totals for a consistent assignment: sizes e1=10, e2=10,
+    /// e3=20, e4=30, e5=5, e6=10 with topology
+    /// v1 -> e1 -> v2;  v1 -> e2 -> v4;  v1 -> e3 -> v3;
+    /// v2 -> e5 -> v4;  v3 -> e4 -> v4;  v4 -> e6 (output).
+    /// The qualitative claim (running v2 before v3 is more memory-efficient)
+    /// holds for this instance.
+    pub fn fig3_graph() -> Graph {
+        let mut g = Graph::new("fig3");
+        let v1 = g.add_node("v1", OpKind::Compute);
+        let v2 = g.add_node("v2", OpKind::Compute);
+        let v3 = g.add_node("v3", OpKind::Compute);
+        let v4 = g.add_node("v4", OpKind::Compute);
+        g.add_edge("e1", v1, &[v2], 10);
+        g.add_edge("e2", v1, &[v4], 10);
+        g.add_edge("e3", v1, &[v3], 20);
+        g.add_edge("e4", v3, &[v4], 30);
+        g.add_edge("e5", v2, &[v4], 5);
+        g.add_edge("e6", v4, &[], 10);
+        g
+    }
+
+    /// A simple diamond: a -> {b, c} -> d, with distinct sizes.
+    pub fn diamond() -> Graph {
+        let mut g = Graph::new("diamond");
+        let a = g.add_node("a", OpKind::Compute);
+        let b = g.add_node("b", OpKind::Compute);
+        let c = g.add_node("c", OpKind::Compute);
+        let d = g.add_node("d", OpKind::Compute);
+        g.add_edge("ab", a, &[b], 100);
+        g.add_edge("ac", a, &[c], 50);
+        g.add_edge("bd", b, &[d], 25);
+        g.add_edge("cd", c, &[d], 10);
+        g.add_edge("out", d, &[], 5);
+        g
+    }
+
+    /// A linear chain of `n` compute nodes with unit-size tensors.
+    pub fn chain(n: usize) -> Graph {
+        let mut g = Graph::new(format!("chain{n}"));
+        let mut prev = g.add_node("n0", OpKind::Compute);
+        let mut prev_edge = None;
+        for i in 1..n {
+            let cur = g.add_node(format!("n{i}"), OpKind::Compute);
+            let e = g.add_edge(format!("t{}", i - 1), prev, &[cur], 8);
+            prev_edge = Some(e);
+            prev = cur;
+        }
+        let _ = prev_edge;
+        g.add_edge("t_out", prev, &[], 8);
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::*;
+    use super::*;
+
+    #[test]
+    fn build_and_validate_fig3() {
+        let g = fig3_graph();
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.num_edges(), 6);
+        g.validate().unwrap();
+        assert_eq!(g.total_bytes(), 85);
+    }
+
+    #[test]
+    fn siblings_share_source() {
+        let g = fig3_graph();
+        let e1 = g.find_edge("e1").unwrap();
+        let sib = g.siblings(e1);
+        assert_eq!(sib.len(), 3); // e1, e2, e3 all come from v1
+    }
+
+    #[test]
+    fn add_sink_appends_once() {
+        let mut g = diamond();
+        let e = g.find_edge("ab").unwrap();
+        let d = g.find_node("d").unwrap();
+        g.add_sink(e, d);
+        g.add_sink(e, d);
+        assert_eq!(g.edge(e).snks.len(), 2);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_cycle() {
+        let mut g = Graph::new("cyc");
+        let a = g.add_node("a", OpKind::Compute);
+        let b = g.add_node("b", OpKind::Compute);
+        g.add_edge("ab", a, &[b], 1);
+        g.add_edge("ba", b, &[a], 1);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_duplicate_names() {
+        let mut g = Graph::new("dup");
+        let a = g.add_node("x", OpKind::Compute);
+        let b = g.add_node("x", OpKind::Compute);
+        g.add_edge("ab", a, &[b], 1);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_self_loop() {
+        let mut g = Graph::new("selfloop");
+        let a = g.add_node("a", OpKind::Compute);
+        g.edges.push(Edge { name: "aa".into(), size: 1, src: a, snks: vec![a] });
+        g.nodes[0].fanout.push(EdgeId(0));
+        g.nodes[0].fanin.push(EdgeId(0));
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn control_edge_detection() {
+        let mut g = Graph::new("ctl");
+        let a = g.add_node("a", OpKind::Compute);
+        let b = g.add_node("b", OpKind::Compute);
+        let e = g.add_edge("ctl", a, &[b], 0);
+        assert!(g.edge(e).is_control());
+    }
+}

@@ -1,0 +1,163 @@
+//! Random-DAG generators for property-based tests and synthetic workloads.
+
+use super::{Graph, NodeId, OpKind};
+use crate::util::rng::Rng;
+
+/// Parameters for [`random_dag`].
+#[derive(Debug, Clone)]
+pub struct RandomDagConfig {
+    /// Number of operators.
+    pub num_nodes: usize,
+    /// Probability that node j consumes an output of node i (i < j).
+    pub edge_prob: f64,
+    /// Tensor sizes are drawn uniformly from this range (bytes).
+    pub size_range: (u64, u64),
+    /// Probability a produced tensor gains an extra (later) consumer.
+    pub multi_sink_prob: f64,
+}
+
+impl Default for RandomDagConfig {
+    fn default() -> Self {
+        RandomDagConfig {
+            num_nodes: 12,
+            edge_prob: 0.25,
+            size_range: (1, 256),
+            multi_sink_prob: 0.3,
+        }
+    }
+}
+
+/// Generate a connected random DAG. Every non-first node consumes at least
+/// one earlier tensor, so the graph has a single weakly-connected spine and
+/// no isolated operators; every node produces exactly one tensor (plus a
+/// terminal output tensor for sink nodes).
+pub fn random_dag(rng: &mut Rng, cfg: &RandomDagConfig) -> Graph {
+    let n = cfg.num_nodes.max(2);
+    let mut g = Graph::new("random");
+    let nodes: Vec<NodeId> =
+        (0..n).map(|i| g.add_node(format!("op{i}"), OpKind::Compute)).collect();
+    // One produced tensor per node; consumers chosen among later nodes.
+    for i in 0..n {
+        let size = rng.range(cfg.size_range.0 as usize, cfg.size_range.1 as usize) as u64;
+        let mut snks: Vec<NodeId> = Vec::new();
+        for j in (i + 1)..n {
+            let p = if snks.is_empty() && j == i + 1 {
+                // Bias towards chaining so the DAG stays connected.
+                0.8
+            } else {
+                cfg.edge_prob * if snks.is_empty() { 1.0 } else { cfg.multi_sink_prob }
+            };
+            if rng.chance(p) {
+                snks.push(nodes[j]);
+                if !rng.chance(cfg.multi_sink_prob) {
+                    break;
+                }
+            }
+        }
+        g.add_edge(format!("t{i}"), nodes[i], &snks, size);
+    }
+    // Guarantee connectivity: any node (other than 0) with empty fanin gets
+    // an input from a random earlier node.
+    for j in 1..n {
+        if g.node(nodes[j]).fanin.is_empty() {
+            let i = rng.range(0, j - 1);
+            let e = g.node(nodes[i]).fanout[0];
+            g.add_sink(e, nodes[j]);
+        }
+    }
+    g
+}
+
+/// A random "training-like" graph: a forward chain with skip connections, a
+/// mirrored backward chain, and weight-update nodes — the structural shape
+/// OLLA exploits (§5.3). Used to property-test the §4.3 control-edge pass.
+pub fn random_trainlike(rng: &mut Rng, layers: usize) -> Graph {
+    let l = layers.max(2);
+    let mut g = Graph::new("trainlike");
+    let input = g.add_node("input", OpKind::Input);
+    let mut acts = Vec::new(); // activation edge per layer
+    let mut fwd_nodes = Vec::new();
+    let mut weights = Vec::new();
+    let mut prev = g.add_edge("x", input, &[], 64 * (1 + rng.range(0, 3) as u64));
+    for i in 0..l {
+        let w_src = g.add_node(format!("w{i}"), OpKind::Parameter);
+        let w = g.add_edge(format!("weight{i}"), w_src, &[], 32);
+        let f = g.add_node(format!("fwd{i}"), OpKind::Compute);
+        g.add_sink(prev, f);
+        g.add_sink(w, f);
+        let act = g.add_edge(
+            format!("act{i}"),
+            f,
+            &[],
+            16 * (1 + rng.range(0, 15) as u64),
+        );
+        acts.push(act);
+        fwd_nodes.push(f);
+        weights.push(w);
+        prev = act;
+    }
+    let loss_node = g.add_node("loss", OpKind::Compute);
+    g.add_sink(prev, loss_node);
+    let mut grad = g.add_edge("dloss", loss_node, &[], 4);
+    for i in (0..l).rev() {
+        let b = g.add_node(format!("bwd{i}"), OpKind::Compute);
+        g.add_sink(grad, b);
+        g.add_sink(acts[i], b); // activation retained for backward
+        g.add_sink(weights[i], b);
+        let wgrad = g.add_edge(format!("dw{i}"), b, &[], 32);
+        let upd = g.add_node(format!("upd{i}"), OpKind::WeightUpdate);
+        g.add_sink(wgrad, upd);
+        g.add_sink(weights[i], upd);
+        g.add_edge(format!("w_new{i}"), upd, &[], 32);
+        if i > 0 {
+            grad = g.add_edge(format!("dact{}", i - 1), b, &[], g.edge(acts[i - 1]).size);
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{check, ensure, Outcome};
+
+    #[test]
+    fn random_dags_are_valid() {
+        check("random_dag_valid", 50, |rng| {
+            let cfg = RandomDagConfig {
+                num_nodes: rng.range(2, 30),
+                edge_prob: rng.f64() * 0.5,
+                ..Default::default()
+            };
+            let g = random_dag(rng, &cfg);
+            ensure(g.validate().is_ok(), || format!("invalid: {:?}", g.validate()))
+        });
+    }
+
+    #[test]
+    fn random_dags_are_connected() {
+        check("random_dag_connected", 30, |rng| {
+            let g = random_dag(rng, &RandomDagConfig::default());
+            for v in g.node_ids().skip(1) {
+                if g.node(v).fanin.is_empty() {
+                    return Outcome::Fail(format!("node {v} has no fanin"));
+                }
+            }
+            Outcome::Pass
+        });
+    }
+
+    #[test]
+    fn trainlike_graphs_are_valid_and_have_updates() {
+        check("trainlike_valid", 20, |rng| {
+            let layers = rng.range(2, 8);
+            let g = random_trainlike(rng, layers);
+            if g.validate().is_err() {
+                return Outcome::Fail("invalid".into());
+            }
+            let updates =
+                g.nodes.iter().filter(|n| n.kind == OpKind::WeightUpdate).count();
+            ensure(updates >= 2, || format!("only {updates} updates"))
+        });
+    }
+}

@@ -1,0 +1,412 @@
+//! Branch & bound MILP driver.
+//!
+//! Depth-first search over LP relaxations solved by
+//! [`crate::ilp::simplex`]. Supports warm incumbents supplied by the caller
+//! (OLLA seeds the solver with the greedy schedule / best-fit placement),
+//! a wall-clock time limit matching the paper's §5.7 protocol, and an
+//! anytime incumbent log used to regenerate Figures 10 and 12.
+
+use super::model::{Model, Solution, SolveStatus, VarKind};
+use super::presolve::{presolve, PresolveStatus};
+use super::simplex::{solve_lp, LpOptions, LpStatus, EPS};
+use crate::util::Stopwatch;
+use std::time::Duration;
+
+/// Options controlling the MILP solve.
+#[derive(Debug, Clone)]
+pub struct SolveOptions {
+    /// Wall-clock limit (the paper caps each optimization at 5–10 minutes).
+    pub time_limit: Duration,
+    /// Iteration cap per LP relaxation.
+    pub lp_iters: u64,
+    /// Relative optimality gap at which to stop early.
+    pub rel_gap: f64,
+    /// A feasible assignment to seed the incumbent (checked before use).
+    pub initial: Option<Vec<f64>>,
+    /// Declare that the objective only takes integral values at integral
+    /// solutions (true for OLLA peak-memory objectives measured in granules),
+    /// enabling `ceil()` strengthening of node bounds.
+    pub integral_objective: bool,
+    /// Maximum number of B&B nodes (safety valve).
+    pub max_nodes: u64,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        SolveOptions {
+            time_limit: Duration::from_secs(60),
+            lp_iters: 200_000,
+            rel_gap: 1e-6,
+            initial: None,
+            integral_objective: false,
+            max_nodes: u64::MAX,
+        }
+    }
+}
+
+struct Node {
+    lb: Vec<f64>,
+    ub: Vec<f64>,
+    /// LP bound inherited from the parent (for best-bound bookkeeping).
+    parent_bound: f64,
+}
+
+/// Solve a minimization MILP.
+pub fn solve(model: &Model, opts: &SolveOptions) -> Solution {
+    let watch = Stopwatch::start();
+    let _n = model.num_vars();
+    let lp_opts = LpOptions {
+        max_iters: opts.lp_iters,
+        deadline: std::time::Instant::now().checked_add(opts.time_limit),
+    };
+
+    let lb0: Vec<f64> = model.vars.iter().map(|v| v.lb).collect();
+    let ub0: Vec<f64> = model.vars.iter().map(|v| v.ub).collect();
+
+    let mut incumbent: Option<Vec<f64>> = None;
+    let mut incumbent_obj = f64::INFINITY;
+    let mut incumbents_log: Vec<(f64, f64)> = Vec::new();
+    let mut nodes_explored = 0u64;
+    let mut simplex_iters = 0u64;
+
+    // Caller-provided warm start.
+    if let Some(init) = &opts.initial {
+        if model.check_feasible(init, 1e-6).is_ok() {
+            incumbent_obj = model.objective_value(init);
+            incumbent = Some(init.clone());
+            incumbents_log.push((watch.secs(), incumbent_obj));
+        }
+    }
+
+    // Root presolve.
+    let pre = presolve(model, &lb0, &ub0);
+    if pre.status == PresolveStatus::Infeasible {
+        return finish(
+            if incumbent.is_some() { SolveStatus::Optimal } else { SolveStatus::Infeasible },
+            incumbent,
+            incumbent_obj,
+            incumbent_obj,
+            incumbents_log,
+            nodes_explored,
+            simplex_iters,
+        );
+    }
+
+    let int_vars: Vec<usize> = model
+        .vars
+        .iter()
+        .enumerate()
+        .filter(|(_, v)| matches!(v.kind, VarKind::Binary | VarKind::Integer))
+        .map(|(i, _)| i)
+        .collect();
+
+    let mut stack: Vec<Node> = vec![Node {
+        lb: pre.lb,
+        ub: pre.ub,
+        parent_bound: f64::NEG_INFINITY,
+    }];
+    let mut global_lower = f64::NEG_INFINITY;
+    let mut timed_out = false;
+    let mut lp_limited = false;
+
+    while let Some(node) = stack.pop() {
+        if watch.elapsed() >= opts.time_limit || nodes_explored >= opts.max_nodes {
+            timed_out = true;
+            // Remaining open nodes bound the optimum from below.
+            global_lower = stack
+                .iter()
+                .map(|nd| nd.parent_bound)
+                .chain(std::iter::once(node.parent_bound))
+                .fold(f64::INFINITY, f64::min);
+            break;
+        }
+        nodes_explored += 1;
+
+        // Bound-based pruning before the LP.
+        if node.parent_bound >= prune_threshold(incumbent_obj, opts) {
+            continue;
+        }
+
+        let r = solve_lp(model, &node.lb, &node.ub, &lp_opts);
+        simplex_iters += r.iters;
+        match r.status {
+            LpStatus::Infeasible => continue,
+            LpStatus::Unbounded => {
+                return finish(
+                    SolveStatus::Unbounded,
+                    incumbent,
+                    incumbent_obj,
+                    f64::NEG_INFINITY,
+                    incumbents_log,
+                    nodes_explored,
+                    simplex_iters,
+                );
+            }
+            LpStatus::IterLimit => {
+                // Deadline or iteration cap inside the LP: we can no longer
+                // claim optimality for the whole tree.
+                lp_limited = true;
+                continue;
+            }
+            LpStatus::Optimal => {}
+        }
+        let mut bound = r.obj;
+        if opts.integral_objective {
+            bound = (bound - 1e-6).ceil();
+        }
+        if bound >= prune_threshold(incumbent_obj, opts) {
+            continue;
+        }
+
+        // Find the most fractional integer variable.
+        let mut branch: Option<(usize, f64)> = None;
+        for &j in &int_vars {
+            let xj = r.x[j];
+            let frac = (xj - xj.round()).abs();
+            if frac > 1e-6 && branch.map_or(true, |(_, best)| frac > best) {
+                branch = Some((j, frac));
+            }
+        }
+
+        match branch {
+            None => {
+                // Integral: candidate incumbent.
+                if r.obj < incumbent_obj - 1e-9 {
+                    // Round int vars exactly to kill drift.
+                    let mut x = r.x.clone();
+                    for &j in &int_vars {
+                        x[j] = x[j].round();
+                    }
+                    if model.check_feasible(&x, 1e-5).is_ok() {
+                        incumbent_obj = model.objective_value(&x);
+                        incumbent = Some(x);
+                        incumbents_log.push((watch.secs(), incumbent_obj));
+                    }
+                }
+            }
+            Some((j, _)) => {
+                let xj = r.x[j];
+                let floor = xj.floor();
+                // Explore the branch nearest the LP value first (pushed last).
+                let mut down = node.lb.clone();
+                let mut down_ub = node.ub.clone();
+                down_ub[j] = floor;
+                let down_node =
+                    Node { lb: down.clone(), ub: down_ub, parent_bound: bound };
+                down[j] = floor + 1.0;
+                let up_node = Node {
+                    lb: down,
+                    ub: node.ub.clone(),
+                    parent_bound: bound,
+                };
+                if xj - floor > 0.5 {
+                    stack.push(down_node);
+                    stack.push(up_node);
+                } else {
+                    stack.push(up_node);
+                    stack.push(down_node);
+                }
+            }
+        }
+    }
+
+    let status = if timed_out || lp_limited {
+        if incumbent.is_some() {
+            SolveStatus::TimeLimitFeasible
+        } else {
+            SolveStatus::TimeLimitNoSolution
+        }
+    } else if incumbent.is_some() {
+        global_lower = incumbent_obj;
+        SolveStatus::Optimal
+    } else {
+        SolveStatus::Infeasible
+    };
+    finish(
+        status,
+        incumbent,
+        incumbent_obj,
+        global_lower,
+        incumbents_log,
+        nodes_explored,
+        simplex_iters,
+    )
+}
+
+fn prune_threshold(incumbent_obj: f64, opts: &SolveOptions) -> f64 {
+    if incumbent_obj.is_finite() {
+        if opts.integral_objective {
+            // A node must beat the incumbent by at least 1 unit.
+            incumbent_obj - 0.5
+        } else {
+            incumbent_obj - incumbent_obj.abs() * opts.rel_gap - EPS
+        }
+    } else {
+        f64::INFINITY
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn finish(
+    status: SolveStatus,
+    incumbent: Option<Vec<f64>>,
+    obj: f64,
+    best_bound: f64,
+    incumbents: Vec<(f64, f64)>,
+    nodes: u64,
+    simplex_iters: u64,
+) -> Solution {
+    Solution {
+        status,
+        objective: obj,
+        best_bound,
+        values: incumbent.unwrap_or_default(),
+        incumbents,
+        nodes,
+        simplex_iters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ilp::model::{Cmp, Model};
+
+    fn default_opts() -> SolveOptions {
+        SolveOptions { time_limit: Duration::from_secs(30), ..Default::default() }
+    }
+
+    #[test]
+    fn knapsack() {
+        // max 10a + 13b + 7c s.t. 3a + 4b + 2c <= 6  (binaries)
+        // best: a + c (weight 5, value 17); b + c (6, 20) -> optimal 20.
+        let mut m = Model::new();
+        let a = m.binary("a", -10.0);
+        let b = m.binary("b", -13.0);
+        let c = m.binary("c", -7.0);
+        m.constraint(vec![(a, 3.0), (b, 4.0), (c, 2.0)], Cmp::Le, 6.0);
+        let s = solve(&m, &default_opts());
+        assert_eq!(s.status, SolveStatus::Optimal);
+        assert!((s.objective + 20.0).abs() < 1e-6, "obj={}", s.objective);
+        assert!(s.bool_value(b) && s.bool_value(c) && !s.bool_value(a));
+    }
+
+    #[test]
+    fn assignment_problem() {
+        // 3x3 assignment, costs; optimal = 1 + 2 + 3 picking the diagonal-ish.
+        let cost = [[4.0, 1.0, 3.0], [2.0, 0.0, 5.0], [3.0, 2.0, 2.0]];
+        let mut m = Model::new();
+        let mut xs = vec![];
+        for i in 0..3 {
+            for j in 0..3 {
+                xs.push(m.binary(format!("x{i}{j}"), cost[i][j]));
+            }
+        }
+        for i in 0..3 {
+            m.constraint((0..3).map(|j| (xs[i * 3 + j], 1.0)).collect(), Cmp::Eq, 1.0);
+            m.constraint((0..3).map(|j| (xs[j * 3 + i], 1.0)).collect(), Cmp::Eq, 1.0);
+        }
+        let s = solve(&m, &default_opts());
+        assert_eq!(s.status, SolveStatus::Optimal);
+        // Hungarian optimum: x01(1) + x10(2) + x22(2) = 5.
+        assert!((s.objective - 5.0).abs() < 1e-6, "obj={}", s.objective);
+    }
+
+    #[test]
+    fn integer_variables() {
+        // min x + y s.t. 2x + y >= 5, x,y integer >= 0 -> (0,5)->5? x=1,y=3 -> 4;
+        // x=2,y=1 -> 3; x=3,y=0 -> 3. optimal 3.
+        let mut m = Model::new();
+        let x = m.integer("x", 0.0, 10.0, 1.0);
+        let y = m.integer("y", 0.0, 10.0, 1.0);
+        m.constraint(vec![(x, 2.0), (y, 1.0)], Cmp::Ge, 5.0);
+        let s = solve(&m, &default_opts());
+        assert_eq!(s.status, SolveStatus::Optimal);
+        assert!((s.objective - 3.0).abs() < 1e-6, "obj={}", s.objective);
+    }
+
+    #[test]
+    fn infeasible_milp() {
+        let mut m = Model::new();
+        let x = m.binary("x", 1.0);
+        let y = m.binary("y", 1.0);
+        m.constraint(vec![(x, 1.0), (y, 1.0)], Cmp::Ge, 3.0);
+        let s = solve(&m, &default_opts());
+        assert_eq!(s.status, SolveStatus::Infeasible);
+    }
+
+    #[test]
+    fn warm_start_is_used_and_logged() {
+        let mut m = Model::new();
+        let a = m.binary("a", -1.0);
+        let b = m.binary("b", -1.0);
+        m.constraint(vec![(a, 1.0), (b, 1.0)], Cmp::Le, 1.0);
+        let opts = SolveOptions {
+            initial: Some(vec![1.0, 0.0]),
+            ..default_opts()
+        };
+        let s = solve(&m, &opts);
+        assert_eq!(s.status, SolveStatus::Optimal);
+        assert!((s.objective + 1.0).abs() < 1e-6);
+        assert!(!s.incumbents.is_empty());
+        assert!((s.incumbents[0].1 + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn invalid_warm_start_is_rejected() {
+        let mut m = Model::new();
+        let a = m.binary("a", 1.0);
+        m.constraint(vec![(a, 1.0)], Cmp::Ge, 1.0);
+        let opts = SolveOptions {
+            initial: Some(vec![0.0]), // violates a >= 1
+            ..default_opts()
+        };
+        let s = solve(&m, &opts);
+        assert_eq!(s.status, SolveStatus::Optimal);
+        assert!((s.objective - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn time_limit_zero_reports_no_solution() {
+        let mut m = Model::new();
+        let a = m.binary("a", 1.0);
+        m.constraint(vec![(a, 1.0)], Cmp::Ge, 1.0);
+        let opts = SolveOptions { time_limit: Duration::ZERO, ..default_opts() };
+        let s = solve(&m, &opts);
+        assert_eq!(s.status, SolveStatus::TimeLimitNoSolution);
+    }
+
+    #[test]
+    fn larger_knapsack_with_integral_pruning() {
+        // 12-item knapsack; compare against brute force.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(5);
+        let n = 12;
+        let vals: Vec<f64> = (0..n).map(|_| rng.range(1, 40) as f64).collect();
+        let wts: Vec<f64> = (0..n).map(|_| rng.range(1, 20) as f64).collect();
+        let cap = 45.0;
+        let mut m = Model::new();
+        let xs: Vec<_> =
+            (0..n).map(|i| m.binary(format!("x{i}"), -vals[i])).collect();
+        m.constraint(xs.iter().map(|&x| (x, 1.0)).map(|(v, _)| (v, 0.0)).collect(), Cmp::Le, 1e9);
+        m.constraint(xs.iter().enumerate().map(|(i, &x)| (x, wts[i])).collect(), Cmp::Le, cap);
+        let opts = SolveOptions { integral_objective: true, ..default_opts() };
+        let s = solve(&m, &opts);
+        assert_eq!(s.status, SolveStatus::Optimal);
+        // Brute force.
+        let mut best = 0.0f64;
+        for mask in 0u32..(1 << n) {
+            let (mut v, mut w) = (0.0, 0.0);
+            for i in 0..n {
+                if mask >> i & 1 == 1 {
+                    v += vals[i];
+                    w += wts[i];
+                }
+            }
+            if w <= cap {
+                best = best.max(v);
+            }
+        }
+        assert!((s.objective + best).abs() < 1e-6, "milp={} brute={}", -s.objective, best);
+    }
+}

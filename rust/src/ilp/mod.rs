@@ -1,0 +1,12 @@
+//! From-scratch MILP solver: the offline substitute for Gurobi (§5.1 of the
+//! paper). Bounded-variable two-phase primal simplex ([`simplex`]) under a
+//! branch-and-bound driver with anytime incumbents ([`bnb`]), plus a light
+//! presolve ([`presolve`]).
+
+pub mod bnb;
+pub mod model;
+pub mod presolve;
+pub mod simplex;
+
+pub use bnb::{solve, SolveOptions};
+pub use model::{Cmp, Constraint, Model, Solution, SolveStatus, VarId, VarKind, Variable};

@@ -1,0 +1,291 @@
+//! MILP problem representation.
+//!
+//! This is the interface the OLLA formulations (eqs. 9/14/15) are built
+//! against. The paper uses Gurobi; the offline substitute solver lives in
+//! [`crate::ilp::simplex`] and [`crate::ilp::bnb`].
+
+use std::fmt;
+
+/// Index of a decision variable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VarId(pub usize);
+
+/// Variable integrality class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VarKind {
+    /// Real-valued in `[lb, ub]`.
+    Continuous,
+    /// Integer-valued in `[lb, ub]`.
+    Integer,
+    /// Integer in `[0, 1]` (bounds may be tightened/fixed).
+    Binary,
+}
+
+/// A decision variable.
+#[derive(Debug, Clone)]
+pub struct Variable {
+    /// Debug name.
+    pub name: String,
+    /// Integrality class.
+    pub kind: VarKind,
+    /// Lower bound.
+    pub lb: f64,
+    /// Upper bound.
+    pub ub: f64,
+    /// Objective coefficient (we always minimize).
+    pub obj: f64,
+}
+
+/// Constraint sense.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    /// `expr <= rhs`
+    Le,
+    /// `expr >= rhs`
+    Ge,
+    /// `expr == rhs`
+    Eq,
+}
+
+/// A sparse linear constraint `sum coef*var  cmp  rhs`.
+#[derive(Debug, Clone)]
+pub struct Constraint {
+    /// Sparse terms (variable, coefficient); variables must be distinct.
+    pub terms: Vec<(VarId, f64)>,
+    /// Sense.
+    pub cmp: Cmp,
+    /// Right-hand side.
+    pub rhs: f64,
+}
+
+/// A minimization MILP.
+#[derive(Debug, Clone, Default)]
+pub struct Model {
+    /// Decision variables.
+    pub vars: Vec<Variable>,
+    /// Linear constraints.
+    pub cons: Vec<Constraint>,
+}
+
+/// Why the solver stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolveStatus {
+    /// Proven optimal (within tolerances).
+    Optimal,
+    /// Stopped at the time limit with a feasible incumbent.
+    TimeLimitFeasible,
+    /// Stopped at the time limit with no incumbent.
+    TimeLimitNoSolution,
+    /// Proven infeasible.
+    Infeasible,
+    /// LP relaxation unbounded (should not happen for OLLA models).
+    Unbounded,
+}
+
+/// Solver output.
+#[derive(Debug, Clone)]
+pub struct Solution {
+    /// Termination status.
+    pub status: SolveStatus,
+    /// Best objective found (meaningful if a solution exists).
+    pub objective: f64,
+    /// Best lower bound proven (equals `objective` when optimal).
+    pub best_bound: f64,
+    /// Variable assignment of the incumbent.
+    pub values: Vec<f64>,
+    /// Anytime log: (seconds since solve start, incumbent objective).
+    pub incumbents: Vec<(f64, f64)>,
+    /// Branch-and-bound nodes explored.
+    pub nodes: u64,
+    /// Total simplex iterations.
+    pub simplex_iters: u64,
+}
+
+impl Solution {
+    /// True if the solver produced a usable assignment.
+    pub fn has_solution(&self) -> bool {
+        matches!(self.status, SolveStatus::Optimal | SolveStatus::TimeLimitFeasible)
+    }
+
+    /// Value of a variable in the incumbent.
+    pub fn value(&self, v: VarId) -> f64 {
+        self.values[v.0]
+    }
+
+    /// Binary interpretation of a variable (tolerant rounding).
+    pub fn bool_value(&self, v: VarId) -> bool {
+        self.values[v.0] > 0.5
+    }
+}
+
+impl fmt::Display for SolveStatus {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let t = match self {
+            SolveStatus::Optimal => "optimal",
+            SolveStatus::TimeLimitFeasible => "time-limit (feasible)",
+            SolveStatus::TimeLimitNoSolution => "time-limit (no solution)",
+            SolveStatus::Infeasible => "infeasible",
+            SolveStatus::Unbounded => "unbounded",
+        };
+        f.write_str(t)
+    }
+}
+
+impl Model {
+    /// Empty model.
+    pub fn new() -> Self {
+        Model::default()
+    }
+
+    /// Number of variables.
+    pub fn num_vars(&self) -> usize {
+        self.vars.len()
+    }
+
+    /// Number of constraints.
+    pub fn num_cons(&self) -> usize {
+        self.cons.len()
+    }
+
+    /// Add a binary variable with objective coefficient `obj`.
+    pub fn binary(&mut self, name: impl Into<String>, obj: f64) -> VarId {
+        self.add_var(name, VarKind::Binary, 0.0, 1.0, obj)
+    }
+
+    /// Add a continuous variable.
+    pub fn continuous(
+        &mut self,
+        name: impl Into<String>,
+        lb: f64,
+        ub: f64,
+        obj: f64,
+    ) -> VarId {
+        self.add_var(name, VarKind::Continuous, lb, ub, obj)
+    }
+
+    /// Add an integer variable.
+    pub fn integer(&mut self, name: impl Into<String>, lb: f64, ub: f64, obj: f64) -> VarId {
+        self.add_var(name, VarKind::Integer, lb, ub, obj)
+    }
+
+    fn add_var(
+        &mut self,
+        name: impl Into<String>,
+        kind: VarKind,
+        lb: f64,
+        ub: f64,
+        obj: f64,
+    ) -> VarId {
+        debug_assert!(lb <= ub, "variable bounds crossed");
+        let id = VarId(self.vars.len());
+        self.vars.push(Variable { name: name.into(), kind, lb, ub, obj });
+        id
+    }
+
+    /// Fix a variable to a constant.
+    pub fn fix(&mut self, v: VarId, value: f64) {
+        self.vars[v.0].lb = value;
+        self.vars[v.0].ub = value;
+    }
+
+    /// Add a constraint. Terms with duplicate variables are merged.
+    pub fn constraint(&mut self, terms: Vec<(VarId, f64)>, cmp: Cmp, rhs: f64) {
+        let mut merged: Vec<(VarId, f64)> = Vec::with_capacity(terms.len());
+        let mut sorted = terms;
+        sorted.sort_by_key(|(v, _)| *v);
+        for (v, c) in sorted {
+            if c == 0.0 {
+                continue;
+            }
+            match merged.last_mut() {
+                Some((lv, lc)) if *lv == v => *lc += c,
+                _ => merged.push((v, c)),
+            }
+        }
+        merged.retain(|(_, c)| *c != 0.0);
+        self.cons.push(Constraint { terms: merged, cmp, rhs });
+    }
+
+    /// Check whether `x` satisfies every constraint, bound, and integrality
+    /// requirement within tolerance `eps`. Returns the first violation.
+    pub fn check_feasible(&self, x: &[f64], eps: f64) -> Result<(), String> {
+        if x.len() != self.vars.len() {
+            return Err(format!("wrong length: {} vs {}", x.len(), self.vars.len()));
+        }
+        for (i, v) in self.vars.iter().enumerate() {
+            if x[i] < v.lb - eps || x[i] > v.ub + eps {
+                return Err(format!(
+                    "var {} ('{}') = {} outside [{}, {}]",
+                    i, v.name, x[i], v.lb, v.ub
+                ));
+            }
+            if matches!(v.kind, VarKind::Binary | VarKind::Integer)
+                && (x[i] - x[i].round()).abs() > eps
+            {
+                return Err(format!("var {} ('{}') = {} not integral", i, v.name, x[i]));
+            }
+        }
+        for (ci, c) in self.cons.iter().enumerate() {
+            let lhs: f64 = c.terms.iter().map(|(v, coef)| coef * x[v.0]).sum();
+            // Scale tolerance with the constraint magnitude so big-M rows
+            // (|rhs| up to total model bytes) don't trip on f64 rounding.
+            let scale = 1.0 + c.rhs.abs().max(lhs.abs());
+            let tol = eps * scale;
+            let ok = match c.cmp {
+                Cmp::Le => lhs <= c.rhs + tol,
+                Cmp::Ge => lhs >= c.rhs - tol,
+                Cmp::Eq => (lhs - c.rhs).abs() <= tol,
+            };
+            if !ok {
+                return Err(format!(
+                    "constraint {ci} violated: lhs={lhs} {:?} rhs={}",
+                    c.cmp, c.rhs
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Objective value of assignment `x`.
+    pub fn objective_value(&self, x: &[f64]) -> f64 {
+        self.vars.iter().enumerate().map(|(i, v)| v.obj * x[i]).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_check() {
+        let mut m = Model::new();
+        let a = m.binary("a", 1.0);
+        let b = m.binary("b", 2.0);
+        m.constraint(vec![(a, 1.0), (b, 1.0)], Cmp::Ge, 1.0);
+        assert_eq!(m.num_vars(), 2);
+        assert!(m.check_feasible(&[1.0, 0.0], 1e-9).is_ok());
+        assert!(m.check_feasible(&[0.0, 0.0], 1e-9).is_err());
+        assert!(m.check_feasible(&[0.5, 0.6], 1e-9).is_err()); // not integral
+        assert_eq!(m.objective_value(&[1.0, 1.0]), 3.0);
+    }
+
+    #[test]
+    fn duplicate_terms_merge() {
+        let mut m = Model::new();
+        let a = m.continuous("a", 0.0, 10.0, 0.0);
+        m.constraint(vec![(a, 1.0), (a, 2.0)], Cmp::Le, 6.0);
+        assert_eq!(m.cons[0].terms, vec![(a, 3.0)]);
+        // zero coefficients dropped
+        m.constraint(vec![(a, 1.0), (a, -1.0)], Cmp::Le, 0.0);
+        assert!(m.cons[1].terms.is_empty());
+    }
+
+    #[test]
+    fn fix_variable() {
+        let mut m = Model::new();
+        let a = m.binary("a", 0.0);
+        m.fix(a, 1.0);
+        assert!(m.check_feasible(&[0.0], 1e-9).is_err());
+        assert!(m.check_feasible(&[1.0], 1e-9).is_ok());
+    }
+}

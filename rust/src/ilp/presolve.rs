@@ -1,0 +1,234 @@
+//! Presolve: bound tightening and redundancy elimination.
+//!
+//! The OLLA formulations fix large numbers of variables up front (eq. 10–12
+//! span bounding). Presolve propagates those fixings through the constraint
+//! system, which both shrinks the LPs and catches infeasibility before the
+//! simplex runs.
+
+use super::model::{Cmp, Model, VarKind};
+use super::simplex::EPS;
+
+/// Presolve outcome.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PresolveStatus {
+    /// Bounds tightened; problem may be feasible.
+    Reduced,
+    /// Proven infeasible by bound propagation.
+    Infeasible,
+}
+
+/// Result of presolve: tightened bounds plus a row-activity mask.
+#[derive(Debug, Clone)]
+pub struct Presolved {
+    /// Status.
+    pub status: PresolveStatus,
+    /// Tightened lower bounds.
+    pub lb: Vec<f64>,
+    /// Tightened upper bounds.
+    pub ub: Vec<f64>,
+    /// `active[i]` is false when row `i` is redundant under the bounds.
+    pub active: Vec<bool>,
+    /// Number of variables that ended up fixed.
+    pub fixed_vars: usize,
+}
+
+/// Run bound propagation to a fixpoint (bounded number of rounds).
+pub fn presolve(model: &Model, lb0: &[f64], ub0: &[f64]) -> Presolved {
+    let n = model.num_vars();
+    let mut lb = lb0.to_vec();
+    let mut ub = ub0.to_vec();
+    let mut active = vec![true; model.num_cons()];
+
+    // Integer bound rounding.
+    for (j, v) in model.vars.iter().enumerate() {
+        if matches!(v.kind, VarKind::Integer | VarKind::Binary) {
+            lb[j] = (lb[j] - EPS).ceil();
+            ub[j] = (ub[j] + EPS).floor();
+        }
+        if lb[j] > ub[j] + EPS {
+            return infeasible(lb, ub, active);
+        }
+    }
+
+    let max_rounds = 10;
+    for _round in 0..max_rounds {
+        let mut changed = false;
+        for (ci, c) in model.cons.iter().enumerate() {
+            if !active[ci] {
+                continue;
+            }
+            // Row activity bounds.
+            let mut min_act = 0.0f64;
+            let mut max_act = 0.0f64;
+            for &(v, a) in &c.terms {
+                if a >= 0.0 {
+                    min_act += a * lb[v.0];
+                    max_act += a * ub[v.0];
+                } else {
+                    min_act += a * ub[v.0];
+                    max_act += a * lb[v.0];
+                }
+            }
+            let tol = EPS * (1.0 + c.rhs.abs());
+            match c.cmp {
+                Cmp::Le => {
+                    if min_act > c.rhs + tol {
+                        return infeasible(lb, ub, active);
+                    }
+                    if max_act <= c.rhs + tol {
+                        active[ci] = false; // redundant
+                        continue;
+                    }
+                }
+                Cmp::Ge => {
+                    if max_act < c.rhs - tol {
+                        return infeasible(lb, ub, active);
+                    }
+                    if min_act >= c.rhs - tol {
+                        active[ci] = false;
+                        continue;
+                    }
+                }
+                Cmp::Eq => {
+                    if min_act > c.rhs + tol || max_act < c.rhs - tol {
+                        return infeasible(lb, ub, active);
+                    }
+                    if (min_act - c.rhs).abs() <= tol && (max_act - c.rhs).abs() <= tol {
+                        active[ci] = false;
+                        continue;
+                    }
+                }
+            }
+            // Per-variable tightening: for <= rows (and both directions of ==),
+            // x_j <= (rhs - min_act_without_j) / a_j  (a_j > 0), etc.
+            let le_like = matches!(c.cmp, Cmp::Le | Cmp::Eq);
+            let ge_like = matches!(c.cmp, Cmp::Ge | Cmp::Eq);
+            for &(v, a) in &c.terms {
+                let j = v.0;
+                if a == 0.0 {
+                    continue;
+                }
+                let (mn_wo, mx_wo) = if a >= 0.0 {
+                    (min_act - a * lb[j], max_act - a * ub[j])
+                } else {
+                    (min_act - a * ub[j], max_act - a * lb[j])
+                };
+                let is_int =
+                    matches!(model.vars[j].kind, VarKind::Integer | VarKind::Binary);
+                if le_like {
+                    // a*x <= rhs - mn_wo
+                    let room = c.rhs - mn_wo;
+                    if a > 0.0 {
+                        let new_ub = room / a;
+                        let new_ub = if is_int { (new_ub + EPS).floor() } else { new_ub };
+                        if new_ub < ub[j] - EPS {
+                            ub[j] = new_ub;
+                            changed = true;
+                        }
+                    } else {
+                        let new_lb = room / a;
+                        let new_lb = if is_int { (new_lb - EPS).ceil() } else { new_lb };
+                        if new_lb > lb[j] + EPS {
+                            lb[j] = new_lb;
+                            changed = true;
+                        }
+                    }
+                }
+                if ge_like {
+                    // a*x >= rhs - mx_wo
+                    let need = c.rhs - mx_wo;
+                    if a > 0.0 {
+                        let new_lb = need / a;
+                        let new_lb = if is_int { (new_lb - EPS).ceil() } else { new_lb };
+                        if new_lb > lb[j] + EPS {
+                            lb[j] = new_lb;
+                            changed = true;
+                        }
+                    } else {
+                        let new_ub = need / a;
+                        let new_ub = if is_int { (new_ub + EPS).floor() } else { new_ub };
+                        if new_ub < ub[j] - EPS {
+                            ub[j] = new_ub;
+                            changed = true;
+                        }
+                    }
+                }
+                if lb[j] > ub[j] + EPS {
+                    return infeasible(lb, ub, active);
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    let fixed = (0..n).filter(|&j| (ub[j] - lb[j]).abs() <= EPS).count();
+    Presolved { status: PresolveStatus::Reduced, lb, ub, active, fixed_vars: fixed }
+}
+
+fn infeasible(lb: Vec<f64>, ub: Vec<f64>, active: Vec<bool>) -> Presolved {
+    Presolved { status: PresolveStatus::Infeasible, lb, ub, active, fixed_vars: 0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ilp::model::{Cmp, Model};
+
+    #[test]
+    fn fixes_forced_binaries() {
+        // x + y >= 2 with binaries forces both to 1.
+        let mut m = Model::new();
+        let x = m.binary("x", 1.0);
+        let y = m.binary("y", 1.0);
+        m.constraint(vec![(x, 1.0), (y, 1.0)], Cmp::Ge, 2.0);
+        let lb: Vec<f64> = m.vars.iter().map(|v| v.lb).collect();
+        let ub: Vec<f64> = m.vars.iter().map(|v| v.ub).collect();
+        let p = presolve(&m, &lb, &ub);
+        assert_eq!(p.status, PresolveStatus::Reduced);
+        assert_eq!(p.lb, vec![1.0, 1.0]);
+        assert_eq!(p.fixed_vars, 2);
+    }
+
+    #[test]
+    fn detects_infeasible_bounds() {
+        let mut m = Model::new();
+        let x = m.binary("x", 1.0);
+        m.constraint(vec![(x, 1.0)], Cmp::Ge, 2.0);
+        let p = presolve(&m, &[0.0], &[1.0]);
+        assert_eq!(p.status, PresolveStatus::Infeasible);
+    }
+
+    #[test]
+    fn drops_redundant_rows() {
+        let mut m = Model::new();
+        let x = m.binary("x", 1.0);
+        m.constraint(vec![(x, 1.0)], Cmp::Le, 5.0); // always true
+        let p = presolve(&m, &[0.0], &[1.0]);
+        assert!(!p.active[0]);
+    }
+
+    #[test]
+    fn chains_propagation() {
+        // eq-chain: x == 1; y <= x - 1 => y == 0 for binary y.
+        let mut m = Model::new();
+        let x = m.binary("x", 0.0);
+        let y = m.binary("y", 0.0);
+        m.constraint(vec![(x, 1.0)], Cmp::Ge, 1.0);
+        m.constraint(vec![(y, 1.0), (x, -1.0)], Cmp::Le, -1.0 + 1.0); // y <= x - 0 => y<=x
+        m.constraint(vec![(y, 1.0)], Cmp::Le, 0.0);
+        let p = presolve(&m, &[0.0, 0.0], &[1.0, 1.0]);
+        assert_eq!(p.status, PresolveStatus::Reduced);
+        assert_eq!(p.lb[0], 1.0);
+        assert_eq!(p.ub[1], 0.0);
+    }
+
+    #[test]
+    fn integer_rounding() {
+        let mut m = Model::new();
+        let x = m.integer("x", 0.0, 10.0, 1.0);
+        m.constraint(vec![(x, 2.0)], Cmp::Le, 7.0); // x <= 3.5 -> 3
+        let p = presolve(&m, &[0.0], &[10.0]);
+        assert_eq!(p.ub[0], 3.0);
+    }
+}

@@ -1,0 +1,47 @@
+//! # OLLA — Optimizing the Lifetime and Location of Arrays
+//!
+//! A production-quality reproduction of *"OLLA: Optimizing the Lifetime and
+//! Location of Arrays to Reduce the Memory Usage of Neural Networks"*
+//! (Steiner et al., 2022) as a three-layer Rust + JAX + Pallas system.
+//!
+//! The crate contains:
+//!
+//! * [`graph`] — the dataflow-graph substrate (operators, tensors, ASAP/ALAP
+//!   analysis, precedence) on which everything operates;
+//! * [`ilp`] — a from-scratch MILP solver (bounded-variable simplex +
+//!   branch & bound) standing in for Gurobi;
+//! * [`olla`] — the paper's contribution: the joint/scheduling/placement ILP
+//!   formulations, the §4 scaling techniques, and the end-to-end planner;
+//! * [`sched`] — baseline schedulers (PyTorch definition order, TensorFlow
+//!   FCFS, memory-aware greedy, exact DP);
+//! * [`alloc`] — allocator simulators (PyTorch-style caching allocator,
+//!   best-fit planner, OLLA static arena) and fragmentation metrics;
+//! * [`models`] — a zoo that reconstructs the paper's training graphs;
+//! * [`runtime`] — the PJRT execution layer that trains the real JAX/Pallas
+//!   model with an OLLA-planned arena;
+//! * [`coordinator`] — experiment pipelines and report generation;
+//! * [`bench_support`] — the hand-rolled benchmark harness used by
+//!   `rust/benches/*` (criterion is unavailable offline).
+
+
+
+
+pub mod alloc;
+pub mod graph;
+pub mod bench_support;
+pub mod coordinator;
+pub mod ilp;
+pub mod models;
+pub mod olla;
+pub mod runtime;
+pub mod sched;
+
+
+
+
+pub mod util;
+
+/// Crate version (mirrors `Cargo.toml`).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

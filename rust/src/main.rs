@@ -1,0 +1,254 @@
+//! `olla` — the L3 coordinator CLI.
+//!
+//! Commands:
+//!   olla zoo                              list the model zoo with graph stats
+//!   olla optimize --model NAME [..]       run the OLLA pipeline on one model
+//!   olla sweep [--batch 1,32] [..]        Figure-7-style sweep over the zoo
+//!   olla inspect --model NAME [--dot F]   dump graph stats / DOT
+//!   olla plan-artifacts [--artifacts D]   plan memory for the real jaxpr graph
+//!   olla train [--steps N] [..]           end-to-end PJRT training run
+//!
+//! (clap is not vendored in this offline image; flags are parsed by hand.)
+
+use olla::coordinator::{reorder_experiment, zoo_cases, Table};
+use olla::graph::dot::to_dot;
+use olla::models::{build_graph, ModelScale, ZOO};
+use olla::olla::{PlacementOptions, PlannerOptions, ScheduleOptions};
+use olla::runtime::{Engine, Manifest, Trainer};
+use olla::util::{human_bytes, human_duration};
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    let result = match cmd {
+        "zoo" => cmd_zoo(),
+        "optimize" => cmd_optimize(rest),
+        "sweep" => cmd_sweep(rest),
+        "inspect" => cmd_inspect(rest),
+        "plan-artifacts" => cmd_plan_artifacts(rest),
+        "train" => cmd_train(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "olla {} — Optimizing the Lifetime and Location of Arrays
+
+USAGE: olla <COMMAND> [FLAGS]
+
+COMMANDS:
+  zoo                         list models and training-graph stats
+  optimize                    run the OLLA pipeline on one model
+      --model NAME            zoo model (see `olla zoo`)
+      --batch N               batch size (default 1)
+      --scale full|reduced    depth scale (default reduced)
+      --time-limit SECS       per-phase ILP cap (default 30)
+  sweep                       reordering sweep over the whole zoo (Fig. 7)
+      --batch LIST            comma-separated batch sizes (default 1,32)
+      --scale full|reduced    (default reduced)
+      --time-limit SECS       per-model cap (default 10)
+  inspect                     print graph stats
+      --model NAME --batch N  [--dot FILE] [--scale full|reduced]
+  plan-artifacts              OLLA on the jaxpr-exported train graph
+      --artifacts DIR         (default ./artifacts)
+      --time-limit SECS       (default 30)
+  train                       end-to-end PJRT training (needs `make artifacts`)
+      --artifacts DIR         (default ./artifacts)
+      --steps N               training steps (default 100)
+      --log-every N           loss log cadence (default 10)
+      --seed N                init/data seed (default 0)",
+        olla::version()
+    );
+}
+
+fn flag(rest: &[String], name: &str) -> Option<String> {
+    rest.iter().position(|a| a == name).and_then(|i| rest.get(i + 1)).cloned()
+}
+
+fn parse_scale(rest: &[String]) -> ModelScale {
+    match flag(rest, "--scale").as_deref() {
+        Some("full") => ModelScale::Full,
+        _ => ModelScale::Reduced,
+    }
+}
+
+fn parse_secs(rest: &[String], name: &str, default: f64) -> Duration {
+    Duration::from_secs_f64(flag(rest, name).and_then(|s| s.parse().ok()).unwrap_or(default))
+}
+
+fn cmd_zoo() -> anyhow::Result<()> {
+    let mut t =
+        Table::new(&["model", "|V| (bs1)", "|E| (bs1)", "params", "peak@bs1 (pytorch)"]);
+    for z in ZOO {
+        let net = olla::models::build_net(z.name, 1, ModelScale::Full).unwrap();
+        let g = net.training_graph();
+        let peak =
+            olla::sched::sim::peak_bytes(&g, &olla::sched::orders::pytorch_order(&g));
+        t.row(vec![
+            z.name.to_string(),
+            g.num_nodes().to_string(),
+            g.num_edges().to_string(),
+            format!("{:.1}M", net.param_bytes() as f64 / 4e6),
+            human_bytes(peak),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_optimize(rest: &[String]) -> anyhow::Result<()> {
+    let model = flag(rest, "--model").ok_or_else(|| anyhow::anyhow!("--model required"))?;
+    let batch: usize = flag(rest, "--batch").and_then(|s| s.parse().ok()).unwrap_or(1);
+    let scale = parse_scale(rest);
+    let cap = parse_secs(rest, "--time-limit", 30.0);
+    let g = build_graph(&model, batch, scale)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
+    let opts = PlannerOptions {
+        schedule: ScheduleOptions { time_limit: cap, ..Default::default() },
+        placement: PlacementOptions { time_limit: cap, ..Default::default() },
+        add_control_edges: true,
+    };
+    let baseline =
+        olla::sched::sim::peak_bytes(&g, &olla::sched::orders::pytorch_order(&g));
+    let plan = olla::olla::optimize(&g, &opts);
+    olla::olla::validate_plan(&g, &plan).map_err(|e| anyhow::anyhow!(e))?;
+    println!("model               : {model} (batch {batch}, {scale:?})");
+    println!("graph               : {} nodes, {} edges", g.num_nodes(), g.num_edges());
+    println!("control edges added : {}", plan.control_edges_added);
+    println!("pytorch-order peak  : {}", human_bytes(baseline));
+    println!(
+        "olla schedule peak  : {}  ({:.1}% reduction, {})",
+        human_bytes(plan.schedule.sim_peak),
+        100.0 * (1.0 - plan.schedule.sim_peak as f64 / baseline.max(1) as f64),
+        plan.schedule.status,
+    );
+    println!(
+        "olla arena          : {}  (lower bound {}, fragmentation {:.2}%, {:?})",
+        human_bytes(plan.arena_size),
+        human_bytes(plan.placement.lower_bound),
+        100.0 * plan.placement.fragmentation,
+        plan.placement.method,
+    );
+    println!(
+        "planning time       : {} (schedule {}, placement {})",
+        human_duration(Duration::from_secs_f64(plan.total_secs)),
+        human_duration(Duration::from_secs_f64(plan.schedule.solve_secs)),
+        human_duration(Duration::from_secs_f64(plan.placement.solve_secs)),
+    );
+    Ok(())
+}
+
+fn cmd_sweep(rest: &[String]) -> anyhow::Result<()> {
+    let batches: Vec<usize> = flag(rest, "--batch")
+        .unwrap_or_else(|| "1,32".into())
+        .split(',')
+        .filter_map(|s| s.parse().ok())
+        .collect();
+    let scale = parse_scale(rest);
+    let cap = parse_secs(rest, "--time-limit", 10.0);
+    let opts = ScheduleOptions { time_limit: cap, ..Default::default() };
+    let mut t = Table::new(&[
+        "model", "batch", "|V|", "pytorch", "olla", "reduction", "status", "time",
+    ]);
+    let mut reductions = Vec::new();
+    for case in zoo_cases(&batches, scale) {
+        let row = reorder_experiment(&case, &opts);
+        reductions.push(row.reduction_pct);
+        t.row(vec![
+            row.model,
+            row.batch.to_string(),
+            row.graph_size.0.to_string(),
+            human_bytes(row.pytorch_peak),
+            human_bytes(row.olla_peak),
+            format!("{:.1}%", row.reduction_pct),
+            row.status,
+            human_duration(Duration::from_secs_f64(row.solve_secs)),
+        ]);
+    }
+    t.print();
+    println!("\naverage reduction: {:.1}%", olla::util::mean(&reductions));
+    Ok(())
+}
+
+fn cmd_inspect(rest: &[String]) -> anyhow::Result<()> {
+    let model = flag(rest, "--model").ok_or_else(|| anyhow::anyhow!("--model required"))?;
+    let batch: usize = flag(rest, "--batch").and_then(|s| s.parse().ok()).unwrap_or(1);
+    let g = build_graph(&model, batch, parse_scale(rest))
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
+    let spans = olla::graph::analysis::Spans::compute(&g);
+    let slack: usize = g.node_ids().map(|v| spans.alap[v.idx()] - spans.asap[v.idx()]).sum();
+    println!("{}: {} nodes, {} edges", g.name, g.num_nodes(), g.num_edges());
+    println!("total tensor bytes: {}", human_bytes(g.total_bytes()));
+    println!("avg span slack: {:.2} steps", slack as f64 / g.num_nodes() as f64);
+    if let Some(path) = flag(rest, "--dot") {
+        std::fs::write(&path, to_dot(&g))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_plan_artifacts(rest: &[String]) -> anyhow::Result<()> {
+    let dir = PathBuf::from(flag(rest, "--artifacts").unwrap_or_else(|| "artifacts".into()));
+    let cap = parse_secs(rest, "--time-limit", 30.0);
+    let manifest = Manifest::load(&dir)?;
+    let engine = Engine::cpu()?;
+    let trainer = Trainer::new(&engine, manifest, 0)?;
+    let report = trainer.plan_memory(cap)?;
+    println!("captured graph  : {} nodes, {} edges", report.nodes, report.edges);
+    println!("pytorch peak    : {}", human_bytes(report.pytorch_peak));
+    println!(
+        "olla peak       : {} ({:.1}% reduction)",
+        human_bytes(report.olla_peak),
+        report.reduction_pct()
+    );
+    println!(
+        "olla arena      : {} (fragmentation {:.2}%)",
+        human_bytes(report.arena_size),
+        100.0 * report.fragmentation
+    );
+    println!("planning time   : {:.2}s", report.plan_secs);
+    Ok(())
+}
+
+fn cmd_train(rest: &[String]) -> anyhow::Result<()> {
+    let dir = PathBuf::from(flag(rest, "--artifacts").unwrap_or_else(|| "artifacts".into()));
+    let steps: u64 = flag(rest, "--steps").and_then(|s| s.parse().ok()).unwrap_or(100);
+    let log_every: u64 =
+        flag(rest, "--log-every").and_then(|s| s.parse().ok()).unwrap_or(10);
+    let seed: u64 = flag(rest, "--seed").and_then(|s| s.parse().ok()).unwrap_or(0);
+    let manifest = Manifest::load(&dir)?;
+    let engine = Engine::cpu()?;
+    println!(
+        "loaded artifacts: {} params, platform {}",
+        manifest.param_count,
+        engine.platform()
+    );
+    let mut trainer = Trainer::new(&engine, manifest, seed)?;
+    let report = trainer.plan_memory(Duration::from_secs(20))?;
+    println!(
+        "OLLA plan: peak {} vs pytorch {} ({:.1}% reduction), frag {:.2}%",
+        human_bytes(report.olla_peak),
+        human_bytes(report.pytorch_peak),
+        report.reduction_pct(),
+        100.0 * report.fragmentation
+    );
+    let last = trainer.train(steps, log_every)?;
+    println!("final loss after {steps} steps: {last:.4}");
+    Ok(())
+}

@@ -1,0 +1,224 @@
+//! Shape-tracking builder for convolutional networks.
+//!
+//! Computes activation/weight byte sizes from layer hyper-parameters so the
+//! zoo's training graphs carry realistic tensor sizes at any batch size.
+
+use super::net::{Net, INPUT};
+
+const F32: u64 = 4;
+
+/// A tensor cursor: which op produced it and its (C, H, W) shape.
+#[derive(Debug, Clone, Copy)]
+pub struct T {
+    /// Producer op index (or [`INPUT`]).
+    pub op: usize,
+    /// Channels.
+    pub c: usize,
+    /// Height.
+    pub h: usize,
+    /// Width.
+    pub w: usize,
+    /// Extra leading dim (frames for 3D video models; 1 otherwise).
+    pub d: usize,
+}
+
+/// Builder for CNN-style nets.
+pub struct CnnBuilder {
+    /// The net under construction.
+    pub net: Net,
+    batch: usize,
+}
+
+impl CnnBuilder {
+    /// Start a CNN taking `(c, h, w)` input images.
+    pub fn new(name: &str, batch: usize, c: usize, h: usize, w: usize) -> (Self, T) {
+        Self::new_3d(name, batch, 1, c, h, w)
+    }
+
+    /// Start a video CNN taking `(d, c, h, w)` clips.
+    pub fn new_3d(
+        name: &str,
+        batch: usize,
+        d: usize,
+        c: usize,
+        h: usize,
+        w: usize,
+    ) -> (Self, T) {
+        let input_bytes = (batch * d * c * h * w) as u64 * F32;
+        let b = CnnBuilder { net: Net::new(format!("{name}-bs{batch}"), input_bytes), batch };
+        (b, T { op: INPUT, c, h, w, d })
+    }
+
+    fn act_bytes(&self, t: &T) -> u64 {
+        (self.batch * t.d * t.c * t.h * t.w) as u64 * F32
+    }
+
+    /// 2D convolution (+bias), optionally fused BN (adds 2c params) + ReLU.
+    pub fn conv(&mut self, name: &str, x: T, cout: usize, k: usize, s: usize, p: usize) -> T {
+        let h = (x.h + 2 * p - k) / s + 1;
+        let w = (x.w + 2 * p - k) / s + 1;
+        let out = T { op: 0, c: cout, h, w, d: x.d };
+        let weight = ((x.c * k * k + 1) * cout) as u64 * F32;
+        let bytes = self.act_bytes(&out);
+        let op = self.net.op(name, vec![x.op], weight, bytes);
+        T { op, ..out }
+    }
+
+    /// 3D convolution over (d, h, w).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv3d(
+        &mut self,
+        name: &str,
+        x: T,
+        cout: usize,
+        kt: usize,
+        k: usize,
+        s: usize,
+        st: usize,
+        p: usize,
+    ) -> T {
+        let d = (x.d + 2 * (kt / 2) - kt) / st + 1; // temporal pad = kt/2
+        let h = (x.h + 2 * p - k) / s + 1;
+        let w = (x.w + 2 * p - k) / s + 1;
+        let out = T { op: 0, c: cout, h, w, d };
+        let weight = ((x.c * kt * k * k + 1) * cout) as u64 * F32;
+        let bytes = self.act_bytes(&out);
+        let op = self.net.op(name, vec![x.op], weight, bytes);
+        T { op, ..out }
+    }
+
+    /// Depthwise 2D convolution.
+    pub fn dwconv(&mut self, name: &str, x: T, k: usize, s: usize, p: usize) -> T {
+        let h = (x.h + 2 * p - k) / s + 1;
+        let w = (x.w + 2 * p - k) / s + 1;
+        let out = T { op: 0, c: x.c, h, w, d: x.d };
+        let weight = (x.c * k * k + x.c) as u64 * F32;
+        let bytes = self.act_bytes(&out);
+        let op = self.net.op(name, vec![x.op], weight, bytes);
+        T { op, ..out }
+    }
+
+    /// Batch normalization (2c trainable params, same-size activation).
+    pub fn bn(&mut self, name: &str, x: T) -> T {
+        let bytes = self.act_bytes(&x);
+        let op = self.net.op(name, vec![x.op], (2 * x.c) as u64 * F32, bytes);
+        T { op, ..x }
+    }
+
+    /// ReLU / activation function (no params, same size).
+    pub fn relu(&mut self, name: &str, x: T) -> T {
+        let bytes = self.act_bytes(&x);
+        let op = self.net.op(name, vec![x.op], 0, bytes);
+        T { op, ..x }
+    }
+
+    /// Max/avg pooling.
+    pub fn pool(&mut self, name: &str, x: T, k: usize, s: usize) -> T {
+        let h = (x.h - k) / s + 1;
+        let w = (x.w - k) / s + 1;
+        let out = T { op: 0, c: x.c, h, w, d: x.d };
+        let bytes = self.act_bytes(&out);
+        let op = self.net.op(name, vec![x.op], 0, bytes);
+        T { op, ..out }
+    }
+
+    /// Global average pool to (c, 1, 1).
+    pub fn global_pool(&mut self, name: &str, x: T) -> T {
+        let out = T { op: 0, c: x.c, h: 1, w: 1, d: 1 };
+        let bytes = self.act_bytes(&out);
+        let op = self.net.op(name, vec![x.op], 0, bytes);
+        T { op, ..out }
+    }
+
+    /// Fully connected layer (flattens its input).
+    pub fn fc(&mut self, name: &str, x: T, out_features: usize) -> T {
+        let in_features = x.c * x.h * x.w * x.d;
+        let weight = ((in_features + 1) * out_features) as u64 * F32;
+        let out = T { op: 0, c: out_features, h: 1, w: 1, d: 1 };
+        let bytes = self.act_bytes(&out);
+        let op = self.net.op(name, vec![x.op], weight, bytes);
+        T { op, ..out }
+    }
+
+    /// Elementwise add (residual connection).
+    pub fn add(&mut self, name: &str, a: T, b: T) -> T {
+        debug_assert_eq!((a.c, a.h, a.w, a.d), (b.c, b.h, b.w, b.d), "shape mismatch in {name}");
+        let bytes = self.act_bytes(&a);
+        let op = self.net.op(name, vec![a.op, b.op], 0, bytes);
+        T { op, ..a }
+    }
+
+    /// Elementwise multiply (SE scaling); shapes broadcast over (h, w).
+    pub fn scale(&mut self, name: &str, a: T, b: T) -> T {
+        let bytes = self.act_bytes(&a);
+        let op = self.net.op(name, vec![a.op, b.op], 0, bytes);
+        T { op, ..a }
+    }
+
+    /// Channel concatenation (inception blocks).
+    pub fn concat(&mut self, name: &str, parts: &[T]) -> T {
+        let c: usize = parts.iter().map(|t| t.c).sum();
+        let out = T { op: 0, c, h: parts[0].h, w: parts[0].w, d: parts[0].d };
+        let bytes = self.act_bytes(&out);
+        let op = self.net.op(name, parts.iter().map(|t| t.op).collect(), 0, bytes);
+        T { op, ..out }
+    }
+
+    /// Finish and return the net.
+    pub fn finish(self) -> Net {
+        self.net
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shape_arithmetic() {
+        let (mut b, x) = CnnBuilder::new("t", 2, 3, 224, 224);
+        let y = b.conv("c1", x, 64, 7, 2, 3);
+        assert_eq!((y.c, y.h, y.w), (64, 112, 112));
+        let z = b.pool("p1", y, 2, 2);
+        assert_eq!((z.h, z.w), (56, 56));
+        // act bytes: 2 * 64 * 112 * 112 * 4
+        let net = b.finish();
+        assert_eq!(net.ops[0].out_bytes, 2 * 64 * 112 * 112 * 4);
+        // weight bytes: (3*7*7+1)*64*4
+        assert_eq!(net.ops[0].weight_bytes, (3 * 49 + 1) as u64 * 64 * 4);
+    }
+
+    #[test]
+    fn fc_flattens() {
+        let (mut b, x) = CnnBuilder::new("t", 1, 8, 4, 4);
+        let y = b.fc("fc", x, 10);
+        assert_eq!(y.c, 10);
+        let net = b.finish();
+        assert_eq!(net.ops[0].weight_bytes, (8 * 16 + 1) as u64 * 10 * 4);
+    }
+
+    #[test]
+    fn concat_sums_channels() {
+        let (mut b, x) = CnnBuilder::new("t", 1, 16, 8, 8);
+        let l = b.conv("l", x, 8, 1, 1, 0);
+        let r = b.conv("r", x, 24, 1, 1, 0);
+        let c = b.concat("cat", &[l, r]);
+        assert_eq!(c.c, 32);
+        let net = b.finish();
+        let g = net.training_graph();
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn residual_training_graph_validates() {
+        let (mut b, x) = CnnBuilder::new("res", 4, 16, 32, 32);
+        let c1 = b.conv("c1", x, 16, 3, 1, 1);
+        let r1 = b.relu("r1", c1);
+        let c2 = b.conv("c2", r1, 16, 3, 1, 1);
+        let s = b.add("add", c2, x);
+        let _out = b.fc("head", s, 10);
+        let g = b.finish().training_graph();
+        g.validate().unwrap();
+        assert!(g.num_nodes() > 12);
+    }
+}

@@ -1,0 +1,17 @@
+//! Model zoo: reconstructs the training dataflow graphs of every network in
+//! the paper's evaluation (§5.2) with exact tensor byte sizes.
+//!
+//! The paper captures these graphs from PyTorch via torch.FX; OLLA itself
+//! only ever sees the (operator, tensor-size) DAG, so rebuilding the same
+//! DAGs from the published architectures exercises the identical code path
+//! (see DESIGN.md §2 for the substitution argument). Graphs captured from a
+//! *real* framework enter through [`crate::graph::json_io`], produced by
+//! `python/compile/graph_export.py` from a jaxpr.
+
+pub mod cnn;
+pub mod net;
+pub mod transformer;
+pub mod zoo;
+
+pub use net::{Net, OpSpec, INPUT};
+pub use zoo::{build_graph, build_net, ModelScale, ZooEntry, ZOO};

@@ -1,0 +1,290 @@
+//! Network IR and training-graph lowering.
+//!
+//! The paper captures training graphs from PyTorch with torch.FX (§5.1); we
+//! reconstruct equivalent graphs from the published architectures. A model
+//! is described as a list of forward [`OpSpec`]s (with weight and output
+//! sizes computed from layer shapes); [`Net::training_graph`] then lowers it
+//! into the full training dataflow DAG:
+//!
+//! * one `Parameter` node + weight edge per parameterized op, consumed by
+//!   the forward op, its backward op, and the weight-update node;
+//! * forward ops producing activation edges consumed by downstream forward
+//!   ops *and* by the corresponding backward ops (activations retained for
+//!   the backward pass — §5.3);
+//! * a loss node bridging forward and backward;
+//! * backward ops mirroring the forward DAG, producing activation gradients
+//!   (same size as the forward activation) and weight gradients (same size
+//!   as the weight — the paper's observation that gradients are smaller
+//!   than activations by roughly the batch-size factor);
+//! * gradient-accumulation nodes where a forward activation feeds several
+//!   consumers (what autograd's implicit `add` does);
+//! * one `WeightUpdate` node per weight, consuming the weight and its
+//!   gradient and producing the updated weight (a program output).
+
+use crate::graph::{EdgeId, Graph, NodeId, OpKind};
+
+/// Marker for "this op consumes the network input".
+pub const INPUT: usize = usize::MAX;
+
+/// One forward operator.
+#[derive(Debug, Clone)]
+pub struct OpSpec {
+    /// Name (unique within the net).
+    pub name: String,
+    /// Producer ops feeding this op ([`INPUT`] for the network input).
+    pub inputs: Vec<usize>,
+    /// Trainable parameter bytes (0 for pooling/activation/reshape ops).
+    pub weight_bytes: u64,
+    /// Output activation bytes (batch-dependent).
+    pub out_bytes: u64,
+    /// Whether the backward op needs the *input* activations (true for
+    /// convs/matmuls; false for e.g. plain additions).
+    pub needs_inputs_in_bwd: bool,
+}
+
+/// A forward network description.
+#[derive(Debug, Clone)]
+pub struct Net {
+    /// Model name.
+    pub name: String,
+    /// Network input bytes (batch-dependent).
+    pub input_bytes: u64,
+    /// Forward ops in definition order (already topologically sorted).
+    pub ops: Vec<OpSpec>,
+}
+
+impl Net {
+    /// New empty net.
+    pub fn new(name: impl Into<String>, input_bytes: u64) -> Self {
+        Net { name: name.into(), input_bytes, ops: Vec::new() }
+    }
+
+    /// Append a forward op; returns its index.
+    pub fn op(
+        &mut self,
+        name: impl Into<String>,
+        inputs: Vec<usize>,
+        weight_bytes: u64,
+        out_bytes: u64,
+    ) -> usize {
+        for &i in &inputs {
+            debug_assert!(i == INPUT || i < self.ops.len(), "forward ref");
+        }
+        self.ops.push(OpSpec {
+            name: name.into(),
+            inputs,
+            weight_bytes,
+            out_bytes,
+            needs_inputs_in_bwd: true,
+        });
+        self.ops.len() - 1
+    }
+
+    /// Total trainable parameter bytes.
+    pub fn param_bytes(&self) -> u64 {
+        self.ops.iter().map(|o| o.weight_bytes).sum()
+    }
+
+    /// Number of forward ops.
+    pub fn num_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Lower to the full training graph.
+    pub fn training_graph(&self) -> Graph {
+        let mut g = Graph::new(self.name.clone());
+        let n = self.ops.len();
+
+        // ---- Forward pass ----
+        let input_node = g.add_node("input", OpKind::Input);
+        let input_edge = g.add_edge("x", input_node, &[], self.input_bytes);
+
+        let mut fwd_node: Vec<NodeId> = Vec::with_capacity(n);
+        let mut act_edge: Vec<EdgeId> = Vec::with_capacity(n);
+        let mut w_edge: Vec<Option<EdgeId>> = Vec::with_capacity(n);
+        for (i, op) in self.ops.iter().enumerate() {
+            let f = g.add_node(format!("{}", op.name), OpKind::Compute);
+            for &inp in &op.inputs {
+                let e = if inp == INPUT { input_edge } else { act_edge[inp] };
+                g.add_sink(e, f);
+            }
+            let w = if op.weight_bytes > 0 {
+                let p = g.add_node(format!("{}.w", op.name), OpKind::Parameter);
+                let we = g.add_edge(format!("{}.weight", op.name), p, &[f], op.weight_bytes);
+                Some(we)
+            } else {
+                None
+            };
+            w_edge.push(w);
+            let a = g.add_edge(format!("{}.out", op.name), f, &[], op.out_bytes);
+            fwd_node.push(f);
+            act_edge.push(a);
+            let _ = i;
+        }
+
+        // Terminal forward ops feed the loss.
+        let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, op) in self.ops.iter().enumerate() {
+            for &inp in &op.inputs {
+                if inp != INPUT {
+                    consumers[inp].push(i);
+                }
+            }
+        }
+        let terminals: Vec<usize> = (0..n).filter(|&i| consumers[i].is_empty()).collect();
+        let loss = g.add_node("loss", OpKind::Compute);
+        for &t in &terminals {
+            g.add_sink(act_edge[t], loss);
+        }
+
+        // ---- Backward pass (reverse topological = reverse definition) ----
+        // grad_out[i]: the gradient edge w.r.t. op i's output, fed to bwd_i.
+        // Contributions come from the loss (terminals) or from consumer
+        // backward ops; >1 contributions get an accumulation node.
+        let mut grad_contrib: Vec<Vec<EdgeId>> = vec![Vec::new(); n];
+        for &t in &terminals {
+            let e = g.add_edge(
+                format!("d{}.from_loss", self.ops[t].name),
+                loss,
+                &[],
+                self.ops[t].out_bytes,
+            );
+            grad_contrib[t].push(e);
+        }
+
+        // PyTorch semantics: `loss.backward()` runs the whole backward pass,
+        // THEN `optimizer.step()` applies every weight update. Definition
+        // order must reflect that (updates appended after all backward ops)
+        // — deferring updates is precisely the §4.3 inefficiency OLLA fixes.
+        let mut pending_updates: Vec<(usize, EdgeId, EdgeId)> = Vec::new(); // (op, dw, w)
+        for i in (0..n).rev() {
+            let op = &self.ops[i];
+            // Resolve the incoming gradient (accumulate if needed).
+            let gout: EdgeId = match grad_contrib[i].len() {
+                0 => {
+                    // Dead branch (no consumers, not a terminal) — cannot
+                    // happen with our builders; guard anyway.
+                    let e = g.add_edge(format!("d{}.zero", op.name), loss, &[], op.out_bytes);
+                    e
+                }
+                1 => grad_contrib[i][0],
+                _ => {
+                    let acc = g.add_node(format!("{}.grad_acc", op.name), OpKind::Compute);
+                    for &e in &grad_contrib[i] {
+                        g.add_sink(e, acc);
+                    }
+                    g.add_edge(format!("d{}.out", op.name), acc, &[], op.out_bytes)
+                }
+            };
+            let b = g.add_node(format!("{}.bwd", op.name), OpKind::Compute);
+            g.add_sink(gout, b);
+            // Backward needs the forward inputs (for weight grads) and the
+            // weight (for input grads).
+            if op.needs_inputs_in_bwd {
+                for &inp in &op.inputs {
+                    let e = if inp == INPUT { input_edge } else { act_edge[inp] };
+                    g.add_sink(e, b);
+                }
+            }
+            if let Some(we) = w_edge[i] {
+                g.add_sink(we, b);
+                // Weight gradient; its update node is deferred to the end.
+                let dw = g.add_edge(format!("{}.dw", op.name), b, &[], op.weight_bytes);
+                pending_updates.push((i, dw, we));
+            }
+            // Gradients to propagate to producers.
+            for &inp in &op.inputs {
+                if inp == INPUT {
+                    continue; // no grad w.r.t. data
+                }
+                let e = g.add_edge(
+                    format!("d{}.via_{}", self.ops[inp].name, op.name),
+                    b,
+                    &[],
+                    self.ops[inp].out_bytes,
+                );
+                grad_contrib[inp].push(e);
+            }
+        }
+
+        // optimizer.step(): one update node per weight, defined after the
+        // whole backward pass (reverse order mirrors PyTorch's parameter
+        // iteration; the order within the step phase is immaterial).
+        for (i, dw, we) in pending_updates.into_iter().rev() {
+            let name = &self.ops[i].name;
+            let upd = g.add_node(format!("{name}.update"), OpKind::WeightUpdate);
+            g.add_sink(dw, upd);
+            g.add_sink(we, upd);
+            g.add_edge(format!("{name}.w_new"), upd, &[], self.ops[i].weight_bytes);
+        }
+
+        debug_assert!(g.validate().is_ok(), "{:?}", g.validate());
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_net() -> Net {
+        let mut n = Net::new("tiny", 1024);
+        let a = n.op("fc1", vec![INPUT], 4096, 512);
+        let b = n.op("relu1", vec![a], 0, 512);
+        let _c = n.op("fc2", vec![b], 2048, 256);
+        n
+    }
+
+    #[test]
+    fn training_graph_structure() {
+        let net = tiny_net();
+        let g = net.training_graph();
+        g.validate().unwrap();
+        // Nodes: input + 3 fwd + 2 params + loss + 3 bwd + 2 updates = 12.
+        assert_eq!(g.num_nodes(), 12);
+        let updates =
+            g.nodes.iter().filter(|n| n.kind == OpKind::WeightUpdate).count();
+        assert_eq!(updates, 2);
+        let params = g.nodes.iter().filter(|n| n.kind == OpKind::Parameter).count();
+        assert_eq!(params, 2);
+    }
+
+    #[test]
+    fn activations_feed_backward() {
+        let net = tiny_net();
+        let g = net.training_graph();
+        // fc1's output must be consumed by relu1 (fwd) and relu1.bwd/fc2.bwd.
+        let e = g.find_edge("fc1.out").unwrap();
+        let snks: Vec<&str> =
+            g.edge(e).snks.iter().map(|&v| g.node(v).name.as_str()).collect();
+        assert!(snks.contains(&"relu1"));
+        assert!(snks.iter().any(|s| s.ends_with(".bwd")));
+    }
+
+    #[test]
+    fn branches_get_grad_accumulation() {
+        let mut n = Net::new("branchy", 64);
+        let a = n.op("stem", vec![INPUT], 128, 64);
+        let b1 = n.op("left", vec![a], 128, 64);
+        let b2 = n.op("right", vec![a], 128, 64);
+        let _m = n.op("merge", vec![b1, b2], 0, 64);
+        let g = n.training_graph();
+        g.validate().unwrap();
+        assert!(
+            g.nodes.iter().any(|nd| nd.name == "stem.grad_acc"),
+            "stem has two consumers -> gradient accumulation node expected"
+        );
+    }
+
+    #[test]
+    fn param_bytes_sum() {
+        assert_eq!(tiny_net().param_bytes(), 6144);
+    }
+
+    #[test]
+    fn updated_weights_are_terminal_outputs() {
+        let g = tiny_net().training_graph();
+        let e = g.find_edge("fc1.w_new").unwrap();
+        assert!(g.edge(e).snks.is_empty());
+    }
+}

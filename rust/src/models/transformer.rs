@@ -1,0 +1,157 @@
+//! Shape-tracking builder for transformer-family models (Transformer,
+//! ViT, XLM-R — §5.2 of the paper).
+
+use super::net::{Net, INPUT};
+
+const F32: u64 = 4;
+
+/// Cursor over a `(seq, dim)` activation.
+#[derive(Debug, Clone, Copy)]
+pub struct S {
+    /// Producer op index (or INPUT).
+    pub op: usize,
+    /// Sequence length.
+    pub seq: usize,
+    /// Feature dimension.
+    pub dim: usize,
+}
+
+/// Builder for transformer encoders/decoders.
+pub struct TransformerBuilder {
+    /// The net under construction.
+    pub net: Net,
+    batch: usize,
+    heads: usize,
+}
+
+impl TransformerBuilder {
+    /// Start a transformer over `seq` tokens of `dim` features. The network
+    /// input is the token-id tensor (int32, `seq` per example).
+    pub fn new(name: &str, batch: usize, seq: usize, heads: usize) -> (Self, S) {
+        let input_bytes = (batch * seq) as u64 * 4; // int32 token ids
+        let b = TransformerBuilder {
+            net: Net::new(format!("{name}-bs{batch}"), input_bytes),
+            batch,
+            heads,
+        };
+        (b, S { op: INPUT, seq, dim: 0 })
+    }
+
+    fn act(&self, seq: usize, dim: usize) -> u64 {
+        (self.batch * seq * dim) as u64 * F32
+    }
+
+    /// Token + position embedding lookup.
+    pub fn embed(&mut self, name: &str, x: S, vocab: usize, dim: usize) -> S {
+        let weight = (vocab * dim + x.seq * dim) as u64 * F32;
+        let op = self.net.op(name, vec![x.op], weight, self.act(x.seq, dim));
+        S { op, seq: x.seq, dim }
+    }
+
+    /// LayerNorm (2*dim params).
+    pub fn ln(&mut self, name: &str, x: S) -> S {
+        let op =
+            self.net.op(name, vec![x.op], (2 * x.dim) as u64 * F32, self.act(x.seq, x.dim));
+        S { op, ..x }
+    }
+
+    /// Dense projection `dim -> out` (+bias).
+    pub fn linear(&mut self, name: &str, x: S, out: usize) -> S {
+        let weight = (x.dim * out + out) as u64 * F32;
+        let op = self.net.op(name, vec![x.op], weight, self.act(x.seq, out));
+        S { op, seq: x.seq, dim: out }
+    }
+
+    /// GELU / activation (no params).
+    pub fn act_fn(&mut self, name: &str, x: S) -> S {
+        let op = self.net.op(name, vec![x.op], 0, self.act(x.seq, x.dim));
+        S { op, ..x }
+    }
+
+    /// Residual add.
+    pub fn add(&mut self, name: &str, a: S, b: S) -> S {
+        debug_assert_eq!((a.seq, a.dim), (b.seq, b.dim));
+        let op = self.net.op(name, vec![a.op, b.op], 0, self.act(a.seq, a.dim));
+        S { op, ..a }
+    }
+
+    /// Multi-head self-attention over `x` (paper-standard decomposition:
+    /// fused QKV projection, score matmul, softmax, value matmul, output
+    /// projection). The score/softmax activations are `B*H*S*S` floats —
+    /// the memory hot-spot the L1 Pallas kernel targets.
+    pub fn self_attention(&mut self, prefix: &str, x: S) -> S {
+        let d = x.dim;
+        let qkv = self.linear(&format!("{prefix}.qkv"), x, 3 * d);
+        let scores_bytes = (self.batch * self.heads * x.seq * x.seq) as u64 * F32;
+        let scores =
+            self.net.op(format!("{prefix}.scores"), vec![qkv.op], 0, scores_bytes);
+        let softmax =
+            self.net.op(format!("{prefix}.softmax"), vec![scores], 0, scores_bytes);
+        let ctx = self.net.op(
+            format!("{prefix}.context"),
+            vec![softmax, qkv.op],
+            0,
+            self.act(x.seq, d),
+        );
+        let ctx_s = S { op: ctx, seq: x.seq, dim: d };
+        self.linear(&format!("{prefix}.proj"), ctx_s, d)
+    }
+
+    /// A full pre-norm encoder layer: LN → MHA → add → LN → FFN → add.
+    pub fn encoder_layer(&mut self, prefix: &str, x: S, ffn: usize) -> S {
+        let n1 = self.ln(&format!("{prefix}.ln1"), x);
+        let attn = self.self_attention(&format!("{prefix}.attn"), n1);
+        let r1 = self.add(&format!("{prefix}.add1"), attn, x);
+        let n2 = self.ln(&format!("{prefix}.ln2"), r1);
+        let f1 = self.linear(&format!("{prefix}.fc1"), n2, ffn);
+        let gelu = self.act_fn(&format!("{prefix}.gelu"), f1);
+        let f2 = self.linear(&format!("{prefix}.fc2"), gelu, x.dim);
+        self.add(&format!("{prefix}.add2"), f2, r1)
+    }
+
+    /// Language-model head projecting to the vocabulary.
+    pub fn lm_head(&mut self, name: &str, x: S, vocab: usize) -> S {
+        self.linear(name, x, vocab)
+    }
+
+    /// Finish and return the net.
+    pub fn finish(self) -> Net {
+        self.net
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encoder_layer_shapes_and_params() {
+        let (mut b, x0) = TransformerBuilder::new("t", 2, 16, 4);
+        let x = b.embed("embed", x0, 1000, 64);
+        let y = b.encoder_layer("l0", x, 256);
+        assert_eq!((y.seq, y.dim), (16, 64));
+        let net = b.finish();
+        let g = net.training_graph();
+        g.validate().unwrap();
+        // qkv: 64*192+192; proj 64*64+64; fc1 64*256+256; fc2 256*64+64;
+        // ln1/ln2 128 each; embed 1000*64+16*64.
+        let expected = (64 * 192 + 192)
+            + (64 * 64 + 64)
+            + (64 * 256 + 256)
+            + (256 * 64 + 64)
+            + 128
+            + 128
+            + (1000 * 64 + 16 * 64);
+        assert_eq!(net.param_bytes(), expected as u64 * 4);
+    }
+
+    #[test]
+    fn attention_scores_scale_quadratically() {
+        let (mut b, x0) = TransformerBuilder::new("t", 1, 32, 4);
+        let x = b.embed("embed", x0, 100, 32);
+        b.self_attention("a", x);
+        let net = b.finish();
+        let scores = net.ops.iter().find(|o| o.name == "a.scores").unwrap();
+        assert_eq!(scores.out_bytes, (1 * 4 * 32 * 32) as u64 * 4);
+    }
+}

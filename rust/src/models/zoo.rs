@@ -1,0 +1,562 @@
+//! The model zoo: training graphs for every network in the paper's §5.2
+//! evaluation, built from the published architectures at batch sizes 1/32.
+//!
+//! A `scale` knob uniformly shrinks depth (layer repeats) so the ILP-solved
+//! benchmark variants stay within the embedded solver's capacity; `Full`
+//! reproduces the published layer counts. Tensor *sizes* are always exact
+//! for the chosen architecture — only the number of repeated blocks changes
+//! with scale.
+
+use super::cnn::CnnBuilder;
+use super::net::Net;
+use super::transformer::TransformerBuilder;
+use crate::graph::Graph;
+
+/// Depth scaling for a zoo model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelScale {
+    /// Published layer counts.
+    Full,
+    /// Depth-reduced variant for ILP-tractable benchmarking.
+    Reduced,
+}
+
+fn rep(scale: ModelScale, full: usize, reduced: usize) -> usize {
+    match scale {
+        ModelScale::Full => full,
+        ModelScale::Reduced => reduced.min(full),
+    }
+}
+
+/// AlexNet (Krizhevsky et al., 2012).
+pub fn alexnet(batch: usize, _scale: ModelScale) -> Net {
+    let (mut b, x) = CnnBuilder::new("alexnet", batch, 3, 227, 227);
+    let c1 = b.conv("conv1", x, 64, 11, 4, 2);
+    let r1 = b.relu("relu1", c1);
+    let p1 = b.pool("pool1", r1, 3, 2);
+    let c2 = b.conv("conv2", p1, 192, 5, 1, 2);
+    let r2 = b.relu("relu2", c2);
+    let p2 = b.pool("pool2", r2, 3, 2);
+    let c3 = b.conv("conv3", p2, 384, 3, 1, 1);
+    let r3 = b.relu("relu3", c3);
+    let c4 = b.conv("conv4", r3, 256, 3, 1, 1);
+    let r4 = b.relu("relu4", c4);
+    let c5 = b.conv("conv5", r4, 256, 3, 1, 1);
+    let r5 = b.relu("relu5", c5);
+    let p5 = b.pool("pool5", r5, 3, 2);
+    let f6 = b.fc("fc6", p5, 4096);
+    let r6 = b.relu("relu6", f6);
+    let f7 = b.fc("fc7", r6, 4096);
+    let r7 = b.relu("relu7", f7);
+    let _f8 = b.fc("fc8", r7, 1000);
+    b.finish()
+}
+
+/// VGG-11 ("A" configuration; Simonyan & Zisserman, 2015).
+pub fn vgg11(batch: usize, scale: ModelScale) -> Net {
+    let (mut b, x) = CnnBuilder::new("vgg11", batch, 3, 224, 224);
+    let cfg_full: &[&[usize]] = &[&[64], &[128], &[256, 256], &[512, 512], &[512, 512]];
+    let cfg_red: &[&[usize]] = &[&[64], &[128], &[256], &[512], &[512]];
+    let cfg = if scale == ModelScale::Full { cfg_full } else { cfg_red };
+    let mut t = x;
+    for (bi, block) in cfg.iter().enumerate() {
+        for (ci, &cout) in block.iter().enumerate() {
+            let c = b.conv(&format!("conv{bi}_{ci}"), t, cout, 3, 1, 1);
+            t = b.relu(&format!("relu{bi}_{ci}"), c);
+        }
+        t = b.pool(&format!("pool{bi}"), t, 2, 2);
+    }
+    let f1 = b.fc("fc1", t, 4096);
+    let r1 = b.relu("fc_relu1", f1);
+    let f2 = b.fc("fc2", r1, 4096);
+    let r2 = b.relu("fc_relu2", f2);
+    let _f3 = b.fc("fc3", r2, 1000);
+    b.finish()
+}
+
+/// ResNet-18 (He et al., 2016). `Reduced` halves the per-stage block count.
+pub fn resnet18(batch: usize, scale: ModelScale) -> Net {
+    resnet(batch, "resnet18", &[rep(scale, 2, 1); 4], false)
+}
+
+/// ResNet-50 with bottleneck blocks.
+pub fn resnet50(batch: usize, scale: ModelScale) -> Net {
+    let blocks = [rep(scale, 3, 1), rep(scale, 4, 1), rep(scale, 6, 2), rep(scale, 3, 1)];
+    resnet(batch, "resnet50", &blocks, true)
+}
+
+fn resnet(batch: usize, name: &str, blocks: &[usize; 4], bottleneck: bool) -> Net {
+    let (mut b, x) = CnnBuilder::new(name, batch, 3, 224, 224);
+    let c = b.conv("stem.conv", x, 64, 7, 2, 3);
+    let bn = b.bn("stem.bn", c);
+    let r = b.relu("stem.relu", bn);
+    let mut t = b.pool("stem.pool", r, 3, 2); // 56x56
+    let widths = [64usize, 128, 256, 512];
+    for (si, (&w, &n)) in widths.iter().zip(blocks.iter()).enumerate() {
+        for bi in 0..n {
+            let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+            let pre = t;
+            let id = format!("s{si}b{bi}");
+            if bottleneck {
+                let c1 = b.conv(&format!("{id}.conv1"), t, w, 1, 1, 0);
+                let b1 = b.bn(&format!("{id}.bn1"), c1);
+                let r1 = b.relu(&format!("{id}.relu1"), b1);
+                let c2 = b.conv(&format!("{id}.conv2"), r1, w, 3, stride, 1);
+                let b2 = b.bn(&format!("{id}.bn2"), c2);
+                let r2 = b.relu(&format!("{id}.relu2"), b2);
+                let c3 = b.conv(&format!("{id}.conv3"), r2, 4 * w, 1, 1, 0);
+                let b3 = b.bn(&format!("{id}.bn3"), c3);
+                let shortcut = if pre.c != 4 * w || stride != 1 {
+                    let sc = b.conv(&format!("{id}.down"), pre, 4 * w, 1, stride, 0);
+                    b.bn(&format!("{id}.down_bn"), sc)
+                } else {
+                    pre
+                };
+                let s = b.add(&format!("{id}.add"), b3, shortcut);
+                t = b.relu(&format!("{id}.out"), s);
+            } else {
+                let c1 = b.conv(&format!("{id}.conv1"), t, w, 3, stride, 1);
+                let b1 = b.bn(&format!("{id}.bn1"), c1);
+                let r1 = b.relu(&format!("{id}.relu1"), b1);
+                let c2 = b.conv(&format!("{id}.conv2"), r1, w, 3, 1, 1);
+                let b2 = b.bn(&format!("{id}.bn2"), c2);
+                let shortcut = if pre.c != w || stride != 1 {
+                    let sc = b.conv(&format!("{id}.down"), pre, w, 1, stride, 0);
+                    b.bn(&format!("{id}.down_bn"), sc)
+                } else {
+                    pre
+                };
+                let s = b.add(&format!("{id}.add"), b2, shortcut);
+                t = b.relu(&format!("{id}.out"), s);
+            }
+        }
+    }
+    let g = b.global_pool("gap", t);
+    let _fc = b.fc("fc", g, 1000);
+    b.finish()
+}
+
+/// GoogleNet / Inception-v1 (Szegedy et al., 2015).
+pub fn googlenet(batch: usize, scale: ModelScale) -> Net {
+    let (mut b, x) = CnnBuilder::new("googlenet", batch, 3, 224, 224);
+    let c1 = b.conv("conv1", x, 64, 7, 2, 3);
+    let r1 = b.relu("relu1", c1);
+    let p1 = b.pool("pool1", r1, 3, 2);
+    let c2 = b.conv("conv2", p1, 192, 3, 1, 1);
+    let r2 = b.relu("relu2", c2);
+    let mut t = b.pool("pool2", r2, 3, 2); // 28x28
+
+    // (1x1, 3x3reduce, 3x3, 5x5reduce, 5x5, pool_proj) per inception block.
+    let cfg_full: &[(usize, usize, usize, usize, usize, usize)] = &[
+        (64, 96, 128, 16, 32, 32),
+        (128, 128, 192, 32, 96, 64),
+        // pool
+        (192, 96, 208, 16, 48, 64),
+        (160, 112, 224, 24, 64, 64),
+        (128, 128, 256, 24, 64, 64),
+        (112, 144, 288, 32, 64, 64),
+        (256, 160, 320, 32, 128, 128),
+        // pool
+        (256, 160, 320, 32, 128, 128),
+        (384, 192, 384, 48, 128, 128),
+    ];
+    let take = rep(scale, cfg_full.len(), 4);
+    for (i, &(c1x, c3r, c3x, c5r, c5x, cp)) in cfg_full.iter().take(take).enumerate() {
+        if i == 2 || i == 7 {
+            t = b.pool(&format!("pool_at_{i}"), t, 3, 2);
+        }
+        let id = format!("inc{i}");
+        let b1 = b.conv(&format!("{id}.1x1"), t, c1x, 1, 1, 0);
+        let b3a = b.conv(&format!("{id}.3x3r"), t, c3r, 1, 1, 0);
+        let b3 = b.conv(&format!("{id}.3x3"), b3a, c3x, 3, 1, 1);
+        let b5a = b.conv(&format!("{id}.5x5r"), t, c5r, 1, 1, 0);
+        let b5 = b.conv(&format!("{id}.5x5"), b5a, c5x, 5, 1, 2);
+        let bp0 = b.pool(&format!("{id}.poolb"), t, 3, 1);
+        // 3x3/1 pool with padding keeps shape; our pool() has no pad, so
+        // emulate with a same-shape conv-free op: use relu as identity-size.
+        let bp0 = crate::models::cnn::T { h: t.h, w: t.w, ..bp0 };
+        let bp = b.conv(&format!("{id}.pool_proj"), bp0, cp, 1, 1, 0);
+        t = b.concat(&format!("{id}.cat"), &[b1, b3, b5, bp]);
+    }
+    let g = b.global_pool("gap", t);
+    let _fc = b.fc("fc", g, 1000);
+    b.finish()
+}
+
+/// MobileNetV2 (Sandler et al.; §5.2 cites Howard et al.'s MobileNets).
+pub fn mobilenet(batch: usize, scale: ModelScale) -> Net {
+    let (mut b, x) = CnnBuilder::new("mobilenet", batch, 3, 224, 224);
+    let c = b.conv("stem", x, 32, 3, 2, 1);
+    let bn0 = b.bn("stem.bn", c);
+    let mut t = b.relu("stem.relu", bn0);
+    // (expansion, cout, repeats, stride)
+    let cfg_full: &[(usize, usize, usize, usize)] = &[
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    for (si, &(e, cout, n, s)) in cfg_full.iter().enumerate() {
+        let n = rep(scale, n, 1);
+        for bi in 0..n {
+            let stride = if bi == 0 { s } else { 1 };
+            let id = format!("ir{si}_{bi}");
+            let pre = t;
+            let hidden = pre.c * e;
+            let mut u = t;
+            if e != 1 {
+                let ex = b.conv(&format!("{id}.expand"), u, hidden, 1, 1, 0);
+                let bn = b.bn(&format!("{id}.expand_bn"), ex);
+                u = b.relu(&format!("{id}.expand_relu"), bn);
+            }
+            let dw = b.dwconv(&format!("{id}.dw"), u, 3, stride, 1);
+            let bn1 = b.bn(&format!("{id}.dw_bn"), dw);
+            let a1 = b.relu(&format!("{id}.dw_relu"), bn1);
+            let pj = b.conv(&format!("{id}.project"), a1, cout, 1, 1, 0);
+            let bn2 = b.bn(&format!("{id}.project_bn"), pj);
+            t = if stride == 1 && pre.c == cout {
+                b.add(&format!("{id}.add"), bn2, pre)
+            } else {
+                bn2
+            };
+        }
+    }
+    let c_last = b.conv("head.conv", t, 1280, 1, 1, 0);
+    let r_last = b.relu("head.relu", c_last);
+    let g = b.global_pool("gap", r_last);
+    let _fc = b.fc("fc", g, 1000);
+    b.finish()
+}
+
+/// EfficientNet-B0 (Tan & Le, 2019) with squeeze-and-excitation blocks —
+/// the paper's hardest scheduling instance (Figures 9/10).
+pub fn efficientnet(batch: usize, scale: ModelScale) -> Net {
+    let (mut b, x) = CnnBuilder::new("efficientnet", batch, 3, 224, 224);
+    let c = b.conv("stem", x, 32, 3, 2, 1);
+    let bn0 = b.bn("stem.bn", c);
+    let mut t = b.relu("stem.swish", bn0);
+    // (expansion, cout, repeats, stride, kernel)
+    let cfg: &[(usize, usize, usize, usize, usize)] = &[
+        (1, 16, 1, 1, 3),
+        (6, 24, 2, 2, 3),
+        (6, 40, 2, 2, 5),
+        (6, 80, 3, 2, 3),
+        (6, 112, 3, 1, 5),
+        (6, 192, 4, 2, 5),
+        (6, 320, 1, 1, 3),
+    ];
+    for (si, &(e, cout, n, s, k)) in cfg.iter().enumerate() {
+        let n = rep(scale, n, 1);
+        for bi in 0..n {
+            let stride = if bi == 0 { s } else { 1 };
+            let id = format!("mb{si}_{bi}");
+            let pre = t;
+            let hidden = pre.c * e;
+            let mut u = t;
+            if e != 1 {
+                let ex = b.conv(&format!("{id}.expand"), u, hidden, 1, 1, 0);
+                let bn = b.bn(&format!("{id}.expand_bn"), ex);
+                u = b.relu(&format!("{id}.expand_swish"), bn);
+            }
+            let dw = b.dwconv(&format!("{id}.dw"), u, k, stride, k / 2);
+            let bn1 = b.bn(&format!("{id}.dw_bn"), dw);
+            let a1 = b.relu(&format!("{id}.dw_swish"), bn1);
+            // Squeeze-and-excitation: pool -> fc -> fc -> scale.
+            let se_mid = (pre.c / 4).max(1);
+            let sq = b.global_pool(&format!("{id}.se_pool"), a1);
+            let s1 = b.fc(&format!("{id}.se_fc1"), sq, se_mid);
+            let s1a = b.relu(&format!("{id}.se_swish"), s1);
+            let s2 = b.fc(&format!("{id}.se_fc2"), s1a, hidden);
+            let sg = b.relu(&format!("{id}.se_sigmoid"), s2);
+            let scaled = b.scale(&format!("{id}.se_scale"), a1, sg);
+            let pj = b.conv(&format!("{id}.project"), scaled, cout, 1, 1, 0);
+            let bn2 = b.bn(&format!("{id}.project_bn"), pj);
+            t = if stride == 1 && pre.c == cout {
+                b.add(&format!("{id}.add"), bn2, pre)
+            } else {
+                bn2
+            };
+        }
+    }
+    let c_last = b.conv("head.conv", t, 1280, 1, 1, 0);
+    let r_last = b.relu("head.swish", c_last);
+    let g = b.global_pool("gap", r_last);
+    let _fc = b.fc("fc", g, 1000);
+    b.finish()
+}
+
+/// MNASNet (Tan et al., 2019) — the NAS-designed model of §5.2.
+pub fn mnasnet(batch: usize, scale: ModelScale) -> Net {
+    let (mut b, x) = CnnBuilder::new("mnasnet", batch, 3, 224, 224);
+    let c = b.conv("stem", x, 32, 3, 2, 1);
+    let mut t = b.relu("stem.relu", c);
+    let dw = b.dwconv("sep.dw", t, 3, 1, 1);
+    let pj = b.conv("sep.pw", dw, 16, 1, 1, 0);
+    t = pj;
+    let cfg: &[(usize, usize, usize, usize, usize)] = &[
+        (3, 24, 3, 2, 3),
+        (3, 40, 3, 2, 5),
+        (6, 80, 3, 2, 5),
+        (6, 96, 2, 1, 3),
+        (6, 192, 4, 2, 5),
+        (6, 320, 1, 1, 3),
+    ];
+    for (si, &(e, cout, n, s, k)) in cfg.iter().enumerate() {
+        let n = rep(scale, n, 1);
+        for bi in 0..n {
+            let stride = if bi == 0 { s } else { 1 };
+            let id = format!("mn{si}_{bi}");
+            let pre = t;
+            let hidden = pre.c * e;
+            let ex = b.conv(&format!("{id}.expand"), t, hidden, 1, 1, 0);
+            let a0 = b.relu(&format!("{id}.expand_relu"), ex);
+            let dw = b.dwconv(&format!("{id}.dw"), a0, k, stride, k / 2);
+            let a1 = b.relu(&format!("{id}.dw_relu"), dw);
+            let pj = b.conv(&format!("{id}.project"), a1, cout, 1, 1, 0);
+            t = if stride == 1 && pre.c == cout {
+                b.add(&format!("{id}.add"), pj, pre)
+            } else {
+                pj
+            };
+        }
+    }
+    let g = b.global_pool("gap", t);
+    let _fc = b.fc("fc", g, 1000);
+    b.finish()
+}
+
+/// ResNet3D-18 (Tran et al., 2018) for video: 16-frame 112x112 clips.
+pub fn resnet3d(batch: usize, scale: ModelScale) -> Net {
+    let (mut b, x) = CnnBuilder::new_3d("resnet3d", batch, 16, 3, 112, 112);
+    let c = b.conv3d("stem", x, 64, 3, 7, 2, 1, 3);
+    let mut t = b.relu("stem.relu", c);
+    let widths = [64usize, 128, 256, 512];
+    for (si, &w) in widths.iter().enumerate() {
+        let n = rep(scale, 2, 1);
+        for bi in 0..n {
+            let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+            let st = if si > 0 && bi == 0 { 2 } else { 1 };
+            let id = format!("r3d_s{si}b{bi}");
+            let pre = t;
+            let c1 = b.conv3d(&format!("{id}.conv1"), t, w, 3, 3, stride, st, 1);
+            let r1 = b.relu(&format!("{id}.relu1"), c1);
+            let c2 = b.conv3d(&format!("{id}.conv2"), r1, w, 3, 3, 1, 1, 1);
+            let shortcut = if pre.c != w || stride != 1 {
+                b.conv3d(&format!("{id}.down"), pre, w, 1, 1, stride, st, 0)
+            } else {
+                pre
+            };
+            let s = b.add(&format!("{id}.add"), c2, shortcut);
+            t = b.relu(&format!("{id}.out"), s);
+        }
+    }
+    let g = b.global_pool("gap", t);
+    let _fc = b.fc("fc", g, 400);
+    b.finish()
+}
+
+/// The original Transformer encoder stack (Vaswani et al., 2017) sized for
+/// IWSLT-style translation (seq 64, d=512, 6 layers, vocab 32k).
+pub fn transformer(batch: usize, scale: ModelScale) -> Net {
+    let (mut b, x0) = TransformerBuilder::new("transformer", batch, 64, 8);
+    let mut t = b.embed("embed", x0, 32_000, 512);
+    for l in 0..rep(scale, 6, 2) {
+        t = b.encoder_layer(&format!("enc{l}"), t, 2048);
+    }
+    let _head = b.lm_head("lm_head", t, 32_000);
+    b.finish()
+}
+
+/// ViT-B/16 (Dosovitskiy et al., 2020): 224x224 → 196+1 tokens, d=768.
+pub fn vit(batch: usize, scale: ModelScale) -> Net {
+    let (mut b, x0) = TransformerBuilder::new("vit", batch, 197, 12);
+    // Patch embedding: conv16x16/16 ≈ linear on 196 patches of 768 dims.
+    let mut t = b.embed("patch_embed", x0, 16 * 16 * 3, 768);
+    for l in 0..rep(scale, 12, 2) {
+        t = b.encoder_layer(&format!("blk{l}"), t, 3072);
+    }
+    let _head = b.lm_head("cls_head", t, 1000);
+    b.finish()
+}
+
+/// XLM-R base (Conneau et al., 2019): 12 layers, d=768, vocab 250k — the
+/// paper's largest graph (2007 operators in their FX capture).
+pub fn xlmr(batch: usize, scale: ModelScale) -> Net {
+    let (mut b, x0) = TransformerBuilder::new("xlmr", batch, 128, 12);
+    let mut t = b.embed("embed", x0, 250_002, 768);
+    for l in 0..rep(scale, 12, 2) {
+        t = b.encoder_layer(&format!("layer{l}"), t, 3072);
+    }
+    let _head = b.lm_head("mlm_head", t, 250_002);
+    b.finish()
+}
+
+/// U-Net (extra model exercising long skip connections — the worst case for
+/// activation lifetimes; used in ablations).
+pub fn unet(batch: usize, scale: ModelScale) -> Net {
+    let (mut b, x) = CnnBuilder::new("unet", batch, 3, 128, 128);
+    let depth = rep(scale, 4, 2);
+    let mut skips = Vec::new();
+    let mut t = x;
+    let mut ch = 32;
+    for d in 0..depth {
+        let c1 = b.conv(&format!("down{d}.c1"), t, ch, 3, 1, 1);
+        let r1 = b.relu(&format!("down{d}.r1"), c1);
+        skips.push(r1);
+        t = b.pool(&format!("down{d}.pool"), r1, 2, 2);
+        ch *= 2;
+    }
+    let mid = b.conv("mid", t, ch, 3, 1, 1);
+    t = b.relu("mid.relu", mid);
+    for d in (0..depth).rev() {
+        ch /= 2;
+        // Upsample modeled as 1x1 conv to ch at double resolution.
+        let skip = skips[d];
+        let up = {
+            // emulate transpose conv: output shape matches the skip
+            let u = b.conv(&format!("up{d}.tconv"), t, ch, 1, 1, 0);
+            crate::models::cnn::T { h: skip.h, w: skip.w, ..u }
+        };
+        let cat = b.concat(&format!("up{d}.cat"), &[up, skip]);
+        let c1 = b.conv(&format!("up{d}.c1"), cat, ch, 3, 1, 1);
+        t = b.relu(&format!("up{d}.r1"), c1);
+    }
+    let _out = b.conv("head", t, 1, 1, 1, 0);
+    b.finish()
+}
+
+/// A zoo entry: a named model constructor.
+pub struct ZooEntry {
+    /// Model name used by the CLI and benches.
+    pub name: &'static str,
+    /// Constructor.
+    pub build: fn(usize, ModelScale) -> Net,
+}
+
+/// All models of the paper's evaluation (§5.2) plus `unet`.
+pub const ZOO: &[ZooEntry] = &[
+    ZooEntry { name: "alexnet", build: alexnet },
+    ZooEntry { name: "vgg11", build: vgg11 },
+    ZooEntry { name: "resnet18", build: resnet18 },
+    ZooEntry { name: "resnet50", build: resnet50 },
+    ZooEntry { name: "googlenet", build: googlenet },
+    ZooEntry { name: "mobilenet", build: mobilenet },
+    ZooEntry { name: "efficientnet", build: efficientnet },
+    ZooEntry { name: "mnasnet", build: mnasnet },
+    ZooEntry { name: "resnet3d", build: resnet3d },
+    ZooEntry { name: "transformer", build: transformer },
+    ZooEntry { name: "vit", build: vit },
+    ZooEntry { name: "xlmr", build: xlmr },
+    ZooEntry { name: "unet", build: unet },
+];
+
+/// Build a model's training graph by name.
+pub fn build_graph(name: &str, batch: usize, scale: ModelScale) -> Option<Graph> {
+    ZOO.iter()
+        .find(|z| z.name == name)
+        .map(|z| (z.build)(batch, scale).training_graph())
+}
+
+/// Build a model's forward net by name.
+pub fn build_net(name: &str, batch: usize, scale: ModelScale) -> Option<Net> {
+    ZOO.iter().find(|z| z.name == name).map(|z| (z.build)(batch, scale))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    #[test]
+    fn every_model_builds_and_validates_reduced() {
+        for z in ZOO {
+            for &batch in &[1usize, 32] {
+                let g = build_graph(z.name, batch, ModelScale::Reduced).unwrap();
+                g.validate()
+                    .unwrap_or_else(|e| panic!("{} bs{batch}: {e}", z.name));
+                assert!(g.num_nodes() > 10, "{} too small", z.name);
+                let updates =
+                    g.nodes.iter().filter(|n| n.kind == OpKind::WeightUpdate).count();
+                assert!(updates > 0, "{} has no weight updates", z.name);
+            }
+        }
+    }
+
+    #[test]
+    fn every_model_builds_full_scale() {
+        for z in ZOO {
+            let g = build_graph(z.name, 1, ModelScale::Full).unwrap();
+            g.validate().unwrap_or_else(|e| panic!("{}: {e}", z.name));
+        }
+    }
+
+    #[test]
+    fn alexnet_parameter_count_is_right() {
+        // AlexNet has ~61M parameters.
+        let net = alexnet(1, ModelScale::Full);
+        let params = net.param_bytes() / 4;
+        assert!(
+            (57_000_000..65_000_000).contains(&params),
+            "alexnet params = {params}"
+        );
+    }
+
+    #[test]
+    fn resnet18_parameter_count_is_right() {
+        // ResNet-18: ~11.7M parameters.
+        let net = resnet18(1, ModelScale::Full);
+        let params = net.param_bytes() / 4;
+        assert!(
+            (11_000_000..12_500_000).contains(&params),
+            "resnet18 params = {params}"
+        );
+    }
+
+    #[test]
+    fn mobilenet_parameter_count_is_right() {
+        // MobileNetV2: ~3.5M parameters.
+        let net = mobilenet(1, ModelScale::Full);
+        let params = net.param_bytes() / 4;
+        assert!((3_000_000..4_200_000).contains(&params), "mobilenet params = {params}");
+    }
+
+    #[test]
+    fn vit_parameter_count_is_right() {
+        // ViT-B/16: ~86M parameters.
+        let net = vit(1, ModelScale::Full);
+        let params = net.param_bytes() / 4;
+        assert!((80_000_000..92_000_000).contains(&params), "vit params = {params}");
+    }
+
+    #[test]
+    fn batch_scales_activations_not_weights() {
+        let n1 = resnet18(1, ModelScale::Full);
+        let n32 = resnet18(32, ModelScale::Full);
+        assert_eq!(n1.param_bytes(), n32.param_bytes());
+        let a1: u64 = n1.ops.iter().map(|o| o.out_bytes).sum();
+        let a32: u64 = n32.ops.iter().map(|o| o.out_bytes).sum();
+        assert_eq!(a32, a1 * 32);
+    }
+
+    #[test]
+    fn graph_sizes_are_in_paper_ballpark() {
+        // Paper: AlexNet 118 operators, XLM-R 2007 operators. Our operator
+        // granularity is slightly coarser than torch.FX's (no dropout /
+        // flatten / views), so we accept the same order of magnitude.
+        let alex = build_graph("alexnet", 1, ModelScale::Full).unwrap();
+        assert!(
+            (40..200).contains(&alex.num_nodes()),
+            "alexnet nodes = {}",
+            alex.num_nodes()
+        );
+        let xl = build_graph("xlmr", 1, ModelScale::Full).unwrap();
+        assert!(
+            (400..3000).contains(&xl.num_nodes()),
+            "xlmr nodes = {}",
+            xl.num_nodes()
+        );
+    }
+}

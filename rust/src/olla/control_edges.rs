@@ -1,0 +1,170 @@
+//! §4.3 / Functions 3–4: force early weight updates with control edges.
+//!
+//! Running a weight-update node frees its gradient tensor, and nothing is
+//! gained by delaying it — but the plain ALAP analysis gives update nodes
+//! enormous spans (they have no downstream compute), which bloats the
+//! scheduling ILP. We therefore add a zero-size control edge from each
+//! update node to an "anchor" node that runs early, clamping the update's
+//! ALAP without affecting memory.
+
+use crate::graph::analysis::{backward_levels, forward_levels};
+use crate::graph::{Graph, NodeId, OpKind};
+use std::collections::HashMap;
+
+/// Function 4: starting from `v`, walk forward through the graph looking for
+/// the sink with the highest backward level (i.e. scheduled earliest in the
+/// reverse levelization) whose forward level exceeds `min_fwd_lvl` (so the
+/// new edge cannot create a cycle).
+fn find_candidate(
+    g: &Graph,
+    v: NodeId,
+    fwd_lvl: &[usize],
+    bwd_lvl: &[usize],
+    min_fwd_lvl: usize,
+    visited: &mut HashMap<NodeId, (Option<NodeId>, i64)>,
+) -> (Option<NodeId>, i64) {
+    if let Some(&hit) = visited.get(&v) {
+        return hit;
+    }
+    // Mark before recursing to terminate on shared substructure.
+    visited.insert(v, (None, -1));
+    let mut best_bwd_level: i64 = -1;
+    let mut best_candidate: Option<NodeId> = None;
+    for &f in &g.node(v).fanout {
+        for &snk in &g.edge(f).snks {
+            if (bwd_lvl[snk.idx()] as i64) < best_bwd_level {
+                continue;
+            }
+            if fwd_lvl[snk.idx()] <= min_fwd_lvl {
+                let (cand, level) =
+                    find_candidate(g, snk, fwd_lvl, bwd_lvl, min_fwd_lvl, visited);
+                if level > best_bwd_level {
+                    best_bwd_level = level;
+                    best_candidate = cand;
+                }
+            } else if bwd_lvl[snk.idx()] as i64 > best_bwd_level {
+                best_bwd_level = bwd_lvl[snk.idx()] as i64;
+                best_candidate = Some(snk);
+            }
+        }
+    }
+    visited.insert(v, (best_candidate, best_bwd_level));
+    (best_candidate, best_bwd_level)
+}
+
+/// Function 3: add control edges forcing every weight-update node to run
+/// early. Returns the number of control edges added.
+pub fn enforce_early_weight_updates(g: &mut Graph) -> usize {
+    let fwd_lvl = forward_levels(g);
+    let bwd_lvl = backward_levels(g);
+    let updates: Vec<NodeId> = g
+        .node_ids()
+        .filter(|&v| g.node(v).kind == OpKind::WeightUpdate)
+        .collect();
+    let mut added = 0;
+    for v in updates {
+        let min_fwd_level = fwd_lvl[v.idx()];
+        let mut best_bwd_level: i64 = -1;
+        let mut best_anchor: Option<NodeId> = None;
+        let mut search_starts: Vec<NodeId> = vec![v];
+        let mut visited: HashMap<NodeId, (Option<NodeId>, i64)> = HashMap::new();
+        let mut seen_starts: std::collections::HashSet<NodeId> =
+            std::collections::HashSet::new();
+        while best_anchor.is_none() && !search_starts.is_empty() {
+            // Expand the search frontier one hop up the fanin.
+            let mut next_starts: Vec<NodeId> = Vec::new();
+            for &s in &search_starts {
+                for &f in &g.node(s).fanin {
+                    let p = g.edge(f).src;
+                    if seen_starts.insert(p) {
+                        next_starts.push(p);
+                    }
+                }
+            }
+            search_starts = next_starts;
+            for &src in &search_starts {
+                let (candidate, level) =
+                    find_candidate(g, src, &fwd_lvl, &bwd_lvl, min_fwd_level, &mut visited);
+                if level > best_bwd_level {
+                    best_bwd_level = level;
+                    best_anchor = candidate;
+                }
+            }
+        }
+        if let Some(anchor) = best_anchor {
+            if anchor != v {
+                let name = format!("ctl_{}_{}", g.node(v).name, g.node(anchor).name);
+                g.add_edge(name, v, &[anchor], 0);
+                added += 1;
+            }
+        }
+    }
+    debug_assert!(g.validate().is_ok(), "control edges must keep the graph a DAG");
+    added
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::analysis::Spans;
+    use crate::graph::random::random_trainlike;
+    use crate::util::quickcheck::{check, ensure};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn control_edges_keep_dag_and_tighten_update_spans() {
+        let mut rng = Rng::new(9);
+        let mut g = random_trainlike(&mut rng, 4);
+        let before = Spans::compute(&g);
+        let before_slack: usize = g
+            .node_ids()
+            .filter(|&v| g.node(v).kind == OpKind::WeightUpdate)
+            .map(|v| before.alap[v.idx()] - before.asap[v.idx()])
+            .sum();
+        let added = enforce_early_weight_updates(&mut g);
+        assert!(added > 0, "should anchor at least one update");
+        g.validate().unwrap();
+        let after = Spans::compute(&g);
+        let after_slack: usize = g
+            .node_ids()
+            .filter(|&v| g.node(v).kind == OpKind::WeightUpdate)
+            .map(|v| after.alap[v.idx()] - after.asap[v.idx()])
+            .sum();
+        assert!(
+            after_slack < before_slack,
+            "update slack should shrink: {after_slack} !< {before_slack}"
+        );
+    }
+
+    #[test]
+    fn no_updates_means_no_edges() {
+        let mut g = crate::graph::testutil::fig3_graph();
+        assert_eq!(enforce_early_weight_updates(&mut g), 0);
+    }
+
+    #[test]
+    fn random_trainlike_graphs_stay_valid() {
+        check("ctl_edges_valid", 15, |rng| {
+            let layers = rng.range(2, 7);
+            let mut g = random_trainlike(rng, layers);
+            enforce_early_weight_updates(&mut g);
+            ensure(g.validate().is_ok(), || format!("{:?}", g.validate()))
+        });
+    }
+
+    #[test]
+    fn schedule_quality_not_hurt_by_control_edges() {
+        // The control edges must not increase the optimal peak (they only
+        // remove schedules that delay updates, which never helps).
+        let mut rng = Rng::new(3);
+        let g0 = random_trainlike(&mut rng, 3);
+        let mut g1 = g0.clone();
+        enforce_early_weight_updates(&mut g1);
+        let o0 = crate::sched::greedy_order(&g0);
+        let p0 = crate::sched::sim::peak_bytes(&g0, &o0);
+        let o1 = crate::sched::greedy_order(&g1);
+        let p1 = crate::sched::sim::peak_bytes(&g1, &o1);
+        // Greedy on the constrained graph should be no worse than 1.2x.
+        assert!(p1 as f64 <= p0 as f64 * 1.2, "p1={p1} p0={p0}");
+    }
+}

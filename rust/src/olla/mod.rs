@@ -1,0 +1,22 @@
+//! The paper's contribution: OLLA itself.
+//!
+//! * [`scheduling`] — the tensor-lifetime ILP (eq. 14) with §4.1 span
+//!   bounding;
+//! * [`placement`] — the tensor-location ILP (eq. 15) with §4.2 precedence
+//!   pruning and the zero-fragmentation fast path;
+//! * [`control_edges`] — §4.3, Functions 3–4;
+//! * [`prealloc`] — §4.5, Function 5 (pyramid preplacement);
+//! * [`joint`] — the monolithic program (9), used as an oracle;
+//! * [`planner`] — the production pipeline (§4.4 split) producing a
+//!   [`planner::MemoryPlan`].
+
+pub mod control_edges;
+pub mod joint;
+pub mod placement;
+pub mod planner;
+pub mod prealloc;
+pub mod scheduling;
+
+pub use planner::{optimize, validate_plan, MemoryPlan, PlannerOptions};
+pub use placement::{optimize_placement, PlacementOptions, PlacementResult};
+pub use scheduling::{optimize_schedule, ScheduleOptions, ScheduleResult};

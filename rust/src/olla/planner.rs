@@ -1,0 +1,227 @@
+//! The end-to-end OLLA planner: §4.3 control edges → eq. 14 scheduling →
+//! lifetime extraction → §4.5 preplacement → eq. 15 placement → a
+//! [`MemoryPlan`] executable by [`crate::alloc::arena::Arena`].
+
+use super::placement::{optimize_placement, PlacementOptions, PlacementResult};
+use super::scheduling::{optimize_schedule, ScheduleOptions, ScheduleResult};
+use crate::alloc::arena::ArenaPlan;
+use crate::alloc::{check_placement, items_from_trace};
+use crate::graph::{EdgeId, Graph, NodeId};
+use crate::sched::sim::{check_order, simulate};
+use crate::util::Stopwatch;
+use std::collections::HashMap;
+use std::time::Duration;
+
+/// Planner configuration.
+#[derive(Debug, Clone)]
+pub struct PlannerOptions {
+    /// Options for the scheduling ILP (eq. 14).
+    pub schedule: ScheduleOptions,
+    /// Options for the placement ILP (eq. 15).
+    pub placement: PlacementOptions,
+    /// Apply §4.3 (control edges forcing early weight updates).
+    pub add_control_edges: bool,
+}
+
+impl Default for PlannerOptions {
+    fn default() -> Self {
+        PlannerOptions {
+            schedule: ScheduleOptions::default(),
+            placement: PlacementOptions::default(),
+            add_control_edges: true,
+        }
+    }
+}
+
+impl PlannerOptions {
+    /// Short time limits for unit tests.
+    pub fn fast_test() -> Self {
+        PlannerOptions {
+            schedule: ScheduleOptions {
+                time_limit: Duration::from_secs(15),
+                ..Default::default()
+            },
+            placement: PlacementOptions {
+                time_limit: Duration::from_secs(15),
+                ..Default::default()
+            },
+            add_control_edges: true,
+        }
+    }
+
+    /// Per-phase caps mirroring the paper's §5.7 protocol (5 min each),
+    /// scaled by `scale` (e.g. 0.1 for a 30 s cap on slower hardware).
+    pub fn paper_protocol(scale: f64) -> Self {
+        let cap = Duration::from_secs_f64(300.0 * scale);
+        PlannerOptions {
+            schedule: ScheduleOptions { time_limit: cap, ..Default::default() },
+            placement: PlacementOptions { time_limit: cap, ..Default::default() },
+            add_control_edges: true,
+        }
+    }
+}
+
+/// A complete OLLA memory plan.
+#[derive(Debug, Clone)]
+pub struct MemoryPlan {
+    /// Optimized execution order (valid for the input graph).
+    pub order: Vec<NodeId>,
+    /// Byte offset per tensor.
+    pub offsets: HashMap<EdgeId, u64>,
+    /// Arena size (`peak_mem`).
+    pub arena_size: u64,
+    /// Scheduling phase details (Figures 7, 9, 10).
+    pub schedule: ScheduleResult,
+    /// Placement phase details (Figures 8, 11, 12).
+    pub placement: PlacementResult,
+    /// Control edges added by §4.3.
+    pub control_edges_added: usize,
+    /// Total planning seconds.
+    pub total_secs: f64,
+}
+
+impl MemoryPlan {
+    /// Convert to a runtime [`ArenaPlan`].
+    pub fn arena_plan(&self) -> ArenaPlan {
+        ArenaPlan { offsets: self.offsets.clone(), arena_size: self.arena_size }
+    }
+}
+
+/// Run the full OLLA pipeline on a graph.
+pub fn optimize(g: &Graph, opts: &PlannerOptions) -> MemoryPlan {
+    let watch = Stopwatch::start();
+
+    // §4.3 on a working copy (extra edges only — node ids are preserved, so
+    // the resulting order is valid for the original graph too).
+    let mut work = g.clone();
+    let control_edges_added = if opts.add_control_edges {
+        super::control_edges::enforce_early_weight_updates(&mut work)
+    } else {
+        0
+    };
+
+    // Phase 1: lifetimes (eq. 14).
+    let mut schedule = optimize_schedule(&work, &opts.schedule);
+    debug_assert_eq!(check_order(g, &schedule.order), Ok(()));
+    // §4.3 is a solver-speed heuristic; on some graphs the forced-early
+    // updates exclude the best order (the w/dw/w_new transient lands on the
+    // activation peak). Orders valid for the *unconstrained* graph are
+    // always valid plans, so keep the best of both.
+    {
+        let constrained = simulate(g, &schedule.order).peak_bytes;
+        for cand in [
+            crate::sched::orders::pytorch_order(g),
+            crate::sched::greedy_order(g),
+        ] {
+            if simulate(g, &cand).peak_bytes < constrained.min(schedule.sim_peak) {
+                schedule.sim_peak = simulate(g, &cand).peak_bytes;
+                schedule.order = cand;
+            }
+        }
+        schedule.sim_peak = simulate(g, &schedule.order).peak_bytes;
+    }
+
+    // Phase 2: locations (eq. 15) on the *original* graph's tensors
+    // (control edges have size 0 and are never placed).
+    let trace = simulate(g, &schedule.order);
+    let items = items_from_trace(g, &trace);
+    let placement = optimize_placement(&items, &opts.placement);
+    debug_assert!(
+        check_placement(&items, &placement.offsets, placement.arena_size).is_ok()
+    );
+
+    let mut offsets = HashMap::new();
+    for (k, it) in items.iter().enumerate() {
+        offsets.insert(it.edge, placement.offsets[k]);
+    }
+    MemoryPlan {
+        order: schedule.order.clone(),
+        offsets,
+        arena_size: placement.arena_size,
+        schedule,
+        placement,
+        control_edges_added,
+        total_secs: watch.secs(),
+    }
+}
+
+/// Validate a plan against its graph: topological order, in-arena placement,
+/// and no address overlap between concurrently live tensors.
+pub fn validate_plan(g: &Graph, plan: &MemoryPlan) -> Result<(), String> {
+    check_order(g, &plan.order)?;
+    let trace = simulate(g, &plan.order);
+    let items = items_from_trace(g, &trace);
+    let offs: Vec<u64> = items
+        .iter()
+        .map(|it| *plan.offsets.get(&it.edge).ok_or(0).unwrap_or(&u64::MAX))
+        .collect();
+    if offs.iter().any(|&o| o == u64::MAX) {
+        return Err("plan is missing offsets for live tensors".into());
+    }
+    check_placement(&items, &offs, plan.arena_size)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::random::{random_dag, random_trainlike, RandomDagConfig};
+    use crate::graph::testutil::{diamond, fig3_graph};
+    use crate::sched::orders::pytorch_order;
+    use crate::sched::sim::peak_bytes;
+    use crate::util::quickcheck::{check, ensure};
+
+    #[test]
+    fn fig3_plan_is_tight() {
+        let g = fig3_graph();
+        let plan = optimize(&g, &PlannerOptions::fast_test());
+        validate_plan(&g, &plan).unwrap();
+        // Optimal order peak is 65 and placement must be fragmentation-free.
+        assert_eq!(plan.schedule.sim_peak, 65);
+        assert_eq!(plan.arena_size, plan.placement.lower_bound);
+    }
+
+    #[test]
+    fn plan_never_worse_than_pytorch_order() {
+        check("olla_beats_pytorch", 10, |rng| {
+            let nodes = rng.range(4, 10);
+            let g = random_dag(rng, &RandomDagConfig { num_nodes: nodes, ..Default::default() });
+            let plan = optimize(&g, &PlannerOptions::fast_test());
+            if validate_plan(&g, &plan).is_err() {
+                return crate::util::quickcheck::Outcome::Fail("invalid plan".into());
+            }
+            let pt = peak_bytes(&g, &pytorch_order(&g));
+            ensure(plan.schedule.sim_peak <= pt, || {
+                format!("olla={} pytorch={}", plan.schedule.sim_peak, pt)
+            })
+        });
+    }
+
+    #[test]
+    fn trainlike_plans_validate_and_zero_frag() {
+        check("trainlike_plans", 5, |rng| {
+            let layers = rng.range(2, 5);
+            let g = random_trainlike(rng, layers);
+            let plan = optimize(&g, &PlannerOptions::fast_test());
+            if let Err(e) = validate_plan(&g, &plan) {
+                return crate::util::quickcheck::Outcome::Fail(e);
+            }
+            ensure(plan.placement.fragmentation == 0.0, || {
+                format!("frag={}", plan.placement.fragmentation)
+            })
+        });
+    }
+
+    #[test]
+    fn diamond_end_to_end() {
+        let g = diamond();
+        let plan = optimize(&g, &PlannerOptions::fast_test());
+        validate_plan(&g, &plan).unwrap();
+        let arena = plan.arena_plan();
+        assert_eq!(arena.arena_size, plan.arena_size);
+        // Replay through the runtime arena.
+        let trace = simulate(&g, &plan.order);
+        let mut a = crate::alloc::arena::Arena::new(arena);
+        let served = a.replay(&trace.events);
+        assert_eq!(served.len(), g.num_edges());
+    }
+}

@@ -1,0 +1,101 @@
+//! §4.5 / Function 5: pyramid preplacement of long-lived tensors.
+//!
+//! DNN gradients are computed in reverse order of the activations, so the
+//! earlier an activation is allocated the later it is freed — lifetimes
+//! nest. Function 5 walks tensors by decreasing lifetime, each next tensor's
+//! interval nested inside the previous one's, and stacks them at increasing
+//! addresses, forming the "pyramid" of Figure 6. The ILP then only places
+//! the remaining (short-lived) tensors, in a much smaller address space.
+
+use crate::alloc::PlacementItem;
+
+/// Compute pyramid preplacements: returns `(item index, offset)` pairs.
+/// Offsets are aligned to `align`.
+pub fn preallocate_addresses(items: &[PlacementItem], align: u64) -> Vec<(usize, u64)> {
+    let align = align.max(1);
+    let mut min_start = 0usize;
+    let mut max_end = usize::MAX;
+    let mut base: u64 = 0;
+    let mut placed: Vec<(usize, u64)> = Vec::new();
+    let mut processed = vec![false; items.len()];
+
+    loop {
+        // Longest-duration unprocessed tensor nested within (min_start, max_end).
+        let mut next: Option<usize> = None;
+        let mut max_duration = 0usize;
+        for (i, it) in items.iter().enumerate() {
+            if processed[i] || it.start < min_start || it.end > max_end {
+                continue;
+            }
+            let duration = it.end - it.start;
+            if duration > max_duration {
+                max_duration = duration;
+                next = Some(i);
+            }
+        }
+        let Some(i) = next else { break };
+        placed.push((i, base));
+        base += items[i].size.div_ceil(align) * align;
+        min_start = items[i].start;
+        max_end = items[i].end;
+        processed[i] = true;
+        if min_start >= max_end {
+            break;
+        }
+    }
+    placed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::check_placement;
+    use crate::graph::EdgeId;
+
+    fn item(id: u32, size: u64, start: usize, end: usize) -> PlacementItem {
+        PlacementItem { edge: EdgeId(id), size, start, end }
+    }
+
+    #[test]
+    fn nested_lifetimes_form_pyramid() {
+        // Activation-like pattern: t0 spans [0,10), t1 [1,9), t2 [2,8).
+        let items = vec![
+            item(0, 100, 0, 10),
+            item(1, 50, 1, 9),
+            item(2, 25, 2, 8),
+            item(3, 10, 0, 1), // not nested after t0 chosen? [0,1) ⊂ [0,10) yes
+        ];
+        let placed = preallocate_addresses(&items, 1);
+        // t0 at 0, then t1 at 100, then t2 at 150. t3 has start 0 < min_start 2
+        // after t2 -> skipped... (it would have been considered only while
+        // nested; with start=0 it fails `start < min_start` once min_start=1).
+        assert_eq!(placed[0], (0, 0));
+        assert_eq!(placed[1], (1, 100));
+        assert_eq!(placed[2], (2, 150));
+        assert_eq!(placed.len(), 3);
+        // Preplaced tensors always overlap in time (nested), so the stacked
+        // offsets must be a valid placement among themselves.
+        let sub: Vec<PlacementItem> = placed.iter().map(|&(i, _)| items[i]).collect();
+        let offs: Vec<u64> = placed.iter().map(|&(_, o)| o).collect();
+        assert!(check_placement(&sub, &offs, 175).is_ok());
+    }
+
+    #[test]
+    fn disjoint_lifetimes_only_take_the_longest() {
+        let items = vec![item(0, 10, 0, 5), item(1, 10, 5, 10)];
+        let placed = preallocate_addresses(&items, 1);
+        assert_eq!(placed.len(), 1);
+    }
+
+    #[test]
+    fn alignment_applies_to_stacking() {
+        let items = vec![item(0, 100, 0, 10), item(1, 50, 1, 9)];
+        let placed = preallocate_addresses(&items, 64);
+        assert_eq!(placed[1].1, 128); // 100 rounded up to 128
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(preallocate_addresses(&[], 1).is_empty());
+    }
+}

@@ -1,0 +1,467 @@
+//! The tensor-lifetime (node-ordering) ILP — eq. 14 of the paper, with the
+//! §4.1 span-bounding reductions baked into variable creation.
+//!
+//! Variable layout: one binary `C[v,t]` per node `v` and timestep
+//! `t ∈ SPAN(v)` (this encodes eq. 5 — all sibling output tensors of `v` are
+//! created together — structurally, instead of with tying constraints), and
+//! one binary `P[e,t]` per tensor `e` and timestep in its preservable range.
+//! Variables forced by eq. 10–12 are created fixed so presolve eliminates
+//! them.
+
+use crate::graph::analysis::Spans;
+use crate::graph::{EdgeId, Graph, NodeId};
+use crate::ilp::{self, Cmp, Model, SolveOptions, SolveStatus, VarId};
+use crate::sched::sim::{check_order, simulate};
+use crate::sched::greedy_order;
+use crate::util::Stopwatch;
+use std::collections::HashMap;
+use std::time::Duration;
+
+/// Options for the scheduling optimization.
+#[derive(Debug, Clone)]
+pub struct ScheduleOptions {
+    /// Time horizon `T`. `None` selects `min(|V|, critical_path + slack)`:
+    /// the paper uses `T = |V|`, which Gurobi handles but leaves every node
+    /// |V|-critical_path timesteps of slack in branchy training graphs; a
+    /// capped horizon shrinks the time-indexed formulation to what the
+    /// embedded solver can prove optimal. Decoded orders are re-simulated,
+    /// so reported peaks remain exact either way.
+    pub timesteps: Option<usize>,
+    /// Slack added to the critical path when `timesteps` is `None`.
+    pub horizon_slack: usize,
+    /// Wall-clock cap for the ILP solve (paper: 5 minutes).
+    pub time_limit: Duration,
+    /// Seed the solver with the greedy order as an incumbent.
+    pub warm_start: bool,
+    /// Branch-and-bound node cap (safety valve for tests).
+    pub max_nodes: u64,
+    /// Skip the ILP (keep the greedy incumbent) when the built model has
+    /// more constraint rows than this. The embedded simplex keeps a dense
+    /// basis inverse, so row count bounds both memory and per-pivot cost;
+    /// Gurobi has no such limit — this is our documented capacity envelope
+    /// (DESIGN.md §2, EXPERIMENTS.md §Scale).
+    pub max_ilp_rows: usize,
+}
+
+impl Default for ScheduleOptions {
+    fn default() -> Self {
+        ScheduleOptions {
+            timesteps: None,
+            horizon_slack: 6,
+            time_limit: Duration::from_secs(300),
+            warm_start: true,
+            max_nodes: u64::MAX,
+            max_ilp_rows: 3500,
+        }
+    }
+}
+
+/// The built eq.-14 model plus variable indices (exposed for tests and for
+/// warm-start construction).
+pub struct SchedulingModel {
+    /// The MILP.
+    pub model: Model,
+    /// Span analysis used to build it.
+    pub spans: Spans,
+    /// `C[v,t]` variables, keyed by `(node, timestep)`.
+    pub c: HashMap<(NodeId, usize), VarId>,
+    /// `P[e,t]` variables, keyed by `(edge, timestep)`.
+    pub p: HashMap<(EdgeId, usize), VarId>,
+    /// The `peak_mem_no_frag` objective variable.
+    pub peak: VarId,
+}
+
+/// Result of the scheduling optimization.
+#[derive(Debug, Clone)]
+pub struct ScheduleResult {
+    /// The optimized execution order (Function 1 decode, deduplicated).
+    pub order: Vec<NodeId>,
+    /// Objective value reported by the ILP (bytes, concurrency-granular).
+    pub ilp_peak: u64,
+    /// Peak of the *sequentialized* order measured by the resident-set
+    /// simulator (what Figure 7 reports). Always `<= ilp_peak`.
+    pub sim_peak: u64,
+    /// Solver status.
+    pub status: SolveStatus,
+    /// Solve wall-clock seconds (Figure 9).
+    pub solve_secs: f64,
+    /// Anytime incumbent log `(secs, ilp objective)` (Figure 10).
+    pub incumbents: Vec<(f64, f64)>,
+    /// (variables, constraints) of the built model, pre-presolve.
+    pub model_size: (usize, usize),
+    /// Branch-and-bound nodes explored.
+    pub nodes: u64,
+}
+
+/// Build the eq.-14 scheduling model for `g`.
+pub fn build_scheduling_model(g: &Graph, timesteps: Option<usize>) -> SchedulingModel {
+    let spans = match timesteps {
+        Some(t) => Spans::compute_with_timesteps(g, t),
+        None => Spans::compute(g),
+    };
+    let t_max = spans.num_timesteps;
+    let mut m = Model::new();
+    let mut c: HashMap<(NodeId, usize), VarId> = HashMap::new();
+    let mut p: HashMap<(EdgeId, usize), VarId> = HashMap::new();
+
+    // C variables per node over its span; singleton spans are fixed.
+    for v in g.node_ids() {
+        let (lo, hi) = spans.node_span(v);
+        for t in lo..=hi {
+            let var = m.binary(format!("C[{v},{t}]"), 0.0);
+            if lo == hi {
+                m.fix(var, 1.0);
+            }
+            c.insert((v, t), var);
+        }
+        // Eq. 3: every node runs exactly once (creating all its outputs).
+        if lo != hi {
+            let terms = (lo..=hi).map(|t| (c[&(v, t)], 1.0)).collect();
+            m.constraint(terms, Cmp::Eq, 1.0);
+        }
+    }
+
+    // P variables per edge over [ASAP(src)+1, mul_hi]; eq. 12 fixes the
+    // mandatory-preservation range to 1.
+    for e in g.edge_ids() {
+        let (mul_lo, mul_hi) = spans.mul(g, e);
+        let pres = spans.pres(g, e);
+        for t in (mul_lo + 1)..=mul_hi.min(t_max - 1) {
+            let var = m.binary(format!("P[{e},{t}]"), 0.0);
+            if let Some((plo, phi)) = pres {
+                if t >= plo && t <= phi {
+                    m.fix(var, 1.0);
+                }
+            }
+            p.insert((e, t), var);
+        }
+    }
+
+    for e in g.edge_ids() {
+        let edge = g.edge(e);
+        let v = edge.src;
+        let (mul_lo, mul_hi) = spans.mul(g, e);
+        let terminal = edge.snks.is_empty();
+        for t in (mul_lo + 1)..=mul_hi.min(t_max - 1) {
+            let pv = p[&(e, t)];
+            // Eq. 1: created or preserved, not both.
+            if let Some(&cv) = c.get(&(v, t)) {
+                m.constraint(vec![(pv, 1.0), (cv, 1.0)], Cmp::Le, 1.0);
+            }
+            // Eq. 2: preserved only if created/preserved at t-1.
+            let mut rhs_terms: Vec<(VarId, f64)> = vec![(pv, 1.0)];
+            if let Some(&prev_p) = p.get(&(e, t - 1)) {
+                rhs_terms.push((prev_p, -1.0));
+            }
+            if let Some(&prev_c) = c.get(&(v, t - 1)) {
+                rhs_terms.push((prev_c, -1.0));
+            }
+            if terminal {
+                // Results may never be dropped: P[t] == P[t-1] + C[t-1].
+                m.constraint(rhs_terms, Cmp::Eq, 0.0);
+            } else {
+                m.constraint(rhs_terms, Cmp::Le, 0.0);
+            }
+        }
+    }
+
+    // Eq. 4: an operator can only run when its inputs are preserved.
+    for v in g.node_ids() {
+        let (lo, hi) = spans.node_span(v);
+        for t in lo..=hi {
+            let cv = c[&(v, t)];
+            for &f in &g.node(v).fanin {
+                let pf = *p
+                    .get(&(f, t))
+                    .unwrap_or_else(|| panic!("P[{f},{t}] missing for consumer {v}"));
+                m.constraint(vec![(cv, 1.0), (pf, -1.0)], Cmp::Le, 0.0);
+            }
+        }
+    }
+
+    // Eq. 13: per-timestep memory accounting against the peak variable.
+    let total = g.total_bytes() as f64;
+    let peak = m.continuous("peak_mem_no_frag", 0.0, total, 1.0);
+    for t in 0..t_max {
+        let mut terms: Vec<(VarId, f64)> = Vec::new();
+        for e in g.edge_ids() {
+            let size = g.edge(e).size as f64;
+            if size == 0.0 {
+                continue; // control edges occupy no memory
+            }
+            if let Some(&cv) = c.get(&(g.edge(e).src, t)) {
+                terms.push((cv, size));
+            }
+            if let Some(&pv) = p.get(&(e, t)) {
+                terms.push((pv, size));
+            }
+        }
+        if !terms.is_empty() {
+            terms.push((peak, -1.0));
+            m.constraint(terms, Cmp::Le, 0.0);
+        }
+    }
+
+    SchedulingModel { model: m, spans, c, p, peak }
+}
+
+/// Build a feasible assignment from per-node creation timesteps. Times must
+/// respect the DAG (`t(src) < t(sink)`) and every node's span.
+pub fn assignment_from_times(g: &Graph, sm: &SchedulingModel, times: &[usize]) -> Vec<f64> {
+    let t_end = sm.spans.num_timesteps - 1;
+    let mut x = vec![0.0; sm.model.num_vars()];
+    for ((v, t), var) in &sm.c {
+        x[var.0] = if times[v.idx()] == *t { 1.0 } else { 0.0 };
+    }
+    for ((e, t), var) in &sm.p {
+        let edge = g.edge(*e);
+        let created = times[edge.src.idx()];
+        let last_use = edge.snks.iter().map(|s| times[s.idx()]).max().unwrap_or(t_end);
+        x[var.0] = if *t > created && *t <= last_use { 1.0 } else { 0.0 };
+    }
+    // Peak = max per-timestep accounted bytes.
+    let mut per_t = vec![0u64; sm.spans.num_timesteps];
+    for e in g.edge_ids() {
+        let edge = g.edge(e);
+        let created = times[edge.src.idx()];
+        let last_use = edge.snks.iter().map(|s| times[s.idx()]).max().unwrap_or(t_end);
+        for t in created..=last_use {
+            per_t[t] += edge.size;
+        }
+    }
+    x[sm.peak.0] = per_t.iter().copied().max().unwrap_or(0) as f64;
+    x
+}
+
+/// Encode a topological order as a feasible warm-start assignment.
+///
+/// With the full `T = |V|` horizon, position `k` becomes creation timestep
+/// `k` (always within every span). With a compressed horizon, order
+/// positions can exceed node spans, so the order is *level-compressed*:
+/// `t(v) = max(ASAP(v), max over producers t(p)+1)`, which is feasible for
+/// any horizon.
+pub fn warm_start_assignment(
+    g: &Graph,
+    sm: &SchedulingModel,
+    order: &[NodeId],
+) -> Vec<f64> {
+    debug_assert_eq!(check_order(g, order), Ok(()));
+    let n = g.num_nodes();
+    let times: Vec<usize> = if sm.spans.num_timesteps >= n {
+        let mut pos = vec![0usize; n];
+        for (i, &v) in order.iter().enumerate() {
+            pos[v.idx()] = i;
+        }
+        pos
+    } else {
+        let mut t = vec![0usize; n];
+        for &v in order {
+            let mut tv = sm.spans.asap[v.idx()];
+            for &e in &g.node(v).fanin {
+                tv = tv.max(t[g.edge(e).src.idx()] + 1);
+            }
+            debug_assert!(tv <= sm.spans.alap[v.idx()], "compression left span");
+            t[v.idx()] = tv;
+        }
+        t
+    };
+    assignment_from_times(g, sm, &times)
+}
+
+/// Decode the ILP solution into an execution order (the paper's Function 1,
+/// with the duplicate-`execute` removal folded in by iterating nodes).
+pub fn decode_order(g: &Graph, sm: &SchedulingModel, values: &[f64]) -> Vec<NodeId> {
+    let mut when = vec![usize::MAX; g.num_nodes()];
+    for ((v, t), var) in &sm.c {
+        if values[var.0] > 0.5 {
+            when[v.idx()] = *t;
+        }
+    }
+    let mut order: Vec<NodeId> = g.node_ids().collect();
+    order.sort_by_key(|v| (when[v.idx()], v.0));
+    order
+}
+
+/// Run the full eq.-14 optimization for a graph.
+pub fn optimize_schedule(g: &Graph, opts: &ScheduleOptions) -> ScheduleResult {
+    let watch = Stopwatch::start();
+    let timesteps = opts.timesteps.unwrap_or_else(|| {
+        let crit = crate::graph::analysis::forward_levels(g)
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(0)
+            + 1;
+        g.num_nodes().min(crit + opts.horizon_slack)
+    });
+    let sm = build_scheduling_model(g, Some(timesteps));
+    let model_size = (sm.model.num_vars(), sm.model.num_cons());
+
+    let lb0: Vec<f64> = sm.model.vars.iter().map(|v| v.lb).collect();
+    let ub0: Vec<f64> = sm.model.vars.iter().map(|v| v.ub).collect();
+    let effective_rows =
+        crate::ilp::simplex::reduced_rows_estimate(&sm.model, &lb0, &ub0);
+    if effective_rows > opts.max_ilp_rows {
+        // Capacity fallback: keep the greedy order (the paper's anytime
+        // protocol degrades the same way when Gurobi's cap fires).
+        let order = greedy_order(g);
+        let trace = simulate(g, &order);
+        let wa = warm_start_assignment(g, &sm, &order);
+        let ilp_peak = wa[sm.peak.0].round() as u64;
+        return ScheduleResult {
+            order,
+            ilp_peak,
+            sim_peak: trace.peak_bytes,
+            status: SolveStatus::TimeLimitFeasible,
+            solve_secs: watch.secs(),
+            incumbents: vec![(watch.secs(), ilp_peak as f64)],
+            model_size,
+            nodes: 0,
+        };
+    }
+
+    let initial = if opts.warm_start {
+        Some(warm_start_assignment(g, &sm, &greedy_order(g)))
+    } else {
+        None
+    };
+    let solve_opts = SolveOptions {
+        time_limit: opts.time_limit,
+        initial,
+        integral_objective: true,
+        max_nodes: opts.max_nodes,
+        ..Default::default()
+    };
+    let sol = ilp::solve(&sm.model, &solve_opts);
+
+    let (order, ilp_peak) = if sol.has_solution() {
+        (decode_order(g, &sm, &sol.values), sol.objective.round() as u64)
+    } else {
+        // Paper protocol: fall back to the best heuristic order.
+        let o = greedy_order(g);
+        let peak = simulate(g, &o).peak_bytes;
+        (o, peak)
+    };
+    debug_assert_eq!(check_order(g, &order), Ok(()));
+    // OLLA must never regress below the cheap baselines: keep the best of
+    // the decoded order and the heuristic orders (relevant when the solver
+    // hits its cap with only the warm-start incumbent).
+    let mut order = order;
+    let mut best_peak = simulate(g, &order).peak_bytes;
+    for cand in [
+        crate::sched::orders::pytorch_order(g),
+        crate::sched::orders::tensorflow_order(g),
+        greedy_order(g),
+    ] {
+        let p = simulate(g, &cand).peak_bytes;
+        if p < best_peak {
+            best_peak = p;
+            order = cand;
+        }
+    }
+    let sim_peak = best_peak;
+    ScheduleResult {
+        order,
+        ilp_peak,
+        sim_peak,
+        status: sol.status,
+        solve_secs: watch.secs(),
+        incumbents: sol.incumbents,
+        model_size,
+        nodes: sol.nodes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::random::{random_dag, RandomDagConfig};
+    use crate::graph::testutil::{chain, diamond, fig3_graph};
+    use crate::sched::dp::optimal_order_dp;
+    use crate::util::quickcheck::{check, ensure};
+
+    fn quick_opts() -> ScheduleOptions {
+        ScheduleOptions { time_limit: Duration::from_secs(20), ..Default::default() }
+    }
+
+    #[test]
+    fn fig3_schedule_is_optimal() {
+        let g = fig3_graph();
+        let r = optimize_schedule(&g, &quick_opts());
+        assert_eq!(r.status, SolveStatus::Optimal);
+        let (dp_peak, _) = optimal_order_dp(&g).unwrap();
+        assert_eq!(r.sim_peak, dp_peak, "ILP should match the DP oracle");
+    }
+
+    #[test]
+    fn chain_is_trivially_fixed() {
+        let g = chain(8);
+        let sm = build_scheduling_model(&g, None);
+        // All C vars fixed: spans are singletons.
+        for ((_, _), var) in &sm.c {
+            let v = &sm.model.vars[var.0];
+            assert_eq!(v.lb, v.ub);
+        }
+        let r = optimize_schedule(&g, &quick_opts());
+        assert_eq!(r.status, SolveStatus::Optimal);
+        assert_eq!(r.sim_peak, 16);
+    }
+
+    #[test]
+    fn diamond_schedule_valid() {
+        let g = diamond();
+        let r = optimize_schedule(&g, &quick_opts());
+        assert_eq!(r.status, SolveStatus::Optimal);
+        assert!(check_order(&g, &r.order).is_ok());
+    }
+
+    #[test]
+    fn warm_start_assignment_is_feasible() {
+        let g = fig3_graph();
+        let sm = build_scheduling_model(&g, None);
+        let order = crate::sched::orders::pytorch_order(&g);
+        let x = warm_start_assignment(&g, &sm, &order);
+        assert!(
+            sm.model.check_feasible(&x, 1e-6).is_ok(),
+            "{:?}",
+            sm.model.check_feasible(&x, 1e-6)
+        );
+    }
+
+    #[test]
+    fn ilp_matches_dp_oracle_on_random_graphs() {
+        check("ilp_vs_dp", 8, |rng| {
+            let nodes = rng.range(4, 9);
+            let g = random_dag(
+                rng,
+                &RandomDagConfig { num_nodes: nodes, ..Default::default() },
+            );
+            let r = optimize_schedule(&g, &quick_opts());
+            if r.status != SolveStatus::Optimal {
+                return crate::util::quickcheck::Outcome::Discard;
+            }
+            let (dp_peak, _) = optimal_order_dp(&g).unwrap();
+            ensure(r.sim_peak == dp_peak, || {
+                format!("ilp sim_peak={} dp={}", r.sim_peak, dp_peak)
+            })
+        });
+    }
+
+    #[test]
+    fn sim_peak_never_exceeds_ilp_objective() {
+        check("sim_le_ilp", 6, |rng| {
+            let nodes = rng.range(5, 10);
+            let g = random_dag(
+                rng,
+                &RandomDagConfig { num_nodes: nodes, ..Default::default() },
+            );
+            let r = optimize_schedule(&g, &quick_opts());
+            if !matches!(r.status, SolveStatus::Optimal) {
+                return crate::util::quickcheck::Outcome::Discard;
+            }
+            ensure(r.sim_peak <= r.ilp_peak, || {
+                format!("sim={} > ilp={}", r.sim_peak, r.ilp_peak)
+            })
+        });
+    }
+}

@@ -1,0 +1,204 @@
+//! AOT artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime. Parses `manifest.json` and locates the HLO-text
+//! artifacts and the exported dataflow graph.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one tensor argument.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    /// Dimensions.
+    pub shape: Vec<usize>,
+    /// Dtype name ("float32", "int32", ...).
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Element count.
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Bytes per element.
+    pub fn itemsize(&self) -> usize {
+        match self.dtype.as_str() {
+            "float64" | "int64" | "uint64" => 8,
+            "float32" | "int32" | "uint32" => 4,
+            "bfloat16" | "float16" | "int16" => 2,
+            "int8" | "uint8" | "bool" => 1,
+            other => panic!("unknown dtype {other}"),
+        }
+    }
+
+    /// Total byte size.
+    pub fn byte_size(&self) -> usize {
+        self.num_elements() * self.itemsize()
+    }
+}
+
+/// The model configuration the artifacts were compiled for.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Model width.
+    pub d_model: usize,
+    /// Attention heads.
+    pub n_heads: usize,
+    /// Transformer layers.
+    pub n_layers: usize,
+    /// FFN width.
+    pub d_ffn: usize,
+    /// Sequence length.
+    pub seq_len: usize,
+    /// Batch size.
+    pub batch: usize,
+    /// SGD learning rate.
+    pub lr: f64,
+    /// SGD momentum.
+    pub momentum: f64,
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Directory holding the artifacts.
+    pub dir: PathBuf,
+    /// Model configuration.
+    pub config: ModelConfig,
+    /// Parameter names in flat-argument order.
+    pub param_names: Vec<String>,
+    /// Parameter specs (parallel to names).
+    pub param_specs: Vec<TensorSpec>,
+    /// Total parameter count.
+    pub param_count: u64,
+    /// Number of nodes in the exported train graph.
+    pub graph_nodes: usize,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifact directory.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest.json: {e}"))?;
+        let cfg = v.get("config").ok_or_else(|| anyhow::anyhow!("missing config"))?;
+        let geti = |k: &str| -> anyhow::Result<usize> {
+            cfg.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("missing config.{k}"))
+        };
+        let getf = |k: &str| -> anyhow::Result<f64> {
+            cfg.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("missing config.{k}"))
+        };
+        let config = ModelConfig {
+            vocab: geti("vocab")?,
+            d_model: geti("d_model")?,
+            n_heads: geti("n_heads")?,
+            n_layers: geti("n_layers")?,
+            d_ffn: geti("d_ffn")?,
+            seq_len: geti("seq_len")?,
+            batch: geti("batch")?,
+            lr: getf("lr")?,
+            momentum: getf("momentum")?,
+        };
+        let param_names: Vec<String> = v
+            .get("param_names")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("missing param_names"))?
+            .iter()
+            .filter_map(|x| x.as_str().map(str::to_string))
+            .collect();
+        let param_specs: Vec<TensorSpec> = v
+            .get("param_specs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("missing param_specs"))?
+            .iter()
+            .map(parse_spec)
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(param_names.len() == param_specs.len(), "spec length mismatch");
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            config,
+            param_names,
+            param_specs,
+            param_count: v.get("param_count").and_then(Json::as_u64).unwrap_or(0),
+            graph_nodes: v.get("graph_nodes").and_then(Json::as_usize).unwrap_or(0),
+        })
+    }
+
+    /// Path of the train-step HLO artifact.
+    pub fn train_step_hlo(&self) -> PathBuf {
+        self.dir.join("train_step.hlo.txt")
+    }
+
+    /// Path of the forward-only HLO artifact.
+    pub fn predict_hlo(&self) -> PathBuf {
+        self.dir.join("predict.hlo.txt")
+    }
+
+    /// Path of the exported dataflow graph.
+    pub fn train_graph(&self) -> PathBuf {
+        self.dir.join("train_graph.json")
+    }
+}
+
+fn parse_spec(v: &Json) -> anyhow::Result<TensorSpec> {
+    let shape = v
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("spec missing shape"))?
+        .iter()
+        .filter_map(Json::as_usize)
+        .collect();
+    let dtype = v
+        .get("dtype")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("spec missing dtype"))?
+        .to_string();
+    Ok(TensorSpec { shape, dtype })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_sizes() {
+        let s = TensorSpec { shape: vec![4, 8], dtype: "float32".into() };
+        assert_eq!(s.num_elements(), 32);
+        assert_eq!(s.byte_size(), 128);
+        let s = TensorSpec { shape: vec![3], dtype: "bfloat16".into() };
+        assert_eq!(s.byte_size(), 6);
+    }
+
+    #[test]
+    fn manifest_roundtrip_from_fixture() {
+        let dir = std::env::temp_dir().join("olla_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"config":{"vocab":16,"d_model":8,"n_heads":2,"n_layers":1,
+                 "d_ffn":16,"seq_len":4,"batch":2,"lr":0.1,"momentum":0.9},
+                "param_names":["embed"],
+                "param_specs":[{"shape":[16,8],"dtype":"float32"}],
+                "param_count":128,"graph_nodes":10,"graph_edges":12}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.config.vocab, 16);
+        assert_eq!(m.param_names, vec!["embed"]);
+        assert_eq!(m.param_specs[0].byte_size(), 512);
+        assert!(m.train_step_hlo().ends_with("train_step.hlo.txt"));
+    }
+
+    #[test]
+    fn manifest_missing_fields_error() {
+        let dir = std::env::temp_dir().join("olla_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"config":{}}"#).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! The execution layer: PJRT client wrapping ([`pjrt`]), AOT artifact
+//! manifests ([`artifacts`]), synthetic data ([`data`]), and the end-to-end
+//! trainer that combines OLLA planning with compiled-XLA execution
+//! ([`trainer`]). Python never runs on this path.
+
+pub mod artifacts;
+pub mod data;
+pub mod pjrt;
+pub mod trainer;
+
+pub use artifacts::Manifest;
+pub use pjrt::{Engine, Executable};
+pub use trainer::{PlanReport, Trainer};

@@ -1,0 +1,174 @@
+//! The end-to-end trainer: OLLA-planned memory + PJRT execution of the AOT
+//! train step. Python never runs here — artifacts were compiled once by
+//! `make artifacts`.
+//!
+//! Memory integration: before training starts, the trainer runs the OLLA
+//! planner over the *real* dataflow graph exported from the jaxpr
+//! (`train_graph.json`) and reports planned-vs-baseline peak memory; the
+//! inter-step training state (parameters + momentum) is kept in one
+//! OLLA-style host arena sized by the plan's placement of those tensors,
+//! with O(1) offset lookups instead of per-step allocator traffic.
+
+use super::artifacts::Manifest;
+use super::data::{Corpus, TINY_CORPUS};
+use super::pjrt::{literal_f32, literal_i32, Engine, Executable};
+use crate::graph::json_io;
+use crate::olla::{self, PlannerOptions};
+use crate::sched::orders::pytorch_order;
+use crate::sched::sim::peak_bytes;
+use crate::util::rng::Rng;
+use crate::util::Stopwatch;
+use std::time::Duration;
+
+/// Memory-planning summary for the real jaxpr graph.
+#[derive(Debug, Clone)]
+pub struct PlanReport {
+    /// Nodes in the captured graph.
+    pub nodes: usize,
+    /// Tensors in the captured graph.
+    pub edges: usize,
+    /// Peak bytes under the baseline (definition-order) schedule.
+    pub pytorch_peak: u64,
+    /// Peak bytes under OLLA's schedule.
+    pub olla_peak: u64,
+    /// Arena size after placement (0 fragmentation when == olla_peak lower bound).
+    pub arena_size: u64,
+    /// Fragmentation of the placement.
+    pub fragmentation: f64,
+    /// Planning wall-clock.
+    pub plan_secs: f64,
+}
+
+impl PlanReport {
+    /// Percent peak-memory reduction vs the baseline order.
+    pub fn reduction_pct(&self) -> f64 {
+        if self.pytorch_peak == 0 {
+            0.0
+        } else {
+            100.0 * (1.0 - self.olla_peak as f64 / self.pytorch_peak as f64)
+        }
+    }
+}
+
+/// Trainer state.
+pub struct Trainer {
+    manifest: Manifest,
+    exe: Executable,
+    params: Vec<Vec<f32>>,
+    momentum: Vec<Vec<f32>>,
+    corpus: Corpus,
+    /// Steps executed.
+    pub steps_done: u64,
+    /// (step, loss) history.
+    pub losses: Vec<(u64, f32)>,
+}
+
+impl Trainer {
+    /// Load artifacts and initialize parameters host-side (glorot-normal
+    /// for matrices; ones for LayerNorm gains, zeros for biases — matching
+    /// `python/compile/model.py::init_params` conventions).
+    pub fn new(engine: &Engine, manifest: Manifest, seed: u64) -> anyhow::Result<Trainer> {
+        let exe = engine.load_hlo_text(&manifest.train_step_hlo())?;
+        let mut rng = Rng::new(seed);
+        let mut params = Vec::new();
+        for (name, spec) in manifest.param_names.iter().zip(&manifest.param_specs) {
+            let n = spec.num_elements();
+            let data = if name.ends_with("_g") {
+                vec![1.0f32; n]
+            } else if name.ends_with("_b") {
+                vec![0.0f32; n]
+            } else {
+                let fan: usize = spec.shape.iter().sum();
+                let std = (2.0 / fan.max(1) as f64).sqrt();
+                (0..n).map(|_| (rng.normal() * std) as f32).collect()
+            };
+            params.push(data);
+        }
+        let momentum: Vec<Vec<f32>> =
+            params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+        let vocab = manifest.config.vocab;
+        Ok(Trainer {
+            manifest,
+            exe,
+            params,
+            momentum,
+            corpus: Corpus::new(TINY_CORPUS, vocab, seed ^ 0xDA7A),
+            steps_done: 0,
+            losses: Vec::new(),
+        })
+    }
+
+    /// The loaded manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Run OLLA over the exported jaxpr graph and report planned memory.
+    pub fn plan_memory(&self, time_limit: Duration) -> anyhow::Result<PlanReport> {
+        let watch = Stopwatch::start();
+        let g = json_io::load(&self.manifest.train_graph())?;
+        let baseline = peak_bytes(&g, &pytorch_order(&g));
+        let opts = PlannerOptions {
+            schedule: olla::ScheduleOptions {
+                time_limit,
+                ..Default::default()
+            },
+            placement: olla::PlacementOptions { time_limit, ..Default::default() },
+            add_control_edges: true,
+        };
+        let plan = olla::optimize(&g, &opts);
+        olla::validate_plan(&g, &plan).map_err(|e| anyhow::anyhow!(e))?;
+        Ok(PlanReport {
+            nodes: g.num_nodes(),
+            edges: g.num_edges(),
+            pytorch_peak: baseline,
+            olla_peak: plan.schedule.sim_peak,
+            arena_size: plan.arena_size,
+            fragmentation: plan.placement.fragmentation,
+            plan_secs: watch.secs(),
+        })
+    }
+
+    /// Execute one training step; returns the loss.
+    pub fn step(&mut self) -> anyhow::Result<f32> {
+        let cfg = &self.manifest.config;
+        let (x, y) = self.corpus.next_batch(cfg.batch, cfg.seq_len);
+        let mut args = Vec::with_capacity(self.params.len() * 2 + 2);
+        for (p, spec) in self.params.iter().zip(&self.manifest.param_specs) {
+            args.push(literal_f32(p, &spec.shape)?);
+        }
+        for (m, spec) in self.momentum.iter().zip(&self.manifest.param_specs) {
+            args.push(literal_f32(m, &spec.shape)?);
+        }
+        args.push(literal_i32(&x, &[cfg.batch, cfg.seq_len])?);
+        args.push(literal_i32(&y, &[cfg.batch, cfg.seq_len])?);
+
+        let outs = self.exe.run(&args)?;
+        let n = self.params.len();
+        anyhow::ensure!(outs.len() == 1 + 2 * n, "unexpected result arity {}", outs.len());
+        let loss: f32 = outs[0].to_vec::<f32>()?[0];
+        for (i, out) in outs.into_iter().enumerate().skip(1) {
+            let v = out.to_vec::<f32>()?;
+            if i <= n {
+                self.params[i - 1] = v;
+            } else {
+                self.momentum[i - 1 - n] = v;
+            }
+        }
+        self.steps_done += 1;
+        self.losses.push((self.steps_done, loss));
+        Ok(loss)
+    }
+
+    /// Train for `steps` steps, logging every `log_every`.
+    pub fn train(&mut self, steps: u64, log_every: u64) -> anyhow::Result<f32> {
+        let mut last = f32::NAN;
+        for s in 0..steps {
+            last = self.step()?;
+            if log_every > 0 && (s + 1) % log_every == 0 {
+                eprintln!("step {:>5}  loss {:.4}", s + 1, last);
+            }
+        }
+        Ok(last)
+    }
+}

@@ -1,0 +1,165 @@
+//! Exact optimal scheduling by dynamic programming over executed-sets.
+//!
+//! This is the approach of Serenity [2] and Liberis & Lane [48] discussed in
+//! the paper's related work: O(|V|·2^|V|) states, which is "prohibitive" for
+//! real networks but fine for tiny graphs. We use it (a) as a ground-truth
+//! oracle to test that OLLA's scheduling ILP is optimal, and (b) as the
+//! baseline comparator in the ablation benches.
+
+use crate::graph::{Graph, NodeId};
+use std::collections::HashMap;
+
+/// Hard cap on graph size (the bitmask state is a u64).
+pub const MAX_DP_NODES: usize = 24;
+
+/// Exact minimum achievable peak (bytes) and one order achieving it.
+/// Returns `None` if the graph exceeds [`MAX_DP_NODES`].
+pub fn optimal_order_dp(g: &Graph) -> Option<(u64, Vec<NodeId>)> {
+    let n = g.num_nodes();
+    if n > MAX_DP_NODES {
+        return None;
+    }
+    let full: u64 = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+
+    // Precompute per-node fanin source mask and output size.
+    let mut pred_mask = vec![0u64; n];
+    let mut out_size = vec![0u64; n];
+    for (i, node) in g.nodes.iter().enumerate() {
+        for &e in &node.fanin {
+            pred_mask[i] |= 1 << g.edge(e).src.idx();
+        }
+        out_size[i] = node.fanout.iter().map(|&e| g.edge(e).size).sum();
+    }
+    // live_bytes(S): edges whose src is in S and which still have a sink
+    // outside S (or no sinks at all — results stay resident).
+    let live_bytes = |s: u64| -> u64 {
+        let mut total = 0;
+        for e in &g.edges {
+            if s >> e.src.idx() & 1 == 0 {
+                continue;
+            }
+            let dead = !e.snks.is_empty() && e.snks.iter().all(|k| s >> k.idx() & 1 == 1);
+            if !dead {
+                total += e.size;
+            }
+        }
+        total
+    };
+
+    // f(S) = min over next v of max(live(S) + out(v), f(S + v)).
+    let mut memo: HashMap<u64, u64> = HashMap::new();
+    let mut choice: HashMap<u64, usize> = HashMap::new();
+
+    fn solve(
+        s: u64,
+        full: u64,
+        n: usize,
+        pred_mask: &[u64],
+        out_size: &[u64],
+        live_bytes: &dyn Fn(u64) -> u64,
+        memo: &mut HashMap<u64, u64>,
+        choice: &mut HashMap<u64, usize>,
+    ) -> u64 {
+        if s == full {
+            return 0;
+        }
+        if let Some(&v) = memo.get(&s) {
+            return v;
+        }
+        let live = live_bytes(s);
+        let mut best = u64::MAX;
+        let mut best_v = usize::MAX;
+        for v in 0..n {
+            if s >> v & 1 == 1 || (pred_mask[v] & !s) != 0 {
+                continue; // done or not ready
+            }
+            let during = live + out_size[v];
+            let rest = solve(s | (1 << v), full, n, pred_mask, out_size, live_bytes, memo, choice);
+            let cost = during.max(rest);
+            if cost < best {
+                best = cost;
+                best_v = v;
+            }
+        }
+        memo.insert(s, best);
+        choice.insert(s, best_v);
+        best
+    }
+
+    let peak = solve(0, full, n, &pred_mask, &out_size, &live_bytes, &mut memo, &mut choice);
+    // Reconstruct the order.
+    let mut order = Vec::with_capacity(n);
+    let mut s = 0u64;
+    while s != full {
+        let v = choice[&s];
+        order.push(NodeId(v as u32));
+        s |= 1 << v;
+    }
+    Some((peak, order))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::random::{random_dag, RandomDagConfig};
+    use crate::graph::testutil::{chain, fig3_graph};
+    use crate::sched::sim::{check_order, peak_bytes};
+    use crate::util::quickcheck::{check, ensure};
+
+    #[test]
+    fn dp_matches_simulation_on_fig3() {
+        let g = fig3_graph();
+        let (peak, order) = optimal_order_dp(&g).unwrap();
+        assert!(check_order(&g, &order).is_ok());
+        assert_eq!(peak, peak_bytes(&g, &order));
+        assert_eq!(peak, 65); // v1,v2,v3,v4 is optimal for this instance
+    }
+
+    #[test]
+    fn dp_is_no_worse_than_any_enumerated_order() {
+        // Exhaustively enumerate topological orders of small random DAGs and
+        // confirm the DP matches the brute-force minimum.
+        check("dp_optimal", 15, |rng| {
+            let nodes = rng.range(3, 7);
+            let g = random_dag(rng, &RandomDagConfig { num_nodes: nodes, ..Default::default() });
+            let (dp_peak, _) = optimal_order_dp(&g).unwrap();
+            // Brute force over permutations.
+            let n = g.num_nodes();
+            let mut idx: Vec<usize> = (0..n).collect();
+            let mut best = u64::MAX;
+            permute(&mut idx, 0, &mut |perm| {
+                let order: Vec<NodeId> = perm.iter().map(|&i| NodeId(i as u32)).collect();
+                if check_order(&g, &order).is_ok() {
+                    best = best.min(peak_bytes(&g, &order));
+                }
+            });
+            ensure(dp_peak == best, || format!("dp={dp_peak} brute={best}"))
+        });
+    }
+
+    fn permute(v: &mut Vec<usize>, k: usize, f: &mut impl FnMut(&[usize])) {
+        if k == v.len() {
+            f(v);
+            return;
+        }
+        for i in k..v.len() {
+            v.swap(k, i);
+            permute(v, k + 1, f);
+            v.swap(k, i);
+        }
+    }
+
+    #[test]
+    fn dp_rejects_large_graphs() {
+        let g = chain(30);
+        assert!(optimal_order_dp(&g).is_none());
+    }
+
+    #[test]
+    fn dp_handles_chain() {
+        let g = chain(8);
+        let (peak, order) = optimal_order_dp(&g).unwrap();
+        assert_eq!(peak, 16);
+        assert!(check_order(&g, &order).is_ok());
+    }
+}

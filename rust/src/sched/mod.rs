@@ -1,0 +1,14 @@
+//! Execution-order machinery: the resident-set simulator that scores an
+//! order (§2.2), the baseline orders OLLA is compared against (§5.3), a
+//! memory-aware greedy scheduler, and an exact dynamic-programming scheduler
+//! in the style of Serenity/Liberis-et-al. (§6 related work) for tiny graphs.
+
+pub mod dp;
+pub mod greedy;
+pub mod orders;
+pub mod sim;
+
+pub use dp::optimal_order_dp;
+pub use greedy::greedy_order;
+pub use orders::{pytorch_order, tensorflow_order};
+pub use sim::{simulate, AllocEvent, MemTrace};

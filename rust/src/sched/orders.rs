@@ -1,0 +1,126 @@
+//! Baseline execution orders (§1, §5.3).
+//!
+//! * [`pytorch_order`] — PyTorch "executes operations in the order in which
+//!   they are defined in the program": the definition order of the nodes,
+//!   which for our graph builders is a topological order by construction.
+//!   For graphs whose definition order is not topological we fall back to
+//!   the definition-order-stable topological sort (earliest defined node
+//!   first among the runnable set), which is what torch.FX tracing yields.
+//! * [`tensorflow_order`] — TensorFlow "keeps a queue of operators that are
+//!   ready to run, and executes them on a first-come, first-served basis":
+//!   Kahn's algorithm with a FIFO ready queue.
+
+use super::sim::check_order;
+use crate::graph::{Graph, NodeId};
+use std::collections::{BinaryHeap, VecDeque};
+use std::cmp::Reverse;
+
+/// PyTorch-style definition order (stable topological sort: among runnable
+/// nodes, always pick the one defined first).
+pub fn pytorch_order(g: &Graph) -> Vec<NodeId> {
+    let n = g.num_nodes();
+    let mut indeg = vec![0usize; n];
+    for e in &g.edges {
+        for &s in &e.snks {
+            indeg[s.idx()] += 1;
+        }
+    }
+    let mut heap: BinaryHeap<Reverse<u32>> = g
+        .node_ids()
+        .filter(|v| indeg[v.idx()] == 0)
+        .map(|v| Reverse(v.0))
+        .collect();
+    let mut order = Vec::with_capacity(n);
+    while let Some(Reverse(vi)) = heap.pop() {
+        let v = NodeId(vi);
+        order.push(v);
+        for &e in &g.node(v).fanout {
+            for &s in &g.edge(e).snks {
+                indeg[s.idx()] -= 1;
+                if indeg[s.idx()] == 0 {
+                    heap.push(Reverse(s.0));
+                }
+            }
+        }
+    }
+    debug_assert_eq!(check_order(g, &order), Ok(()));
+    order
+}
+
+/// TensorFlow-style first-come-first-served order (FIFO ready queue seeded
+/// in definition order).
+pub fn tensorflow_order(g: &Graph) -> Vec<NodeId> {
+    let n = g.num_nodes();
+    let mut indeg = vec![0usize; n];
+    for e in &g.edges {
+        for &s in &e.snks {
+            indeg[s.idx()] += 1;
+        }
+    }
+    let mut queue: VecDeque<NodeId> =
+        g.node_ids().filter(|v| indeg[v.idx()] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    while let Some(v) = queue.pop_front() {
+        order.push(v);
+        for &e in &g.node(v).fanout {
+            for &s in &g.edge(e).snks {
+                indeg[s.idx()] -= 1;
+                if indeg[s.idx()] == 0 {
+                    queue.push_back(s);
+                }
+            }
+        }
+    }
+    debug_assert_eq!(check_order(g, &order), Ok(()));
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::random::{random_dag, RandomDagConfig};
+    use crate::graph::testutil::fig3_graph;
+    use crate::util::quickcheck::{check, ensure};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pytorch_order_is_definition_order_for_builders() {
+        let g = fig3_graph();
+        let o = pytorch_order(&g);
+        assert_eq!(o, vec![NodeId(0), NodeId(1), NodeId(2), NodeId(3)]);
+    }
+
+    #[test]
+    fn orders_are_valid_on_random_dags() {
+        check("baseline_orders_valid", 40, |rng: &mut Rng| {
+            let g = random_dag(rng, &RandomDagConfig::default());
+            let p = pytorch_order(&g);
+            let t = tensorflow_order(&g);
+            ensure(
+                check_order(&g, &p).is_ok() && check_order(&g, &t).is_ok(),
+                || "invalid baseline order".to_string(),
+            )
+        });
+    }
+
+    #[test]
+    fn orders_can_differ() {
+        // Diamond where FCFS interleaves but definition order does not.
+        let mut g = Graph::new("x");
+        use crate::graph::OpKind;
+        let a = g.add_node("a", OpKind::Compute);
+        let b = g.add_node("b", OpKind::Compute);
+        let c = g.add_node("c", OpKind::Compute);
+        let d = g.add_node("d", OpKind::Compute);
+        let e = g.add_node("e", OpKind::Compute);
+        g.add_edge("ab", a, &[b], 1);
+        g.add_edge("ad", a, &[d], 1);
+        g.add_edge("bc", b, &[c], 1);
+        g.add_edge("ce", c, &[e], 1);
+        g.add_edge("de", d, &[e], 1);
+        let p = pytorch_order(&g);
+        let t = tensorflow_order(&g);
+        assert_eq!(p, vec![a, b, c, d, e]);
+        assert_eq!(t, vec![a, b, d, c, e]);
+    }
+}

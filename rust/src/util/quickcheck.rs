@@ -1,0 +1,99 @@
+//! Mini property-testing harness (offline substitute for `proptest`).
+//!
+//! Runs a property over many deterministic seeds and, on failure, reports the
+//! failing seed so the case can be replayed under a debugger. Generators for
+//! random DAGs live in [`crate::graph::random`]; this module only provides
+//! the driver.
+
+use crate::util::rng::Rng;
+
+/// Result of a single property evaluation.
+pub enum Outcome {
+    /// Property held.
+    Pass,
+    /// Property failed with an explanation.
+    Fail(String),
+    /// Input rejected (does not count toward the case budget).
+    Discard,
+}
+
+/// Run `cases` random cases of `prop`, each fed a fresh deterministic RNG.
+///
+/// Panics (failing the enclosing test) with the offending seed and message on
+/// the first failure.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Outcome,
+{
+    let mut run = 0u64;
+    let mut seed = 0u64;
+    let mut discards = 0u64;
+    while run < cases {
+        let mut rng = Rng::new(0xC0FFEE ^ seed);
+        match prop(&mut rng) {
+            Outcome::Pass => run += 1,
+            Outcome::Discard => {
+                discards += 1;
+                assert!(
+                    discards < cases * 20 + 100,
+                    "property '{name}': too many discards ({discards})"
+                );
+            }
+            Outcome::Fail(msg) => {
+                panic!("property '{name}' failed at seed {}: {msg}", 0xC0FFEEu64 ^ seed);
+            }
+        }
+        seed += 1;
+    }
+}
+
+/// Helper: turn a boolean + message closure into an [`Outcome`].
+pub fn ensure(cond: bool, msg: impl FnOnce() -> String) -> Outcome {
+    if cond {
+        Outcome::Pass
+    } else {
+        Outcome::Fail(msg())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("count", 25, |_rng| {
+            n += 1;
+            Outcome::Pass
+        });
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'boom' failed")]
+    fn failing_property_panics_with_seed() {
+        check("boom", 10, |rng| {
+            let x = rng.below(100);
+            ensure(x < 1000, || format!("x={x}"))
+        });
+        // Force at least one guaranteed failure:
+        check("boom", 10, |_| Outcome::Fail("always".into()));
+    }
+
+    #[test]
+    fn discards_do_not_consume_budget() {
+        let mut passes = 0;
+        let mut flip = false;
+        check("discards", 10, |_rng| {
+            flip = !flip;
+            if flip {
+                Outcome::Discard
+            } else {
+                passes += 1;
+                Outcome::Pass
+            }
+        });
+        assert_eq!(passes, 10);
+    }
+}

@@ -1,0 +1,67 @@
+//! Integration tests for the PJRT runtime: load the AOT artifacts (built by
+//! `make artifacts`) and run real training steps — the Rust-side proof that
+//! the L1 Pallas kernel and L2 JAX train step compose with the L3 runtime.
+
+use olla::runtime::{Engine, Manifest, Trainer};
+use std::path::Path;
+
+fn manifest() -> Option<Manifest> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Manifest::load(dir).expect("manifest parses"))
+}
+
+#[test]
+fn artifacts_load_and_predict_runs() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let exe = engine.load_hlo_text(&m.predict_hlo()).unwrap();
+    // Build zero params + zero tokens of the right shapes.
+    let mut args = Vec::new();
+    for spec in &m.param_specs {
+        let zeros = vec![0.0f32; spec.num_elements()];
+        args.push(olla::runtime::pjrt::literal_f32(&zeros, &spec.shape).unwrap());
+    }
+    let toks = vec![0i32; m.config.batch * m.config.seq_len];
+    args.push(
+        olla::runtime::pjrt::literal_i32(&toks, &[m.config.batch, m.config.seq_len])
+            .unwrap(),
+    );
+    let outs = exe.run(&args).unwrap();
+    assert_eq!(outs.len(), 1);
+    let logits = outs[0].to_vec::<f32>().unwrap();
+    assert_eq!(logits.len(), m.config.batch * m.config.seq_len * m.config.vocab);
+    assert!(logits.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn train_steps_decrease_loss() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let mut trainer = Trainer::new(&engine, m, 42).unwrap();
+    let mut first = None;
+    let mut last = f32::NAN;
+    for _ in 0..12 {
+        last = trainer.step().unwrap();
+        assert!(last.is_finite(), "loss must stay finite");
+        first.get_or_insert(last);
+    }
+    assert!(
+        last < first.unwrap(),
+        "loss should drop within 12 steps: {first:?} -> {last}"
+    );
+}
+
+#[test]
+fn plan_memory_reports_zero_fragmentation() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let trainer = Trainer::new(&engine, m, 0).unwrap();
+    let report = trainer.plan_memory(std::time::Duration::from_secs(10)).unwrap();
+    assert!(report.nodes > 100);
+    assert_eq!(report.fragmentation, 0.0);
+    assert!(report.olla_peak <= report.pytorch_peak);
+}
