@@ -3,34 +3,72 @@
 //!
 //! Paper reference: median 5.7 ± 0.6 s; GoogleNet and EfficientNet are the
 //! hard cases (Figure 12) but reach <1% fragmentation within 5 minutes.
+//!
+//! Writes `BENCH_fig11_addrgen_time.json` with per-case solver statistics
+//! (simplex iterations, B&B nodes, warm-start hit rate) so engine
+//! efficiency is tracked alongside wall-clock.
 
-use olla::bench_support::{fmt_secs, phase_cap, section};
-use olla::coordinator::{fragmentation_experiment, zoo_cases, Table};
+use olla::bench_support::{fmt_secs, phase_cap, section, solver_stats_json, BenchReport};
+use olla::coordinator::{fragmentation_sweep, zoo_cases, Table};
 use olla::models::ModelScale;
 use olla::olla::PlacementOptions;
+use olla::util::json::{num, obj, s, Json};
 use olla::util::median;
 
 fn main() {
     section("Figure 11 — fragmentation elimination (address generation) times");
     let opts = PlacementOptions { time_limit: phase_cap(), ..Default::default() };
-    let mut table = Table::new(&["model", "batch", "method", "frag", "time"]);
+    let cases = zoo_cases(&[1, 32], ModelScale::Reduced);
+    // Cases run serially (threads = 1) so per-case wall-clock matches the
+    // paper's protocol — the solver's own node pool still parallelizes
+    // inside each case. Memory-metric benches (fig7/8/13) sweep in parallel.
+    let rows = fragmentation_sweep(&cases, &opts, 1);
+    let mut table =
+        Table::new(&["model", "batch", "method", "frag", "iters", "nodes", "time"]);
+    let mut report = BenchReport::new("fig11_addrgen_time");
     let mut times = Vec::new();
-    for case in zoo_cases(&[1, 32], ModelScale::Reduced) {
-        let row = fragmentation_experiment(&case, &opts);
-        if !matches!(case.name.as_str(), "efficientnet" | "googlenet") {
+    for row in &rows {
+        if !matches!(row.model.as_str(), "efficientnet" | "googlenet") {
             times.push(row.addr_secs);
         }
         table.row(vec![
-            row.model,
+            row.model.clone(),
             row.batch.to_string(),
-            row.method,
+            row.method.clone(),
             format!("{:.2}%", row.olla_frag_pct),
+            row.simplex_iters.to_string(),
+            row.nodes.to_string(),
             fmt_secs(row.addr_secs),
         ]);
+        report.push(obj(vec![
+            ("model", s(&row.model)),
+            ("batch", num(row.batch as f64)),
+            ("method", s(&row.method)),
+            ("olla_frag_pct", num(row.olla_frag_pct)),
+            ("addr_secs", num(row.addr_secs)),
+            (
+                "solver",
+                solver_stats_json(row.simplex_iters, row.nodes, row.warm_attempts, row.warm_hits),
+            ),
+        ]));
     }
     table.print();
     println!(
         "median address-generation time (excl. googlenet/efficientnet): {} (paper: 5.7s)",
         fmt_secs(median(&times))
     );
+    let total_iters: u64 = rows.iter().map(|r| r.simplex_iters).sum();
+    let total_nodes: u64 = rows.iter().map(|r| r.nodes).sum();
+    let total_attempts: u64 = rows.iter().map(|r| r.warm_attempts).sum();
+    let total_hits: u64 = rows.iter().map(|r| r.warm_hits).sum();
+    println!("total simplex iterations: {total_iters}; total B&B nodes: {total_nodes}");
+    report.push(obj(vec![
+        ("model", s("TOTAL")),
+        ("solver", solver_stats_json(total_iters, total_nodes, total_attempts, total_hits)),
+        ("median_secs", Json::Num(median(&times))),
+    ]));
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench report: {e}"),
+    }
 }

@@ -5,7 +5,7 @@
 //! Paper reference: average 30.4% (bs1) and 36.1% (bs32) within the cap.
 
 use olla::bench_support::{fmt_pct, fmt_secs, phase_cap, section};
-use olla::coordinator::{total_experiment, zoo_cases, Table};
+use olla::coordinator::{total_sweep, zoo_cases, Table};
 use olla::models::ModelScale;
 use olla::olla::{PlacementOptions, ScheduleOptions};
 use olla::util::{human_bytes, mean};
@@ -18,8 +18,8 @@ fn main() {
         "model", "batch", "pytorch total", "olla total", "reduction", "plan time",
     ]);
     let mut per_batch: std::collections::BTreeMap<usize, Vec<f64>> = Default::default();
-    for case in zoo_cases(&[1, 32], ModelScale::Reduced) {
-        let row = total_experiment(&case, &sched, &place);
+    let cases = zoo_cases(&[1, 32], ModelScale::Reduced);
+    for row in total_sweep(&cases, &sched, &place, 0) {
         per_batch.entry(row.batch).or_default().push(row.reduction_pct);
         table.row(vec![
             row.model,

@@ -6,7 +6,7 @@
 //! rigid) dominate gradients at large batch.
 
 use olla::bench_support::{fmt_pct, fmt_secs, phase_cap, section};
-use olla::coordinator::{reorder_experiment, zoo_cases, Table};
+use olla::coordinator::{reorder_sweep, zoo_cases, Table};
 use olla::models::ModelScale;
 use olla::olla::ScheduleOptions;
 use olla::util::{human_bytes, mean};
@@ -19,8 +19,8 @@ fn main() {
         "solve",
     ]);
     let mut per_batch: std::collections::BTreeMap<usize, Vec<f64>> = Default::default();
-    for case in zoo_cases(&[1, 32], ModelScale::Reduced) {
-        let row = reorder_experiment(&case, &opts);
+    let cases = zoo_cases(&[1, 32], ModelScale::Reduced);
+    for row in reorder_sweep(&cases, &opts, 0) {
         per_batch.entry(row.batch).or_default().push(row.reduction_pct);
         table.row(vec![
             row.model,

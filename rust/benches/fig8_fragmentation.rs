@@ -5,7 +5,7 @@
 //! OLLA is 0% everywhere.
 
 use olla::bench_support::{fmt_pct, phase_cap, section};
-use olla::coordinator::{fragmentation_experiment, zoo_cases, Table};
+use olla::coordinator::{fragmentation_sweep, zoo_cases, Table};
 use olla::models::ModelScale;
 use olla::olla::PlacementOptions;
 use olla::util::{human_bytes, mean};
@@ -19,8 +19,8 @@ fn main() {
     ]);
     let mut per_batch: std::collections::BTreeMap<usize, Vec<f64>> = Default::default();
     let mut olla_nonzero = 0u32;
-    for case in zoo_cases(&[1, 32], ModelScale::Reduced) {
-        let row = fragmentation_experiment(&case, &opts);
+    let cases = zoo_cases(&[1, 32], ModelScale::Reduced);
+    for row in fragmentation_sweep(&cases, &opts, 0) {
         per_batch.entry(row.batch).or_default().push(row.pytorch_frag_pct);
         if row.olla_frag_pct > 0.0 {
             olla_nonzero += 1;

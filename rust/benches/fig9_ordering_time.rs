@@ -2,36 +2,76 @@
 //!
 //! Paper reference: median 1.4 ± 0.2 s; worst non-EfficientNet case 5.2 s;
 //! EfficientNet is tracked separately (Figure 10).
+//!
+//! Writes `BENCH_fig9_ordering_time.json` with per-case solver statistics
+//! (simplex iterations, B&B nodes, warm-start hit rate) so engine
+//! efficiency is tracked alongside wall-clock.
 
-use olla::bench_support::{fmt_secs, phase_cap, section};
-use olla::coordinator::{reorder_experiment, zoo_cases, Table};
+use olla::bench_support::{fmt_secs, phase_cap, section, solver_stats_json, BenchReport};
+use olla::coordinator::{reorder_sweep, zoo_cases, Table};
 use olla::models::ModelScale;
 use olla::olla::ScheduleOptions;
+use olla::util::json::{num, obj, s, Json};
 use olla::util::median;
 
 fn main() {
     section("Figure 9 — node ordering times");
     let opts = ScheduleOptions { time_limit: phase_cap(), ..Default::default() };
-    let mut table =
-        Table::new(&["model", "batch", "ilp vars", "ilp rows", "status", "time"]);
+    let cases = zoo_cases(&[1, 32], ModelScale::Reduced);
+    // Cases run serially (threads = 1) so per-case wall-clock matches the
+    // paper's protocol — the solver's own node pool still parallelizes
+    // inside each case. Memory-metric benches (fig7/8/13) sweep in parallel.
+    let rows = reorder_sweep(&cases, &opts, 1);
+    let mut table = Table::new(&[
+        "model", "batch", "ilp vars", "ilp rows", "status", "iters", "nodes", "warm%", "time",
+    ]);
+    let mut report = BenchReport::new("fig9_ordering_time");
     let mut times = Vec::new();
-    for case in zoo_cases(&[1, 32], ModelScale::Reduced) {
-        let row = reorder_experiment(&case, &opts);
-        if case.name != "efficientnet" {
+    for row in &rows {
+        if row.model != "efficientnet" {
             times.push(row.solve_secs);
         }
         table.row(vec![
-            row.model,
+            row.model.clone(),
             row.batch.to_string(),
             row.model_size.0.to_string(),
             row.model_size.1.to_string(),
-            row.status,
+            row.status.clone(),
+            row.simplex_iters.to_string(),
+            row.nodes.to_string(),
+            format!("{:.0}%", 100.0 * row.warm_hit_rate),
             fmt_secs(row.solve_secs),
         ]);
+        report.push(obj(vec![
+            ("model", s(&row.model)),
+            ("batch", num(row.batch as f64)),
+            ("ilp_vars", num(row.model_size.0 as f64)),
+            ("ilp_rows", num(row.model_size.1 as f64)),
+            ("status", s(&row.status)),
+            ("solve_secs", num(row.solve_secs)),
+            (
+                "solver",
+                solver_stats_json(row.simplex_iters, row.nodes, row.warm_attempts, row.warm_hits),
+            ),
+        ]));
     }
     table.print();
     println!(
         "median ordering time (excl. efficientnet): {} (paper: 1.4s median, 5.2s worst)",
         fmt_secs(median(&times))
     );
+    let total_iters: u64 = rows.iter().map(|r| r.simplex_iters).sum();
+    let total_nodes: u64 = rows.iter().map(|r| r.nodes).sum();
+    let total_attempts: u64 = rows.iter().map(|r| r.warm_attempts).sum();
+    let total_hits: u64 = rows.iter().map(|r| r.warm_hits).sum();
+    println!("total simplex iterations: {total_iters}; total B&B nodes: {total_nodes}");
+    report.push(obj(vec![
+        ("model", s("TOTAL")),
+        ("solver", solver_stats_json(total_iters, total_nodes, total_attempts, total_hits)),
+        ("median_secs", Json::Num(median(&times))),
+    ]));
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench report: {e}"),
+    }
 }

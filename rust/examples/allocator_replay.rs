@@ -11,6 +11,7 @@ use olla::models::{build_graph, ModelScale};
 use olla::olla::{optimize, PlannerOptions};
 use olla::sched::orders::pytorch_order;
 use olla::sched::sim::simulate;
+use olla::util::anyhow;
 use olla::util::{human_bytes, Stopwatch};
 
 fn main() -> anyhow::Result<()> {

@@ -7,6 +7,7 @@ use olla::models::{build_graph, ModelScale};
 use olla::olla::{optimize, validate_plan, PlannerOptions};
 use olla::sched::orders::pytorch_order;
 use olla::sched::sim::peak_bytes;
+use olla::util::anyhow;
 use olla::util::human_bytes;
 
 fn main() -> anyhow::Result<()> {

@@ -12,6 +12,7 @@
 //! Flags: --steps N (default 300), --seed S, --artifacts DIR.
 
 use olla::runtime::{Engine, Manifest, Trainer};
+use olla::util::anyhow;
 use olla::util::human_bytes;
 use std::path::PathBuf;
 use std::time::Duration;

@@ -1,10 +1,16 @@
 //! Hand-rolled benchmark harness (criterion is unavailable offline).
 //!
 //! Each file in `rust/benches/` is a `harness = false` binary that uses
-//! these helpers to time work, print paper-style rows, and append a summary
-//! to `bench_output` when invoked by `cargo bench`.
+//! these helpers to time work, print paper-style rows, and write a
+//! machine-readable `BENCH_<name>.json` report ([`BenchReport`]). Reports
+//! carry solver statistics next to wall-clock ([`solver_stats_json`]) —
+//! simplex iterations, branch-and-bound nodes, warm-start hit rate — so
+//! solver-efficiency regressions are visible even when timings drift with
+//! the host machine.
 
+use crate::util::json::{obj, Json};
 use crate::util::{human_duration, Stopwatch};
+use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 /// Print a bench section header.
@@ -56,6 +62,81 @@ pub fn phase_cap() -> Duration {
     Duration::from_secs_f64(secs)
 }
 
+/// Solver-efficiency statistics as a JSON object for bench reports.
+pub fn solver_stats_json(
+    simplex_iters: u64,
+    nodes: u64,
+    warm_attempts: u64,
+    warm_hits: u64,
+) -> Json {
+    let hit_rate =
+        if warm_attempts == 0 { 0.0 } else { warm_hits as f64 / warm_attempts as f64 };
+    obj(vec![
+        ("simplex_iters", Json::Num(simplex_iters as f64)),
+        ("bnb_nodes", Json::Num(nodes as f64)),
+        ("warm_start_attempts", Json::Num(warm_attempts as f64)),
+        ("warm_start_hits", Json::Num(warm_hits as f64)),
+        ("warm_start_hit_rate", Json::Num(hit_rate)),
+    ])
+}
+
+/// A machine-readable benchmark report, written as `BENCH_<name>.json`.
+///
+/// Rows are arbitrary JSON objects (one per table row); [`BenchReport::write`]
+/// drops the file in `OLLA_BENCH_DIR` (default: the current directory).
+pub struct BenchReport {
+    name: String,
+    rows: Vec<Json>,
+}
+
+impl BenchReport {
+    /// New empty report for bench `name`.
+    pub fn new(name: &str) -> BenchReport {
+        BenchReport { name: name.to_string(), rows: Vec::new() }
+    }
+
+    /// Append one row.
+    pub fn push(&mut self, row: Json) {
+        self.rows.push(row);
+    }
+
+    /// Number of rows so far.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no rows were recorded.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// The report as a JSON document.
+    pub fn to_json(&self) -> Json {
+        let unix_secs = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0);
+        obj(vec![
+            ("bench", Json::Str(self.name.clone())),
+            ("unix_secs", Json::Num(unix_secs)),
+            ("rows", Json::Arr(self.rows.clone())),
+        ])
+    }
+
+    /// Write `BENCH_<name>.json` into `dir`.
+    pub fn write_to(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json().to_string_pretty())?;
+        Ok(path)
+    }
+
+    /// Write the report to `OLLA_BENCH_DIR` (default `.`).
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let dir = std::env::var("OLLA_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+        self.write_to(Path::new(&dir))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -73,5 +154,29 @@ mod tests {
     fn formatting() {
         assert_eq!(fmt_pct(12.34), "12.3%");
         assert!(fmt_secs(0.001).ends_with("ms"));
+    }
+
+    #[test]
+    fn bench_report_roundtrips_through_disk() {
+        let dir = std::env::temp_dir().join("olla_bench_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut report = BenchReport::new("unit");
+        assert!(report.is_empty());
+        report.push(crate::util::json::obj(vec![
+            ("model", crate::util::json::s("alexnet")),
+            ("solver", solver_stats_json(1234, 7, 6, 5)),
+        ]));
+        assert_eq!(report.len(), 1);
+        let path = report.write_to(&dir).unwrap();
+        assert!(path.ends_with("BENCH_unit.json"));
+        let parsed =
+            crate::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("unit"));
+        let rows = parsed.get("rows").unwrap().as_arr().unwrap();
+        let solver = rows[0].get("solver").unwrap();
+        assert_eq!(solver.get("simplex_iters").unwrap().as_u64(), Some(1234));
+        assert_eq!(solver.get("bnb_nodes").unwrap().as_u64(), Some(7));
+        let rate = solver.get("warm_start_hit_rate").unwrap().as_f64().unwrap();
+        assert!((rate - 5.0 / 6.0).abs() < 1e-12);
     }
 }

@@ -1,4 +1,9 @@
-//! The paper's experiments as reusable functions (one per figure family).
+//! The paper's experiments as reusable functions (one per figure family),
+//! plus the parallel sweep drivers that fan the per-case experiments out
+//! over worker threads ([`par_map`], [`reorder_sweep`],
+//! [`fragmentation_sweep`], [`total_sweep`]). Sweeps pin the embedded
+//! solver to one thread per case so case-level and node-level parallelism
+//! do not oversubscribe each other.
 
 use crate::alloc::arena::{Arena, ArenaPlan};
 use crate::alloc::caching::CachingAllocator;
@@ -11,7 +16,41 @@ use crate::sched::sim::simulate;
 use crate::sched::{greedy_order, tensorflow_order};
 use crate::util::Stopwatch;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
+/// Run `f` over `items` on a pool of `threads` workers (0 = one per
+/// available core, capped by the item count). Results keep input order.
+pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let threads = if threads == 0 { auto } else { threads }.min(items.len().max(1));
+    if threads <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = items.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|sc| {
+        for _ in 0..threads {
+            sc.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
 
 /// One (model, batch) experimental case.
 pub struct ModelCase {
@@ -62,6 +101,25 @@ pub struct ReorderRow {
     pub incumbents: Vec<(f64, f64)>,
     /// (vars, constraints) of the scheduling ILP.
     pub model_size: (usize, usize),
+    /// Total simplex iterations across all node LPs.
+    pub simplex_iters: u64,
+    /// Branch-and-bound nodes explored.
+    pub nodes: u64,
+    /// Child LPs that attempted a warm start from their parent's basis.
+    pub warm_attempts: u64,
+    /// Warm-start attempts accepted by the dual re-solve path.
+    pub warm_hits: u64,
+    /// Warm-start acceptance rate over child LPs (0 when no children).
+    pub warm_hit_rate: f64,
+}
+
+/// Hit rate helper shared by the report rows.
+fn hit_rate(hits: u64, attempts: u64) -> f64 {
+    if attempts == 0 {
+        0.0
+    } else {
+        hits as f64 / attempts as f64
+    }
 }
 
 /// Run the node-reordering experiment on a case.
@@ -91,7 +149,27 @@ pub fn reorder_experiment(case: &ModelCase, opts: &ScheduleOptions) -> ReorderRo
         solve_secs: sched.solve_secs,
         incumbents: sched.incumbents,
         model_size: sched.model_size,
+        simplex_iters: sched.simplex_iters,
+        nodes: sched.nodes,
+        warm_attempts: sched.warm_attempts,
+        warm_hits: sched.warm_hits,
+        warm_hit_rate: hit_rate(sched.warm_hits, sched.warm_attempts),
     }
+}
+
+/// Run the node-reordering experiment over many cases on a worker pool
+/// (`threads` = 0 picks one worker per core). Each case's embedded solver
+/// runs single-threaded when the sweep itself is parallel.
+pub fn reorder_sweep(
+    cases: &[ModelCase],
+    opts: &ScheduleOptions,
+    threads: usize,
+) -> Vec<ReorderRow> {
+    let mut per_case = opts.clone();
+    if threads != 1 {
+        per_case.solver_threads = 1;
+    }
+    par_map(cases, threads, |case| reorder_experiment(case, &per_case))
 }
 
 /// Figure 8/11/12 row: fragmentation / address generation.
@@ -115,6 +193,16 @@ pub struct FragRow {
     pub incumbents: Vec<(f64, f64)>,
     /// Placement method used.
     pub method: String,
+    /// Total simplex iterations (0 when the ILP was skipped).
+    pub simplex_iters: u64,
+    /// Branch-and-bound nodes explored (0 when the ILP was skipped).
+    pub nodes: u64,
+    /// Child LPs that attempted a warm start from their parent's basis.
+    pub warm_attempts: u64,
+    /// Warm-start attempts accepted by the dual re-solve path.
+    pub warm_hits: u64,
+    /// Warm-start acceptance rate over child LPs (0 when no children).
+    pub warm_hit_rate: f64,
 }
 
 /// Run the fragmentation experiment: replay the PyTorch-order trace through
@@ -137,7 +225,25 @@ pub fn fragmentation_experiment(case: &ModelCase, opts: &PlacementOptions) -> Fr
         addr_secs: placement.solve_secs,
         incumbents: placement.incumbents,
         method: format!("{:?}", placement.method),
+        simplex_iters: placement.simplex_iters,
+        nodes: placement.nodes,
+        warm_attempts: placement.warm_attempts,
+        warm_hits: placement.warm_hits,
+        warm_hit_rate: hit_rate(placement.warm_hits, placement.warm_attempts),
     }
+}
+
+/// Run the fragmentation experiment over many cases on a worker pool.
+pub fn fragmentation_sweep(
+    cases: &[ModelCase],
+    opts: &PlacementOptions,
+    threads: usize,
+) -> Vec<FragRow> {
+    let mut per_case = opts.clone();
+    if threads != 1 {
+        per_case.solver_threads = 1;
+    }
+    par_map(cases, threads, |case| fragmentation_experiment(case, &per_case))
 }
 
 /// Figure 13 row: combined lifetime+location reduction vs PyTorch
@@ -187,6 +293,22 @@ pub fn total_experiment(
         reduction_pct: 100.0 * (1.0 - plan.arena_size as f64 / baseline.max(1) as f64),
         plan_secs: plan.total_secs,
     }
+}
+
+/// Run the combined experiment over many cases on a worker pool.
+pub fn total_sweep(
+    cases: &[ModelCase],
+    sched: &ScheduleOptions,
+    place: &PlacementOptions,
+    threads: usize,
+) -> Vec<TotalRow> {
+    let mut sched = sched.clone();
+    let mut place = place.clone();
+    if threads != 1 {
+        sched.solver_threads = 1;
+        place.solver_threads = 1;
+    }
+    par_map(cases, threads, |case| total_experiment(case, &sched, &place))
 }
 
 /// Figure 14 row: allocator runtime overhead across 1M training iterations.
@@ -315,5 +437,28 @@ mod tests {
     fn zoo_cases_builds_everything() {
         let cases = zoo_cases(&[1], ModelScale::Reduced);
         assert_eq!(cases.len(), ZOO.len());
+    }
+
+    #[test]
+    fn par_map_preserves_order_and_covers_all_items() {
+        let items: Vec<usize> = (0..37).collect();
+        for threads in [1usize, 4] {
+            let out = par_map(&items, threads, |&i| i * i);
+            assert_eq!(out.len(), items.len());
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i * i, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn reorder_sweep_matches_serial_runs() {
+        let cases = vec![small_case(), small_case()];
+        let rows = reorder_sweep(&cases, &quick_sched(), 2);
+        assert_eq!(rows.len(), 2);
+        for row in &rows {
+            assert!(row.olla_peak <= row.pytorch_peak);
+            assert!(row.reduction_pct >= 0.0);
+        }
     }
 }

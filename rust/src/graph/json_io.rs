@@ -124,6 +124,8 @@ pub fn from_json(v: &Json) -> Result<Graph, GraphError> {
     Ok(g)
 }
 
+use crate::util::anyhow;
+
 /// Load a graph from a JSON file on disk.
 pub fn load(path: &std::path::Path) -> anyhow::Result<Graph> {
     let text = std::fs::read_to_string(path)?;

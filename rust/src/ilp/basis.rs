@@ -1,0 +1,441 @@
+//! LU-factorized simplex basis with eta-file updates.
+//!
+//! The revised simplex needs two linear solves per iteration: `ftran`
+//! (`B w = a_q`, the entering column expressed in the basis) and `btran`
+//! (`Bᵀ y = c_B`, the dual prices). The previous engine kept a dense
+//! `B⁻¹` updated in product form — `O(m²)` memory and `O(m²)` per pivot,
+//! which was the scaling wall for the OLLA formulations. This module
+//! replaces it with:
+//!
+//! * a sparse left-looking LU factorization of the basis matrix with
+//!   partial pivoting ([`LuFactors`]) — cost proportional to fill-in, not
+//!   `m²`, on the extremely sparse bases the eq. 9/14/15 models produce;
+//! * Forrest–Tomlin-style pivot updates kept as a file of sparse eta
+//!   vectors ([`Basis::update`]) applied on top of the factors, with a
+//!   periodic refactorization once the file grows past
+//!   [`REFACTOR_INTERVAL`] (which also bounds numerical drift).
+//!
+//! Indexing conventions: `ftran` results and `btran` inputs are indexed by
+//! *basis position* (0..m); `btran` results and scattered right-hand sides
+//! are indexed by *row*. The two coincide only for the identity basis.
+
+use super::model::CscMatrix;
+
+/// The basis matrix was numerically singular (or a pivot was too small to
+/// trust). Callers fall back to a fresh cold start.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SingularBasis;
+
+/// Refactorize after this many eta updates.
+pub const REFACTOR_INTERVAL: usize = 64;
+
+/// Drop tolerance for entries created during factorization.
+const DROP_TOL: f64 = 1e-13;
+/// Smallest acceptable pivot magnitude.
+const PIVOT_TOL: f64 = 1e-11;
+
+/// Sparse LU factors of a basis: `P·B = L·U` with row permutation `P`,
+/// unit-lower-triangular `L` and upper-triangular `U`, both stored by
+/// column.
+#[derive(Debug, Clone)]
+pub struct LuFactors {
+    m: usize,
+    /// `L` column `k`: `(original_row, value)` for rows pivoted after `k`.
+    lcols: Vec<Vec<(u32, f64)>>,
+    /// `U` column `k`: `(pivot_position t < k, value)`; diagonal separate.
+    ucols: Vec<Vec<(u32, f64)>>,
+    udiag: Vec<f64>,
+    /// Pivot position -> original row.
+    prow: Vec<u32>,
+    /// Original row -> pivot position.
+    pinv: Vec<u32>,
+}
+
+impl LuFactors {
+    /// Factorize the basis given by `basis[k]` = matrix column of basis
+    /// position `k`.
+    pub fn factorize(mat: &CscMatrix, basis: &[usize]) -> Result<LuFactors, SingularBasis> {
+        let m = basis.len();
+        debug_assert_eq!(mat.nrows(), m, "basis size must match row count");
+        let mut lcols: Vec<Vec<(u32, f64)>> = vec![Vec::new(); m];
+        let mut ucols: Vec<Vec<(u32, f64)>> = vec![Vec::new(); m];
+        let mut udiag = vec![0.0f64; m];
+        let mut prow = vec![0u32; m];
+        let mut pinv = vec![u32::MAX; m];
+
+        let mut w = vec![0.0f64; m];
+        let mut in_w = vec![false; m];
+        let mut touched: Vec<u32> = Vec::new();
+
+        for k in 0..m {
+            // Scatter basis column k.
+            let (rows, vals) = mat.col(basis[k]);
+            for (r, v) in rows.iter().zip(vals) {
+                let r = *r as usize;
+                if !in_w[r] {
+                    in_w[r] = true;
+                    touched.push(r as u32);
+                }
+                w[r] += v;
+            }
+            // Left-looking elimination against earlier pivots, in order.
+            for t in 0..k {
+                let pr = prow[t] as usize;
+                let val = w[pr];
+                if val == 0.0 {
+                    continue;
+                }
+                if val.abs() <= DROP_TOL {
+                    w[pr] = 0.0;
+                    continue;
+                }
+                ucols[k].push((t as u32, val));
+                for &(r, l) in &lcols[t] {
+                    let r = r as usize;
+                    if !in_w[r] {
+                        in_w[r] = true;
+                        touched.push(r as u32);
+                    }
+                    w[r] -= val * l;
+                }
+            }
+            // Partial pivoting over not-yet-pivoted rows.
+            let mut best = PIVOT_TOL;
+            let mut best_row = usize::MAX;
+            for &r in &touched {
+                let r = r as usize;
+                if pinv[r] == u32::MAX && w[r].abs() > best {
+                    best = w[r].abs();
+                    best_row = r;
+                }
+            }
+            if best_row == usize::MAX {
+                return Err(SingularBasis);
+            }
+            prow[k] = best_row as u32;
+            pinv[best_row] = k as u32;
+            let piv = w[best_row];
+            udiag[k] = piv;
+            for &r in &touched {
+                let r = r as usize;
+                if pinv[r] == u32::MAX && w[r].abs() > DROP_TOL {
+                    lcols[k].push((r as u32, w[r] / piv));
+                }
+            }
+            // Clear the work vector for the next column.
+            for &r in &touched {
+                w[r as usize] = 0.0;
+                in_w[r as usize] = false;
+            }
+            touched.clear();
+        }
+        Ok(LuFactors { m, lcols, ucols, udiag, prow, pinv })
+    }
+
+    /// Solve `B x = work` where `work` is dense and row-indexed; the result
+    /// is indexed by basis position. `work` is consumed as scratch.
+    fn solve_lower_upper(&self, work: &mut [f64]) -> Vec<f64> {
+        // L y = P·work, processed in pivot order.
+        for k in 0..self.m {
+            let val = work[self.prow[k] as usize];
+            if val != 0.0 {
+                for &(r, l) in &self.lcols[k] {
+                    work[r as usize] -= val * l;
+                }
+            }
+        }
+        // U x = y, column-oriented back substitution.
+        let mut out = vec![0.0f64; self.m];
+        for k in (0..self.m).rev() {
+            let val = work[self.prow[k] as usize];
+            if val != 0.0 {
+                let xk = val / self.udiag[k];
+                out[k] = xk;
+                for &(t, u) in &self.ucols[k] {
+                    work[self.prow[t as usize] as usize] -= u * xk;
+                }
+            }
+        }
+        out
+    }
+
+    /// Solve `Bᵀ y = c` where `c` is indexed by basis position; the result
+    /// is row-indexed.
+    fn solve_transposed(&self, c: &[f64]) -> Vec<f64> {
+        debug_assert_eq!(c.len(), self.m);
+        // Uᵀ z = c (forward).
+        let mut z = vec![0.0f64; self.m];
+        for k in 0..self.m {
+            let mut v = c[k];
+            for &(t, u) in &self.ucols[k] {
+                v -= u * z[t as usize];
+            }
+            z[k] = v / self.udiag[k];
+        }
+        // Lᵀ w = z (backward, in place).
+        for k in (0..self.m).rev() {
+            let mut v = z[k];
+            for &(r, l) in &self.lcols[k] {
+                v -= l * z[self.pinv[r as usize] as usize];
+            }
+            z[k] = v;
+        }
+        // y = Pᵀ w.
+        let mut y = vec![0.0f64; self.m];
+        for k in 0..self.m {
+            y[self.prow[k] as usize] = z[k];
+        }
+        y
+    }
+}
+
+/// One product-form update: basis position `r` was replaced by a column
+/// whose basis representation was `w` (`col` holds `w`'s off-pivot
+/// entries, `wr` the pivot entry `w[r]`).
+#[derive(Debug, Clone)]
+struct Eta {
+    r: u32,
+    wr: f64,
+    col: Vec<(u32, f64)>,
+}
+
+/// A maintained basis factorization: LU factors plus the eta file of pivots
+/// applied since the last (re)factorization.
+#[derive(Debug, Clone)]
+pub struct Basis {
+    m: usize,
+    lu: LuFactors,
+    etas: Vec<Eta>,
+}
+
+impl Basis {
+    /// Factorize the basis from scratch.
+    pub fn factorize(mat: &CscMatrix, basis: &[usize]) -> Result<Basis, SingularBasis> {
+        let lu = LuFactors::factorize(mat, basis)?;
+        Ok(Basis { m: basis.len(), lu, etas: Vec::new() })
+    }
+
+    /// Refactorize in place (clears the eta file).
+    pub fn refactorize(&mut self, mat: &CscMatrix, basis: &[usize]) -> Result<(), SingularBasis> {
+        self.lu = LuFactors::factorize(mat, basis)?;
+        self.etas.clear();
+        Ok(())
+    }
+
+    /// Number of eta updates since the last factorization.
+    pub fn eta_count(&self) -> usize {
+        self.etas.len()
+    }
+
+    /// True once the eta file is long enough that refactorizing is cheaper
+    /// (and numerically safer) than continuing to stack updates.
+    pub fn should_refactorize(&self) -> bool {
+        self.etas.len() >= REFACTOR_INTERVAL
+    }
+
+    /// `ftran` of matrix column `j`: solve `B w = A_j`. Result indexed by
+    /// basis position.
+    pub fn ftran_col(&self, mat: &CscMatrix, j: usize) -> Vec<f64> {
+        let mut work = vec![0.0f64; self.m];
+        let (rows, vals) = mat.col(j);
+        for (r, v) in rows.iter().zip(vals) {
+            work[*r as usize] += v;
+        }
+        self.ftran_work(work)
+    }
+
+    /// `ftran` of a dense row-indexed right-hand side.
+    pub fn ftran_dense(&self, rhs: Vec<f64>) -> Vec<f64> {
+        self.ftran_work(rhs)
+    }
+
+    fn ftran_work(&self, mut work: Vec<f64>) -> Vec<f64> {
+        let mut x = self.lu.solve_lower_upper(&mut work);
+        // Apply etas in chronological order.
+        for eta in &self.etas {
+            let r = eta.r as usize;
+            let t = x[r] / eta.wr;
+            if t != 0.0 {
+                x[r] = t;
+                for &(i, wi) in &eta.col {
+                    x[i as usize] -= wi * t;
+                }
+            } else {
+                x[r] = 0.0;
+            }
+        }
+        x
+    }
+
+    /// `btran`: solve `Bᵀ y = c` with `c` indexed by basis position. Result
+    /// is row-indexed.
+    pub fn btran_dense(&self, mut c: Vec<f64>) -> Vec<f64> {
+        debug_assert_eq!(c.len(), self.m);
+        // Transposed etas in reverse chronological order.
+        for eta in self.etas.iter().rev() {
+            let r = eta.r as usize;
+            let mut s = c[r];
+            for &(i, wi) in &eta.col {
+                s -= wi * c[i as usize];
+            }
+            c[r] = s / eta.wr;
+        }
+        self.lu.solve_transposed(&c)
+    }
+
+    /// `btran` of the `r`-th unit vector: row `r` of `B⁻¹`, row-indexed.
+    pub fn btran_unit(&self, r: usize) -> Vec<f64> {
+        let mut c = vec![0.0f64; self.m];
+        c[r] = 1.0;
+        self.btran_dense(c)
+    }
+
+    /// Record a pivot: basis position `r` is replaced by the column whose
+    /// ftran representation is `w`. Fails (without recording) when the
+    /// pivot element is too small to be trustworthy.
+    pub fn update(&mut self, r: usize, w: &[f64]) -> Result<(), SingularBasis> {
+        let wr = w[r];
+        if wr.abs() < PIVOT_TOL {
+            return Err(SingularBasis);
+        }
+        let mut col = Vec::new();
+        for (i, &wi) in w.iter().enumerate() {
+            if i != r && wi.abs() > DROP_TOL {
+                col.push((i as u32, wi));
+            }
+        }
+        self.etas.push(Eta { r: r as u32, wr, col });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Dense `B x` for checking, where basis columns come from `mat`.
+    fn mat_vec(mat: &CscMatrix, basis: &[usize], x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; basis.len()];
+        for (k, &j) in basis.iter().enumerate() {
+            mat.col_axpy(j, x[k], &mut out);
+        }
+        out
+    }
+
+    fn mat_t_vec(mat: &CscMatrix, basis: &[usize], y: &[f64]) -> Vec<f64> {
+        basis.iter().map(|&j| mat.col_dot(j, y)).collect()
+    }
+
+    fn random_mat(rng: &mut Rng, m: usize, extra_cols: usize) -> CscMatrix {
+        // m "basis candidate" columns built to be nonsingular (strong
+        // diagonal), plus some extra columns to pivot in.
+        let mut cols = Vec::new();
+        for j in 0..m + extra_cols {
+            let mut col = Vec::new();
+            let d = j % m;
+            col.push((d, 2.0 + rng.f64() * 8.0));
+            for _ in 0..rng.range(0, 3) {
+                let r = rng.range(0, m - 1);
+                if r != d {
+                    col.push((r, rng.f64() * 2.0 - 1.0));
+                }
+            }
+            cols.push(col);
+        }
+        CscMatrix::from_columns(m, &cols)
+    }
+
+    #[test]
+    fn factorize_identity_like() {
+        let cols: Vec<Vec<(usize, f64)>> =
+            (0..4).map(|i| vec![(i, if i % 2 == 0 { 1.0 } else { -1.0 })]).collect();
+        let mat = CscMatrix::from_columns(4, &cols);
+        let basis = [0, 1, 2, 3];
+        let b = Basis::factorize(&mat, &basis).unwrap();
+        let x = b.ftran_dense(vec![3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(x, vec![3.0, -4.0, 5.0, -6.0]);
+        let y = b.btran_dense(vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(y, vec![1.0, -2.0, 3.0, -4.0]);
+    }
+
+    #[test]
+    fn ftran_btran_solve_random_systems() {
+        let mut rng = Rng::new(7);
+        for _case in 0..20 {
+            let m = rng.range(1, 25);
+            let mat = random_mat(&mut rng, m, 0);
+            let basis: Vec<usize> = (0..m).collect();
+            let b = Basis::factorize(&mat, &basis).unwrap();
+            let rhs: Vec<f64> = (0..m).map(|_| rng.f64() * 10.0 - 5.0).collect();
+            let x = b.ftran_dense(rhs.clone());
+            let back = mat_vec(&mat, &basis, &x);
+            for i in 0..m {
+                assert!((back[i] - rhs[i]).abs() < 1e-8, "ftran residual {}", back[i] - rhs[i]);
+            }
+            let c: Vec<f64> = (0..m).map(|_| rng.f64() * 4.0 - 2.0).collect();
+            let y = b.btran_dense(c.clone());
+            let back = mat_t_vec(&mat, &basis, &y);
+            for i in 0..m {
+                assert!((back[i] - c[i]).abs() < 1e-8, "btran residual {}", back[i] - c[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn eta_updates_match_refactorization() {
+        let mut rng = Rng::new(21);
+        for _case in 0..10 {
+            let m = rng.range(3, 15);
+            let mat = random_mat(&mut rng, m, m);
+            let mut basis: Vec<usize> = (0..m).collect();
+            let mut b = Basis::factorize(&mat, &basis).unwrap();
+            // Pivot a few extra columns in via eta updates.
+            for _ in 0..rng.range(1, 4) {
+                let q = m + rng.range(0, m - 1); // extra column
+                let r = rng.range(0, m - 1);
+                if basis.contains(&q) {
+                    continue; // a duplicate column would make the basis singular
+                }
+                let w = b.ftran_col(&mat, q);
+                if w[r].abs() < 1e-6 {
+                    continue; // would be a degenerate pivot; skip
+                }
+                b.update(r, &w).unwrap();
+                basis[r] = q;
+            }
+            // Compare solves against a from-scratch factorization.
+            let fresh = Basis::factorize(&mat, &basis).unwrap();
+            let rhs: Vec<f64> = (0..m).map(|_| rng.f64() * 6.0 - 3.0).collect();
+            let x1 = b.ftran_dense(rhs.clone());
+            let x2 = fresh.ftran_dense(rhs);
+            for i in 0..m {
+                assert!((x1[i] - x2[i]).abs() < 1e-7, "eta ftran mismatch {}", x1[i] - x2[i]);
+            }
+            let c: Vec<f64> = (0..m).map(|_| rng.f64() * 6.0 - 3.0).collect();
+            let y1 = b.btran_dense(c.clone());
+            let y2 = fresh.btran_dense(c);
+            for i in 0..m {
+                assert!((y1[i] - y2[i]).abs() < 1e-7, "eta btran mismatch {}", y1[i] - y2[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn singular_basis_is_rejected() {
+        // Two identical columns.
+        let cols = vec![vec![(0, 1.0), (1, 1.0)], vec![(0, 1.0), (1, 1.0)]];
+        let mat = CscMatrix::from_columns(2, &cols);
+        assert!(Basis::factorize(&mat, &[0, 1]).is_err());
+    }
+
+    #[test]
+    fn tiny_pivot_update_is_rejected() {
+        let cols = vec![vec![(0, 1.0)], vec![(0, 1e-14)]];
+        let mat = CscMatrix::from_columns(1, &cols);
+        let mut b = Basis::factorize(&mat, &[0]).unwrap();
+        let w = b.ftran_col(&mat, 1);
+        assert!(b.update(0, &w).is_err());
+        assert_eq!(b.eta_count(), 0);
+    }
+}

@@ -1,15 +1,29 @@
-//! Branch & bound MILP driver.
+//! Parallel warm-started branch & bound MILP driver.
 //!
-//! Depth-first search over LP relaxations solved by
-//! [`crate::ilp::simplex`]. Supports warm incumbents supplied by the caller
-//! (OLLA seeds the solver with the greedy schedule / best-fit placement),
-//! a wall-clock time limit matching the paper's §5.7 protocol, and an
-//! anytime incumbent log used to regenerate Figures 10 and 12.
+//! Depth-first-flavored search over LP relaxations solved by one shared
+//! [`LpEngine`] (built once from the root-presolved model). Each node
+//! carries its parent's optimal basis ([`BasisSnapshot`]); the child LP is
+//! re-solved by the engine's bounded-variable dual simplex from that basis
+//! instead of a two-phase cold start, which is where the bulk of the
+//! simplex-iteration savings come from.
+//!
+//! Search is distributed over a pool of worker threads (`std::thread`, no
+//! external dependencies): every worker dives depth-first on one child of
+//! each node it expands and publishes the sibling to a shared LIFO pool
+//! that idle workers steal from. The incumbent, node/iteration counters
+//! and the warm-start hit statistics are shared; pruning reads the
+//! incumbent objective lock-free from an atomic. Supports warm incumbents
+//! supplied by the caller (OLLA seeds the solver with the greedy schedule
+//! / best-fit placement), a wall-clock time limit matching the paper's
+//! §5.7 protocol, and an anytime incumbent log used to regenerate
+//! Figures 10 and 12.
 
 use super::model::{Model, Solution, SolveStatus, VarKind};
 use super::presolve::{presolve, PresolveStatus};
-use super::simplex::{solve_lp, LpOptions, LpStatus, EPS};
+use super::simplex::{BasisSnapshot, LpEngine, LpOptions, LpStatus, EPS};
 use crate::util::Stopwatch;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 /// Options controlling the MILP solve.
@@ -29,6 +43,9 @@ pub struct SolveOptions {
     pub integral_objective: bool,
     /// Maximum number of B&B nodes (safety valve).
     pub max_nodes: u64,
+    /// Worker threads for the node pool. `0` picks automatically (1 for
+    /// small models, up to 8 otherwise); `1` forces the serial path.
+    pub threads: usize,
 }
 
 impl Default for SolveOptions {
@@ -40,6 +57,7 @@ impl Default for SolveOptions {
             initial: None,
             integral_objective: false,
             max_nodes: u64::MAX,
+            threads: 0,
         }
     }
 }
@@ -49,12 +67,66 @@ struct Node {
     ub: Vec<f64>,
     /// LP bound inherited from the parent (for best-bound bookkeeping).
     parent_bound: f64,
+    /// Parent's optimal basis, shared between siblings.
+    warm: Option<Arc<BasisSnapshot>>,
+}
+
+struct Pool {
+    stack: Vec<Node>,
+    /// Nodes currently being processed by some worker.
+    in_flight: usize,
+    /// Minimum bound among nodes abandoned when the search stopped early.
+    open_min: f64,
+}
+
+struct Incumbent {
+    obj: f64,
+    x: Option<Vec<f64>>,
+    log: Vec<(f64, f64)>,
+}
+
+struct Shared<'a> {
+    model: &'a Model,
+    engine: LpEngine,
+    int_vars: Vec<usize>,
+    opts: &'a SolveOptions,
+    lp_opts: LpOptions,
+    watch: &'a Stopwatch,
+    pool: Mutex<Pool>,
+    cv: Condvar,
+    best: Mutex<Incumbent>,
+    best_bits: AtomicU64,
+    nodes: AtomicU64,
+    iters: AtomicU64,
+    warm_attempts: AtomicU64,
+    warm_hits: AtomicU64,
+    stop: AtomicBool,
+    timed_out: AtomicBool,
+    lp_limited: AtomicBool,
+    unbounded: AtomicBool,
+}
+
+impl<'a> Shared<'a> {
+    fn best_obj(&self) -> f64 {
+        f64::from_bits(self.best_bits.load(Ordering::Relaxed))
+    }
+
+    fn halt(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.cv.notify_all();
+    }
+
+    fn record_open_bound(&self, bound: f64) {
+        let mut p = self.pool.lock().unwrap();
+        if bound < p.open_min {
+            p.open_min = bound;
+        }
+    }
 }
 
 /// Solve a minimization MILP.
 pub fn solve(model: &Model, opts: &SolveOptions) -> Solution {
     let watch = Stopwatch::start();
-    let _n = model.num_vars();
     let lp_opts = LpOptions {
         max_iters: opts.lp_iters,
         deadline: std::time::Instant::now().checked_add(opts.time_limit),
@@ -66,8 +138,6 @@ pub fn solve(model: &Model, opts: &SolveOptions) -> Solution {
     let mut incumbent: Option<Vec<f64>> = None;
     let mut incumbent_obj = f64::INFINITY;
     let mut incumbents_log: Vec<(f64, f64)> = Vec::new();
-    let mut nodes_explored = 0u64;
-    let mut simplex_iters = 0u64;
 
     // Caller-provided warm start.
     if let Some(init) = &opts.initial {
@@ -87,8 +157,25 @@ pub fn solve(model: &Model, opts: &SolveOptions) -> Solution {
             incumbent_obj,
             incumbent_obj,
             incumbents_log,
-            nodes_explored,
-            simplex_iters,
+            0,
+            0,
+            (0, 0),
+        );
+    }
+
+    // One engine, shared by every worker: the standard form is built once
+    // from the presolved root bounds.
+    let engine = LpEngine::new(model, &pre.lb, &pre.ub);
+    if engine.root_infeasible() {
+        return finish(
+            if incumbent.is_some() { SolveStatus::Optimal } else { SolveStatus::Infeasible },
+            incumbent,
+            incumbent_obj,
+            incumbent_obj,
+            incumbents_log,
+            0,
+            0,
+            (0, 0),
         );
     }
 
@@ -100,116 +187,89 @@ pub fn solve(model: &Model, opts: &SolveOptions) -> Solution {
         .map(|(i, _)| i)
         .collect();
 
-    let mut stack: Vec<Node> = vec![Node {
-        lb: pre.lb,
-        ub: pre.ub,
-        parent_bound: f64::NEG_INFINITY,
-    }];
-    let mut global_lower = f64::NEG_INFINITY;
-    let mut timed_out = false;
-    let mut lp_limited = false;
+    let threads = effective_threads(opts, int_vars.len());
+    let shared = Shared {
+        model,
+        engine,
+        int_vars,
+        opts,
+        lp_opts,
+        watch: &watch,
+        pool: Mutex::new(Pool {
+            stack: vec![Node {
+                lb: pre.lb,
+                ub: pre.ub,
+                parent_bound: f64::NEG_INFINITY,
+                warm: None,
+            }],
+            in_flight: 0,
+            open_min: f64::INFINITY,
+        }),
+        cv: Condvar::new(),
+        best: Mutex::new(Incumbent {
+            obj: incumbent_obj,
+            x: incumbent,
+            log: incumbents_log,
+        }),
+        best_bits: AtomicU64::new(incumbent_obj.to_bits()),
+        nodes: AtomicU64::new(0),
+        iters: AtomicU64::new(0),
+        warm_attempts: AtomicU64::new(0),
+        warm_hits: AtomicU64::new(0),
+        stop: AtomicBool::new(false),
+        timed_out: AtomicBool::new(false),
+        lp_limited: AtomicBool::new(false),
+        unbounded: AtomicBool::new(false),
+    };
 
-    while let Some(node) = stack.pop() {
-        if watch.elapsed() >= opts.time_limit || nodes_explored >= opts.max_nodes {
-            timed_out = true;
-            // Remaining open nodes bound the optimum from below.
-            global_lower = stack
-                .iter()
-                .map(|nd| nd.parent_bound)
-                .chain(std::iter::once(node.parent_bound))
-                .fold(f64::INFINITY, f64::min);
-            break;
-        }
-        nodes_explored += 1;
-
-        // Bound-based pruning before the LP.
-        if node.parent_bound >= prune_threshold(incumbent_obj, opts) {
-            continue;
-        }
-
-        let r = solve_lp(model, &node.lb, &node.ub, &lp_opts);
-        simplex_iters += r.iters;
-        match r.status {
-            LpStatus::Infeasible => continue,
-            LpStatus::Unbounded => {
-                return finish(
-                    SolveStatus::Unbounded,
-                    incumbent,
-                    incumbent_obj,
-                    f64::NEG_INFINITY,
-                    incumbents_log,
-                    nodes_explored,
-                    simplex_iters,
-                );
+    if threads <= 1 {
+        worker(&shared);
+    } else {
+        std::thread::scope(|sc| {
+            for _ in 0..threads {
+                sc.spawn(|| worker(&shared));
             }
-            LpStatus::IterLimit => {
-                // Deadline or iteration cap inside the LP: we can no longer
-                // claim optimality for the whole tree.
-                lp_limited = true;
-                continue;
-            }
-            LpStatus::Optimal => {}
-        }
-        let mut bound = r.obj;
-        if opts.integral_objective {
-            bound = (bound - 1e-6).ceil();
-        }
-        if bound >= prune_threshold(incumbent_obj, opts) {
-            continue;
-        }
-
-        // Find the most fractional integer variable.
-        let mut branch: Option<(usize, f64)> = None;
-        for &j in &int_vars {
-            let xj = r.x[j];
-            let frac = (xj - xj.round()).abs();
-            if frac > 1e-6 && branch.map_or(true, |(_, best)| frac > best) {
-                branch = Some((j, frac));
-            }
-        }
-
-        match branch {
-            None => {
-                // Integral: candidate incumbent.
-                if r.obj < incumbent_obj - 1e-9 {
-                    // Round int vars exactly to kill drift.
-                    let mut x = r.x.clone();
-                    for &j in &int_vars {
-                        x[j] = x[j].round();
-                    }
-                    if model.check_feasible(&x, 1e-5).is_ok() {
-                        incumbent_obj = model.objective_value(&x);
-                        incumbent = Some(x);
-                        incumbents_log.push((watch.secs(), incumbent_obj));
-                    }
-                }
-            }
-            Some((j, _)) => {
-                let xj = r.x[j];
-                let floor = xj.floor();
-                // Explore the branch nearest the LP value first (pushed last).
-                let mut down = node.lb.clone();
-                let mut down_ub = node.ub.clone();
-                down_ub[j] = floor;
-                let down_node =
-                    Node { lb: down.clone(), ub: down_ub, parent_bound: bound };
-                down[j] = floor + 1.0;
-                let up_node = Node {
-                    lb: down,
-                    ub: node.ub.clone(),
-                    parent_bound: bound,
-                };
-                if xj - floor > 0.5 {
-                    stack.push(down_node);
-                    stack.push(up_node);
-                } else {
-                    stack.push(up_node);
-                    stack.push(down_node);
-                }
-            }
-        }
+        });
     }
 
+    // Harvest the shared state.
+    let pool = shared.pool.into_inner().unwrap();
+    let best = shared.best.into_inner().unwrap();
+    let (incumbent, incumbent_obj, incumbents_log) = (best.x, best.obj, best.log);
+    let nodes_explored = shared.nodes.load(Ordering::Relaxed);
+    let simplex_iters = shared.iters.load(Ordering::Relaxed);
+    let warm_stats = (
+        shared.warm_attempts.load(Ordering::Relaxed),
+        shared.warm_hits.load(Ordering::Relaxed),
+    );
+    let timed_out = shared.timed_out.load(Ordering::Relaxed);
+    let lp_limited = shared.lp_limited.load(Ordering::Relaxed);
+
+    if shared.unbounded.load(Ordering::Relaxed) {
+        return finish(
+            SolveStatus::Unbounded,
+            incumbent,
+            incumbent_obj,
+            f64::NEG_INFINITY,
+            incumbents_log,
+            nodes_explored,
+            simplex_iters,
+            warm_stats,
+        );
+    }
+
+    let mut global_lower = f64::NEG_INFINITY;
+    if timed_out {
+        // Remaining open nodes bound the optimum from below.
+        global_lower = pool
+            .stack
+            .iter()
+            .map(|n| n.parent_bound)
+            .fold(pool.open_min, f64::min);
+        if global_lower == f64::INFINITY {
+            global_lower = incumbent_obj;
+        }
+    }
     let status = if timed_out || lp_limited {
         if incumbent.is_some() {
             SolveStatus::TimeLimitFeasible
@@ -230,7 +290,166 @@ pub fn solve(model: &Model, opts: &SolveOptions) -> Solution {
         incumbents_log,
         nodes_explored,
         simplex_iters,
+        warm_stats,
     )
+}
+
+fn effective_threads(opts: &SolveOptions, num_int_vars: usize) -> usize {
+    if opts.threads > 0 {
+        return opts.threads;
+    }
+    // Tiny models finish in a handful of nodes; thread setup would dominate.
+    if num_int_vars < 6 {
+        return 1;
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
+/// Worker loop: steal a node from the shared pool, then dive depth-first.
+fn worker(s: &Shared<'_>) {
+    loop {
+        let node = {
+            let mut p = s.pool.lock().unwrap();
+            loop {
+                if s.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                if let Some(n) = p.stack.pop() {
+                    p.in_flight += 1;
+                    break n;
+                }
+                if p.in_flight == 0 {
+                    // Nothing queued, nothing running: search exhausted.
+                    s.cv.notify_all();
+                    return;
+                }
+                let (guard, _) =
+                    s.cv.wait_timeout(p, Duration::from_millis(20)).unwrap();
+                p = guard;
+            }
+        };
+        let mut cur = Some(node);
+        while let Some(n) = cur {
+            if s.stop.load(Ordering::Relaxed) {
+                // Abandoned mid-dive: its bound still bounds the optimum.
+                s.record_open_bound(n.parent_bound);
+                break;
+            }
+            cur = process(s, n);
+        }
+        let mut p = s.pool.lock().unwrap();
+        p.in_flight -= 1;
+        if p.in_flight == 0 && p.stack.is_empty() {
+            s.cv.notify_all();
+        }
+    }
+}
+
+/// Expand one node. Returns the preferred child for the worker to dive
+/// into (the sibling goes to the shared pool).
+fn process(s: &Shared<'_>, node: Node) -> Option<Node> {
+    if s.watch.elapsed() >= s.opts.time_limit
+        || s.nodes.load(Ordering::Relaxed) >= s.opts.max_nodes
+    {
+        s.timed_out.store(true, Ordering::Relaxed);
+        s.record_open_bound(node.parent_bound);
+        s.halt();
+        return None;
+    }
+    s.nodes.fetch_add(1, Ordering::Relaxed);
+
+    // Bound-based pruning before the LP.
+    if node.parent_bound >= prune_threshold(s.best_obj(), s.opts) {
+        return None;
+    }
+
+    let r = s.engine.solve_node(&node.lb, &node.ub, node.warm.as_deref(), &s.lp_opts);
+    s.iters.fetch_add(r.iters, Ordering::Relaxed);
+    if node.warm.is_some() {
+        s.warm_attempts.fetch_add(1, Ordering::Relaxed);
+        if r.warm_used {
+            s.warm_hits.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    match r.status {
+        LpStatus::Infeasible => return None,
+        LpStatus::Unbounded => {
+            s.unbounded.store(true, Ordering::Relaxed);
+            s.halt();
+            return None;
+        }
+        LpStatus::IterLimit => {
+            // Deadline or iteration cap inside the LP: we can no longer
+            // claim optimality for the whole tree.
+            s.lp_limited.store(true, Ordering::Relaxed);
+            s.record_open_bound(node.parent_bound.max(f64::NEG_INFINITY));
+            return None;
+        }
+        LpStatus::Optimal => {}
+    }
+    let mut bound = r.obj;
+    if s.opts.integral_objective {
+        bound = (bound - 1e-6).ceil();
+    }
+    if bound >= prune_threshold(s.best_obj(), s.opts) {
+        return None;
+    }
+
+    // Find the most fractional integer variable.
+    let mut branch: Option<(usize, f64)> = None;
+    for &j in &s.int_vars {
+        let xj = r.x[j];
+        let frac = (xj - xj.round()).abs();
+        if frac > 1e-6 && branch.map_or(true, |(_, best)| frac > best) {
+            branch = Some((j, frac));
+        }
+    }
+
+    let Some((j, _)) = branch else {
+        // Integral: candidate incumbent.
+        if r.obj < s.best_obj() - 1e-9 {
+            // Round int vars exactly to kill drift.
+            let mut x = r.x.clone();
+            for &j in &s.int_vars {
+                x[j] = x[j].round();
+            }
+            if s.model.check_feasible(&x, 1e-5).is_ok() {
+                let obj = s.model.objective_value(&x);
+                let mut best = s.best.lock().unwrap();
+                if obj < best.obj - 1e-9 {
+                    best.obj = obj;
+                    best.x = Some(x);
+                    best.log.push((s.watch.secs(), obj));
+                    s.best_bits.store(obj.to_bits(), Ordering::Relaxed);
+                }
+            }
+        }
+        return None;
+    };
+
+    let xj = r.x[j];
+    let floor = xj.floor();
+    let warm = r.basis.map(Arc::new);
+    // Down child: ub[j] = floor; up child: lb[j] = floor + 1.
+    let mut down_ub = node.ub.clone();
+    down_ub[j] = floor;
+    let down = Node {
+        lb: node.lb.clone(),
+        ub: down_ub,
+        parent_bound: bound,
+        warm: warm.clone(),
+    };
+    let mut up_lb = node.lb;
+    up_lb[j] = floor + 1.0;
+    let up = Node { lb: up_lb, ub: node.ub, parent_bound: bound, warm };
+    // Dive into the branch nearest the LP value; share the sibling.
+    let (dive, share) = if xj - floor > 0.5 { (up, down) } else { (down, up) };
+    {
+        let mut p = s.pool.lock().unwrap();
+        p.stack.push(share);
+    }
+    s.cv.notify_one();
+    Some(dive)
 }
 
 fn prune_threshold(incumbent_obj: f64, opts: &SolveOptions) -> f64 {
@@ -255,6 +474,7 @@ fn finish(
     incumbents: Vec<(f64, f64)>,
     nodes: u64,
     simplex_iters: u64,
+    warm_stats: (u64, u64),
 ) -> Solution {
     Solution {
         status,
@@ -264,6 +484,8 @@ fn finish(
         incumbents,
         nodes,
         simplex_iters,
+        warm_attempts: warm_stats.0,
+        warm_hits: warm_stats.1,
     }
 }
 
@@ -333,6 +555,23 @@ mod tests {
         m.constraint(vec![(x, 1.0), (y, 1.0)], Cmp::Ge, 3.0);
         let s = solve(&m, &default_opts());
         assert_eq!(s.status, SolveStatus::Infeasible);
+    }
+
+    #[test]
+    fn infeasible_only_after_presolve_propagation() {
+        // Each row is individually satisfiable; only chained bound
+        // propagation (x=1 -> y=1 -> z<=0 vs z>=1) exposes infeasibility.
+        let mut m = Model::new();
+        let x = m.binary("x", 0.0);
+        let y = m.binary("y", 0.0);
+        let z = m.binary("z", 0.0);
+        m.constraint(vec![(x, 1.0)], Cmp::Ge, 1.0);
+        m.constraint(vec![(y, 1.0), (x, -1.0)], Cmp::Ge, 0.0); // y >= x
+        m.constraint(vec![(z, 1.0), (y, 1.0)], Cmp::Le, 1.0); // z <= 1 - y
+        m.constraint(vec![(z, 1.0)], Cmp::Ge, 1.0);
+        let s = solve(&m, &default_opts());
+        assert_eq!(s.status, SolveStatus::Infeasible);
+        assert_eq!(s.nodes, 0, "presolve should prove this without search");
     }
 
     #[test]
@@ -408,5 +647,87 @@ mod tests {
             }
         }
         assert!((s.objective + best).abs() < 1e-6, "milp={} brute={}", -s.objective, best);
+    }
+
+    /// Brute-force optimum over binary assignments (test oracle).
+    fn brute_force_binary(m: &Model) -> Option<f64> {
+        let n = m.num_vars();
+        assert!(n <= 16);
+        let mut best: Option<f64> = None;
+        for mask in 0u32..(1 << n) {
+            let x: Vec<f64> = (0..n).map(|i| ((mask >> i) & 1) as f64).collect();
+            if m.check_feasible(&x, 1e-9).is_ok() {
+                let obj = m.objective_value(&x);
+                if best.map_or(true, |b| obj < b) {
+                    best = Some(obj);
+                }
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn parallel_and_serial_agree_with_brute_force_on_random_milps() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(77);
+        for _case in 0..12 {
+            let n = rng.range(4, 10);
+            let mut m = Model::new();
+            let xs: Vec<_> = (0..n)
+                .map(|i| m.binary(format!("x{i}"), rng.f64() * 10.0 - 5.0))
+                .collect();
+            for _ in 0..rng.range(1, 5) {
+                let k = rng.range(2, n);
+                let mut terms = Vec::new();
+                for t in 0..k {
+                    terms.push((xs[(t * 7 + rng.range(0, n - 1)) % n], 1.0 + rng.f64() * 3.0));
+                }
+                let cmp = if rng.chance(0.5) { Cmp::Le } else { Cmp::Ge };
+                let rhs = rng.f64() * 6.0;
+                m.constraint(terms, cmp, rhs);
+            }
+            let oracle = brute_force_binary(&m);
+            for threads in [1usize, 4] {
+                let opts = SolveOptions { threads, ..default_opts() };
+                let s = solve(&m, &opts);
+                match oracle {
+                    Some(best) => {
+                        assert_eq!(s.status, SolveStatus::Optimal, "threads={threads}");
+                        assert!(
+                            (s.objective - best).abs() < 1e-6,
+                            "threads={threads} milp={} brute={best}",
+                            s.objective
+                        );
+                    }
+                    None => {
+                        assert_eq!(s.status, SolveStatus::Infeasible, "threads={threads}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn warm_starts_hit_on_branchy_problems() {
+        // A problem that forces real branching must attempt warm starts on
+        // child nodes and accept most of them.
+        let mut m = Model::new();
+        let n = 10;
+        let xs: Vec<_> = (0..n)
+            .map(|i| m.binary(format!("x{i}"), -((i % 5) as f64) - 1.5))
+            .collect();
+        m.constraint(xs.iter().map(|&x| (x, 2.0)).collect(), Cmp::Le, 7.0);
+        m.constraint(xs.iter().enumerate().map(|(i, &x)| (x, 1.0 + (i % 3) as f64)).collect(), Cmp::Le, 9.0);
+        let opts = SolveOptions { threads: 1, ..default_opts() };
+        let s = solve(&m, &opts);
+        assert_eq!(s.status, SolveStatus::Optimal);
+        assert!(s.nodes > 1, "expected branching, got {} nodes", s.nodes);
+        assert!(s.warm_attempts > 0, "children must attempt warm starts");
+        assert!(
+            s.warm_hits * 2 >= s.warm_attempts,
+            "warm starts mostly rejected: {}/{}",
+            s.warm_hits,
+            s.warm_attempts
+        );
     }
 }

@@ -1,0 +1,337 @@
+//! `IlpBuilder`: the shared model-assembly API for the OLLA formulations.
+//!
+//! Before this existed, `olla/scheduling.rs`, `olla/placement.rs` and
+//! `olla/joint.rs` each hand-rolled the same constraint shapes (exactly-one
+//! rows, implication rows, peak-accounting rows, big-M ordering
+//! disjunctions) directly against [`Model`], and the placement/joint warm
+//! starts recovered pair binaries *by parsing variable names*. The builder
+//! centralizes those idioms:
+//!
+//! * **named variable groups** — every variable is created under a group
+//!   label, so formulations and reports can enumerate e.g. all `C`
+//!   (creation) or `P` (preservation) binaries without bookkeeping;
+//! * **sum/indicator helpers** — `exactly_one`, `at_most_one`, `implies`,
+//!   `sum_le_var`, `indicator_le`;
+//! * **pair disjunctions** — [`IlpBuilder::pair_no_overlap`] builds the
+//!   eq. 6/7a/7b "one of the two orderings holds" gadget for any
+//!   combination of free and fixed positions and registers the binaries in
+//!   a pair registry, which is what the warm starts now read instead of
+//!   variable names.
+//!
+//! [`IlpBuilder::into_parts`] yields the finished [`Model`] plus the
+//! [`IlpMeta`] (groups + pair registry).
+
+use super::model::{Cmp, Model, VarId};
+use std::collections::HashMap;
+
+/// The ordering binaries of one eq. 6/7 pair gadget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PairVars {
+    /// 1 when item `i` is placed strictly below item `j`.
+    pub below: VarId,
+    /// 1 when item `i` is placed strictly above item `j`.
+    pub above: VarId,
+}
+
+/// A position operand of a pair disjunction: a free address variable or a
+/// preplaced constant offset.
+#[derive(Debug, Clone, Copy)]
+pub enum Pos {
+    /// Position decided by the solver.
+    Var(VarId),
+    /// Position fixed up front (§4.5 preplacement).
+    Fixed(f64),
+}
+
+/// Metadata extracted from a finished builder.
+#[derive(Debug, Clone, Default)]
+pub struct IlpMeta {
+    /// Variables per named group, in creation order.
+    pub groups: HashMap<String, Vec<VarId>>,
+    /// Pair-ordering binaries keyed by the caller's `(i, j)` key.
+    pub pairs: HashMap<(usize, usize), PairVars>,
+}
+
+/// Incremental model builder with named groups and formulation helpers.
+#[derive(Debug, Default)]
+pub struct IlpBuilder {
+    model: Model,
+    meta: IlpMeta,
+}
+
+impl IlpBuilder {
+    /// Empty builder.
+    pub fn new() -> IlpBuilder {
+        IlpBuilder::default()
+    }
+
+    /// Wrap an existing model to extend it (used by the joint formulation,
+    /// which grows the scheduling model with placement variables).
+    pub fn from_model(model: Model) -> IlpBuilder {
+        IlpBuilder { model, meta: IlpMeta::default() }
+    }
+
+    /// Add a binary variable under `group`.
+    pub fn binary(&mut self, group: &str, name: impl Into<String>, obj: f64) -> VarId {
+        let v = self.model.binary(name, obj);
+        self.tag(group, v);
+        v
+    }
+
+    /// Add a continuous variable under `group`.
+    pub fn continuous(
+        &mut self,
+        group: &str,
+        name: impl Into<String>,
+        lb: f64,
+        ub: f64,
+        obj: f64,
+    ) -> VarId {
+        let v = self.model.continuous(name, lb, ub, obj);
+        self.tag(group, v);
+        v
+    }
+
+    /// Add an integer variable under `group`.
+    pub fn integer(
+        &mut self,
+        group: &str,
+        name: impl Into<String>,
+        lb: f64,
+        ub: f64,
+        obj: f64,
+    ) -> VarId {
+        let v = self.model.integer(name, lb, ub, obj);
+        self.tag(group, v);
+        v
+    }
+
+    fn tag(&mut self, group: &str, v: VarId) {
+        self.meta.groups.entry(group.to_string()).or_default().push(v);
+    }
+
+    /// Fix a variable to a constant (presolve eliminates it).
+    pub fn fix(&mut self, v: VarId, value: f64) {
+        self.model.fix(v, value);
+    }
+
+    /// Variables of a named group (empty if the group was never used).
+    pub fn group(&self, name: &str) -> &[VarId] {
+        self.meta.groups.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// The pair gadget registered under `key`, if any.
+    pub fn pair(&self, key: (usize, usize)) -> Option<PairVars> {
+        self.meta.pairs.get(&key).copied()
+    }
+
+    /// Raw `<=` constraint.
+    pub fn le(&mut self, terms: Vec<(VarId, f64)>, rhs: f64) {
+        self.model.constraint(terms, Cmp::Le, rhs);
+    }
+
+    /// Raw `>=` constraint.
+    pub fn ge(&mut self, terms: Vec<(VarId, f64)>, rhs: f64) {
+        self.model.constraint(terms, Cmp::Ge, rhs);
+    }
+
+    /// Raw `==` constraint.
+    pub fn eq(&mut self, terms: Vec<(VarId, f64)>, rhs: f64) {
+        self.model.constraint(terms, Cmp::Eq, rhs);
+    }
+
+    /// `sum(vars) == 1` (eq. 3: a node runs exactly once).
+    pub fn exactly_one(&mut self, vars: impl IntoIterator<Item = VarId>) {
+        let terms: Vec<(VarId, f64)> = vars.into_iter().map(|v| (v, 1.0)).collect();
+        self.model.constraint(terms, Cmp::Eq, 1.0);
+    }
+
+    /// `sum(vars) <= 1` (eq. 1: created or preserved, not both).
+    pub fn at_most_one(&mut self, vars: impl IntoIterator<Item = VarId>) {
+        let terms: Vec<(VarId, f64)> = vars.into_iter().map(|v| (v, 1.0)).collect();
+        self.model.constraint(terms, Cmp::Le, 1.0);
+    }
+
+    /// `a <= b` (eq. 4: run only while inputs are preserved).
+    pub fn implies(&mut self, a: VarId, b: VarId) {
+        self.model.constraint(vec![(a, 1.0), (b, -1.0)], Cmp::Le, 0.0);
+    }
+
+    /// `sum(terms) <= cap` for a variable cap (eq. 8/13 peak accounting).
+    pub fn sum_le_var(&mut self, mut terms: Vec<(VarId, f64)>, cap: VarId) {
+        terms.push((cap, -1.0));
+        self.model.constraint(terms, Cmp::Le, 0.0);
+    }
+
+    /// Indicator row: `sum(terms) <= rhs` enforced only when `guard = 1`
+    /// (big-M relaxed otherwise): `sum + M*guard <= rhs + M`.
+    pub fn indicator_le(
+        &mut self,
+        guard: VarId,
+        mut terms: Vec<(VarId, f64)>,
+        rhs: f64,
+        big_m: f64,
+    ) {
+        terms.push((guard, big_m));
+        self.model.constraint(terms, Cmp::Le, rhs + big_m);
+    }
+
+    /// The eq. 6/7a/7b pair gadget: two ordering binaries `below`/`above`
+    /// with `below + above == 1` (`must_order`) or `<= 1` (joint
+    /// formulation, where per-timestep liveness rows force the sum to 1
+    /// only for co-resident tensors), plus the two big-M separation rows
+    ///
+    /// * `pos_i + size_i <= pos_j` when `below = 1`;
+    /// * `pos_j + size_j <= pos_i` when `above = 1`.
+    ///
+    /// Free (`Pos::Var`) and preplaced (`Pos::Fixed`) positions compose
+    /// arbitrarily; the gadget is registered under `key` for warm starts.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pair_no_overlap(
+        &mut self,
+        key: (usize, usize),
+        pos_i: Pos,
+        size_i: f64,
+        pos_j: Pos,
+        size_j: f64,
+        big_m: f64,
+        must_order: bool,
+    ) -> PairVars {
+        let below = self.binary("pair_below", format!("a[{},{}]", key.0, key.1), 0.0);
+        let above = self.binary("pair_above", format!("b[{},{}]", key.0, key.1), 0.0);
+        let cmp = if must_order { Cmp::Eq } else { Cmp::Le };
+        self.model.constraint(vec![(below, 1.0), (above, 1.0)], cmp, 1.0);
+
+        // 7a: pos_i - pos_j + M*below <= M - size_i.
+        let mut terms = vec![(below, big_m)];
+        let mut rhs = big_m - size_i;
+        accumulate(&mut terms, &mut rhs, pos_i, 1.0);
+        accumulate(&mut terms, &mut rhs, pos_j, -1.0);
+        self.model.constraint(terms, Cmp::Le, rhs);
+
+        // 7b: pos_j - pos_i + M*above <= M - size_j.
+        let mut terms = vec![(above, big_m)];
+        let mut rhs = big_m - size_j;
+        accumulate(&mut terms, &mut rhs, pos_j, 1.0);
+        accumulate(&mut terms, &mut rhs, pos_i, -1.0);
+        self.model.constraint(terms, Cmp::Le, rhs);
+
+        let pv = PairVars { below, above };
+        self.meta.pairs.insert(key, pv);
+        pv
+    }
+
+    /// Number of variables so far.
+    pub fn num_vars(&self) -> usize {
+        self.model.num_vars()
+    }
+
+    /// Number of constraints so far.
+    pub fn num_cons(&self) -> usize {
+        self.model.num_cons()
+    }
+
+    /// Read-only view of the model under construction.
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+
+    /// Finish: the model plus group/pair metadata.
+    pub fn into_parts(self) -> (Model, IlpMeta) {
+        (self.model, self.meta)
+    }
+}
+
+/// Fold a position operand into a constraint row: variables become terms,
+/// fixed offsets move (negated) to the right-hand side.
+fn accumulate(terms: &mut Vec<(VarId, f64)>, rhs: &mut f64, pos: Pos, sign: f64) {
+    match pos {
+        Pos::Var(v) => terms.push((v, sign)),
+        Pos::Fixed(c) => *rhs -= sign * c,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ilp::{self, SolveOptions, SolveStatus};
+
+    #[test]
+    fn groups_collect_variables() {
+        let mut b = IlpBuilder::new();
+        let x = b.binary("C", "C[0]", 0.0);
+        let y = b.binary("C", "C[1]", 0.0);
+        let p = b.continuous("obj", "peak", 0.0, 10.0, 1.0);
+        assert_eq!(b.group("C"), &[x, y]);
+        assert_eq!(b.group("obj"), &[p]);
+        assert!(b.group("missing").is_empty());
+        let (m, meta) = b.into_parts();
+        assert_eq!(m.num_vars(), 3);
+        assert_eq!(meta.groups["C"].len(), 2);
+    }
+
+    #[test]
+    fn helper_rows_have_expected_shape() {
+        let mut b = IlpBuilder::new();
+        let x = b.binary("g", "x", 0.0);
+        let y = b.binary("g", "y", 0.0);
+        let cap = b.continuous("g", "cap", 0.0, 100.0, 1.0);
+        b.exactly_one([x, y]);
+        b.at_most_one([x, y]);
+        b.implies(x, y);
+        b.sum_le_var(vec![(x, 8.0), (y, 4.0)], cap);
+        b.indicator_le(x, vec![(y, 1.0)], 0.0, 50.0);
+        let (m, _) = b.into_parts();
+        assert_eq!(m.num_cons(), 5);
+        // exactly_one: x + y == 1.
+        assert_eq!(m.cons[0].cmp, Cmp::Eq);
+        assert_eq!(m.cons[0].rhs, 1.0);
+        // implies: x - y <= 0.
+        assert!(m.check_feasible(&[1.0, 0.0, 0.0], 1e-9).is_err());
+        // sum_le_var allows x=0,y=1,cap>=4 (violates exactly_one? x+y=1 ok).
+        assert!(m.check_feasible(&[0.0, 1.0, 4.0], 1e-9).is_ok());
+    }
+
+    #[test]
+    fn pair_gadget_separates_free_and_fixed_positions() {
+        // Three placements of a pair (free/free, free/fixed, fixed/free)
+        // must all solve to non-overlapping addresses.
+        let big_m = 100.0;
+        // free/free: two tensors of size 10 and 20 in an arena minimized by
+        // a peak variable.
+        let mut b = IlpBuilder::new();
+        let ai = b.continuous("A", "A[0]", 0.0, 90.0, 0.0);
+        let aj = b.continuous("A", "A[1]", 0.0, 80.0, 0.0);
+        let peak = b.continuous("obj", "peak", 0.0, big_m, 1.0);
+        b.le(vec![(ai, 1.0), (peak, -1.0)], -10.0);
+        b.le(vec![(aj, 1.0), (peak, -1.0)], -20.0);
+        b.pair_no_overlap((0, 1), Pos::Var(ai), 10.0, Pos::Var(aj), 20.0, big_m, true);
+        let (m, meta) = b.into_parts();
+        assert!(meta.pairs.contains_key(&(0, 1)));
+        let s = ilp::solve(&m, &SolveOptions::default());
+        assert_eq!(s.status, SolveStatus::Optimal);
+        assert!((s.objective - 30.0).abs() < 1e-6, "obj={}", s.objective);
+        let (oi, oj) = (s.value(ai), s.value(aj));
+        assert!(oi + 10.0 <= oj + 1e-6 || oj + 20.0 <= oi + 1e-6);
+
+        // free/fixed: item j preplaced at 0 with size 20; the free item
+        // must land at >= 20.
+        let mut b = IlpBuilder::new();
+        let ai = b.continuous("A", "A[0]", 0.0, 90.0, 1.0);
+        b.pair_no_overlap((0, 1), Pos::Var(ai), 10.0, Pos::Fixed(0.0), 20.0, big_m, true);
+        let (m, _) = b.into_parts();
+        let s = ilp::solve(&m, &SolveOptions::default());
+        assert_eq!(s.status, SolveStatus::Optimal);
+        assert!((s.value(ai) - 20.0).abs() < 1e-6, "A[0]={}", s.value(ai));
+
+        // fixed/free: item i preplaced at 50 size 10; free j (size 20,
+        // minimized) fits below.
+        let mut b = IlpBuilder::new();
+        let aj = b.continuous("A", "A[1]", 0.0, 90.0, 1.0);
+        b.pair_no_overlap((0, 1), Pos::Fixed(50.0), 10.0, Pos::Var(aj), 20.0, big_m, true);
+        let (m, _) = b.into_parts();
+        let s = ilp::solve(&m, &SolveOptions::default());
+        assert_eq!(s.status, SolveStatus::Optimal);
+        assert!(s.value(aj) + 20.0 <= 50.0 + 1e-6, "A[1]={}", s.value(aj));
+    }
+}

@@ -1,0 +1,493 @@
+//! Test-only reference LP solver: the pre-refactor dense-basis two-phase
+//! primal simplex, kept verbatim as an independent oracle.
+//!
+//! The production engine ([`crate::ilp::simplex`]) uses a sparse LU basis
+//! with eta updates and a dual warm-start path; this module preserves the
+//! old product-form dense implementation so property tests can assert that
+//! the sparse and dense paths agree on random models. It is compiled only
+//! for `cargo test` (see `ilp/mod.rs`) and must not grow features.
+
+use super::model::{Cmp, Model};
+use super::simplex::{LpOptions, LpResult, LpStatus, EPS, INF};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum VarState {
+    Basic(usize), // row index
+    AtLower,
+    AtUpper,
+}
+
+struct Tableau {
+    m: usize,                     // rows
+    ntot: usize,                  // structural + slack + artificial
+    n_struct: usize,              // structural vars
+    cols: Vec<Vec<(usize, f64)>>, // sparse column per variable
+    lb: Vec<f64>,
+    ub: Vec<f64>,
+    cost: Vec<f64>, // phase-2 cost
+    b: Vec<f64>,
+    binv: Vec<f64>, // m*m row-major
+    basis: Vec<usize>,
+    state: Vec<VarState>,
+    x: Vec<f64>,
+    iters: u64,
+}
+
+impl Tableau {
+    fn binv_row(&self, i: usize) -> &[f64] {
+        &self.binv[i * self.m..(i + 1) * self.m]
+    }
+
+    /// w = Binv * col(q)
+    fn ftran(&self, q: usize) -> Vec<f64> {
+        let m = self.m;
+        let mut w = vec![0.0; m];
+        for &(r, a) in &self.cols[q] {
+            let col_r = r;
+            for i in 0..m {
+                w[i] += self.binv[i * m + col_r] * a;
+            }
+        }
+        w
+    }
+
+    /// y^T = c_B^T * Binv for an arbitrary basic-cost vector.
+    fn btran(&self, cb: &[f64]) -> Vec<f64> {
+        let m = self.m;
+        let mut y = vec![0.0; m];
+        for i in 0..m {
+            let c = cb[i];
+            if c != 0.0 {
+                let row = self.binv_row(i);
+                for j in 0..m {
+                    y[j] += c * row[j];
+                }
+            }
+        }
+        y
+    }
+
+    fn reduced_cost(&self, y: &[f64], j: usize, cost: &[f64]) -> f64 {
+        let mut d = cost[j];
+        for &(r, a) in &self.cols[j] {
+            d -= y[r] * a;
+        }
+        d
+    }
+
+    /// Recompute basic-variable values from the nonbasic assignment.
+    fn recompute_basics(&mut self) {
+        let m = self.m;
+        let mut rhs = self.b.clone();
+        for j in 0..self.ntot {
+            if let VarState::Basic(_) = self.state[j] {
+                continue;
+            }
+            let xj = self.x[j];
+            if xj != 0.0 {
+                for &(r, a) in &self.cols[j] {
+                    rhs[r] -= a * xj;
+                }
+            }
+        }
+        for i in 0..m {
+            let mut v = 0.0;
+            let row = self.binv_row(i);
+            for r in 0..m {
+                v += row[r] * rhs[r];
+            }
+            self.x[self.basis[i]] = v;
+        }
+    }
+
+    /// One simplex phase: minimize `cost` until optimal/unbounded/limit.
+    fn run_phase(
+        &mut self,
+        cost: &[f64],
+        max_iters: u64,
+        deadline: Option<std::time::Instant>,
+    ) -> LpStatus {
+        let m = self.m;
+        let mut degenerate_streak = 0u32;
+        loop {
+            if self.iters >= max_iters {
+                return LpStatus::IterLimit;
+            }
+            if self.iters % 64 == 0 {
+                if let Some(d) = deadline {
+                    if std::time::Instant::now() >= d {
+                        return LpStatus::IterLimit;
+                    }
+                }
+            }
+            self.iters += 1;
+            // Pricing.
+            let mut cb = vec![0.0; m];
+            for i in 0..m {
+                cb[i] = cost[self.basis[i]];
+            }
+            let y = self.btran(&cb);
+            let bland = degenerate_streak > 60;
+            let mut enter: Option<(usize, f64, i8)> = None; // (var, |d|, dir)
+            for j in 0..self.ntot {
+                let (dir_ok_low, dir_ok_up) = match self.state[j] {
+                    VarState::Basic(_) => continue,
+                    VarState::AtLower => (true, false),
+                    VarState::AtUpper => (false, true),
+                };
+                let d = self.reduced_cost(&y, j, cost);
+                let (viol, dir) = if dir_ok_low && d < -EPS {
+                    (-d, 1i8)
+                } else if dir_ok_up && d > EPS {
+                    (d, -1i8)
+                } else {
+                    continue;
+                };
+                if bland {
+                    enter = Some((j, viol, dir));
+                    break;
+                }
+                if enter.map_or(true, |(_, best, _)| viol > best) {
+                    enter = Some((j, viol, dir));
+                }
+            }
+            let Some((q, _, dir)) = enter else {
+                return LpStatus::Optimal;
+            };
+            let sigma = dir as f64; // +1: q increases from lb; -1: decreases from ub
+            let w = self.ftran(q);
+            // Ratio test: how far can x_q move?
+            let mut t_max = self.ub[q] - self.lb[q]; // bound flip distance
+            let mut leave: Option<(usize, bool)> = None; // (row, to_upper)
+            for i in 0..m {
+                let wi = sigma * w[i];
+                let bi = self.basis[i];
+                if wi > EPS {
+                    // basic decreases toward its lower bound
+                    let room = self.x[bi] - self.lb[bi];
+                    let t = room / wi;
+                    if t < t_max - 1e-12 {
+                        t_max = t;
+                        leave = Some((i, false));
+                    } else if bland && t <= t_max + 1e-12 && leave.is_none() {
+                        leave = Some((i, false));
+                    }
+                } else if wi < -EPS {
+                    // basic increases toward its upper bound
+                    if self.ub[bi] >= INF {
+                        continue;
+                    }
+                    let room = self.ub[bi] - self.x[bi];
+                    let t = room / (-wi);
+                    if t < t_max - 1e-12 {
+                        t_max = t;
+                        leave = Some((i, true));
+                    }
+                }
+            }
+            if t_max >= INF {
+                return LpStatus::Unbounded;
+            }
+            let t = t_max.max(0.0);
+            if t < 1e-11 {
+                degenerate_streak += 1;
+            } else {
+                degenerate_streak = 0;
+            }
+            // Apply the step.
+            self.x[q] += sigma * t;
+            for i in 0..m {
+                let bi = self.basis[i];
+                self.x[bi] -= sigma * t * w[i];
+            }
+            match leave {
+                None => {
+                    // Bound flip: q moved all the way to its other bound.
+                    self.state[q] = match self.state[q] {
+                        VarState::AtLower => VarState::AtUpper,
+                        VarState::AtUpper => VarState::AtLower,
+                        b => b,
+                    };
+                }
+                Some((r, to_upper)) => {
+                    let out = self.basis[r];
+                    // Snap the leaving variable exactly onto its bound.
+                    self.x[out] = if to_upper { self.ub[out] } else { self.lb[out] };
+                    self.state[out] =
+                        if to_upper { VarState::AtUpper } else { VarState::AtLower };
+                    self.basis[r] = q;
+                    self.state[q] = VarState::Basic(r);
+                    // Product-form update of Binv.
+                    let piv = w[r];
+                    debug_assert!(piv.abs() > 1e-12, "pivot too small");
+                    let (mm, binv) = (self.m, &mut self.binv);
+                    let inv_piv = 1.0 / piv;
+                    for c in 0..mm {
+                        binv[r * mm + c] *= inv_piv;
+                    }
+                    for i in 0..mm {
+                        if i == r {
+                            continue;
+                        }
+                        let f = w[i];
+                        if f != 0.0 {
+                            for c in 0..mm {
+                                binv[i * mm + c] -= f * binv[r * mm + c];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Reference solve of the continuous relaxation with bounds overridden by
+/// `lb`/`ub` — the pre-refactor dense implementation.
+pub fn solve_lp_dense(model: &Model, lb: &[f64], ub: &[f64], opts: &LpOptions) -> LpResult {
+    let n = model.num_vars();
+    debug_assert_eq!(lb.len(), n);
+    debug_assert_eq!(ub.len(), n);
+
+    // Quick bound sanity: crossed bounds = infeasible.
+    for j in 0..n {
+        if lb[j] > ub[j] + EPS {
+            return LpResult { status: LpStatus::Infeasible, x: vec![], obj: 0.0, iters: 0 };
+        }
+    }
+
+    // ---- Reduction pass ----
+    let is_fixed: Vec<bool> = (0..n).map(|j| ub[j] - lb[j] <= EPS).collect();
+    let mut vmap = vec![usize::MAX; n];
+    let mut kept_vars: Vec<usize> = Vec::new();
+    for j in 0..n {
+        if !is_fixed[j] {
+            vmap[j] = kept_vars.len();
+            kept_vars.push(j);
+        }
+    }
+    let mut red = Model::new();
+    for &j in &kept_vars {
+        red.continuous(String::new(), lb[j], ub[j], model.vars[j].obj);
+    }
+    'rows: for c in &model.cons {
+        let mut rhs = c.rhs;
+        let mut terms: Vec<(super::model::VarId, f64)> = Vec::new();
+        let (mut min_act, mut max_act) = (0.0f64, 0.0f64);
+        for &(v, a) in &c.terms {
+            let j = v.0;
+            if is_fixed[j] {
+                rhs -= a * lb[j];
+            } else {
+                terms.push((super::model::VarId(vmap[j]), a));
+                if a >= 0.0 {
+                    min_act += a * lb[j].max(-INF);
+                    max_act += a * ub[j].min(INF);
+                } else {
+                    min_act += a * ub[j].min(INF);
+                    max_act += a * lb[j].max(-INF);
+                }
+            }
+        }
+        let tol = EPS * (1.0 + rhs.abs());
+        if terms.is_empty() {
+            let feasible = match c.cmp {
+                Cmp::Le => 0.0 <= rhs + tol,
+                Cmp::Ge => 0.0 >= rhs - tol,
+                Cmp::Eq => rhs.abs() <= tol,
+            };
+            if !feasible {
+                return LpResult { status: LpStatus::Infeasible, x: vec![], obj: 0.0, iters: 0 };
+            }
+            continue 'rows;
+        }
+        // Redundancy elimination via activity bounds.
+        let redundant = match c.cmp {
+            Cmp::Le => max_act <= rhs + tol,
+            Cmp::Ge => min_act >= rhs - tol,
+            Cmp::Eq => false,
+        };
+        if redundant {
+            continue 'rows;
+        }
+        red.cons.push(super::model::Constraint { terms, cmp: c.cmp, rhs });
+    }
+    let rlb: Vec<f64> = kept_vars.iter().map(|&j| lb[j]).collect();
+    let rub: Vec<f64> = kept_vars.iter().map(|&j| ub[j]).collect();
+    let r = solve_lp_core(&red, &rlb, &rub, opts);
+    if r.status != LpStatus::Optimal {
+        return LpResult { status: r.status, x: vec![], obj: 0.0, iters: r.iters };
+    }
+    let mut x = vec![0.0; n];
+    for j in 0..n {
+        x[j] = if is_fixed[j] { lb[j] } else { r.x[vmap[j]] };
+    }
+    let obj = model.objective_value(&x);
+    LpResult { status: LpStatus::Optimal, x, obj, iters: r.iters }
+}
+
+/// The raw two-phase dense simplex on an (already reduced) model.
+fn solve_lp_core(model: &Model, lb: &[f64], ub: &[f64], opts: &LpOptions) -> LpResult {
+    let n = model.num_vars();
+    let m = model.num_cons();
+
+    // Standard form: structural(n) + slack(m) + artificial(<=m).
+    // Row i: sum a_ij x_j + s_i = b_i.
+    let ntot_base = n + m;
+    let mut cols: Vec<Vec<(usize, f64)>> = vec![Vec::new(); ntot_base];
+    for (i, c) in model.cons.iter().enumerate() {
+        for &(v, coef) in &c.terms {
+            cols[v.0].push((i, coef));
+        }
+        cols[n + i].push((i, 1.0));
+    }
+    let mut vlb = vec![0.0; ntot_base];
+    let mut vub = vec![0.0; ntot_base];
+    let mut cost = vec![0.0; ntot_base];
+    for j in 0..n {
+        vlb[j] = lb[j];
+        vub[j] = ub[j];
+        cost[j] = model.vars[j].obj;
+    }
+    let mut b = vec![0.0; m];
+    for (i, c) in model.cons.iter().enumerate() {
+        b[i] = c.rhs;
+        let (slb, sub) = match c.cmp {
+            Cmp::Le => (0.0, INF),
+            Cmp::Ge => (-INF, 0.0),
+            Cmp::Eq => (0.0, 0.0),
+        };
+        vlb[n + i] = slb;
+        vub[n + i] = sub;
+    }
+
+    // Initial nonbasic point: structurals at the finite bound nearest zero.
+    let mut x = vec![0.0; ntot_base];
+    let mut state = vec![VarState::AtLower; ntot_base];
+    for j in 0..ntot_base {
+        let (l, u) = (vlb[j], vub[j]);
+        let (val, st) = if l <= -INF && u >= INF {
+            (0.0, VarState::AtLower) // free var pinned at 0 initially
+        } else if l <= -INF {
+            (u, VarState::AtUpper)
+        } else if u >= INF {
+            (l, VarState::AtLower)
+        } else if l.abs() <= u.abs() {
+            (l, VarState::AtLower)
+        } else {
+            (u, VarState::AtUpper)
+        };
+        x[j] = val;
+        state[j] = st;
+    }
+
+    // Residual per row decides slack-vs-artificial basis membership.
+    let mut resid = b.clone();
+    for j in 0..ntot_base {
+        if x[j] != 0.0 {
+            for &(r, a) in &cols[j] {
+                resid[r] -= a * x[j];
+            }
+        }
+    }
+    // Note: the slack was included at its initial bound above; we want the
+    // residual *excluding* the basis candidate itself.
+    for i in 0..m {
+        resid[i] += x[n + i]; // remove slack's contribution
+    }
+
+    let mut basis = Vec::with_capacity(m);
+    let mut artificials: Vec<usize> = Vec::new();
+    for i in 0..m {
+        let s = n + i;
+        // Can the slack absorb the residual?
+        if resid[i] >= vlb[s] - EPS && resid[i] <= vub[s] + EPS {
+            x[s] = resid[i];
+            state[s] = VarState::Basic(i);
+            basis.push(s);
+        } else {
+            // Pin the slack at the bound nearest the residual and add an
+            // artificial to absorb the remainder.
+            let pinned = if resid[i] < vlb[s] { vlb[s] } else { vub[s] };
+            x[s] = pinned;
+            state[s] = if pinned == vlb[s] { VarState::AtLower } else { VarState::AtUpper };
+            let rem = resid[i] - pinned;
+            let a = cols.len();
+            cols.push(vec![(i, if rem >= 0.0 { 1.0 } else { -1.0 })]);
+            vlb.push(0.0);
+            vub.push(INF);
+            cost.push(0.0);
+            x.push(rem.abs());
+            state.push(VarState::Basic(i));
+            basis.push(a);
+            artificials.push(a);
+        }
+    }
+
+    let ntot = cols.len();
+    let mut binv = vec![0.0; m * m];
+    for i in 0..m {
+        // Initial basis columns are unit vectors (slack or artificial with
+        // coefficient ±1); invert the sign where the artificial is -1.
+        let j = basis[i];
+        let coef = cols[j][0].1;
+        binv[i * m + i] = 1.0 / coef;
+    }
+
+    let mut t = Tableau {
+        m,
+        ntot,
+        n_struct: n,
+        cols,
+        lb: vlb,
+        ub: vub,
+        cost: cost.clone(),
+        b,
+        binv,
+        basis,
+        state,
+        x,
+        iters: 0,
+    };
+
+    // Phase 1: minimize sum of artificials.
+    if !artificials.is_empty() {
+        let mut p1 = vec![0.0; t.ntot];
+        for &a in &artificials {
+            p1[a] = 1.0;
+        }
+        let st = t.run_phase(&p1, opts.max_iters, opts.deadline);
+        if st == LpStatus::IterLimit {
+            return LpResult { status: st, x: vec![], obj: 0.0, iters: t.iters };
+        }
+        let p1_obj: f64 = artificials.iter().map(|&a| t.x[a]).sum();
+        if p1_obj > 1e-6 {
+            let b_scale = t.b.iter().fold(1.0f64, |m, &v| m.max(v.abs()));
+            let status = if p1_obj > 1e-9 * b_scale * (1.0 + t.iters as f64).sqrt() {
+                LpStatus::Infeasible
+            } else {
+                LpStatus::IterLimit
+            };
+            return LpResult { status, x: vec![], obj: 0.0, iters: t.iters };
+        }
+        // Lock artificials at zero for phase 2.
+        for &a in &artificials {
+            t.lb[a] = 0.0;
+            t.ub[a] = 0.0;
+            if !matches!(t.state[a], VarState::Basic(_)) {
+                t.x[a] = 0.0;
+            }
+        }
+    }
+
+    // Phase 2.
+    let cost2 = t.cost.clone();
+    let st = t.run_phase(&cost2, opts.max_iters, opts.deadline);
+    if st != LpStatus::Optimal {
+        return LpResult { status: st, x: vec![], obj: 0.0, iters: t.iters };
+    }
+    t.recompute_basics();
+    let xs: Vec<f64> = t.x[..t.n_struct].to_vec();
+    let obj = model.objective_value(&xs);
+    LpResult { status: LpStatus::Optimal, x: xs, obj, iters: t.iters }
+}

@@ -1,12 +1,43 @@
-//! From-scratch MILP solver: the offline substitute for Gurobi (§5.1 of the
-//! paper). Bounded-variable two-phase primal simplex ([`simplex`]) under a
-//! branch-and-bound driver with anytime incumbents ([`bnb`]), plus a light
-//! presolve ([`presolve`]).
+//! From-scratch MILP solver engine: the offline substitute for Gurobi
+//! (§5.1 of the paper).
+//!
+//! Architecture, bottom up:
+//!
+//! * [`model`] — the MILP representation plus the sparse column-major
+//!   constraint matrix ([`model::CscMatrix`]) every layer above operates
+//!   on;
+//! * [`basis`] — sparse left-looking LU factorization of the simplex basis
+//!   with Forrest–Tomlin-style eta updates and periodic refactorization,
+//!   replacing the old dense product-form inverse (`O(nnz)` instead of
+//!   `O(m²)` per solve);
+//! * [`simplex`] — the bounded-variable simplex engine ([`simplex::LpEngine`]):
+//!   the standard form is built **once** per MILP from the root-presolved
+//!   model, cold solves run the two-phase primal, and child re-solves
+//!   warm-start from the parent basis ([`simplex::BasisSnapshot`]) through
+//!   a dual-simplex phase;
+//! * [`presolve`] — bound propagation and redundancy elimination at the
+//!   root;
+//! * [`bnb`] — parallel branch & bound over a shared work pool
+//!   (`std::thread`), with a shared incumbent, anytime incumbent logging,
+//!   and warm-start hit statistics surfaced in [`Solution`];
+//! * [`builder`] — [`builder::IlpBuilder`], the model-assembly API (named
+//!   variable groups, sum/indicator helpers, pair disjunctions) shared by
+//!   the eq. 9/14/15 formulations in [`crate::olla`].
+//!
+//! The pre-refactor dense simplex survives as a test-only reference
+//! (`ilp::dense`) so property tests can assert the sparse and dense paths
+//! agree.
 
+pub mod basis;
 pub mod bnb;
+pub mod builder;
+#[cfg(test)]
+pub mod dense;
 pub mod model;
 pub mod presolve;
 pub mod simplex;
 
 pub use bnb::{solve, SolveOptions};
-pub use model::{Cmp, Constraint, Model, Solution, SolveStatus, VarId, VarKind, Variable};
+pub use builder::{IlpBuilder, IlpMeta, PairVars, Pos};
+pub use model::{Cmp, Constraint, CscMatrix, Model, Solution, SolveStatus, VarId, VarKind, Variable};
+pub use simplex::{BasisSnapshot, LpEngine};

@@ -1,8 +1,13 @@
-//! MILP problem representation.
+//! MILP problem representation and the sparse column-major constraint
+//! matrix the solver engine operates on.
 //!
-//! This is the interface the OLLA formulations (eqs. 9/14/15) are built
-//! against. The paper uses Gurobi; the offline substitute solver lives in
-//! [`crate::ilp::simplex`] and [`crate::ilp::bnb`].
+//! [`Model`] is the interface the OLLA formulations (eqs. 9/14/15) are built
+//! against — most conveniently through [`crate::ilp::builder::IlpBuilder`].
+//! The paper uses Gurobi; the offline substitute engine lives in
+//! [`crate::ilp::simplex`] (sparse LP core) and [`crate::ilp::bnb`]
+//! (parallel branch & bound). [`CscMatrix`] is the compressed-sparse-column
+//! representation shared by the simplex engine and its LU-factorized basis
+//! ([`crate::ilp::basis`]).
 
 use std::fmt;
 
@@ -99,6 +104,11 @@ pub struct Solution {
     pub nodes: u64,
     /// Total simplex iterations.
     pub simplex_iters: u64,
+    /// Child LPs that attempted a warm start from their parent's basis.
+    pub warm_attempts: u64,
+    /// Warm-start attempts that were accepted (dual re-solve, no cold
+    /// two-phase restart).
+    pub warm_hits: u64,
 }
 
 impl Solution {
@@ -252,6 +262,84 @@ impl Model {
     }
 }
 
+/// A sparse matrix in compressed-sparse-column (CSC) layout.
+///
+/// This is the solver engine's native representation: the bounded-variable
+/// simplex prices and ftrans whole columns, and the LU factorization of the
+/// basis consumes basis columns directly, so column-major sparse storage is
+/// the layout every hot loop wants. Row indices within a column are stored
+/// in insertion order (the engine never requires them sorted).
+#[derive(Debug, Clone, Default)]
+pub struct CscMatrix {
+    nrows: usize,
+    col_ptr: Vec<usize>,
+    row_idx: Vec<u32>,
+    vals: Vec<f64>,
+}
+
+impl CscMatrix {
+    /// Build from per-column `(row, value)` lists. Zero values are dropped.
+    pub fn from_columns(nrows: usize, cols: &[Vec<(usize, f64)>]) -> CscMatrix {
+        let mut m = CscMatrix {
+            nrows,
+            col_ptr: Vec::with_capacity(cols.len() + 1),
+            row_idx: Vec::new(),
+            vals: Vec::new(),
+        };
+        m.col_ptr.push(0);
+        for col in cols {
+            for &(r, v) in col {
+                debug_assert!(r < nrows, "row {r} out of range ({nrows} rows)");
+                if v != 0.0 {
+                    m.row_idx.push(r as u32);
+                    m.vals.push(v);
+                }
+            }
+            m.col_ptr.push(m.row_idx.len());
+        }
+        m
+    }
+
+    /// Number of rows.
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    /// Number of columns.
+    pub fn ncols(&self) -> usize {
+        self.col_ptr.len() - 1
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Column `j` as parallel `(rows, values)` slices.
+    pub fn col(&self, j: usize) -> (&[u32], &[f64]) {
+        let (s, e) = (self.col_ptr[j], self.col_ptr[j + 1]);
+        (&self.row_idx[s..e], &self.vals[s..e])
+    }
+
+    /// Dot product of column `j` with a dense row-indexed vector.
+    pub fn col_dot(&self, j: usize, dense: &[f64]) -> f64 {
+        let (rows, vals) = self.col(j);
+        let mut acc = 0.0;
+        for (r, v) in rows.iter().zip(vals) {
+            acc += dense[*r as usize] * v;
+        }
+        acc
+    }
+
+    /// `out[row] += scale * col_j[row]` for every stored entry of column `j`.
+    pub fn col_axpy(&self, j: usize, scale: f64, out: &mut [f64]) {
+        let (rows, vals) = self.col(j);
+        for (r, v) in rows.iter().zip(vals) {
+            out[*r as usize] += scale * v;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -287,5 +375,21 @@ mod tests {
         m.fix(a, 1.0);
         assert!(m.check_feasible(&[0.0], 1e-9).is_err());
         assert!(m.check_feasible(&[1.0], 1e-9).is_ok());
+    }
+
+    #[test]
+    fn csc_matrix_roundtrip() {
+        // 3 rows, 3 columns; column 1 empty, zero entries dropped.
+        let cols = vec![vec![(0, 1.0), (2, -2.0)], vec![], vec![(1, 3.0), (0, 0.0)]];
+        let m = CscMatrix::from_columns(3, &cols);
+        assert_eq!((m.nrows(), m.ncols(), m.nnz()), (3, 3, 3));
+        assert_eq!(m.col(0), (&[0u32, 2][..], &[1.0, -2.0][..]));
+        assert_eq!(m.col(1), (&[][..], &[][..]));
+        assert_eq!(m.col(2), (&[1u32][..], &[3.0][..]));
+        let dense = [10.0, 100.0, 1000.0];
+        assert_eq!(m.col_dot(0, &dense), 10.0 - 2000.0);
+        let mut out = [0.0; 3];
+        m.col_axpy(0, 2.0, &mut out);
+        assert_eq!(out, [2.0, 0.0, -4.0]);
     }
 }

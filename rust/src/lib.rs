@@ -8,8 +8,10 @@
 //!
 //! * [`graph`] — the dataflow-graph substrate (operators, tensors, ASAP/ALAP
 //!   analysis, precedence) on which everything operates;
-//! * [`ilp`] — a from-scratch MILP solver (bounded-variable simplex +
-//!   branch & bound) standing in for Gurobi;
+//! * [`ilp`] — a from-scratch MILP solver engine standing in for Gurobi:
+//!   sparse column-major matrices, an LU-factorized basis with eta
+//!   updates, warm-started dual-simplex re-solves under a parallel
+//!   branch & bound, and the `IlpBuilder` model-assembly API;
 //! * [`olla`] — the paper's contribution: the joint/scheduling/placement ILP
 //!   formulations, the §4 scaling techniques, and the end-to-end planner;
 //! * [`sched`] — baseline schedulers (PyTorch definition order, TensorFlow

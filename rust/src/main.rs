@@ -10,11 +10,12 @@
 //!
 //! (clap is not vendored in this offline image; flags are parsed by hand.)
 
-use olla::coordinator::{reorder_experiment, zoo_cases, Table};
+use olla::coordinator::{reorder_sweep, zoo_cases, Table};
 use olla::graph::dot::to_dot;
 use olla::models::{build_graph, ModelScale, ZOO};
 use olla::olla::{PlacementOptions, PlannerOptions, ScheduleOptions};
 use olla::runtime::{Engine, Manifest, Trainer};
+use olla::util::anyhow;
 use olla::util::{human_bytes, human_duration};
 use std::path::PathBuf;
 use std::time::Duration;
@@ -167,8 +168,8 @@ fn cmd_sweep(rest: &[String]) -> anyhow::Result<()> {
         "model", "batch", "|V|", "pytorch", "olla", "reduction", "status", "time",
     ]);
     let mut reductions = Vec::new();
-    for case in zoo_cases(&batches, scale) {
-        let row = reorder_experiment(&case, &opts);
+    let cases = zoo_cases(&batches, scale);
+    for row in reorder_sweep(&cases, &opts, 0) {
         reductions.push(row.reduction_pct);
         t.row(vec![
             row.model,

@@ -9,7 +9,7 @@
 use super::scheduling::{build_scheduling_model, decode_order, warm_start_assignment};
 use crate::graph::analysis::{never_coresident, ReachMatrix};
 use crate::graph::{Graph, NodeId};
-use crate::ilp::{self, Cmp, SolveOptions, SolveStatus, VarId};
+use crate::ilp::{self, IlpBuilder, Pos, SolveOptions, SolveStatus, VarId};
 use crate::sched::greedy_order;
 use crate::sched::sim::simulate;
 use crate::util::Stopwatch;
@@ -42,66 +42,67 @@ pub fn optimize_joint(g: &Graph, time_limit: Duration) -> JointResult {
     let spans = sm.spans.clone();
     let reach = ReachMatrix::build(g);
 
+    // Grow the scheduling model with placement variables through the
+    // shared builder (groups `A`, `obj`; pair registry for warm starts).
+    let mut b = IlpBuilder::from_model(std::mem::take(&mut sm.model));
+
     // Address variables for real tensors.
     let sized: Vec<crate::graph::EdgeId> =
         g.edge_ids().filter(|&e| g.edge(e).size > 0).collect();
     let mut a_var: HashMap<crate::graph::EdgeId, VarId> = HashMap::new();
     for &e in &sized {
         let ub = total - g.edge(e).size as f64;
-        a_var.insert(e, sm.model.continuous(format!("A[{e}]"), 0.0, ub.max(0.0), 0.0));
+        a_var.insert(e, b.continuous("A", format!("A[{e}]"), 0.0, ub.max(0.0), 0.0));
     }
-    let peak_mem = sm.model.continuous("peak_mem", 0.0, total, 1.0);
+    let peak_mem = b.continuous("obj", "peak_mem", 0.0, total, 1.0);
 
     // Eq. 8.
     for &e in &sized {
-        sm.model.constraint(
-            vec![(a_var[&e], 1.0), (peak_mem, -1.0)],
-            Cmp::Le,
-            -(g.edge(e).size as f64),
-        );
+        b.le(vec![(a_var[&e], 1.0), (peak_mem, -1.0)], -(g.edge(e).size as f64));
     }
 
-    // Eqs. 6 + 7a/7b over pairs not excluded by §4.2.
+    // Eqs. 6 + 7a/7b over pairs not excluded by §4.2. Unlike the split
+    // placement ILP, lifetimes are decision variables here, so the pair
+    // gadget uses `must_order = false` and the per-timestep liveness rows
+    // force `below + above = 1` only when the tensors are co-resident.
     let t_max = spans.num_timesteps;
     for (ii, &i) in sized.iter().enumerate() {
         for &j in sized.iter().skip(ii + 1) {
             if never_coresident(g, &spans, &reach, i, j) {
                 continue;
             }
-            let a = sm.model.binary(format!("a[{i},{j}]"), 0.0);
-            let b = sm.model.binary(format!("b[{i},{j}]"), 0.0);
-            sm.model.constraint(vec![(a, 1.0), (b, 1.0)], Cmp::Le, 1.0);
-            // a + b >= live_i,t + live_j,t - 1 for every timestep.
+            let (si, sj) = (g.edge(i).size as f64, g.edge(j).size as f64);
+            let pv = b.pair_no_overlap(
+                (i.idx(), j.idx()),
+                Pos::Var(a_var[&i]),
+                si,
+                Pos::Var(a_var[&j]),
+                sj,
+                total,
+                false,
+            );
+            // below + above >= live_i,t + live_j,t - 1 for every timestep.
             for t in 0..t_max {
-                let mut terms: Vec<(VarId, f64)> = vec![(a, 1.0), (b, 1.0)];
+                let mut terms: Vec<(VarId, f64)> = vec![(pv.below, 1.0), (pv.above, 1.0)];
                 let mut any = false;
                 for (e, sign) in [(i, -1.0), (j, -1.0)] {
                     if let Some(&cv) = sm.c.get(&(g.edge(e).src, t)) {
                         terms.push((cv, sign));
                         any = true;
                     }
-                    if let Some(&pv) = sm.p.get(&(e, t)) {
-                        terms.push((pv, sign));
+                    if let Some(&pvar) = sm.p.get(&(e, t)) {
+                        terms.push((pvar, sign));
                         any = true;
                     }
                 }
                 if any {
-                    sm.model.constraint(terms, Cmp::Ge, -1.0);
+                    b.ge(terms, -1.0);
                 }
             }
-            let (si, sj) = (g.edge(i).size as f64, g.edge(j).size as f64);
-            sm.model.constraint(
-                vec![(a_var[&i], 1.0), (a_var[&j], -1.0), (a, total)],
-                Cmp::Le,
-                total - si,
-            );
-            sm.model.constraint(
-                vec![(a_var[&i], 1.0), (a_var[&j], -1.0), (b, -total)],
-                Cmp::Ge,
-                sj - total,
-            );
         }
     }
+    let (model, meta) = b.into_parts();
+    sm.model = model;
 
     // Warm start: greedy order + best-fit placement of its lifetimes.
     let order0 = greedy_order(g);
@@ -117,37 +118,29 @@ pub fn optimize_joint(g: &Graph, time_limit: Duration) -> JointResult {
             warm[a_var[&it.edge].0] = offs[k] as f64;
         }
         warm[peak_mem.0] = arena as f64;
-        // Pair binaries consistent with the placement.
-        for (ii, &i) in sized.iter().enumerate() {
-            for &j in sized.iter().skip(ii + 1) {
-                let (Some(&ai), Some(&bj)) = (pos_of_edge.get(&i), pos_of_edge.get(&j)) else {
-                    continue;
-                };
-                // Find this pair's binaries by name lookup (small graphs only).
-                let an = format!("a[{i},{j}]");
-                let bn = format!("b[{i},{j}]");
-                let Some(av) = sm.model.vars.iter().position(|v| v.name == an) else {
-                    continue;
-                };
-                let Some(bv) = sm.model.vars.iter().position(|v| v.name == bn) else {
-                    continue;
-                };
-                let disjoint_time = !items[ai].overlaps(&items[bj]);
-                let i_below = offs[ai] + items[ai].size <= offs[bj];
-                let j_below = offs[bj] + items[bj].size <= offs[ai];
-                if disjoint_time && !i_below && !j_below {
-                    // Neither ordering holds in space; rely on a=b=0 (allowed
-                    // only when the tensors are never co-resident in time —
-                    // guaranteed by disjoint_time).
-                    warm[av] = 0.0;
-                    warm[bv] = 0.0;
-                } else if i_below {
-                    warm[av] = 1.0;
-                    warm[bv] = 0.0;
-                } else {
-                    warm[av] = 0.0;
-                    warm[bv] = 1.0;
-                }
+        // Pair binaries consistent with the placement, straight from the
+        // builder's registry.
+        for (&(ei, ej), pv) in &meta.pairs {
+            let i = crate::graph::EdgeId(ei as u32);
+            let j = crate::graph::EdgeId(ej as u32);
+            let (Some(&ai), Some(&bj)) = (pos_of_edge.get(&i), pos_of_edge.get(&j)) else {
+                continue;
+            };
+            let disjoint_time = !items[ai].overlaps(&items[bj]);
+            let i_below = offs[ai] + items[ai].size <= offs[bj];
+            let j_below = offs[bj] + items[bj].size <= offs[ai];
+            if disjoint_time && !i_below && !j_below {
+                // Neither ordering holds in space; rely on below=above=0
+                // (allowed only when the tensors are never co-resident in
+                // time — guaranteed by disjoint_time).
+                warm[pv.below.0] = 0.0;
+                warm[pv.above.0] = 0.0;
+            } else if i_below {
+                warm[pv.below.0] = 1.0;
+                warm[pv.above.0] = 0.0;
+            } else {
+                warm[pv.below.0] = 0.0;
+                warm[pv.above.0] = 1.0;
             }
         }
     }

@@ -20,7 +20,7 @@
 
 use crate::alloc::bestfit::{arena_size, best_fit_multi, best_fit_offsets, FitOrder};
 use crate::alloc::{check_placement, resident_lower_bound, PlacementItem};
-use crate::ilp::{self, Cmp, Model, SolveOptions, SolveStatus, VarId};
+use crate::ilp::{self, IlpBuilder, IlpMeta, Pos, SolveOptions, SolveStatus, VarId};
 use crate::util::Stopwatch;
 use std::time::Duration;
 
@@ -38,6 +38,9 @@ pub struct PlacementOptions {
     /// Fall back to the heuristic when more than this many tensors would
     /// need pairwise variables (quadratic blowup guard).
     pub max_ilp_items: usize,
+    /// Worker threads for the branch-and-bound node pool (0 = auto).
+    /// Sweeps that already parallelize over model-zoo cases set this to 1.
+    pub solver_threads: usize,
 }
 
 impl Default for PlacementOptions {
@@ -48,6 +51,7 @@ impl Default for PlacementOptions {
             use_prealloc: true,
             skip_ilp_if_tight: true,
             max_ilp_items: 160,
+            solver_threads: 0,
         }
     }
 }
@@ -84,6 +88,14 @@ pub struct PlacementResult {
     pub incumbents: Vec<(f64, f64)>,
     /// (vars, constraints) of the ILP when one was built.
     pub model_size: (usize, usize),
+    /// Branch-and-bound nodes explored (0 when the ILP was skipped).
+    pub nodes: u64,
+    /// Total simplex iterations (0 when the ILP was skipped).
+    pub simplex_iters: u64,
+    /// Child LPs that attempted a warm start from their parent's basis.
+    pub warm_attempts: u64,
+    /// Warm-start attempts accepted by the dual re-solve path.
+    pub warm_hits: u64,
 }
 
 /// Run the eq.-15 optimization.
@@ -121,6 +133,10 @@ fn optimize_placement_once(
             solve_secs: watch.secs(),
             incumbents: Vec::new(),
             model_size: (0, 0),
+            nodes: 0,
+            simplex_iters: 0,
+            warm_attempts: 0,
+            warm_hits: 0,
         };
     }
 
@@ -158,6 +174,10 @@ fn optimize_placement_once(
             solve_secs: watch.secs(),
             incumbents,
             model_size: (0, 0),
+            nodes: 0,
+            simplex_iters: 0,
+            warm_attempts: 0,
+            warm_hits: 0,
         };
     }
 
@@ -171,13 +191,14 @@ fn optimize_placement_once(
         f
     };
     let big_m = heur_size as f64; // valid: we only seek placements <= incumbent
-    let mut m = Model::new();
+    let mut b = IlpBuilder::new();
     let a_vars: Vec<Option<VarId>> = (0..n)
         .map(|i| {
             if fixed[i].is_some() {
                 None
             } else {
-                Some(m.continuous(
+                Some(b.continuous(
+                    "A",
                     format!("A[{}]", items[i].edge),
                     0.0,
                     (heur_size - items[i].size) as f64,
@@ -188,20 +209,18 @@ fn optimize_placement_once(
         .collect();
     let max_fixed_end =
         (0..n).filter_map(|i| fixed[i].map(|o| o + items[i].size)).max().unwrap_or(0);
-    let peak = m.continuous("peak_mem", lb.max(max_fixed_end) as f64, heur_size as f64, 1.0);
+    let peak =
+        b.continuous("obj", "peak_mem", lb.max(max_fixed_end) as f64, heur_size as f64, 1.0);
 
-    // Eq. 8 for free items.
+    // Eq. 8 for free items: A_i + S_i <= peak.
     for i in 0..n {
         if let Some(av) = a_vars[i] {
-            m.constraint(
-                vec![(av, 1.0), (peak, -1.0)],
-                Cmp::Le,
-                -(items[i].size as f64),
-            );
+            b.le(vec![(av, 1.0), (peak, -1.0)], -(items[i].size as f64));
         }
     }
 
-    // Pairwise non-overlap for time-overlapping pairs.
+    // Eqs. 6/7a/7b for time-overlapping pairs; lifetimes are fixed here, so
+    // co-resident pairs must commit to exactly one ordering (`must_order`).
     for i in 0..n {
         for j in (i + 1)..n {
             if !items[i].overlaps(&items[j]) {
@@ -209,59 +228,26 @@ fn optimize_placement_once(
             }
             let si = items[i].size as f64;
             let sj = items[j].size as f64;
-            match (a_vars[i], a_vars[j]) {
-                (Some(ai), Some(aj)) => {
-                    let a = m.binary(format!("a[{i},{j}]"), 0.0);
-                    let b = m.binary(format!("b[{i},{j}]"), 0.0);
-                    // live at the same time => exactly one ordering holds
-                    m.constraint(vec![(a, 1.0), (b, 1.0)], Cmp::Eq, 1.0);
-                    // 7a: A_i + S_i - A_j <= (1 - a) * M
-                    m.constraint(
-                        vec![(ai, 1.0), (aj, -1.0), (a, big_m)],
-                        Cmp::Le,
-                        big_m - si,
-                    );
-                    // 7b: A_i - A_j - S_j >= (b - 1) * M
-                    m.constraint(
-                        vec![(ai, 1.0), (aj, -1.0), (b, -big_m)],
-                        Cmp::Ge,
-                        sj - big_m,
-                    );
-                }
-                (Some(ai), None) => {
-                    let oj = fixed[j].unwrap() as f64;
-                    let a = m.binary(format!("a[{i},{j}]"), 0.0);
-                    let b = m.binary(format!("b[{i},{j}]"), 0.0);
-                    m.constraint(vec![(a, 1.0), (b, 1.0)], Cmp::Eq, 1.0);
-                    // below: A_i + S_i <= o_j  when a=1
-                    m.constraint(vec![(ai, 1.0), (a, big_m)], Cmp::Le, big_m + oj - si);
-                    // above: A_i >= o_j + S_j  when b=1
-                    m.constraint(vec![(ai, 1.0), (b, -big_m)], Cmp::Ge, oj + sj - big_m);
-                }
-                (None, Some(aj)) => {
-                    let oi = fixed[i].unwrap() as f64;
-                    let a = m.binary(format!("a[{i},{j}]"), 0.0);
-                    let b = m.binary(format!("b[{i},{j}]"), 0.0);
-                    m.constraint(vec![(a, 1.0), (b, 1.0)], Cmp::Eq, 1.0);
-                    // a=1: item i below j: o_i + s_i <= A_j
-                    m.constraint(vec![(aj, -1.0), (a, big_m)], Cmp::Le, big_m - oi - si);
-                    // b=1: item i above j: o_i >= A_j + s_j
-                    m.constraint(vec![(aj, 1.0), (b, big_m)], Cmp::Le, big_m + oi - sj);
-                }
-                (None, None) => {
-                    debug_assert!(
-                        fixed[i].unwrap() + items[i].size <= fixed[j].unwrap()
-                            || fixed[j].unwrap() + items[j].size <= fixed[i].unwrap(),
-                        "preplaced items overlap"
-                    );
-                }
+            let pos = |k: usize| match a_vars[k] {
+                Some(av) => Pos::Var(av),
+                None => Pos::Fixed(fixed[k].unwrap() as f64),
+            };
+            if a_vars[i].is_none() && a_vars[j].is_none() {
+                debug_assert!(
+                    fixed[i].unwrap() + items[i].size <= fixed[j].unwrap()
+                        || fixed[j].unwrap() + items[j].size <= fixed[i].unwrap(),
+                    "preplaced items overlap"
+                );
+                continue;
             }
+            b.pair_no_overlap((i, j), pos(i), si, pos(j), sj, big_m, true);
         }
     }
-    let model_size = (m.num_vars(), m.num_cons());
+    let model_size = (b.num_vars(), b.num_cons());
+    let (m, meta) = b.into_parts();
 
     // Warm start from the heuristic placement.
-    let warm = warm_start(&m, items, &heur_offsets, &a_vars, peak, heur_size);
+    let warm = warm_start(&m, &meta, items, &heur_offsets, &a_vars, peak, heur_size);
 
     let sol = ilp::solve(
         &m,
@@ -269,6 +255,7 @@ fn optimize_placement_once(
             time_limit: opts.time_limit.saturating_sub(watch.elapsed()),
             initial: Some(warm),
             integral_objective: true,
+            threads: opts.solver_threads,
             ..Default::default()
         },
     );
@@ -306,6 +293,10 @@ fn optimize_placement_once(
         solve_secs: watch.secs(),
         incumbents,
         model_size,
+        nodes: sol.nodes,
+        simplex_iters: sol.simplex_iters,
+        warm_attempts: sol.warm_attempts,
+        warm_hits: sol.warm_hits,
     }
 }
 
@@ -317,8 +308,10 @@ fn frag(arena: u64, lb: u64) -> f64 {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn warm_start(
-    m: &Model,
+    m: &crate::ilp::Model,
+    meta: &IlpMeta,
     items: &[PlacementItem],
     offsets: &[u64],
     a_vars: &[Option<VarId>],
@@ -332,28 +325,12 @@ fn warm_start(
         }
     }
     x[peak.0] = arena as f64;
-    // Pair binaries: recover from variable names is fragile; instead set by
-    // scanning the model's binary vars named a[i,j]/b[i,j].
-    for (vi, var) in m.vars.iter().enumerate() {
-        let name = &var.name;
-        let (is_a, rest) = if let Some(r) = name.strip_prefix("a[") {
-            (true, r)
-        } else if let Some(r) = name.strip_prefix("b[") {
-            (false, r)
-        } else {
-            continue;
-        };
-        let body = rest.trim_end_matches(']');
-        let mut parts = body.split(',');
-        let (Some(i), Some(j)) = (parts.next(), parts.next()) else { continue };
-        let (Ok(i), Ok(j)) = (i.parse::<usize>(), j.parse::<usize>()) else { continue };
+    // Pair binaries straight from the builder's registry (the old code
+    // recovered them by parsing variable names).
+    for (&(i, j), pv) in &meta.pairs {
         let i_below = offsets[i] + items[i].size <= offsets[j];
-        x[vi] = match (is_a, i_below) {
-            (true, true) => 1.0,
-            (true, false) => 0.0,
-            (false, true) => 0.0,
-            (false, false) => 1.0,
-        };
+        x[pv.below.0] = if i_below { 1.0 } else { 0.0 };
+        x[pv.above.0] = if i_below { 0.0 } else { 1.0 };
     }
     x
 }

@@ -151,12 +151,12 @@ pub fn validate_plan(g: &Graph, plan: &MemoryPlan) -> Result<(), String> {
     check_order(g, &plan.order)?;
     let trace = simulate(g, &plan.order);
     let items = items_from_trace(g, &trace);
-    let offs: Vec<u64> = items
-        .iter()
-        .map(|it| *plan.offsets.get(&it.edge).ok_or(0).unwrap_or(&u64::MAX))
-        .collect();
-    if offs.iter().any(|&o| o == u64::MAX) {
-        return Err("plan is missing offsets for live tensors".into());
+    let mut offs: Vec<u64> = Vec::with_capacity(items.len());
+    for it in &items {
+        match plan.offsets.get(&it.edge).copied() {
+            Some(o) => offs.push(o),
+            None => return Err(format!("plan is missing an offset for live tensor {}", it.edge)),
+        }
     }
     check_placement(&items, &offs, plan.arena_size)
 }
@@ -209,6 +209,19 @@ mod tests {
                 format!("frag={}", plan.placement.fragmentation)
             })
         });
+    }
+
+    #[test]
+    fn validate_plan_reports_missing_offsets() {
+        let g = diamond();
+        let mut plan = optimize(&g, &PlannerOptions::fast_test());
+        validate_plan(&g, &plan).unwrap();
+        // Drop the offset of a live tensor: validation must name the hole
+        // instead of fabricating a u64::MAX placement.
+        let victim = *plan.offsets.keys().next().unwrap();
+        plan.offsets.remove(&victim);
+        let err = validate_plan(&g, &plan).unwrap_err();
+        assert!(err.contains("missing an offset"), "unexpected error: {err}");
     }
 
     #[test]

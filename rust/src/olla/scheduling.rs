@@ -10,7 +10,7 @@
 
 use crate::graph::analysis::Spans;
 use crate::graph::{EdgeId, Graph, NodeId};
-use crate::ilp::{self, Cmp, Model, SolveOptions, SolveStatus, VarId};
+use crate::ilp::{self, IlpBuilder, Model, SolveOptions, SolveStatus, VarId};
 use crate::sched::sim::{check_order, simulate};
 use crate::sched::greedy_order;
 use crate::util::Stopwatch;
@@ -36,11 +36,14 @@ pub struct ScheduleOptions {
     /// Branch-and-bound node cap (safety valve for tests).
     pub max_nodes: u64,
     /// Skip the ILP (keep the greedy incumbent) when the built model has
-    /// more constraint rows than this. The embedded simplex keeps a dense
-    /// basis inverse, so row count bounds both memory and per-pivot cost;
-    /// Gurobi has no such limit — this is our documented capacity envelope
-    /// (DESIGN.md §2, EXPERIMENTS.md §Scale).
+    /// more constraint rows than this. Row count bounds factorization and
+    /// pricing cost even with the sparse LU basis; Gurobi has no such
+    /// limit — this is our documented capacity envelope (DESIGN.md §2,
+    /// EXPERIMENTS.md §Scale).
     pub max_ilp_rows: usize,
+    /// Worker threads for the branch-and-bound node pool (0 = auto).
+    /// Sweeps that already parallelize over model-zoo cases set this to 1.
+    pub solver_threads: usize,
 }
 
 impl Default for ScheduleOptions {
@@ -52,6 +55,7 @@ impl Default for ScheduleOptions {
             warm_start: true,
             max_nodes: u64::MAX,
             max_ilp_rows: 3500,
+            solver_threads: 0,
         }
     }
 }
@@ -91,16 +95,23 @@ pub struct ScheduleResult {
     pub model_size: (usize, usize),
     /// Branch-and-bound nodes explored.
     pub nodes: u64,
+    /// Total simplex iterations across all node LPs.
+    pub simplex_iters: u64,
+    /// Child LPs that attempted a warm start from their parent's basis.
+    pub warm_attempts: u64,
+    /// Warm-start attempts accepted by the dual re-solve path.
+    pub warm_hits: u64,
 }
 
-/// Build the eq.-14 scheduling model for `g`.
+/// Build the eq.-14 scheduling model for `g` on the shared
+/// [`IlpBuilder`] API (variable groups `C`, `P`, `obj`).
 pub fn build_scheduling_model(g: &Graph, timesteps: Option<usize>) -> SchedulingModel {
     let spans = match timesteps {
         Some(t) => Spans::compute_with_timesteps(g, t),
         None => Spans::compute(g),
     };
     let t_max = spans.num_timesteps;
-    let mut m = Model::new();
+    let mut b = IlpBuilder::new();
     let mut c: HashMap<(NodeId, usize), VarId> = HashMap::new();
     let mut p: HashMap<(EdgeId, usize), VarId> = HashMap::new();
 
@@ -108,16 +119,15 @@ pub fn build_scheduling_model(g: &Graph, timesteps: Option<usize>) -> Scheduling
     for v in g.node_ids() {
         let (lo, hi) = spans.node_span(v);
         for t in lo..=hi {
-            let var = m.binary(format!("C[{v},{t}]"), 0.0);
+            let var = b.binary("C", format!("C[{v},{t}]"), 0.0);
             if lo == hi {
-                m.fix(var, 1.0);
+                b.fix(var, 1.0);
             }
             c.insert((v, t), var);
         }
         // Eq. 3: every node runs exactly once (creating all its outputs).
         if lo != hi {
-            let terms = (lo..=hi).map(|t| (c[&(v, t)], 1.0)).collect();
-            m.constraint(terms, Cmp::Eq, 1.0);
+            b.exactly_one((lo..=hi).map(|t| c[&(v, t)]));
         }
     }
 
@@ -127,10 +137,10 @@ pub fn build_scheduling_model(g: &Graph, timesteps: Option<usize>) -> Scheduling
         let (mul_lo, mul_hi) = spans.mul(g, e);
         let pres = spans.pres(g, e);
         for t in (mul_lo + 1)..=mul_hi.min(t_max - 1) {
-            let var = m.binary(format!("P[{e},{t}]"), 0.0);
+            let var = b.binary("P", format!("P[{e},{t}]"), 0.0);
             if let Some((plo, phi)) = pres {
                 if t >= plo && t <= phi {
-                    m.fix(var, 1.0);
+                    b.fix(var, 1.0);
                 }
             }
             p.insert((e, t), var);
@@ -146,7 +156,7 @@ pub fn build_scheduling_model(g: &Graph, timesteps: Option<usize>) -> Scheduling
             let pv = p[&(e, t)];
             // Eq. 1: created or preserved, not both.
             if let Some(&cv) = c.get(&(v, t)) {
-                m.constraint(vec![(pv, 1.0), (cv, 1.0)], Cmp::Le, 1.0);
+                b.at_most_one([pv, cv]);
             }
             // Eq. 2: preserved only if created/preserved at t-1.
             let mut rhs_terms: Vec<(VarId, f64)> = vec![(pv, 1.0)];
@@ -158,9 +168,9 @@ pub fn build_scheduling_model(g: &Graph, timesteps: Option<usize>) -> Scheduling
             }
             if terminal {
                 // Results may never be dropped: P[t] == P[t-1] + C[t-1].
-                m.constraint(rhs_terms, Cmp::Eq, 0.0);
+                b.eq(rhs_terms, 0.0);
             } else {
-                m.constraint(rhs_terms, Cmp::Le, 0.0);
+                b.le(rhs_terms, 0.0);
             }
         }
     }
@@ -174,14 +184,14 @@ pub fn build_scheduling_model(g: &Graph, timesteps: Option<usize>) -> Scheduling
                 let pf = *p
                     .get(&(f, t))
                     .unwrap_or_else(|| panic!("P[{f},{t}] missing for consumer {v}"));
-                m.constraint(vec![(cv, 1.0), (pf, -1.0)], Cmp::Le, 0.0);
+                b.implies(cv, pf);
             }
         }
     }
 
     // Eq. 13: per-timestep memory accounting against the peak variable.
     let total = g.total_bytes() as f64;
-    let peak = m.continuous("peak_mem_no_frag", 0.0, total, 1.0);
+    let peak = b.continuous("obj", "peak_mem_no_frag", 0.0, total, 1.0);
     for t in 0..t_max {
         let mut terms: Vec<(VarId, f64)> = Vec::new();
         for e in g.edge_ids() {
@@ -197,12 +207,12 @@ pub fn build_scheduling_model(g: &Graph, timesteps: Option<usize>) -> Scheduling
             }
         }
         if !terms.is_empty() {
-            terms.push((peak, -1.0));
-            m.constraint(terms, Cmp::Le, 0.0);
+            b.sum_le_var(terms, peak);
         }
     }
 
-    SchedulingModel { model: m, spans, c, p, peak }
+    let (model, _meta) = b.into_parts();
+    SchedulingModel { model, spans, c, p, peak }
 }
 
 /// Build a feasible assignment from per-node creation timesteps. Times must
@@ -317,6 +327,9 @@ pub fn optimize_schedule(g: &Graph, opts: &ScheduleOptions) -> ScheduleResult {
             incumbents: vec![(watch.secs(), ilp_peak as f64)],
             model_size,
             nodes: 0,
+            simplex_iters: 0,
+            warm_attempts: 0,
+            warm_hits: 0,
         };
     }
 
@@ -330,6 +343,7 @@ pub fn optimize_schedule(g: &Graph, opts: &ScheduleOptions) -> ScheduleResult {
         initial,
         integral_objective: true,
         max_nodes: opts.max_nodes,
+        threads: opts.solver_threads,
         ..Default::default()
     };
     let sol = ilp::solve(&sm.model, &solve_opts);
@@ -369,6 +383,9 @@ pub fn optimize_schedule(g: &Graph, opts: &ScheduleOptions) -> ScheduleResult {
         incumbents: sol.incumbents,
         model_size,
         nodes: sol.nodes,
+        simplex_iters: sol.simplex_iters,
+        warm_attempts: sol.warm_attempts,
+        warm_hits: sol.warm_hits,
     }
 }
 

@@ -2,6 +2,7 @@
 //! the Rust runtime. Parses `manifest.json` and locates the HLO-text
 //! artifacts and the exported dataflow graph.
 
+use crate::util::anyhow;
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
 

@@ -6,6 +6,7 @@
 //! Pattern follows /opt/xla-example/load_hlo (text interchange; see the
 //! gotchas in that README).
 
+use crate::util::anyhow;
 use std::path::Path;
 use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
 

@@ -1,0 +1,89 @@
+//! Inert stand-in for [`crate::runtime::pjrt`] used when the crate is built
+//! without the `pjrt` feature (the default in the offline image, where the
+//! vendored `xla` crate may be absent).
+//!
+//! The stub mirrors the real module's public surface exactly so that
+//! [`crate::runtime::trainer`], the CLI, and the integration tests compile
+//! unchanged; every entry point fails at run time with a clear message.
+//! Planning (`Trainer::plan_memory` equivalents) never touches PJRT, so the
+//! whole OLLA pipeline remains usable in this configuration.
+
+use crate::util::anyhow;
+use std::path::Path;
+
+const DISABLED: &str = "built without the `pjrt` feature: the XLA/PJRT runtime is stubbed \
+     out. Rebuild with `--features pjrt` and the vendored `xla` crate to execute artifacts.";
+
+fn disabled<T>() -> anyhow::Result<T> {
+    Err(anyhow::Error::msg(DISABLED))
+}
+
+/// Stub PJRT client.
+pub struct Engine {
+    _private: (),
+}
+
+/// Stub compiled executable.
+pub struct Executable {
+    /// Artifact path, for diagnostics.
+    pub path: String,
+}
+
+/// Stub host literal.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Engine {
+    /// Always fails: PJRT is unavailable in this build.
+    pub fn cpu() -> anyhow::Result<Engine> {
+        disabled()
+    }
+
+    /// Platform string.
+    pub fn platform(&self) -> String {
+        "pjrt-stub".to_string()
+    }
+
+    /// Always fails: PJRT is unavailable in this build.
+    pub fn load_hlo_text(&self, _path: &Path) -> anyhow::Result<Executable> {
+        disabled()
+    }
+}
+
+impl Executable {
+    /// Always fails: PJRT is unavailable in this build.
+    pub fn run(&self, _args: &[Literal]) -> anyhow::Result<Vec<Literal>> {
+        disabled()
+    }
+}
+
+impl Literal {
+    /// Always fails: PJRT is unavailable in this build.
+    pub fn to_vec<T>(&self) -> anyhow::Result<Vec<T>> {
+        disabled()
+    }
+}
+
+/// Always fails: PJRT is unavailable in this build.
+pub fn literal_f32(_data: &[f32], _dims: &[usize]) -> anyhow::Result<Literal> {
+    disabled()
+}
+
+/// Always fails: PJRT is unavailable in this build.
+pub fn literal_i32(_data: &[i32], _dims: &[usize]) -> anyhow::Result<Literal> {
+    disabled()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_disabled() {
+        let e = Engine::cpu().unwrap_err();
+        assert!(e.to_string().contains("pjrt"));
+        assert!(literal_f32(&[1.0], &[1]).is_err());
+    }
+}

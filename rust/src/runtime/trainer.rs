@@ -14,6 +14,7 @@ use super::data::{Corpus, TINY_CORPUS};
 use super::pjrt::{literal_f32, literal_i32, Engine, Executable};
 use crate::graph::json_io;
 use crate::olla::{self, PlannerOptions};
+use crate::util::anyhow;
 use crate::sched::orders::pytorch_order;
 use crate::sched::sim::peak_bytes;
 use crate::util::rng::Rng;

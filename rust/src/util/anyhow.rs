@@ -1,0 +1,101 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build image vendors no general-purpose crates, so the runtime and CLI
+//! error paths use this module instead: files write `use crate::util::anyhow;`
+//! (or `use olla::util::anyhow;` from the binary) and the familiar
+//! `anyhow::Result`, `anyhow::anyhow!` and `anyhow::ensure!` spellings keep
+//! working unchanged.
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! [`std::error::Error`]; that is what makes the blanket `From` conversion
+//! for `?` coherent.
+
+use std::fmt;
+
+/// A type-erased error: a rendered message.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+/// `Result` specialized to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from anything printable.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error(m.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error(e.to_string())
+    }
+}
+
+macro_rules! anyhow_impl {
+    ($fmt:literal $($arg:tt)*) => {
+        $crate::util::anyhow::Error::msg(format!($fmt $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::anyhow::Error::msg($err)
+    };
+}
+
+macro_rules! ensure_impl {
+    ($cond:expr, $($rest:tt)+) => {
+        if !($cond) {
+            return Err($crate::util::anyhow::anyhow!($($rest)+));
+        }
+    };
+}
+
+macro_rules! bail_impl {
+    ($($rest:tt)+) => {
+        return Err($crate::util::anyhow::anyhow!($($rest)+))
+    };
+}
+
+pub use anyhow_impl as anyhow;
+pub use bail_impl as bail;
+pub use ensure_impl as ensure;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        Ok(std::fs::read_to_string("/definitely/not/a/real/path/olla")?)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let x = 7;
+        let e = anyhow!("bad value {x} (limit {})", 10);
+        assert_eq!(e.to_string(), "bad value 7 (limit 10)");
+        let s: String = "owned".into();
+        assert_eq!(anyhow!(s).to_string(), "owned");
+
+        fn guarded(v: i32) -> Result<i32> {
+            ensure!(v > 0, "v must be positive, got {v}");
+            if v > 100 {
+                bail!("v too big: {v}");
+            }
+            Ok(v)
+        }
+        assert!(guarded(5).is_ok());
+        assert_eq!(guarded(-1).unwrap_err().to_string(), "v must be positive, got -1");
+        assert_eq!(guarded(101).unwrap_err().to_string(), "v too big: 101");
+    }
+}

@@ -1,7 +1,9 @@
-//! Shared utilities: JSON, PRNG, timing, human-readable formatting, and the
-//! mini property-testing harness. These exist because the offline build
-//! environment has no `serde`, `rand`, `criterion`, or `proptest`.
+//! Shared utilities: JSON, error handling, PRNG, timing, human-readable
+//! formatting, and the mini property-testing harness. These exist because the
+//! offline build environment has no `serde`, `anyhow`, `rand`, `criterion`,
+//! or `proptest`.
 
+pub mod anyhow;
 pub mod json;
 pub mod quickcheck;
 pub mod rng;
