@@ -1,41 +1,77 @@
 //! Figure 10: memory saved (%) as a function of solver time — the anytime
-//! behaviour of the scheduling ILP on its hardest instance (EfficientNet).
+//! behaviour of the planner on its hardest instance (EfficientNet), served
+//! through the interruptible `PlanHandle` API under a deadline.
 //!
 //! Paper reference: EfficientNet needs ~2 min (bs1) for optimal and ~5 min
 //! (bs32) for within-1%-of-optimal; the curve climbs quickly then plateaus.
+//! The report (`BENCH_fig10_anytime.json`) carries the full incumbent curve
+//! per case so regressions in anytime behaviour are machine-checkable.
 
-use olla::bench_support::section;
-use olla::coordinator::{reorder_experiment, ModelCase};
+use olla::bench_support::{anytime_curve_json, section, solver_stats_json, BenchReport};
+use olla::coordinator::{anytime_experiment, ModelCase};
 use olla::models::{build_graph, ModelScale};
-use olla::olla::ScheduleOptions;
+use olla::olla::PlannerOptions;
+use olla::util::json::{obj, s, Json};
 use std::time::Duration;
 
 fn main() {
-    section("Figure 10 — memory saved over solver time (EfficientNet)");
+    section("Figure 10 — memory saved over solver time (EfficientNet, served)");
     let cap = std::env::var("OLLA_BENCH_CAP_SECS")
         .ok()
-        .and_then(|s| s.parse().ok())
+        .and_then(|string| string.parse().ok())
         .unwrap_or(45.0);
+    let mut report = BenchReport::new("fig10_anytime");
     for batch in [1usize, 32] {
         let graph = build_graph("efficientnet", batch, ModelScale::Reduced).unwrap();
-        let case = ModelCase { name: "efficientnet".into(), batch, graph };
-        let opts = ScheduleOptions {
-            time_limit: Duration::from_secs_f64(cap),
-            ..Default::default()
-        };
-        let row = reorder_experiment(&case, &opts);
-        println!(
-            "\nefficientnet bs{batch}: pytorch={} final olla={} ({:.1}%), status={}",
-            row.pytorch_peak, row.olla_peak, row.reduction_pct, row.status
+        let pytorch_peak = olla::sched::sim::peak_bytes(
+            &graph,
+            &olla::sched::orders::pytorch_order(&graph),
         );
-        println!("  t(secs)   ilp objective(bytes)   saved vs pytorch");
-        for (t, obj) in &row.incumbents {
+        let case = ModelCase { name: "efficientnet".into(), batch, graph };
+        let row = anytime_experiment(
+            &case,
+            &PlannerOptions::default(),
+            Duration::from_secs_f64(cap),
+            Duration::from_millis(20),
+        );
+        println!(
+            "\nefficientnet bs{batch}: pytorch={} final arena={} first plan at {:.2}s, \
+             interrupted={}, gap={:.4}",
+            pytorch_peak, row.final_arena, row.first_plan_secs, row.interrupted, row.final_gap
+        );
+        println!("  t(secs)   arena(bytes)   saved vs pytorch");
+        for (t, bytes) in &row.curve {
             println!(
-                "  {:>7.2}   {:>20.0}   {:>6.1}%",
+                "  {:>7.2}   {:>12}   {:>6.1}%",
                 t,
-                obj,
-                100.0 * (1.0 - obj / row.pytorch_peak as f64)
+                bytes,
+                100.0 * (1.0 - *bytes as f64 / pytorch_peak as f64)
             );
         }
+        report.push(obj(vec![
+            ("model", s(&row.model)),
+            ("batch", Json::Num(row.batch as f64)),
+            ("deadline_secs", Json::Num(row.deadline_secs)),
+            ("pytorch_peak", Json::Num(pytorch_peak as f64)),
+            ("final_arena", Json::Num(row.final_arena as f64)),
+            ("first_plan_secs", Json::Num(row.first_plan_secs)),
+            ("total_secs", Json::Num(row.total_secs)),
+            ("interrupted", Json::Bool(row.interrupted)),
+            ("final_gap", Json::Num(row.final_gap.min(1e12))),
+            ("anytime_curve", anytime_curve_json(&row.curve)),
+            (
+                "solver",
+                solver_stats_json(
+                    row.simplex_iters,
+                    row.nodes,
+                    row.warm_attempts,
+                    row.warm_hits,
+                ),
+            ),
+        ]));
+    }
+    match report.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("failed to write report: {e}"),
     }
 }

@@ -1,0 +1,68 @@
+//! Anytime planning walkthrough: spawn a plan request, poll the best plan
+//! while the solver runs, then take whatever the deadline allows.
+//!
+//! Run with:
+//!
+//! ```text
+//! cargo run --release --example anytime_plan
+//! ```
+
+use olla::models::{build_graph, ModelScale};
+use olla::olla::{validate_plan, PlannerOptions};
+use olla::serve::{PlanHandle, PlanPhase};
+use olla::util::human_bytes;
+use std::time::Duration;
+
+fn main() {
+    let model = "efficientnet";
+    let graph = build_graph(model, 1, ModelScale::Reduced).expect("zoo model");
+    let baseline = olla::sched::sim::peak_bytes(
+        &graph,
+        &olla::sched::orders::pytorch_order(&graph),
+    );
+    println!(
+        "{model}: {} nodes, {} edges, pytorch-order peak {}",
+        graph.num_nodes(),
+        graph.num_edges(),
+        human_bytes(baseline)
+    );
+
+    // Ask for the best plan achievable in two seconds.
+    let handle = PlanHandle::spawn(
+        graph.clone(),
+        PlannerOptions::default(),
+        Some(Duration::from_secs(2)),
+        None,
+    );
+
+    // Poll while the branch & bound keeps improving the incumbent.
+    loop {
+        let snap = handle.poll();
+        match &snap.plan {
+            Some(plan) => println!(
+                "t={:.2}s best plan so far: arena {} (gap {})",
+                snap.elapsed_secs,
+                human_bytes(plan.arena_size),
+                if snap.gap.is_finite() {
+                    format!("{:.2}%", 100.0 * snap.gap)
+                } else {
+                    "unknown".into()
+                }
+            ),
+            None => println!("t={:.2}s no incumbent yet", snap.elapsed_secs),
+        }
+        if snap.phase == PlanPhase::Done {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(200));
+    }
+
+    let plan = handle.join();
+    validate_plan(&graph, &plan).expect("served plans always validate");
+    println!(
+        "deadline plan: arena {} ({:.1}% below pytorch), schedule status: {}",
+        human_bytes(plan.arena_size),
+        100.0 * (1.0 - plan.arena_size as f64 / baseline.max(1) as f64),
+        plan.schedule.status,
+    );
+}

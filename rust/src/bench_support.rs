@@ -62,6 +62,22 @@ pub fn phase_cap() -> Duration {
     Duration::from_secs_f64(secs)
 }
 
+/// An anytime incumbent curve as a JSON array of `{secs, arena_bytes}`
+/// points, for the Figure 10/12 reports (`BENCH_fig10_anytime.json`).
+pub fn anytime_curve_json(curve: &[(f64, u64)]) -> Json {
+    Json::Arr(
+        curve
+            .iter()
+            .map(|&(secs, bytes)| {
+                obj(vec![
+                    ("secs", Json::Num(secs)),
+                    ("arena_bytes", Json::Num(bytes as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
 /// Solver-efficiency statistics as a JSON object for bench reports.
 pub fn solver_stats_json(
     simplex_iters: u64,
@@ -154,6 +170,15 @@ mod tests {
     fn formatting() {
         assert_eq!(fmt_pct(12.34), "12.3%");
         assert!(fmt_secs(0.001).ends_with("ms"));
+    }
+
+    #[test]
+    fn anytime_curve_json_shape() {
+        let j = anytime_curve_json(&[(0.5, 1000), (1.5, 800)]);
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("secs").unwrap().as_f64(), Some(0.5));
+        assert_eq!(arr[1].get("arena_bytes").unwrap().as_u64(), Some(800));
     }
 
     #[test]

@@ -18,6 +18,7 @@ use crate::util::Stopwatch;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::Duration;
 
 /// Run `f` over `items` on a pool of `threads` workers (0 = one per
 /// available core, capped by the item count). Results keep input order.
@@ -282,7 +283,7 @@ pub fn total_experiment(
         &olla::PlannerOptions {
             schedule: sched.clone(),
             placement: place.clone(),
-            add_control_edges: true,
+            ..Default::default()
         },
     );
     TotalRow {
@@ -309,6 +310,94 @@ pub fn total_sweep(
         place.solver_threads = 1;
     }
     par_map(cases, threads, |case| total_experiment(case, &sched, &place))
+}
+
+/// Figure 10/12 row: the anytime behaviour of one plan request served
+/// through [`crate::serve::PlanHandle`] under a deadline.
+#[derive(Debug, Clone)]
+pub struct AnytimeRow {
+    /// Model name.
+    pub model: String,
+    /// Batch size.
+    pub batch: usize,
+    /// Deadline the request ran under (seconds).
+    pub deadline_secs: f64,
+    /// Anytime curve: `(seconds, arena bytes)` per improved plan.
+    pub curve: Vec<(f64, u64)>,
+    /// Arena bytes of the plan returned at the deadline.
+    pub final_arena: u64,
+    /// Seconds until the first valid plan was available.
+    pub first_plan_secs: f64,
+    /// Total seconds until the request finished.
+    pub total_secs: f64,
+    /// True when the solve was interrupted (deadline/gap) rather than
+    /// finishing with proven-optimal phases.
+    pub interrupted: bool,
+    /// Scheduling-phase relative gap proven at the end (`INFINITY` when
+    /// unknown).
+    pub final_gap: f64,
+    /// Branch-and-bound nodes explored across both phases.
+    pub nodes: u64,
+    /// Simplex iterations across both phases.
+    pub simplex_iters: u64,
+    /// Child LPs that attempted a warm start, across both phases.
+    pub warm_attempts: u64,
+    /// Warm-start attempts accepted, across both phases.
+    pub warm_hits: u64,
+    /// Warm-start acceptance rate across both phases.
+    pub warm_hit_rate: f64,
+}
+
+/// Serve one plan request under `deadline` through a [`crate::serve::PlanHandle`],
+/// polling every `poll` interval, and record the anytime incumbent curve
+/// (Figure 10's metric, produced by the serving path instead of the raw
+/// solver log).
+pub fn anytime_experiment(
+    case: &ModelCase,
+    opts: &crate::olla::PlannerOptions,
+    deadline: Duration,
+    poll: Duration,
+) -> AnytimeRow {
+    let watch = Stopwatch::start();
+    let handle = crate::serve::PlanHandle::spawn(
+        case.graph.clone(),
+        opts.clone(),
+        Some(deadline),
+        None,
+    );
+    let mut first_plan_secs = f64::NAN;
+    loop {
+        let snap = handle.poll();
+        if first_plan_secs.is_nan() && snap.plan.is_some() {
+            first_plan_secs = snap.elapsed_secs;
+        }
+        if snap.phase == crate::serve::PlanPhase::Done {
+            break;
+        }
+        std::thread::sleep(poll);
+    }
+    let last = handle.poll();
+    let plan = handle.join();
+    let interrupted = !matches!(
+        plan.schedule.status,
+        crate::ilp::SolveStatus::Optimal
+    ) || plan.placement.method == crate::olla::placement::PlacementMethod::IlpTimeLimit;
+    AnytimeRow {
+        model: case.name.clone(),
+        batch: case.batch,
+        deadline_secs: deadline.as_secs_f64(),
+        curve: last.anytime,
+        final_arena: plan.arena_size,
+        first_plan_secs: if first_plan_secs.is_nan() { last.elapsed_secs } else { first_plan_secs },
+        total_secs: watch.secs(),
+        interrupted,
+        final_gap: last.gap,
+        nodes: last.nodes,
+        simplex_iters: last.simplex_iters,
+        warm_attempts: last.warm_attempts,
+        warm_hits: last.warm_hits,
+        warm_hit_rate: last.warm_hit_rate,
+    }
 }
 
 /// Figure 14 row: allocator runtime overhead across 1M training iterations.
@@ -386,7 +475,6 @@ fn drain_leaks(ca: &mut CachingAllocator, trace: &crate::sched::sim::MemTrace) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::time::Duration;
 
     fn small_case() -> ModelCase {
         let graph = build_graph("alexnet", 1, ModelScale::Reduced).unwrap();
@@ -431,6 +519,24 @@ mod tests {
             row.arena_ns_per_iter,
             row.caching_ns_per_iter
         );
+    }
+
+    #[test]
+    fn anytime_experiment_records_a_curve_under_deadline() {
+        let case = small_case();
+        let row = anytime_experiment(
+            &case,
+            &crate::olla::PlannerOptions::fast_test(),
+            Duration::from_secs(5),
+            Duration::from_millis(5),
+        );
+        assert!(!row.curve.is_empty(), "anytime curve must not be empty");
+        assert!(row.final_arena > 0);
+        // The curve never regresses: arena sizes are non-increasing.
+        for w in row.curve.windows(2) {
+            assert!(w[1].1 <= w[0].1, "curve regressed: {:?}", row.curve);
+        }
+        assert!(row.first_plan_secs <= row.total_secs + 1e-9);
     }
 
     #[test]

@@ -1,30 +1,210 @@
-//! Parallel warm-started branch & bound MILP driver.
+//! Parallel warm-started branch & bound MILP driver with anytime controls.
 //!
-//! Depth-first-flavored search over LP relaxations solved by one shared
-//! [`LpEngine`] (built once from the root-presolved model). Each node
-//! carries its parent's optimal basis ([`BasisSnapshot`]); the child LP is
-//! re-solved by the engine's bounded-variable dual simplex from that basis
-//! instead of a two-phase cold start, which is where the bulk of the
-//! simplex-iteration savings come from.
+//! Search runs over LP relaxations solved by one shared [`LpEngine`] (built
+//! once from the root-presolved model). Each node carries its parent's
+//! optimal basis ([`BasisSnapshot`]); the child LP is re-solved by the
+//! engine's bounded-variable dual simplex from that basis instead of a
+//! two-phase cold start, which is where the bulk of the simplex-iteration
+//! savings come from.
 //!
-//! Search is distributed over a pool of worker threads (`std::thread`, no
-//! external dependencies): every worker dives depth-first on one child of
-//! each node it expands and publishes the sibling to a shared LIFO pool
-//! that idle workers steal from. The incumbent, node/iteration counters
-//! and the warm-start hit statistics are shared; pruning reads the
-//! incumbent objective lock-free from an atomic. Supports warm incumbents
-//! supplied by the caller (OLLA seeds the solver with the greedy schedule
-//! / best-fit placement), a wall-clock time limit matching the paper's
-//! §5.7 protocol, and an anytime incumbent log used to regenerate
-//! Figures 10 and 12.
+//! Node selection is **best-bound first with depth-first diving**: workers
+//! steal the open node with the smallest LP bound from a shared priority
+//! queue (so the global lower bound improves as fast as possible), then
+//! dive depth-first on one child of each node they expand (so feasible
+//! incumbents keep arriving early). The pre-refactor LIFO discipline
+//! survives behind [`SearchOrder::Lifo`] for A/B tests. Branching variables
+//! are chosen by **pseudo-costs** seeded from strong branching at the root:
+//! the first node probes its most fractional candidates with
+//! iteration-capped child LPs, and every expanded node afterwards refines
+//! the per-variable degradation estimates.
+//!
+//! The solve is *anytime*: callers may attach a [`SolveControl`] to cancel
+//! cooperatively, read periodic [`SolveProgress`] snapshots (incumbent
+//! value, best bound, gap, node/iteration counters, warm-start hit rate),
+//! and receive a callback on every accepted incumbent; a relative gap
+//! target ([`SolveOptions::stop_gap`]) stops the search as soon as the
+//! incumbent is proven close enough to optimal. Interrupted solves report
+//! an honest [`Solution::best_bound`] harvested from the abandoned open
+//! nodes — never an `Optimal` label.
 
 use super::model::{Model, Solution, SolveStatus, VarKind};
 use super::presolve::{presolve, PresolveStatus};
-use super::simplex::{BasisSnapshot, LpEngine, LpOptions, LpStatus, EPS};
+use super::simplex::{BasisSnapshot, LpEngine, LpOptions, LpStatus, NodeLpResult, EPS};
 use crate::util::Stopwatch;
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BinaryHeap;
+use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
+
+/// Candidates probed by strong branching at the root node.
+const STRONG_BRANCH_CANDS: usize = 8;
+/// Simplex-iteration cap per strong-branching probe LP.
+const STRONG_BRANCH_ITERS: u64 = 2_000;
+
+/// Order in which open nodes are pulled from the shared pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SearchOrder {
+    /// Pop the open node with the smallest LP bound (default): the global
+    /// lower bound — and therefore the anytime gap — closes fastest.
+    #[default]
+    BestBound,
+    /// Pop the most recently pushed node (pre-refactor depth-first
+    /// behaviour, kept for A/B comparisons and determinism tests).
+    Lifo,
+}
+
+/// Callback invoked by the solver on every accepted incumbent, with the
+/// full variable assignment and its objective value.
+pub type IncumbentCallback = Box<dyn Fn(&[f64], f64) + Send + Sync>;
+
+/// A snapshot of a running (or finished) MILP solve, read through
+/// [`SolveControl::progress`].
+#[derive(Debug, Clone)]
+pub struct SolveProgress {
+    /// Best feasible assignment found so far (`None` before the first
+    /// incumbent).
+    pub incumbent: Option<Vec<f64>>,
+    /// Objective of the best incumbent (`INFINITY` before the first one).
+    pub incumbent_obj: f64,
+    /// Best proven lower bound on the optimum (`NEG_INFINITY` until the
+    /// root LP finishes).
+    pub best_bound: f64,
+    /// Branch-and-bound nodes explored so far.
+    pub nodes: u64,
+    /// Simplex iterations spent so far.
+    pub simplex_iters: u64,
+    /// Child LPs that attempted a warm start from their parent's basis.
+    pub warm_attempts: u64,
+    /// Warm-start attempts accepted by the dual re-solve path.
+    pub warm_hits: u64,
+    /// Seconds since the solve started, at the time of the last update.
+    pub elapsed_secs: f64,
+}
+
+impl Default for SolveProgress {
+    fn default() -> Self {
+        SolveProgress {
+            incumbent: None,
+            incumbent_obj: f64::INFINITY,
+            best_bound: f64::NEG_INFINITY,
+            nodes: 0,
+            simplex_iters: 0,
+            warm_attempts: 0,
+            warm_hits: 0,
+            elapsed_secs: 0.0,
+        }
+    }
+}
+
+impl SolveProgress {
+    /// Relative optimality gap of the snapshot: `(incumbent - bound) /
+    /// max(|incumbent|, 1e-6)`, or `INFINITY` while either side is unknown.
+    pub fn rel_gap(&self) -> f64 {
+        if !self.incumbent_obj.is_finite() || !self.best_bound.is_finite() {
+            return f64::INFINITY;
+        }
+        ((self.incumbent_obj - self.best_bound) / self.incumbent_obj.abs().max(1e-6)).max(0.0)
+    }
+
+    /// Warm-start acceptance rate over child LPs (0 when no children yet).
+    pub fn warm_hit_rate(&self) -> f64 {
+        if self.warm_attempts == 0 {
+            0.0
+        } else {
+            self.warm_hits as f64 / self.warm_attempts as f64
+        }
+    }
+}
+
+/// Shared handle for steering a MILP solve from another thread: cancel it
+/// cooperatively, poll [`SolveProgress`] snapshots, or install an
+/// incumbent callback. Attach one via [`SolveOptions::control`].
+#[derive(Default)]
+pub struct SolveControl {
+    /// Shared with the LP engine (`LpOptions::cancel`) so cancellation
+    /// aborts an in-flight LP within 64 pivots, not at the node boundary.
+    stop: Arc<AtomicBool>,
+    progress: Mutex<SolveProgress>,
+    on_incumbent: Mutex<Option<IncumbentCallback>>,
+}
+
+impl fmt::Debug for SolveControl {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("SolveControl")
+            .field("cancelled", &self.cancelled())
+            .finish()
+    }
+}
+
+impl SolveControl {
+    /// A fresh control, ready to share with [`SolveOptions::control`].
+    pub fn new() -> Arc<SolveControl> {
+        Arc::new(SolveControl::default())
+    }
+
+    /// Ask the solve to stop at the next node boundary (also aborts the
+    /// LP currently pivoting, checked every 64 iterations). The solver
+    /// returns its best incumbent with an honest bound — never `Optimal`.
+    pub fn cancel(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+
+    /// True once [`SolveControl::cancel`] has been called.
+    pub fn cancelled(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+
+    /// Clone the latest progress snapshot.
+    pub fn progress(&self) -> SolveProgress {
+        self.progress.lock().unwrap().clone()
+    }
+
+    /// Install (or clear) the incumbent callback. The callback runs on a
+    /// solver worker thread and must not call `set_on_incumbent` itself.
+    pub fn set_on_incumbent(&self, cb: Option<IncumbentCallback>) {
+        *self.on_incumbent.lock().unwrap() = cb;
+    }
+
+    /// Record a new incumbent (if it improves) and fire the callback.
+    fn note_incumbent(&self, x: &[f64], obj: f64, elapsed: f64) {
+        {
+            let mut pr = self.progress.lock().unwrap();
+            if obj >= pr.incumbent_obj {
+                return; // raced with a better incumbent from another worker
+            }
+            pr.incumbent_obj = obj;
+            pr.incumbent = Some(x.to_vec());
+            pr.elapsed_secs = elapsed;
+        }
+        let cb = self.on_incumbent.lock().unwrap();
+        if let Some(cb) = cb.as_ref() {
+            cb(x, obj);
+        }
+    }
+
+    /// Refresh the bound/counter half of the snapshot.
+    fn update_stats(
+        &self,
+        bound: f64,
+        nodes: u64,
+        iters: u64,
+        warm_attempts: u64,
+        warm_hits: u64,
+        elapsed: f64,
+    ) {
+        let mut pr = self.progress.lock().unwrap();
+        if bound > pr.best_bound {
+            pr.best_bound = bound;
+        }
+        pr.nodes = nodes;
+        pr.simplex_iters = iters;
+        pr.warm_attempts = warm_attempts;
+        pr.warm_hits = warm_hits;
+        pr.elapsed_secs = elapsed;
+    }
+}
 
 /// Options controlling the MILP solve.
 #[derive(Debug, Clone)]
@@ -33,7 +213,8 @@ pub struct SolveOptions {
     pub time_limit: Duration,
     /// Iteration cap per LP relaxation.
     pub lp_iters: u64,
-    /// Relative optimality gap at which to stop early.
+    /// Relative optimality gap at which a node is considered dominated by
+    /// the incumbent (pruning tolerance; `Optimal` means within this gap).
     pub rel_gap: f64,
     /// A feasible assignment to seed the incumbent (checked before use).
     pub initial: Option<Vec<f64>>,
@@ -46,6 +227,15 @@ pub struct SolveOptions {
     /// Worker threads for the node pool. `0` picks automatically (1 for
     /// small models, up to 8 otherwise); `1` forces the serial path.
     pub threads: usize,
+    /// Node-selection discipline for the shared pool.
+    pub search: SearchOrder,
+    /// Anytime stopping rule: halt as soon as the incumbent is proven
+    /// within this relative gap of the optimum (e.g. `Some(0.05)` for 5%).
+    /// The solve then reports `TimeLimitFeasible`, not `Optimal`.
+    pub stop_gap: Option<f64>,
+    /// External control handle (cancellation, progress snapshots,
+    /// incumbent callbacks).
+    pub control: Option<Arc<SolveControl>>,
 }
 
 impl Default for SolveOptions {
@@ -58,23 +248,118 @@ impl Default for SolveOptions {
             integral_objective: false,
             max_nodes: u64::MAX,
             threads: 0,
+            search: SearchOrder::BestBound,
+            stop_gap: None,
+            control: None,
         }
     }
+}
+
+/// The branching step that created a node, for pseudo-cost updates.
+#[derive(Debug, Clone, Copy)]
+struct BranchInfo {
+    /// Variable branched on.
+    var: usize,
+    /// Distance the variable was pushed from its parent LP value.
+    dist: f64,
+    /// True for the up (lb = ceil) child.
+    up: bool,
 }
 
 struct Node {
     lb: Vec<f64>,
     ub: Vec<f64>,
-    /// LP bound inherited from the parent (for best-bound bookkeeping).
+    /// LP bound inherited from the parent (for best-bound ordering and
+    /// bookkeeping; ceil-strengthened when the objective is integral).
     parent_bound: f64,
+    /// Raw parent LP objective (for pseudo-cost degradations).
+    parent_obj: f64,
     /// Parent's optimal basis, shared between siblings.
     warm: Option<Arc<BasisSnapshot>>,
+    /// How this node was created (None for the root).
+    branch: Option<BranchInfo>,
+}
+
+/// Max-heap wrapper ordering nodes by *smallest* parent bound first.
+struct OrdNode(Node);
+
+impl PartialEq for OrdNode {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == CmpOrdering::Equal
+    }
+}
+impl Eq for OrdNode {}
+impl PartialOrd for OrdNode {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for OrdNode {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        // Reversed: the heap's max element is the smallest bound.
+        other
+            .0
+            .parent_bound
+            .partial_cmp(&self.0.parent_bound)
+            .unwrap_or(CmpOrdering::Equal)
+    }
+}
+
+/// Open-node storage: a best-bound priority queue or a LIFO stack.
+enum NodeQueue {
+    Lifo(Vec<Node>),
+    BestBound(BinaryHeap<OrdNode>),
+}
+
+impl NodeQueue {
+    fn new(order: SearchOrder) -> NodeQueue {
+        match order {
+            SearchOrder::Lifo => NodeQueue::Lifo(Vec::new()),
+            SearchOrder::BestBound => NodeQueue::BestBound(BinaryHeap::new()),
+        }
+    }
+
+    fn push(&mut self, n: Node) {
+        match self {
+            NodeQueue::Lifo(v) => v.push(n),
+            NodeQueue::BestBound(h) => h.push(OrdNode(n)),
+        }
+    }
+
+    fn pop(&mut self) -> Option<Node> {
+        match self {
+            NodeQueue::Lifo(v) => v.pop(),
+            NodeQueue::BestBound(h) => h.pop().map(|o| o.0),
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        match self {
+            NodeQueue::Lifo(v) => v.is_empty(),
+            NodeQueue::BestBound(h) => h.is_empty(),
+        }
+    }
+
+    /// Smallest bound among queued nodes (`INFINITY` when empty).
+    fn min_bound(&self) -> f64 {
+        match self {
+            NodeQueue::Lifo(v) => {
+                v.iter().map(|n| n.parent_bound).fold(f64::INFINITY, f64::min)
+            }
+            NodeQueue::BestBound(h) => {
+                h.peek().map_or(f64::INFINITY, |o| o.0.parent_bound)
+            }
+        }
+    }
 }
 
 struct Pool {
-    stack: Vec<Node>,
+    queue: NodeQueue,
     /// Nodes currently being processed by some worker.
     in_flight: usize,
+    /// Live subtree bound per worker (`INFINITY` when idle); together with
+    /// the queue this yields the global lower bound at any instant.
+    in_flight_bounds: Vec<f64>,
     /// Minimum bound among nodes abandoned when the search stopped early.
     open_min: f64,
 }
@@ -83,6 +368,48 @@ struct Incumbent {
     obj: f64,
     x: Option<Vec<f64>>,
     log: Vec<(f64, f64)>,
+}
+
+/// Per-variable branching degradation estimates (sum, count) per side.
+struct PcTable {
+    down: Vec<(f64, u64)>,
+    up: Vec<(f64, u64)>,
+}
+
+impl PcTable {
+    fn new(n: usize) -> PcTable {
+        PcTable { down: vec![(0.0, 0); n], up: vec![(0.0, 0); n] }
+    }
+
+    fn record(&mut self, j: usize, up: bool, cost: f64) {
+        let e = if up { &mut self.up[j] } else { &mut self.down[j] };
+        e.0 += cost;
+        e.1 += 1;
+    }
+
+    fn cost(&self, j: usize, up: bool) -> Option<f64> {
+        let e = if up { self.up[j] } else { self.down[j] };
+        if e.1 == 0 {
+            None
+        } else {
+            Some(e.0 / e.1 as f64)
+        }
+    }
+
+    /// Mean observed cost on one side across all variables (1.0 default).
+    fn average(&self, up: bool) -> f64 {
+        let table = if up { &self.up } else { &self.down };
+        let (mut sum, mut cnt) = (0.0, 0u64);
+        for &(s, c) in table {
+            sum += s;
+            cnt += c;
+        }
+        if cnt == 0 {
+            1.0
+        } else {
+            sum / cnt as f64
+        }
+    }
 }
 
 struct Shared<'a> {
@@ -96,12 +423,14 @@ struct Shared<'a> {
     cv: Condvar,
     best: Mutex<Incumbent>,
     best_bits: AtomicU64,
+    pc: Mutex<PcTable>,
+    control: Option<Arc<SolveControl>>,
     nodes: AtomicU64,
     iters: AtomicU64,
     warm_attempts: AtomicU64,
     warm_hits: AtomicU64,
-    stop: AtomicBool,
-    timed_out: AtomicBool,
+    stop: Arc<AtomicBool>,
+    stopped_early: AtomicBool,
     lp_limited: AtomicBool,
     unbounded: AtomicBool,
 }
@@ -127,9 +456,12 @@ impl<'a> Shared<'a> {
 /// Solve a minimization MILP.
 pub fn solve(model: &Model, opts: &SolveOptions) -> Solution {
     let watch = Stopwatch::start();
+    let stop = Arc::new(AtomicBool::new(false));
     let lp_opts = LpOptions {
         max_iters: opts.lp_iters,
         deadline: std::time::Instant::now().checked_add(opts.time_limit),
+        stop: Some(stop.clone()),
+        cancel: opts.control.as_ref().map(|c| c.stop.clone()),
     };
 
     let lb0: Vec<f64> = model.vars.iter().map(|v| v.lb).collect();
@@ -145,6 +477,9 @@ pub fn solve(model: &Model, opts: &SolveOptions) -> Solution {
             incumbent_obj = model.objective_value(init);
             incumbent = Some(init.clone());
             incumbents_log.push((watch.secs(), incumbent_obj));
+            if let Some(ctrl) = &opts.control {
+                ctrl.note_incumbent(init, incumbent_obj, watch.secs());
+            }
         }
     }
 
@@ -188,6 +523,16 @@ pub fn solve(model: &Model, opts: &SolveOptions) -> Solution {
         .collect();
 
     let threads = effective_threads(opts, int_vars.len());
+    let num_vars = model.num_vars();
+    let mut queue = NodeQueue::new(opts.search);
+    queue.push(Node {
+        lb: pre.lb,
+        ub: pre.ub,
+        parent_bound: f64::NEG_INFINITY,
+        parent_obj: f64::NEG_INFINITY,
+        warm: None,
+        branch: None,
+    });
     let shared = Shared {
         model,
         engine,
@@ -196,13 +541,9 @@ pub fn solve(model: &Model, opts: &SolveOptions) -> Solution {
         lp_opts,
         watch: &watch,
         pool: Mutex::new(Pool {
-            stack: vec![Node {
-                lb: pre.lb,
-                ub: pre.ub,
-                parent_bound: f64::NEG_INFINITY,
-                warm: None,
-            }],
+            queue,
             in_flight: 0,
+            in_flight_bounds: vec![f64::INFINITY; threads],
             open_min: f64::INFINITY,
         }),
         cv: Condvar::new(),
@@ -212,22 +553,25 @@ pub fn solve(model: &Model, opts: &SolveOptions) -> Solution {
             log: incumbents_log,
         }),
         best_bits: AtomicU64::new(incumbent_obj.to_bits()),
+        pc: Mutex::new(PcTable::new(num_vars)),
+        control: opts.control.clone(),
         nodes: AtomicU64::new(0),
         iters: AtomicU64::new(0),
         warm_attempts: AtomicU64::new(0),
         warm_hits: AtomicU64::new(0),
-        stop: AtomicBool::new(false),
-        timed_out: AtomicBool::new(false),
+        stop,
+        stopped_early: AtomicBool::new(false),
         lp_limited: AtomicBool::new(false),
         unbounded: AtomicBool::new(false),
     };
 
     if threads <= 1 {
-        worker(&shared);
+        worker(&shared, 0);
     } else {
         std::thread::scope(|sc| {
-            for _ in 0..threads {
-                sc.spawn(|| worker(&shared));
+            for wid in 0..threads {
+                let sref = &shared;
+                sc.spawn(move || worker(sref, wid));
             }
         });
     }
@@ -242,7 +586,7 @@ pub fn solve(model: &Model, opts: &SolveOptions) -> Solution {
         shared.warm_attempts.load(Ordering::Relaxed),
         shared.warm_hits.load(Ordering::Relaxed),
     );
-    let timed_out = shared.timed_out.load(Ordering::Relaxed);
+    let stopped_early = shared.stopped_early.load(Ordering::Relaxed);
     let lp_limited = shared.lp_limited.load(Ordering::Relaxed);
 
     if shared.unbounded.load(Ordering::Relaxed) {
@@ -259,18 +603,15 @@ pub fn solve(model: &Model, opts: &SolveOptions) -> Solution {
     }
 
     let mut global_lower = f64::NEG_INFINITY;
-    if timed_out {
-        // Remaining open nodes bound the optimum from below.
-        global_lower = pool
-            .stack
-            .iter()
-            .map(|n| n.parent_bound)
-            .fold(pool.open_min, f64::min);
+    let status = if stopped_early || lp_limited {
+        // Remaining open nodes (queued or abandoned mid-dive) bound the
+        // optimum from below — on *every* early-stop path (time limit,
+        // cancellation, gap target, node cap, inconclusive LPs), so that
+        // interrupted results always carry an honest bound and gap.
+        global_lower = pool.open_min.min(pool.queue.min_bound());
         if global_lower == f64::INFINITY {
             global_lower = incumbent_obj;
         }
-    }
-    let status = if timed_out || lp_limited {
         if incumbent.is_some() {
             SolveStatus::TimeLimitFeasible
         } else {
@@ -282,6 +623,16 @@ pub fn solve(model: &Model, opts: &SolveOptions) -> Solution {
     } else {
         SolveStatus::Infeasible
     };
+    if let Some(ctrl) = &opts.control {
+        ctrl.update_stats(
+            global_lower,
+            nodes_explored,
+            simplex_iters,
+            warm_stats.0,
+            warm_stats.1,
+            watch.secs(),
+        );
+    }
     finish(
         status,
         incumbent,
@@ -305,8 +656,9 @@ fn effective_threads(opts: &SolveOptions, num_int_vars: usize) -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
 }
 
-/// Worker loop: steal a node from the shared pool, then dive depth-first.
-fn worker(s: &Shared<'_>) {
+/// Worker loop: steal the best open node from the shared pool, then dive
+/// depth-first.
+fn worker(s: &Shared<'_>, wid: usize) {
     loop {
         let node = {
             let mut p = s.pool.lock().unwrap();
@@ -314,8 +666,9 @@ fn worker(s: &Shared<'_>) {
                 if s.stop.load(Ordering::Relaxed) {
                     return;
                 }
-                if let Some(n) = p.stack.pop() {
+                if let Some(n) = p.queue.pop() {
                     p.in_flight += 1;
+                    p.in_flight_bounds[wid] = n.parent_bound;
                     break n;
                 }
                 if p.in_flight == 0 {
@@ -335,23 +688,65 @@ fn worker(s: &Shared<'_>) {
                 s.record_open_bound(n.parent_bound);
                 break;
             }
-            cur = process(s, n);
+            cur = process(s, n, wid);
         }
         let mut p = s.pool.lock().unwrap();
         p.in_flight -= 1;
-        if p.in_flight == 0 && p.stack.is_empty() {
+        p.in_flight_bounds[wid] = f64::INFINITY;
+        if p.in_flight == 0 && p.queue.is_empty() {
             s.cv.notify_all();
         }
     }
 }
 
+/// Update this worker's live subtree bound; when a control handle or a gap
+/// target is watching, also refresh the global bound snapshot. Returns true
+/// when the gap target is met and the search should stop.
+fn publish_progress(s: &Shared<'_>, wid: usize, node_bound: f64) -> bool {
+    let watching = s.control.is_some() || s.opts.stop_gap.is_some();
+    let global = {
+        let mut p = s.pool.lock().unwrap();
+        p.in_flight_bounds[wid] = node_bound;
+        if !watching {
+            return false;
+        }
+        let mut b = p.open_min.min(p.queue.min_bound());
+        for &fb in &p.in_flight_bounds {
+            b = b.min(fb);
+        }
+        b
+    };
+    if let Some(ctrl) = &s.control {
+        ctrl.update_stats(
+            global,
+            s.nodes.load(Ordering::Relaxed),
+            s.iters.load(Ordering::Relaxed),
+            s.warm_attempts.load(Ordering::Relaxed),
+            s.warm_hits.load(Ordering::Relaxed),
+            s.watch.secs(),
+        );
+    }
+    if let Some(target) = s.opts.stop_gap {
+        let inc = s.best_obj();
+        if inc.is_finite() && global.is_finite() {
+            let gap = (inc - global) / inc.abs().max(1e-6);
+            if gap <= target {
+                return true;
+            }
+        }
+    }
+    false
+}
+
 /// Expand one node. Returns the preferred child for the worker to dive
 /// into (the sibling goes to the shared pool).
-fn process(s: &Shared<'_>, node: Node) -> Option<Node> {
-    if s.watch.elapsed() >= s.opts.time_limit
+fn process(s: &Shared<'_>, node: Node, wid: usize) -> Option<Node> {
+    let cancelled = s.control.as_ref().is_some_and(|c| c.cancelled());
+    if cancelled
+        || s.watch.elapsed() >= s.opts.time_limit
         || s.nodes.load(Ordering::Relaxed) >= s.opts.max_nodes
     {
-        s.timed_out.store(true, Ordering::Relaxed);
+        s.stopped_early.store(true, Ordering::Relaxed);
         s.record_open_bound(node.parent_bound);
         s.halt();
         return None;
@@ -380,9 +775,16 @@ fn process(s: &Shared<'_>, node: Node) -> Option<Node> {
         }
         LpStatus::IterLimit => {
             // Deadline or iteration cap inside the LP: we can no longer
-            // claim optimality for the whole tree.
+            // claim optimality for the whole tree. A dual-phase interrupt
+            // still certifies a lower bound for the node's subtree
+            // (`NodeLpResult::bound`), which tightens the reported gap.
             s.lp_limited.store(true, Ordering::Relaxed);
-            s.record_open_bound(node.parent_bound.max(f64::NEG_INFINITY));
+            let mut open = node.parent_bound;
+            if let Some(db) = r.bound {
+                let db = if s.opts.integral_objective { (db - 1e-6).ceil() } else { db };
+                open = open.max(db);
+            }
+            s.record_open_bound(open);
             return None;
         }
         LpStatus::Optimal => {}
@@ -391,21 +793,40 @@ fn process(s: &Shared<'_>, node: Node) -> Option<Node> {
     if s.opts.integral_objective {
         bound = (bound - 1e-6).ceil();
     }
+
+    // Pseudo-cost update: how much did the LP bound degrade per unit of
+    // the branching step that created this node?
+    if let Some(br) = node.branch {
+        if node.parent_obj.is_finite() {
+            let per_unit = (r.obj - node.parent_obj).max(0.0) / br.dist.max(1e-6);
+            s.pc.lock().unwrap().record(br.var, br.up, per_unit);
+        }
+    }
+
     if bound >= prune_threshold(s.best_obj(), s.opts) {
         return None;
     }
 
-    // Find the most fractional integer variable.
-    let mut branch: Option<(usize, f64)> = None;
+    if publish_progress(s, wid, bound) {
+        // Gap target met: stop the whole search, keeping this subtree's
+        // bound in the open set so the reported bound stays honest.
+        s.stopped_early.store(true, Ordering::Relaxed);
+        s.record_open_bound(bound);
+        s.halt();
+        return None;
+    }
+
+    // Collect fractional integer variables.
+    let mut cands: Vec<(usize, f64)> = Vec::new();
     for &j in &s.int_vars {
         let xj = r.x[j];
-        let frac = (xj - xj.round()).abs();
-        if frac > 1e-6 && branch.map_or(true, |(_, best)| frac > best) {
-            branch = Some((j, frac));
+        let frac = xj - xj.floor();
+        if frac.min(1.0 - frac) > 1e-6 {
+            cands.push((j, frac));
         }
     }
 
-    let Some((j, _)) = branch else {
+    if cands.is_empty() {
         // Integral: candidate incumbent.
         if r.obj < s.best_obj() - 1e-9 {
             // Round int vars exactly to kill drift.
@@ -415,18 +836,33 @@ fn process(s: &Shared<'_>, node: Node) -> Option<Node> {
             }
             if s.model.check_feasible(&x, 1e-5).is_ok() {
                 let obj = s.model.objective_value(&x);
-                let mut best = s.best.lock().unwrap();
-                if obj < best.obj - 1e-9 {
-                    best.obj = obj;
-                    best.x = Some(x);
-                    best.log.push((s.watch.secs(), obj));
-                    s.best_bits.store(obj.to_bits(), Ordering::Relaxed);
+                let mut improved = false;
+                {
+                    let mut best = s.best.lock().unwrap();
+                    if obj < best.obj - 1e-9 {
+                        best.obj = obj;
+                        best.x = Some(x.clone());
+                        best.log.push((s.watch.secs(), obj));
+                        s.best_bits.store(obj.to_bits(), Ordering::Relaxed);
+                        improved = true;
+                    }
+                }
+                if improved {
+                    if let Some(ctrl) = &s.control {
+                        ctrl.note_incumbent(&x, obj, s.watch.secs());
+                    }
                 }
             }
         }
         return None;
-    };
+    }
 
+    // Root node: seed the pseudo-cost table with strong branching probes.
+    if node.parent_bound == f64::NEG_INFINITY && cands.len() >= 2 {
+        strong_branch_root(s, &node, &r, &cands);
+    }
+
+    let (j, frac) = select_branch(s, &cands);
     let xj = r.x[j];
     let floor = xj.floor();
     let warm = r.basis.map(Arc::new);
@@ -437,19 +873,101 @@ fn process(s: &Shared<'_>, node: Node) -> Option<Node> {
         lb: node.lb.clone(),
         ub: down_ub,
         parent_bound: bound,
+        parent_obj: r.obj,
         warm: warm.clone(),
+        branch: Some(BranchInfo { var: j, dist: frac.max(1e-6), up: false }),
     };
     let mut up_lb = node.lb;
     up_lb[j] = floor + 1.0;
-    let up = Node { lb: up_lb, ub: node.ub, parent_bound: bound, warm };
+    let up = Node {
+        lb: up_lb,
+        ub: node.ub,
+        parent_bound: bound,
+        parent_obj: r.obj,
+        warm,
+        branch: Some(BranchInfo { var: j, dist: (1.0 - frac).max(1e-6), up: true }),
+    };
     // Dive into the branch nearest the LP value; share the sibling.
-    let (dive, share) = if xj - floor > 0.5 { (up, down) } else { (down, up) };
+    let (dive, share) = if frac > 0.5 { (up, down) } else { (down, up) };
     {
         let mut p = s.pool.lock().unwrap();
-        p.stack.push(share);
+        p.queue.push(share);
     }
     s.cv.notify_one();
     Some(dive)
+}
+
+/// Probe the most fractional root candidates with iteration-capped child
+/// LPs and record their bound degradations as initial pseudo-costs.
+fn strong_branch_root(
+    s: &Shared<'_>,
+    node: &Node,
+    r: &NodeLpResult,
+    cands: &[(usize, f64)],
+) {
+    let mut ranked: Vec<(usize, f64)> = cands.to_vec();
+    ranked.sort_by(|a, b| {
+        let fa = a.1.min(1.0 - a.1);
+        let fb = b.1.min(1.0 - b.1);
+        fb.partial_cmp(&fa).unwrap_or(CmpOrdering::Equal)
+    });
+    let sb_opts = LpOptions {
+        max_iters: STRONG_BRANCH_ITERS,
+        deadline: s.lp_opts.deadline,
+        stop: s.lp_opts.stop.clone(),
+        cancel: s.lp_opts.cancel.clone(),
+    };
+    for &(j, frac) in ranked.iter().take(STRONG_BRANCH_CANDS) {
+        if s.stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let floor = r.x[j].floor();
+        // Down probe: ub[j] = floor.
+        let mut ub = node.ub.clone();
+        ub[j] = floor;
+        let rd = s.engine.solve_node(&node.lb, &ub, r.basis.as_ref(), &sb_opts);
+        s.iters.fetch_add(rd.iters, Ordering::Relaxed);
+        if rd.status == LpStatus::Optimal {
+            let per_unit = (rd.obj - r.obj).max(0.0) / frac.max(1e-6);
+            s.pc.lock().unwrap().record(j, false, per_unit);
+        }
+        // Up probe: lb[j] = floor + 1.
+        let mut lb = node.lb.clone();
+        lb[j] = floor + 1.0;
+        let ru = s.engine.solve_node(&lb, &node.ub, r.basis.as_ref(), &sb_opts);
+        s.iters.fetch_add(ru.iters, Ordering::Relaxed);
+        if ru.status == LpStatus::Optimal {
+            let per_unit = (ru.obj - r.obj).max(0.0) / (1.0 - frac).max(1e-6);
+            s.pc.lock().unwrap().record(j, true, per_unit);
+        }
+    }
+}
+
+/// Pick the branching variable with the best pseudo-cost score (product of
+/// the estimated up/down degradations), falling back to fractionality for
+/// variables with no observations yet.
+fn select_branch(s: &Shared<'_>, cands: &[(usize, f64)]) -> (usize, f64) {
+    let pc = s.pc.lock().unwrap();
+    let avg_dn = pc.average(false);
+    let avg_up = pc.average(true);
+    let mut best: Option<(usize, f64, f64, f64)> = None; // (j, frac, score, fractionality)
+    for &(j, frac) in cands {
+        let fractionality = frac.min(1.0 - frac);
+        let dn = pc.cost(j, false).unwrap_or(avg_dn) * frac;
+        let up = pc.cost(j, true).unwrap_or(avg_up) * (1.0 - frac);
+        let score = dn.max(1e-12) * up.max(1e-12);
+        let better = match best {
+            None => true,
+            Some((_, _, bs, bf)) => {
+                score > bs * (1.0 + 1e-9) || (score >= bs * (1.0 - 1e-9) && fractionality > bf)
+            }
+        };
+        if better {
+            best = Some((j, frac, score, fractionality));
+        }
+    }
+    let (j, frac, _, _) = best.expect("select_branch called with candidates");
+    (j, frac)
 }
 
 fn prune_threshold(incumbent_obj: f64, opts: &SolveOptions) -> f64 {
@@ -666,26 +1184,31 @@ mod tests {
         best
     }
 
+    fn random_milp(rng: &mut crate::util::rng::Rng) -> Model {
+        let n = rng.range(4, 10);
+        let mut m = Model::new();
+        let xs: Vec<_> = (0..n)
+            .map(|i| m.binary(format!("x{i}"), rng.f64() * 10.0 - 5.0))
+            .collect();
+        for _ in 0..rng.range(1, 5) {
+            let k = rng.range(2, n);
+            let mut terms = Vec::new();
+            for t in 0..k {
+                terms.push((xs[(t * 7 + rng.range(0, n - 1)) % n], 1.0 + rng.f64() * 3.0));
+            }
+            let cmp = if rng.chance(0.5) { Cmp::Le } else { Cmp::Ge };
+            let rhs = rng.f64() * 6.0;
+            m.constraint(terms, cmp, rhs);
+        }
+        m
+    }
+
     #[test]
     fn parallel_and_serial_agree_with_brute_force_on_random_milps() {
         use crate::util::rng::Rng;
         let mut rng = Rng::new(77);
         for _case in 0..12 {
-            let n = rng.range(4, 10);
-            let mut m = Model::new();
-            let xs: Vec<_> = (0..n)
-                .map(|i| m.binary(format!("x{i}"), rng.f64() * 10.0 - 5.0))
-                .collect();
-            for _ in 0..rng.range(1, 5) {
-                let k = rng.range(2, n);
-                let mut terms = Vec::new();
-                for t in 0..k {
-                    terms.push((xs[(t * 7 + rng.range(0, n - 1)) % n], 1.0 + rng.f64() * 3.0));
-                }
-                let cmp = if rng.chance(0.5) { Cmp::Le } else { Cmp::Ge };
-                let rhs = rng.f64() * 6.0;
-                m.constraint(terms, cmp, rhs);
-            }
+            let m = random_milp(&mut rng);
             let oracle = brute_force_binary(&m);
             for threads in [1usize, 4] {
                 let opts = SolveOptions { threads, ..default_opts() };
@@ -701,6 +1224,35 @@ mod tests {
                     }
                     None => {
                         assert_eq!(s.status, SolveStatus::Infeasible, "threads={threads}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn best_bound_and_lifo_find_the_same_optimum() {
+        // The node-selection discipline changes the path through the tree,
+        // never the answer: both orders must match the brute-force oracle.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(2024);
+        for _case in 0..10 {
+            let m = random_milp(&mut rng);
+            let oracle = brute_force_binary(&m);
+            for order in [SearchOrder::BestBound, SearchOrder::Lifo] {
+                let opts = SolveOptions { search: order, threads: 1, ..default_opts() };
+                let s = solve(&m, &opts);
+                match oracle {
+                    Some(best) => {
+                        assert_eq!(s.status, SolveStatus::Optimal, "order={order:?}");
+                        assert!(
+                            (s.objective - best).abs() < 1e-6,
+                            "order={order:?} milp={} brute={best}",
+                            s.objective
+                        );
+                    }
+                    None => {
+                        assert_eq!(s.status, SolveStatus::Infeasible, "order={order:?}");
                     }
                 }
             }
@@ -729,5 +1281,94 @@ mod tests {
             s.warm_hits,
             s.warm_attempts
         );
+    }
+
+    #[test]
+    fn cancelled_solve_is_never_labelled_optimal() {
+        let mut m = Model::new();
+        let a = m.binary("a", -2.0);
+        let b = m.binary("b", -3.0);
+        m.constraint(vec![(a, 1.0), (b, 1.0)], Cmp::Le, 1.0);
+        let control = SolveControl::new();
+        control.cancel();
+        let opts = SolveOptions {
+            control: Some(control.clone()),
+            initial: Some(vec![1.0, 0.0]), // feasible, obj -2 (not optimal)
+            ..default_opts()
+        };
+        let s = solve(&m, &opts);
+        assert_eq!(s.status, SolveStatus::TimeLimitFeasible);
+        assert!((s.objective + 2.0).abs() < 1e-6, "obj={}", s.objective);
+        // The warm-start incumbent must be visible through the control too.
+        let pr = control.progress();
+        assert!(pr.incumbent.is_some());
+        assert!((pr.incumbent_obj + 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gap_target_stops_early_with_honest_bound() {
+        // Incumbent a=1 (obj -10) vs optimum -20: the root gap is large but
+        // within a loose 300% target, so the solve must stop early, report
+        // TimeLimitFeasible and carry a finite lower bound.
+        let mut m = Model::new();
+        let a = m.binary("a", -10.0);
+        let b = m.binary("b", -13.0);
+        let c = m.binary("c", -7.0);
+        m.constraint(vec![(a, 3.0), (b, 4.0), (c, 2.0)], Cmp::Le, 6.0);
+        let opts = SolveOptions {
+            initial: Some(vec![1.0, 0.0, 0.0]),
+            stop_gap: Some(3.0),
+            threads: 1,
+            ..default_opts()
+        };
+        let s = solve(&m, &opts);
+        assert_eq!(s.status, SolveStatus::TimeLimitFeasible);
+        assert!((s.objective + 10.0).abs() < 1e-6, "obj={}", s.objective);
+        assert!(s.best_bound.is_finite(), "bound={}", s.best_bound);
+        assert!(s.best_bound <= -20.0 + 1e-6, "bound={}", s.best_bound);
+        let gap = s.rel_gap();
+        assert!(gap > 0.0 && gap <= 3.0 + 1e-9, "gap={gap}");
+
+        // A tight gap target must still let the solver reach the optimum.
+        let opts = SolveOptions {
+            initial: Some(vec![1.0, 0.0, 0.0]),
+            stop_gap: Some(1e-9),
+            threads: 1,
+            ..default_opts()
+        };
+        let s = solve(&m, &opts);
+        assert!((s.objective + 20.0).abs() < 1e-6, "obj={}", s.objective);
+    }
+
+    #[test]
+    fn control_reports_progress_and_fires_incumbent_callback() {
+        let mut m = Model::new();
+        let n = 10;
+        let xs: Vec<_> = (0..n)
+            .map(|i| m.binary(format!("x{i}"), -((i % 5) as f64) - 1.5))
+            .collect();
+        m.constraint(xs.iter().map(|&x| (x, 2.0)).collect(), Cmp::Le, 7.0);
+        let control = SolveControl::new();
+        let seen: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = seen.clone();
+        control.set_on_incumbent(Some(Box::new(move |_x, obj| {
+            sink.lock().unwrap().push(obj);
+        })));
+        let opts = SolveOptions {
+            control: Some(control.clone()),
+            threads: 1,
+            ..default_opts()
+        };
+        let s = solve(&m, &opts);
+        assert_eq!(s.status, SolveStatus::Optimal);
+        let pr = control.progress();
+        assert!(pr.nodes > 0);
+        assert!(pr.incumbent.is_some());
+        assert!((pr.incumbent_obj - s.objective).abs() < 1e-9);
+        assert!(pr.best_bound.is_finite());
+        assert!(pr.rel_gap() < 1e-6, "gap={}", pr.rel_gap());
+        let objs = seen.lock().unwrap();
+        assert!(!objs.is_empty(), "incumbent callback never fired");
+        assert!((objs.last().unwrap() - s.objective).abs() < 1e-6);
     }
 }

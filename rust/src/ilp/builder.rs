@@ -53,6 +53,22 @@ pub struct IlpMeta {
 }
 
 /// Incremental model builder with named groups and formulation helpers.
+///
+/// ```
+/// use olla::ilp::{self, IlpBuilder, SolveOptions, SolveStatus};
+///
+/// // max x + 2y subject to x + y <= 1 (built as a minimization).
+/// let mut b = IlpBuilder::new();
+/// let x = b.binary("choice", "x", -1.0);
+/// let y = b.binary("choice", "y", -2.0);
+/// b.at_most_one([x, y]);
+/// assert_eq!(b.group("choice").len(), 2);
+///
+/// let (model, _meta) = b.into_parts();
+/// let sol = ilp::solve(&model, &SolveOptions::default());
+/// assert_eq!(sol.status, SolveStatus::Optimal);
+/// assert!(sol.bool_value(y) && !sol.bool_value(x));
+/// ```
 #[derive(Debug, Default)]
 pub struct IlpBuilder {
     model: Model,

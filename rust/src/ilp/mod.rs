@@ -17,9 +17,13 @@
 //!   a dual-simplex phase;
 //! * [`presolve`] — bound propagation and redundancy elimination at the
 //!   root;
-//! * [`bnb`] — parallel branch & bound over a shared work pool
-//!   (`std::thread`), with a shared incumbent, anytime incumbent logging,
-//!   and warm-start hit statistics surfaced in [`Solution`];
+//! * [`bnb`] — parallel branch & bound over a shared best-bound priority
+//!   queue with depth-first diving and pseudo-cost branching (seeded from
+//!   strong branching at the root), a shared incumbent, anytime incumbent
+//!   logging, warm-start hit statistics surfaced in [`Solution`], and the
+//!   [`SolveControl`] anytime interface (cooperative cancellation,
+//!   incumbent/bound progress snapshots, gap-target stopping) that the
+//!   `serve` layer builds on;
 //! * [`builder`] — [`builder::IlpBuilder`], the model-assembly API (named
 //!   variable groups, sum/indicator helpers, pair disjunctions) shared by
 //!   the eq. 9/14/15 formulations in [`crate::olla`].
@@ -37,7 +41,9 @@ pub mod model;
 pub mod presolve;
 pub mod simplex;
 
-pub use bnb::{solve, SolveOptions};
+pub use bnb::{
+    solve, IncumbentCallback, SearchOrder, SolveControl, SolveOptions, SolveProgress,
+};
 pub use builder::{IlpBuilder, IlpMeta, PairVars, Pos};
 pub use model::{Cmp, Constraint, CscMatrix, Model, Solution, SolveStatus, VarId, VarKind, Variable};
 pub use simplex::{BasisSnapshot, LpEngine};

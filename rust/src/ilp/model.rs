@@ -94,7 +94,10 @@ pub struct Solution {
     pub status: SolveStatus,
     /// Best objective found (meaningful if a solution exists).
     pub objective: f64,
-    /// Best lower bound proven (equals `objective` when optimal).
+    /// Best lower bound proven (equals `objective` when optimal; harvested
+    /// from the abandoned open nodes when the solve is interrupted by a
+    /// time limit, cancellation, or gap target — `NEG_INFINITY` only when
+    /// the search stopped before the root LP produced a bound).
     pub best_bound: f64,
     /// Variable assignment of the incumbent.
     pub values: Vec<f64>,
@@ -125,6 +128,23 @@ impl Solution {
     /// Binary interpretation of a variable (tolerant rounding).
     pub fn bool_value(&self, v: VarId) -> bool {
         self.values[v.0] > 0.5
+    }
+
+    /// True only when optimality was proven — anytime callers use this to
+    /// decide whether an incumbent can still improve.
+    pub fn proved_optimal(&self) -> bool {
+        self.status == SolveStatus::Optimal
+    }
+
+    /// Relative optimality gap of the incumbent:
+    /// `(objective - best_bound) / max(|objective|, 1e-6)`, clamped at 0.
+    /// `INFINITY` when there is no incumbent or no finite bound, so
+    /// interrupted solves never masquerade as proven-optimal ones.
+    pub fn rel_gap(&self) -> f64 {
+        if !self.has_solution() || !self.best_bound.is_finite() {
+            return f64::INFINITY;
+        }
+        ((self.objective - self.best_bound) / self.objective.abs().max(1e-6)).max(0.0)
     }
 }
 

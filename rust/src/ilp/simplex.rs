@@ -25,6 +25,8 @@
 
 use super::basis::Basis;
 use super::model::{Cmp, CscMatrix, Model};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 
 /// Numerical feasibility tolerance.
 pub const EPS: f64 = 1e-7;
@@ -67,11 +69,43 @@ pub struct LpOptions {
     /// own deadline through so one oversized LP cannot blow the MILP's
     /// time budget.
     pub deadline: Option<std::time::Instant>,
+    /// Cooperative stop flag, checked alongside the deadline every 64
+    /// pivots. Branch & bound shares one flag across all node LPs so a
+    /// halt (time limit, gap target, unboundedness) aborts the LP
+    /// mid-pivot instead of waiting for it to finish.
+    pub stop: Option<Arc<AtomicBool>>,
+    /// Second cooperative stop flag, checked like `stop`. Branch & bound
+    /// wires the external `SolveControl` cancellation flag here, so a
+    /// caller's `cancel()` aborts an in-flight LP within 64 iterations
+    /// even before any worker reaches a node boundary.
+    pub cancel: Option<Arc<AtomicBool>>,
 }
 
 impl Default for LpOptions {
     fn default() -> Self {
-        LpOptions { max_iters: 200_000, deadline: None }
+        LpOptions { max_iters: 200_000, deadline: None, stop: None, cancel: None }
+    }
+}
+
+impl LpOptions {
+    /// True when the deadline has passed or either stop flag is raised.
+    fn interrupted(&self) -> bool {
+        if let Some(f) = &self.stop {
+            if f.load(Ordering::Relaxed) {
+                return true;
+            }
+        }
+        if let Some(f) = &self.cancel {
+            if f.load(Ordering::Relaxed) {
+                return true;
+            }
+        }
+        if let Some(d) = self.deadline {
+            if std::time::Instant::now() >= d {
+                return true;
+            }
+        }
+        false
     }
 }
 
@@ -106,10 +140,26 @@ pub struct NodeLpResult {
     pub basis: Option<BasisSnapshot>,
     /// True when the supplied warm basis was actually used (dual path).
     pub warm_used: bool,
+    /// A proven lower bound on this LP's optimum, when one is known even
+    /// without finishing: `Some(obj)` at optimality, and the current dual
+    /// objective when the **dual** phase is interrupted (every dual-feasible
+    /// basis bounds the optimum from below by weak duality). `None` when an
+    /// interrupted primal phase leaves no certificate. Branch & bound folds
+    /// these snapshots into the reported global bound so interrupted solves
+    /// stay honest.
+    pub bound: Option<f64>,
 }
 
 fn fail(status: LpStatus, iters: u64, warm_used: bool) -> NodeLpResult {
-    NodeLpResult { status, x: Vec::new(), obj: 0.0, iters, basis: None, warm_used }
+    NodeLpResult {
+        status,
+        x: Vec::new(),
+        obj: 0.0,
+        iters,
+        basis: None,
+        warm_used,
+        bound: None,
+    }
 }
 
 /// The shared standard form for one MILP solve: root-reduced constraint
@@ -332,7 +382,12 @@ impl LpEngine {
                         return fail(LpStatus::Infeasible, sv.iters, true);
                     }
                     DualOutcome::IterLimit => {
-                        return fail(LpStatus::IterLimit, sv.iters, true);
+                        // The dual iterate is still dual feasible, so its
+                        // objective is a valid lower bound for this node.
+                        let snapshot = sv.current_objective();
+                        let mut r = fail(LpStatus::IterLimit, sv.iters, true);
+                        r.bound = Some(snapshot);
+                        return r;
                     }
                     DualOutcome::Stalled => {
                         // Numerical trouble: retry from cold with the spent
@@ -434,6 +489,7 @@ impl LpEngine {
             iters: 0,
             basis: Some(snap),
             warm_used: false,
+            bound: Some(obj),
         }
     }
 
@@ -460,6 +516,7 @@ impl LpEngine {
             iters: sv.iters,
             basis: Some(snap),
             warm_used,
+            bound: Some(obj),
         }
     }
 }
@@ -629,6 +686,16 @@ impl<'a> Solver<'a> {
         self.fac.as_ref().expect("factorized basis")
     }
 
+    /// Objective value of the current iterate (structural columns only;
+    /// slack and artificial columns carry zero cost).
+    fn current_objective(&self) -> f64 {
+        let mut obj = self.eng.obj_fixed;
+        for j in 0..self.eng.nk {
+            obj += self.eng.cost[j] * self.x[j];
+        }
+        obj
+    }
+
     fn reduced_cost(&self, y: &[f64], j: usize, cost: &[f64]) -> f64 {
         cost[j] - self.eng.mat.col_dot(j, y)
     }
@@ -672,12 +739,8 @@ impl<'a> Solver<'a> {
             if self.iters >= opts.max_iters {
                 return LpStatus::IterLimit;
             }
-            if self.iters % 64 == 0 {
-                if let Some(d) = opts.deadline {
-                    if std::time::Instant::now() >= d {
-                        return LpStatus::IterLimit;
-                    }
-                }
+            if self.iters % 64 == 0 && opts.interrupted() {
+                return LpStatus::IterLimit;
             }
             if self.fac().should_refactorize() && !self.refactor() {
                 return LpStatus::IterLimit;
@@ -834,12 +897,8 @@ impl<'a> Solver<'a> {
             if self.iters >= opts.max_iters {
                 return DualOutcome::IterLimit;
             }
-            if self.iters % 64 == 0 {
-                if let Some(d) = opts.deadline {
-                    if std::time::Instant::now() >= d {
-                        return DualOutcome::IterLimit;
-                    }
-                }
+            if self.iters % 64 == 0 && opts.interrupted() {
+                return DualOutcome::IterLimit;
             }
             self.iters += 1;
             let need_increase = below;

@@ -21,9 +21,17 @@
 //! * [`models`] — a zoo that reconstructs the paper's training graphs;
 //! * [`runtime`] — the PJRT execution layer that trains the real JAX/Pallas
 //!   model with an OLLA-planned arena;
+//! * [`serve`] — the anytime planning service: interruptible, pollable
+//!   best-plan-so-far handles ([`serve::PlanHandle`]) and a request queue
+//!   ([`serve::PlanService`]) over the solver's shared incumbent;
 //! * [`coordinator`] — experiment pipelines and report generation;
 //! * [`bench_support`] — the hand-rolled benchmark harness used by
 //!   `rust/benches/*` (criterion is unavailable offline).
+//!
+//! See `ARCHITECTURE.md` at the repository root for the module map and the
+//! lifecycle of a solve, and `README.md` for build/run/bench quickstarts.
+
+#![warn(missing_docs)]
 
 
 
@@ -37,6 +45,7 @@ pub mod models;
 pub mod olla;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 
 
 

@@ -3,6 +3,8 @@
 //! Commands:
 //!   olla zoo                              list the model zoo with graph stats
 //!   olla optimize --model NAME [..]       run the OLLA pipeline on one model
+//!   olla plan --model NAME [..]           anytime planning with a deadline/gap
+//!   olla serve --models A,B [..]          queue plans through the PlanService
 //!   olla sweep [--batch 1,32] [..]        Figure-7-style sweep over the zoo
 //!   olla inspect --model NAME [--dot F]   dump graph stats / DOT
 //!   olla plan-artifacts [--artifacts D]   plan memory for the real jaxpr graph
@@ -15,6 +17,7 @@ use olla::graph::dot::to_dot;
 use olla::models::{build_graph, ModelScale, ZOO};
 use olla::olla::{PlacementOptions, PlannerOptions, ScheduleOptions};
 use olla::runtime::{Engine, Manifest, Trainer};
+use olla::serve::{PlanHandle, PlanPhase, PlanRequest, PlanService};
 use olla::util::anyhow;
 use olla::util::{human_bytes, human_duration};
 use std::path::PathBuf;
@@ -27,6 +30,8 @@ fn main() {
     let result = match cmd {
         "zoo" => cmd_zoo(),
         "optimize" => cmd_optimize(rest),
+        "plan" => cmd_plan(rest),
+        "serve" => cmd_serve(rest),
         "sweep" => cmd_sweep(rest),
         "inspect" => cmd_inspect(rest),
         "plan-artifacts" => cmd_plan_artifacts(rest),
@@ -60,6 +65,16 @@ COMMANDS:
       --batch N               batch size (default 1)
       --scale full|reduced    depth scale (default reduced)
       --time-limit SECS       per-phase ILP cap (default 30)
+  plan                        anytime planning: best valid plan by a deadline
+      --model NAME --batch N  [--scale full|reduced]
+      --deadline-ms MS        whole-pipeline deadline (default 10000)
+      --gap PCT               stop at a proven gap, e.g. 5 for 5% (optional)
+      --poll-ms MS            progress print cadence (default 500)
+  serve                       queue plan requests through the PlanService
+      --models A,B,C          zoo models (default: whole zoo)
+      --batch N               batch size (default 1)
+      --workers N             concurrent planner pipelines (default 2)
+      --deadline-ms MS        per-request deadline (default 10000)
   sweep                       reordering sweep over the whole zoo (Fig. 7)
       --batch LIST            comma-separated batch sizes (default 1,32)
       --scale full|reduced    (default reduced)
@@ -123,7 +138,7 @@ fn cmd_optimize(rest: &[String]) -> anyhow::Result<()> {
     let opts = PlannerOptions {
         schedule: ScheduleOptions { time_limit: cap, ..Default::default() },
         placement: PlacementOptions { time_limit: cap, ..Default::default() },
-        add_control_edges: true,
+        ..Default::default()
     };
     let baseline =
         olla::sched::sim::peak_bytes(&g, &olla::sched::orders::pytorch_order(&g));
@@ -152,6 +167,110 @@ fn cmd_optimize(rest: &[String]) -> anyhow::Result<()> {
         human_duration(Duration::from_secs_f64(plan.schedule.solve_secs)),
         human_duration(Duration::from_secs_f64(plan.placement.solve_secs)),
     );
+    Ok(())
+}
+
+fn cmd_plan(rest: &[String]) -> anyhow::Result<()> {
+    let model = flag(rest, "--model").ok_or_else(|| anyhow::anyhow!("--model required"))?;
+    let batch: usize = flag(rest, "--batch").and_then(|v| v.parse().ok()).unwrap_or(1);
+    let scale = parse_scale(rest);
+    let deadline_ms: u64 =
+        flag(rest, "--deadline-ms").and_then(|v| v.parse().ok()).unwrap_or(10_000);
+    let gap: Option<f64> =
+        flag(rest, "--gap").and_then(|v| v.parse::<f64>().ok()).map(|pct| pct / 100.0);
+    let poll_ms: u64 = flag(rest, "--poll-ms").and_then(|v| v.parse().ok()).unwrap_or(500);
+    let g = build_graph(&model, batch, scale)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
+    let baseline =
+        olla::sched::sim::peak_bytes(&g, &olla::sched::orders::pytorch_order(&g));
+    println!(
+        "planning {model} (batch {batch}, {scale:?}) with a {} deadline{}",
+        human_duration(Duration::from_millis(deadline_ms)),
+        gap.map(|gp| format!(" and a {:.1}% gap target", 100.0 * gp)).unwrap_or_default(),
+    );
+    let handle = PlanHandle::spawn(
+        g.clone(),
+        PlannerOptions::default(),
+        Some(Duration::from_millis(deadline_ms)),
+        gap,
+    );
+    loop {
+        let snap = handle.poll();
+        let arena = snap.plan.as_ref().map(|p| human_bytes(p.arena_size));
+        println!(
+            "  t={:>7} plan={} gap={} nodes={} warm-hit={:.0}%",
+            human_duration(Duration::from_secs_f64(snap.elapsed_secs)),
+            arena.unwrap_or_else(|| "-".into()),
+            if snap.gap.is_finite() { format!("{:.2}%", 100.0 * snap.gap) } else { "?".into() },
+            snap.nodes,
+            100.0 * snap.warm_hit_rate,
+        );
+        if snap.phase == PlanPhase::Done {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(poll_ms));
+    }
+    let final_snap = handle.poll();
+    let plan = handle.join();
+    olla::olla::validate_plan(&g, &plan).map_err(|e| anyhow::anyhow!(e))?;
+    println!("final plan (validated):");
+    println!("  pytorch-order peak : {}", human_bytes(baseline));
+    println!(
+        "  olla arena         : {}  ({:.1}% reduction, schedule {})",
+        human_bytes(plan.arena_size),
+        100.0 * (1.0 - plan.arena_size as f64 / baseline.max(1) as f64),
+        plan.schedule.status,
+    );
+    println!("  anytime curve      : {} improvements", final_snap.anytime.len());
+    for (t, bytes) in &final_snap.anytime {
+        println!("    {:>7.2}s  {}", t, human_bytes(*bytes));
+    }
+    Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
+    let batch: usize = flag(rest, "--batch").and_then(|v| v.parse().ok()).unwrap_or(1);
+    let workers: usize = flag(rest, "--workers").and_then(|v| v.parse().ok()).unwrap_or(2);
+    let deadline_ms: u64 =
+        flag(rest, "--deadline-ms").and_then(|v| v.parse().ok()).unwrap_or(10_000);
+    let scale = parse_scale(rest);
+    let names: Vec<String> = match flag(rest, "--models") {
+        Some(list) => list.split(',').map(str::to_string).collect(),
+        None => ZOO.iter().map(|z| z.name.to_string()).collect(),
+    };
+    let svc = PlanService::new(workers);
+    println!(
+        "serving {} plan requests over {} workers ({} deadline each)",
+        names.len(),
+        svc.workers(),
+        human_duration(Duration::from_millis(deadline_ms)),
+    );
+    let mut handles = Vec::new();
+    for name in &names {
+        let g = build_graph(name, batch, scale)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
+        let mut req = PlanRequest::new(g);
+        req.deadline = Some(Duration::from_millis(deadline_ms));
+        handles.push((name.clone(), svc.submit(req)));
+    }
+    let mut t = Table::new(&["model", "arena", "status", "gap", "time"]);
+    for (name, handle) in handles {
+        // Poll only once the request finished, so the gap column reflects
+        // the final solve rather than a queued/mid-search snapshot.
+        while !handle.is_finished() {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        let snap = handle.poll();
+        let plan = handle.join();
+        t.row(vec![
+            name,
+            human_bytes(plan.arena_size),
+            plan.schedule.status.to_string(),
+            if snap.gap.is_finite() { format!("{:.2}%", 100.0 * snap.gap) } else { "?".into() },
+            human_duration(Duration::from_secs_f64(plan.total_secs)),
+        ]);
+    }
+    t.print();
     Ok(())
 }
 

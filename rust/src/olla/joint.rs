@@ -9,11 +9,12 @@
 use super::scheduling::{build_scheduling_model, decode_order, warm_start_assignment};
 use crate::graph::analysis::{never_coresident, ReachMatrix};
 use crate::graph::{Graph, NodeId};
-use crate::ilp::{self, IlpBuilder, Pos, SolveOptions, SolveStatus, VarId};
+use crate::ilp::{self, IlpBuilder, Pos, SolveControl, SolveOptions, SolveStatus, VarId};
 use crate::sched::greedy_order;
 use crate::sched::sim::simulate;
 use crate::util::Stopwatch;
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Result of the joint optimization.
@@ -33,6 +34,17 @@ pub struct JointResult {
 
 /// Solve program (9) for a (small) graph.
 pub fn optimize_joint(g: &Graph, time_limit: Duration) -> JointResult {
+    optimize_joint_controlled(g, time_limit, None)
+}
+
+/// [`optimize_joint`] with an external [`SolveControl`] attached, so the
+/// monolithic solve can be cancelled or watched like the split phases.
+/// The greedy warm start guarantees a valid result even when interrupted.
+pub fn optimize_joint_controlled(
+    g: &Graph,
+    time_limit: Duration,
+    control: Option<Arc<SolveControl>>,
+) -> JointResult {
     let watch = Stopwatch::start();
     let mut sm = build_scheduling_model(g, None);
     // Demote the split-objective variable: eq. 9 minimizes only peak_mem.
@@ -151,6 +163,7 @@ pub fn optimize_joint(g: &Graph, time_limit: Duration) -> JointResult {
             time_limit,
             initial: Some(warm),
             integral_objective: true,
+            control,
             ..Default::default()
         },
     );

@@ -17,6 +17,11 @@ pub mod planner;
 pub mod prealloc;
 pub mod scheduling;
 
-pub use planner::{optimize, validate_plan, MemoryPlan, PlannerOptions};
+pub use planner::{
+    materialize_plan, optimize, optimize_anytime, validate_plan, MemoryPlan, PlanSink,
+    PlannerOptions,
+};
 pub use placement::{optimize_placement, PlacementOptions, PlacementResult};
-pub use scheduling::{optimize_schedule, ScheduleOptions, ScheduleResult};
+pub use scheduling::{
+    optimize_schedule, optimize_schedule_anytime, OrderSink, ScheduleOptions, ScheduleResult,
+};

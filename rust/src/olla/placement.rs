@@ -20,8 +20,9 @@
 
 use crate::alloc::bestfit::{arena_size, best_fit_multi, best_fit_offsets, FitOrder};
 use crate::alloc::{check_placement, resident_lower_bound, PlacementItem};
-use crate::ilp::{self, IlpBuilder, IlpMeta, Pos, SolveOptions, SolveStatus, VarId};
+use crate::ilp::{self, IlpBuilder, IlpMeta, Pos, SolveControl, SolveOptions, SolveStatus, VarId};
 use crate::util::Stopwatch;
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Options for the placement optimization.
@@ -41,6 +42,13 @@ pub struct PlacementOptions {
     /// Worker threads for the branch-and-bound node pool (0 = auto).
     /// Sweeps that already parallelize over model-zoo cases set this to 1.
     pub solver_threads: usize,
+    /// Anytime stopping rule: stop as soon as the incumbent arena is
+    /// proven within this relative gap of the optimum.
+    pub stop_gap: Option<f64>,
+    /// External control handle for the embedded solve (cancellation,
+    /// progress snapshots). The placement ILP always holds a feasible
+    /// best-fit incumbent, so cancelling still yields a valid placement.
+    pub control: Option<Arc<SolveControl>>,
 }
 
 impl Default for PlacementOptions {
@@ -52,6 +60,8 @@ impl Default for PlacementOptions {
             skip_ilp_if_tight: true,
             max_ilp_items: 160,
             solver_threads: 0,
+            stop_gap: None,
+            control: None,
         }
     }
 }
@@ -106,9 +116,17 @@ pub struct PlacementResult {
 /// hurt on their models; this guard preserves the §5.4 zero-fragmentation
 /// guarantee on arbitrary graphs).
 pub fn optimize_placement(items: &[PlacementItem], opts: &PlacementOptions) -> PlacementResult {
+    let watch = Stopwatch::start();
     let first = optimize_placement_once(items, opts);
     if first.fragmentation > 0.0 && opts.use_prealloc {
-        let retry_opts = PlacementOptions { use_prealloc: false, ..opts.clone() };
+        // The retry runs on whatever is left of the single time budget, so
+        // `time_limit` stays a hard cap for the whole placement phase (the
+        // planner's deadline accounting depends on this).
+        let retry_opts = PlacementOptions {
+            use_prealloc: false,
+            time_limit: opts.time_limit.saturating_sub(watch.elapsed()),
+            ..opts.clone()
+        };
         let second = optimize_placement_once(items, &retry_opts);
         if second.arena_size < first.arena_size {
             return PlacementResult { solve_secs: first.solve_secs + second.solve_secs, ..second };
@@ -256,6 +274,8 @@ fn optimize_placement_once(
             initial: Some(warm),
             integral_objective: true,
             threads: opts.solver_threads,
+            stop_gap: opts.stop_gap,
+            control: opts.control.clone(),
             ..Default::default()
         },
     );

@@ -2,15 +2,24 @@
 //! lifetime extraction → §4.5 preplacement → eq. 15 placement → a
 //! [`MemoryPlan`] executable by [`crate::alloc::arena::Arena`].
 
-use super::placement::{optimize_placement, PlacementOptions, PlacementResult};
-use super::scheduling::{optimize_schedule, ScheduleOptions, ScheduleResult};
+use super::placement::{optimize_placement, PlacementMethod, PlacementOptions, PlacementResult};
+use super::scheduling::{
+    optimize_schedule_anytime, OrderSink, ScheduleOptions, ScheduleResult,
+};
 use crate::alloc::arena::ArenaPlan;
-use crate::alloc::{check_placement, items_from_trace};
+use crate::alloc::bestfit::best_fit_multi;
+use crate::alloc::{check_placement, items_from_trace, resident_lower_bound};
 use crate::graph::{EdgeId, Graph, NodeId};
+use crate::ilp::SolveStatus;
 use crate::sched::sim::{check_order, simulate};
 use crate::util::Stopwatch;
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Duration;
+
+/// Callback receiving each improved, validated plan while
+/// [`optimize_anytime`] runs. Fires on a solver worker thread.
+pub type PlanSink = Arc<dyn Fn(MemoryPlan) + Send + Sync>;
 
 /// Planner configuration.
 #[derive(Debug, Clone)]
@@ -21,6 +30,10 @@ pub struct PlannerOptions {
     pub placement: PlacementOptions,
     /// Apply §4.3 (control edges forcing early weight updates).
     pub add_control_edges: bool,
+    /// Whole-plan wall-clock deadline. When set, each phase's time limit is
+    /// clamped to the time remaining, so scheduling *and* placement together
+    /// finish within the budget (the anytime serving contract).
+    pub deadline: Option<Duration>,
 }
 
 impl Default for PlannerOptions {
@@ -29,6 +42,7 @@ impl Default for PlannerOptions {
             schedule: ScheduleOptions::default(),
             placement: PlacementOptions::default(),
             add_control_edges: true,
+            deadline: None,
         }
     }
 }
@@ -45,7 +59,7 @@ impl PlannerOptions {
                 time_limit: Duration::from_secs(15),
                 ..Default::default()
             },
-            add_control_edges: true,
+            ..Default::default()
         }
     }
 
@@ -56,7 +70,7 @@ impl PlannerOptions {
         PlannerOptions {
             schedule: ScheduleOptions { time_limit: cap, ..Default::default() },
             placement: PlacementOptions { time_limit: cap, ..Default::default() },
-            add_control_edges: true,
+            ..Default::default()
         }
     }
 }
@@ -89,6 +103,80 @@ impl MemoryPlan {
 
 /// Run the full OLLA pipeline on a graph.
 pub fn optimize(g: &Graph, opts: &PlannerOptions) -> MemoryPlan {
+    optimize_anytime(g, opts, None)
+}
+
+/// Materialize an execution order into a complete, validated [`MemoryPlan`]
+/// using the fast best-fit placer. This is how mid-solve scheduling
+/// incumbents become servable best-plan-so-far snapshots: the order comes
+/// from an ILP incumbent (not necessarily the optimum), the placement from
+/// the heuristic, and the result passes [`validate_plan`] or is rejected.
+pub fn materialize_plan(
+    g: &Graph,
+    order: Vec<NodeId>,
+    ilp_obj: f64,
+    control_edges_added: usize,
+) -> Result<MemoryPlan, String> {
+    check_order(g, &order)?;
+    let trace = simulate(g, &order);
+    let items = items_from_trace(g, &trace);
+    let (offs, arena) = best_fit_multi(&items, 1);
+    let lb = resident_lower_bound(&items);
+    let mut offsets = HashMap::new();
+    for (k, it) in items.iter().enumerate() {
+        offsets.insert(it.edge, offs[k]);
+    }
+    let schedule = ScheduleResult {
+        order: order.clone(),
+        ilp_peak: ilp_obj.max(0.0).round() as u64,
+        sim_peak: trace.peak_bytes,
+        status: SolveStatus::TimeLimitFeasible,
+        solve_secs: 0.0,
+        incumbents: Vec::new(),
+        model_size: (0, 0),
+        nodes: 0,
+        simplex_iters: 0,
+        warm_attempts: 0,
+        warm_hits: 0,
+    };
+    let placement = PlacementResult {
+        offsets: offs,
+        arena_size: arena,
+        lower_bound: lb,
+        fragmentation: if arena == 0 { 0.0 } else { (arena - lb) as f64 / arena as f64 },
+        method: PlacementMethod::HeuristicFallback,
+        solve_secs: 0.0,
+        incumbents: Vec::new(),
+        model_size: (0, 0),
+        nodes: 0,
+        simplex_iters: 0,
+        warm_attempts: 0,
+        warm_hits: 0,
+    };
+    let plan = MemoryPlan {
+        order,
+        offsets,
+        arena_size: arena,
+        schedule,
+        placement,
+        control_edges_added,
+        total_secs: 0.0,
+    };
+    validate_plan(g, &plan)?;
+    Ok(plan)
+}
+
+/// Run the full OLLA pipeline, streaming each improved, validated plan to
+/// `on_plan` while the solvers work. Snapshots are materialized from
+/// scheduling incumbents via [`materialize_plan`]; the final plan (also
+/// passed to the sink) additionally carries the placement-ILP result. With
+/// [`PlannerOptions::deadline`] set, both phases share one wall-clock
+/// budget — the anytime serving contract behind `serve::PlanHandle`.
+pub fn optimize_anytime(
+    g: &Graph,
+    opts: &PlannerOptions,
+    on_plan: Option<PlanSink>,
+) -> MemoryPlan {
     let watch = Stopwatch::start();
 
     // §4.3 on a working copy (extra edges only — node ids are preserved, so
@@ -100,8 +188,25 @@ pub fn optimize(g: &Graph, opts: &PlannerOptions) -> MemoryPlan {
         0
     };
 
-    // Phase 1: lifetimes (eq. 14).
-    let mut schedule = optimize_schedule(&work, &opts.schedule);
+    // Phase 1: lifetimes (eq. 14), streaming incumbents to the sink as
+    // best-fit-placed provisional plans against the *original* graph.
+    let mut sched_opts = opts.schedule.clone();
+    if let Some(dl) = opts.deadline {
+        // Charge everything that already happened (graph copy, §4.3 pass)
+        // against the whole-pipeline budget, like the placement clamp below.
+        sched_opts.time_limit =
+            sched_opts.time_limit.min(dl.saturating_sub(watch.elapsed()));
+    }
+    let order_sink: Option<OrderSink> = on_plan.as_ref().map(|cb| {
+        let g2 = g.clone();
+        let cb = cb.clone();
+        Arc::new(move |order: Vec<NodeId>, ilp_obj: f64| {
+            if let Ok(plan) = materialize_plan(&g2, order, ilp_obj, control_edges_added) {
+                cb(plan);
+            }
+        }) as OrderSink
+    });
+    let mut schedule = optimize_schedule_anytime(&work, &sched_opts, order_sink);
     debug_assert_eq!(check_order(g, &schedule.order), Ok(()));
     // §4.3 is a solver-speed heuristic; on some graphs the forced-early
     // updates exclude the best order (the w/dw/w_new transient lands on the
@@ -121,11 +226,28 @@ pub fn optimize(g: &Graph, opts: &PlannerOptions) -> MemoryPlan {
         schedule.sim_peak = simulate(g, &schedule.order).peak_bytes;
     }
 
+    // The schedule is now final: publish it (best-fit placed) before the
+    // placement ILP starts, so pollers already hold the chosen order.
+    if let Some(cb) = &on_plan {
+        if let Ok(plan) = materialize_plan(
+            g,
+            schedule.order.clone(),
+            schedule.ilp_peak as f64,
+            control_edges_added,
+        ) {
+            cb(plan);
+        }
+    }
+
     // Phase 2: locations (eq. 15) on the *original* graph's tensors
     // (control edges have size 0 and are never placed).
+    let mut place_opts = opts.placement.clone();
+    if let Some(dl) = opts.deadline {
+        place_opts.time_limit = place_opts.time_limit.min(dl.saturating_sub(watch.elapsed()));
+    }
     let trace = simulate(g, &schedule.order);
     let items = items_from_trace(g, &trace);
-    let placement = optimize_placement(&items, &opts.placement);
+    let placement = optimize_placement(&items, &place_opts);
     debug_assert!(
         check_placement(&items, &placement.offsets, placement.arena_size).is_ok()
     );
@@ -134,7 +256,7 @@ pub fn optimize(g: &Graph, opts: &PlannerOptions) -> MemoryPlan {
     for (k, it) in items.iter().enumerate() {
         offsets.insert(it.edge, placement.offsets[k]);
     }
-    MemoryPlan {
+    let plan = MemoryPlan {
         order: schedule.order.clone(),
         offsets,
         arena_size: placement.arena_size,
@@ -142,7 +264,11 @@ pub fn optimize(g: &Graph, opts: &PlannerOptions) -> MemoryPlan {
         placement,
         control_edges_added,
         total_secs: watch.secs(),
+    };
+    if let Some(cb) = &on_plan {
+        cb(plan.clone());
     }
+    plan
 }
 
 /// Validate a plan against its graph: topological order, in-arena placement,
@@ -169,6 +295,41 @@ mod tests {
     use crate::sched::orders::pytorch_order;
     use crate::sched::sim::peak_bytes;
     use crate::util::quickcheck::{check, ensure};
+
+    #[test]
+    fn anytime_sink_receives_validated_improving_plans() {
+        use std::sync::Mutex;
+        let mut rng = crate::util::rng::Rng::new(3);
+        let g = random_trainlike(&mut rng, 3);
+        let seen: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink_seen = seen.clone();
+        let g2 = g.clone();
+        let sink: PlanSink = Arc::new(move |plan: MemoryPlan| {
+            validate_plan(&g2, &plan).unwrap();
+            sink_seen.lock().unwrap().push(plan.arena_size);
+        });
+        let final_plan = optimize_anytime(&g, &PlannerOptions::fast_test(), Some(sink));
+        validate_plan(&g, &final_plan).unwrap();
+        let arenas = seen.lock().unwrap();
+        assert!(!arenas.is_empty(), "sink never fired");
+        assert_eq!(
+            *arenas.last().unwrap(),
+            final_plan.arena_size,
+            "the last streamed plan must be the final one"
+        );
+    }
+
+    #[test]
+    fn materialize_plan_rejects_invalid_orders() {
+        let g = diamond();
+        let mut order: Vec<crate::graph::NodeId> = g.node_ids().collect();
+        order.reverse(); // sinks before sources: not a topological order
+        assert!(materialize_plan(&g, order, 0.0, 0).is_err());
+        // A valid order materializes into a validated plan.
+        let plan = materialize_plan(&g, pytorch_order(&g), 0.0, 0).unwrap();
+        validate_plan(&g, &plan).unwrap();
+        assert!(plan.arena_size > 0);
+    }
 
     #[test]
     fn fig3_plan_is_tight() {

@@ -10,12 +10,19 @@
 
 use crate::graph::analysis::Spans;
 use crate::graph::{EdgeId, Graph, NodeId};
-use crate::ilp::{self, IlpBuilder, Model, SolveOptions, SolveStatus, VarId};
+use crate::ilp::{self, IlpBuilder, Model, SolveControl, SolveOptions, SolveStatus, VarId};
 use crate::sched::sim::{check_order, simulate};
 use crate::sched::greedy_order;
 use crate::util::Stopwatch;
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Duration;
+
+/// Callback receiving each improved schedule incumbent as a decoded
+/// execution order plus its ILP objective (bytes). Runs on a solver worker
+/// thread; used by the `serve` layer to materialize best-plan-so-far
+/// snapshots while the search keeps improving.
+pub type OrderSink = Arc<dyn Fn(Vec<NodeId>, f64) + Send + Sync>;
 
 /// Options for the scheduling optimization.
 #[derive(Debug, Clone)]
@@ -44,6 +51,16 @@ pub struct ScheduleOptions {
     /// Worker threads for the branch-and-bound node pool (0 = auto).
     /// Sweeps that already parallelize over model-zoo cases set this to 1.
     pub solver_threads: usize,
+    /// Anytime stopping rule: stop as soon as the incumbent is proven
+    /// within this relative gap of the optimum.
+    pub stop_gap: Option<f64>,
+    /// External control handle for the embedded solve (cancellation,
+    /// progress snapshots, incumbent callbacks). Note: when an `OrderSink`
+    /// is passed to [`optimize_schedule_anytime`], the control's incumbent
+    /// callback slot is taken over for incumbent decoding (installed for
+    /// the solve, cleared afterwards) — don't install your own callback on
+    /// a control you hand in together with a sink.
+    pub control: Option<Arc<SolveControl>>,
 }
 
 impl Default for ScheduleOptions {
@@ -56,6 +73,8 @@ impl Default for ScheduleOptions {
             max_nodes: u64::MAX,
             max_ilp_rows: 3500,
             solver_threads: 0,
+            stop_gap: None,
+            control: None,
         }
     }
 }
@@ -294,6 +313,23 @@ pub fn decode_order(g: &Graph, sm: &SchedulingModel, values: &[f64]) -> Vec<Node
 
 /// Run the full eq.-14 optimization for a graph.
 pub fn optimize_schedule(g: &Graph, opts: &ScheduleOptions) -> ScheduleResult {
+    optimize_schedule_anytime(g, opts, None)
+}
+
+/// Like [`optimize_schedule`], but streams every improved incumbent to
+/// `on_order` as a decoded execution order while the search runs. The sink
+/// fires on the warm-start incumbent too, so callers obtain a first valid
+/// order almost immediately; [`ScheduleOptions::control`] adds cooperative
+/// cancellation and bound snapshots on top.
+///
+/// When both a control and a sink are supplied, the control's incumbent
+/// callback slot is used (and cleared afterwards) to decode incumbents —
+/// any callback previously installed on that control is replaced.
+pub fn optimize_schedule_anytime(
+    g: &Graph,
+    opts: &ScheduleOptions,
+    on_order: Option<OrderSink>,
+) -> ScheduleResult {
     let watch = Stopwatch::start();
     let timesteps = opts.timesteps.unwrap_or_else(|| {
         let crit = crate::graph::analysis::forward_levels(g)
@@ -304,7 +340,7 @@ pub fn optimize_schedule(g: &Graph, opts: &ScheduleOptions) -> ScheduleResult {
             + 1;
         g.num_nodes().min(crit + opts.horizon_slack)
     });
-    let sm = build_scheduling_model(g, Some(timesteps));
+    let sm = Arc::new(build_scheduling_model(g, Some(timesteps)));
     let model_size = (sm.model.num_vars(), sm.model.num_cons());
 
     let lb0: Vec<f64> = sm.model.vars.iter().map(|v| v.lb).collect();
@@ -318,6 +354,9 @@ pub fn optimize_schedule(g: &Graph, opts: &ScheduleOptions) -> ScheduleResult {
         let trace = simulate(g, &order);
         let wa = warm_start_assignment(g, &sm, &order);
         let ilp_peak = wa[sm.peak.0].round() as u64;
+        if let Some(sink) = &on_order {
+            sink(order.clone(), ilp_peak as f64);
+        }
         return ScheduleResult {
             order,
             ilp_peak,
@@ -333,6 +372,25 @@ pub fn optimize_schedule(g: &Graph, opts: &ScheduleOptions) -> ScheduleResult {
         };
     }
 
+    // An order sink needs a control to receive incumbent callbacks from
+    // the solver; make a private one when the caller did not supply any.
+    let control = match (&opts.control, &on_order) {
+        (Some(c), _) => Some(c.clone()),
+        (None, Some(_)) => Some(SolveControl::new()),
+        (None, None) => None,
+    };
+    if let (Some(ctrl), Some(sink)) = (&control, &on_order) {
+        // Decode raw incumbents where the model lives: the callback owns
+        // clones of the graph and the built model, so the serve layer never
+        // needs to see ILP variable indices.
+        let smc = sm.clone();
+        let gc = g.clone();
+        let sink = sink.clone();
+        ctrl.set_on_incumbent(Some(Box::new(move |x: &[f64], obj: f64| {
+            sink(decode_order(&gc, &smc, x), obj);
+        })));
+    }
+
     let initial = if opts.warm_start {
         Some(warm_start_assignment(g, &sm, &greedy_order(g)))
     } else {
@@ -344,9 +402,16 @@ pub fn optimize_schedule(g: &Graph, opts: &ScheduleOptions) -> ScheduleResult {
         integral_objective: true,
         max_nodes: opts.max_nodes,
         threads: opts.solver_threads,
+        stop_gap: opts.stop_gap,
+        control: control.clone(),
         ..Default::default()
     };
     let sol = ilp::solve(&sm.model, &solve_opts);
+    if let Some(ctrl) = &control {
+        // Drop the decode callback (and its model clone) now that the
+        // solve is over.
+        ctrl.set_on_incumbent(None);
+    }
 
     let (order, ilp_peak) = if sol.has_solution() {
         (decode_order(g, &sm, &sol.values), sol.objective.round() as u64)

@@ -115,7 +115,7 @@ impl Trainer {
                 ..Default::default()
             },
             placement: olla::PlacementOptions { time_limit, ..Default::default() },
-            add_control_edges: true,
+            ..Default::default()
         };
         let plan = olla::optimize(&g, &opts);
         olla::validate_plan(&g, &plan).map_err(|e| anyhow::anyhow!(e))?;

@@ -1,0 +1,427 @@
+//! [`PlanHandle`]: an interruptible, pollable view of one running plan.
+//!
+//! A handle wraps the anytime planner pipeline
+//! ([`crate::olla::planner::optimize_anytime`]) running on a worker thread:
+//! the scheduling ILP streams every improved incumbent out through the
+//! solver's incumbent callback, the planner materializes each one into a
+//! complete validated [`MemoryPlan`] (best-fit placed), and the handle keeps
+//! the best plan seen so far plus the anytime curve `(seconds, arena
+//! bytes)`. Callers poll at any moment and always receive a plan that
+//! passes [`crate::olla::validate_plan`] — long before the solve proves
+//! optimality.
+
+use crate::graph::Graph;
+use crate::ilp::SolveControl;
+use crate::olla::planner::{optimize_anytime, MemoryPlan, PlanSink, PlannerOptions};
+use crate::olla::validate_plan;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Lifecycle phase of a plan request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanPhase {
+    /// Submitted but not yet picked up by a worker.
+    Queued,
+    /// The planner pipeline is running.
+    Running,
+    /// The pipeline finished (optimal, deadline, gap target, or cancel).
+    Done,
+}
+
+/// One poll of a running plan: the best validated plan so far plus live
+/// solver statistics from the scheduling/placement controls.
+#[derive(Debug, Clone)]
+pub struct PlanPoll {
+    /// Best validated plan so far (`None` until the first incumbent has
+    /// been decoded — typically milliseconds after the solve starts, since
+    /// the greedy warm start seeds the first incumbent).
+    pub plan: Option<MemoryPlan>,
+    /// Where the request is in its lifecycle.
+    pub phase: PlanPhase,
+    /// Seconds since the handle was created.
+    pub elapsed_secs: f64,
+    /// Scheduling-ILP incumbent objective (bytes; `INFINITY` before one).
+    pub incumbent_obj: f64,
+    /// Scheduling-ILP proven lower bound (`NEG_INFINITY` until known).
+    pub best_bound: f64,
+    /// Relative scheduling gap (`INFINITY` until both sides are known).
+    pub gap: f64,
+    /// Branch-and-bound nodes explored across both phases.
+    pub nodes: u64,
+    /// Simplex iterations across both phases.
+    pub simplex_iters: u64,
+    /// Child LPs that attempted a warm start, across both phases.
+    pub warm_attempts: u64,
+    /// Warm-start attempts accepted, across both phases.
+    pub warm_hits: u64,
+    /// Warm-start acceptance rate across both phases.
+    pub warm_hit_rate: f64,
+    /// Anytime curve: `(seconds, arena bytes)` per improved plan.
+    pub anytime: Vec<(f64, u64)>,
+}
+
+struct HandleState {
+    phase: PlanPhase,
+    best: Option<MemoryPlan>,
+    final_plan: Option<MemoryPlan>,
+    curve: Vec<(f64, u64)>,
+    failed: bool,
+}
+
+pub(crate) struct HandleInner {
+    graph: Graph,
+    sched_control: Arc<SolveControl>,
+    place_control: Arc<SolveControl>,
+    state: Mutex<HandleState>,
+    done: Condvar,
+    started: Instant,
+}
+
+impl HandleInner {
+    /// Fold one plan into the state: the anytime curve gets a point only
+    /// for the first plan and strict arena improvements (so its length is
+    /// the number of distinct improvements), while `best` also absorbs
+    /// equal-arena plans — the final pipeline plan replaces an equal
+    /// provisional one because it carries real solver metadata.
+    fn accept(st: &mut HandleState, elapsed: f64, plan: &MemoryPlan) {
+        let improved =
+            st.best.as_ref().map_or(true, |b| plan.arena_size < b.arena_size);
+        if improved || st.curve.is_empty() {
+            st.curve.push((elapsed, plan.arena_size));
+        }
+        let acceptable =
+            st.best.as_ref().map_or(true, |b| plan.arena_size <= b.arena_size);
+        if acceptable {
+            st.best = Some(plan.clone());
+        }
+    }
+
+    /// Accept a plan snapshot from the pipeline if it (re-)validates.
+    fn publish(&self, plan: MemoryPlan) {
+        if validate_plan(&self.graph, &plan).is_err() {
+            return; // defensive: materialize_plan already validated
+        }
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let mut st = self.state.lock().unwrap();
+        HandleInner::accept(&mut st, elapsed, &plan);
+    }
+
+    fn finish(&self, plan: MemoryPlan) {
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let mut st = self.state.lock().unwrap();
+        HandleInner::accept(&mut st, elapsed, &plan);
+        st.final_plan = Some(plan);
+        st.phase = PlanPhase::Done;
+        drop(st);
+        self.done.notify_all();
+    }
+
+    fn fail(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.failed = true;
+        st.phase = PlanPhase::Done;
+        drop(st);
+        self.done.notify_all();
+    }
+}
+
+/// A cancellable, pollable plan request over the anytime planner.
+///
+/// `poll()` never blocks and always returns the best `validate_plan`-clean
+/// plan found so far; `cancel()` stops both embedded solves cooperatively
+/// (the next poll/join still yields a valid plan); `join()` blocks until
+/// the pipeline finishes and returns the best plan.
+///
+/// ```no_run
+/// use olla::models::{build_graph, ModelScale};
+/// use olla::olla::PlannerOptions;
+/// use olla::serve::PlanHandle;
+/// use std::time::Duration;
+///
+/// let g = build_graph("alexnet", 1, ModelScale::Reduced).unwrap();
+/// let handle = PlanHandle::spawn(
+///     g,
+///     PlannerOptions::default(),
+///     Some(Duration::from_millis(500)), // deadline
+///     Some(0.05),                       // stop at a 5% proven gap
+/// );
+/// let snap = handle.poll(); // best plan so far, any time
+/// if let Some(plan) = &snap.plan {
+///     println!("arena so far: {} bytes", plan.arena_size);
+/// }
+/// let best = handle.join(); // final best-within-deadline plan
+/// println!("served plan: {} bytes", best.arena_size);
+/// ```
+pub struct PlanHandle {
+    inner: Arc<HandleInner>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PlanHandle {
+    /// Build a handle plus the job that will run the pipeline. Used by
+    /// [`crate::serve::PlanService`] to execute requests on its own worker
+    /// pool; `spawn` is the one-request convenience wrapper.
+    pub(crate) fn make(
+        graph: Graph,
+        mut opts: PlannerOptions,
+        deadline: Option<Duration>,
+        gap: Option<f64>,
+    ) -> (PlanHandle, Box<dyn FnOnce() + Send + 'static>) {
+        let sched_control = SolveControl::new();
+        let place_control = SolveControl::new();
+        opts.schedule.control = Some(sched_control.clone());
+        opts.placement.control = Some(place_control.clone());
+        if deadline.is_some() {
+            opts.deadline = deadline;
+        }
+        if gap.is_some() {
+            opts.schedule.stop_gap = gap;
+            opts.placement.stop_gap = gap;
+        }
+        let inner = Arc::new(HandleInner {
+            graph,
+            sched_control,
+            place_control,
+            state: Mutex::new(HandleState {
+                phase: PlanPhase::Queued,
+                best: None,
+                final_plan: None,
+                curve: Vec::new(),
+                failed: false,
+            }),
+            done: Condvar::new(),
+            started: Instant::now(),
+        });
+        let worker = inner.clone();
+        let body: Box<dyn FnOnce() + Send + 'static> = Box::new(move || {
+            worker.state.lock().unwrap().phase = PlanPhase::Running;
+            let sink: PlanSink = {
+                let pub_to = worker.clone();
+                Arc::new(move |plan: MemoryPlan| pub_to.publish(plan))
+            };
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                optimize_anytime(&worker.graph, &opts, Some(sink))
+            }));
+            match result {
+                Ok(plan) => worker.finish(plan),
+                Err(_) => worker.fail(),
+            }
+        });
+        (PlanHandle { inner, thread: None }, body)
+    }
+
+    /// Start planning `graph` on a dedicated background thread. `deadline`
+    /// caps the whole pipeline (scheduling + placement share the budget);
+    /// `gap` stops each solve once the incumbent is proven within that
+    /// relative gap. Both `None` means run to proven optimality (or the
+    /// per-phase limits in `opts`).
+    pub fn spawn(
+        graph: Graph,
+        opts: PlannerOptions,
+        deadline: Option<Duration>,
+        gap: Option<f64>,
+    ) -> PlanHandle {
+        let (mut handle, body) = PlanHandle::make(graph, opts, deadline, gap);
+        handle.thread = Some(std::thread::spawn(body));
+        handle
+    }
+
+    /// Snapshot the best plan so far and the live solver statistics.
+    /// Never blocks on the solve.
+    pub fn poll(&self) -> PlanPoll {
+        let (plan, phase, curve) = {
+            let st = self.inner.state.lock().unwrap();
+            (st.best.clone(), st.phase, st.curve.clone())
+        };
+        let sp = self.inner.sched_control.progress();
+        let pp = self.inner.place_control.progress();
+        let attempts = sp.warm_attempts + pp.warm_attempts;
+        let hits = sp.warm_hits + pp.warm_hits;
+        PlanPoll {
+            plan,
+            phase,
+            elapsed_secs: self.inner.started.elapsed().as_secs_f64(),
+            incumbent_obj: sp.incumbent_obj,
+            best_bound: sp.best_bound,
+            gap: sp.rel_gap(),
+            nodes: sp.nodes + pp.nodes,
+            simplex_iters: sp.simplex_iters + pp.simplex_iters,
+            warm_attempts: attempts,
+            warm_hits: hits,
+            warm_hit_rate: if attempts == 0 { 0.0 } else { hits as f64 / attempts as f64 },
+            anytime: curve,
+        }
+    }
+
+    /// Ask both embedded solves to stop at the next node boundary (the LP
+    /// mid-pivot aborts within 64 iterations). The pipeline then finalizes
+    /// its best incumbent; poll/join still return a valid plan.
+    pub fn cancel(&self) {
+        self.inner.sched_control.cancel();
+        self.inner.place_control.cancel();
+    }
+
+    /// True once the pipeline has finished (for any reason).
+    pub fn is_finished(&self) -> bool {
+        self.inner.state.lock().unwrap().phase == PlanPhase::Done
+    }
+
+    /// Block until the pipeline finishes and return the best plan found.
+    ///
+    /// In the common case this is the pipeline's final plan, which carries
+    /// real solver metadata (status, node counts, incumbent log). On the
+    /// rare instances where an earlier streamed snapshot ended up with a
+    /// strictly smaller arena than the final pipeline plan, that snapshot
+    /// is returned instead — its `schedule.status` honestly reads
+    /// time-limit/feasible (it is an unproven incumbent, whatever the
+    /// final solve proved about a *different* order), and its solver
+    /// counters are zero. `rel_gap`-style reporting should treat a
+    /// non-`Optimal` status as "returned plan not proven optimal".
+    ///
+    /// # Panics
+    /// Panics if the planner worker panicked before producing any plan.
+    pub fn join(mut self) -> MemoryPlan {
+        {
+            let st = self.inner.state.lock().unwrap();
+            let _st = self
+                .inner
+                .done
+                .wait_while(st, |s| s.phase != PlanPhase::Done)
+                .unwrap();
+        }
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+        let st = self.inner.state.lock().unwrap();
+        match (st.final_plan.clone(), st.best.clone()) {
+            (Some(fin), Some(b)) => {
+                if b.arena_size < fin.arena_size {
+                    b
+                } else {
+                    fin
+                }
+            }
+            (Some(fin), None) => fin,
+            (None, Some(b)) => b,
+            (None, None) => {
+                if st.failed {
+                    panic!("plan worker panicked before producing a plan");
+                }
+                panic!("plan request finished without a plan");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::random::random_trainlike;
+    use crate::util::rng::Rng;
+
+    fn small_graph() -> Graph {
+        let mut rng = Rng::new(7);
+        random_trainlike(&mut rng, 3)
+    }
+
+    fn quick_opts() -> PlannerOptions {
+        PlannerOptions::fast_test()
+    }
+
+    #[test]
+    fn poll_before_any_incumbent_is_empty_and_queued() {
+        let g = small_graph();
+        let (handle, body) = PlanHandle::make(g.clone(), quick_opts(), None, None);
+        let snap = handle.poll();
+        assert_eq!(snap.phase, PlanPhase::Queued);
+        assert!(snap.plan.is_none());
+        assert!(snap.anytime.is_empty());
+        // Run the job inline; the handle must then hold a validated plan.
+        body();
+        let snap = handle.poll();
+        assert_eq!(snap.phase, PlanPhase::Done);
+        let plan = snap.plan.expect("finished request must hold a plan");
+        validate_plan(&g, &plan).unwrap();
+        assert!(!snap.anytime.is_empty(), "anytime curve must be recorded");
+        let final_plan = handle.join();
+        validate_plan(&g, &final_plan).unwrap();
+        assert_eq!(final_plan.arena_size, plan.arena_size);
+    }
+
+    #[test]
+    fn poll_mid_search_returns_validated_plan() {
+        let g = small_graph();
+        let handle = PlanHandle::spawn(g.clone(), quick_opts(), None, None);
+        // The warm-start incumbent publishes a plan almost immediately;
+        // poll until it shows up (or the solve finishes with one).
+        let mut seen_plan = false;
+        for _ in 0..2000 {
+            let snap = handle.poll();
+            if let Some(plan) = snap.plan {
+                validate_plan(&g, &plan).unwrap();
+                seen_plan = true;
+                break;
+            }
+            if snap.phase == PlanPhase::Done {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let final_plan = handle.join();
+        validate_plan(&g, &final_plan).unwrap();
+        assert!(
+            seen_plan || final_plan.arena_size > 0,
+            "poll never surfaced a plan and the final plan is degenerate"
+        );
+    }
+
+    #[test]
+    fn cancel_is_prompt_and_still_yields_a_valid_plan() {
+        let mut rng = Rng::new(11);
+        let g = random_trainlike(&mut rng, 5);
+        // Generous per-phase limits: only cancel can end this quickly.
+        let opts = PlannerOptions::default();
+        let handle = PlanHandle::spawn(g.clone(), opts, None, None);
+        std::thread::sleep(Duration::from_millis(50));
+        let t0 = Instant::now();
+        handle.cancel();
+        let plan = handle.join();
+        // Cancellation is cooperative (node boundary / 64 LP pivots), so
+        // allow a generous-but-bounded window.
+        assert!(
+            t0.elapsed() < Duration::from_secs(20),
+            "cancel took {:?}",
+            t0.elapsed()
+        );
+        validate_plan(&g, &plan).unwrap();
+    }
+
+    #[test]
+    fn deadline_is_respected_within_tolerance() {
+        let mut rng = Rng::new(13);
+        let g = random_trainlike(&mut rng, 5);
+        let deadline = Duration::from_millis(800);
+        let t0 = Instant::now();
+        let handle =
+            PlanHandle::spawn(g.clone(), PlannerOptions::default(), Some(deadline), None);
+        let plan = handle.join();
+        // Without the deadline the per-phase caps are 300 s each; finishing
+        // well under that proves the deadline propagated. The tolerance
+        // covers model building and decode overhead on slow CI hosts.
+        assert!(
+            t0.elapsed() < deadline + Duration::from_secs(30),
+            "deadline ignored: took {:?}",
+            t0.elapsed()
+        );
+        validate_plan(&g, &plan).unwrap();
+    }
+
+    #[test]
+    fn gap_target_plans_validate() {
+        let g = small_graph();
+        let handle =
+            PlanHandle::spawn(g.clone(), quick_opts(), None, Some(0.25));
+        let plan = handle.join();
+        validate_plan(&g, &plan).unwrap();
+    }
+}

@@ -1,0 +1,30 @@
+//! Anytime plan serving: best-plan-so-far over the branch-and-bound pool.
+//!
+//! OLLA's pitch is that planning "only takes minutes if not seconds", which
+//! makes an *anytime* contract the natural serving API: the parallel B&B
+//! engine maintains a shared incumbent the whole time it runs, so a caller
+//! should never have to block until optimality — it can ask for the best
+//! plan found so far at any deadline and trade plan quality for latency
+//! explicitly.
+//!
+//! Two layers:
+//!
+//! * [`PlanHandle`] — one request: spawn the planner pipeline on a worker,
+//!   `poll()` the best `validate_plan`-clean plan at any moment (scheduling
+//!   incumbents are decoded and best-fit placed on the fly), `cancel()`
+//!   cooperatively, `join()` for the final plan. Deadlines and proven-gap
+//!   targets stop the solve early with honest bounds — never an `Optimal`
+//!   label on an interrupted solve.
+//! * [`PlanService`] — a FIFO worker pool multiplexing many requests over a
+//!   bounded number of pipelines, returning a [`PlanHandle`] per
+//!   submission.
+//!
+//! The CLI front ends live in `main.rs` (`olla plan --deadline-ms --gap`,
+//! `olla serve`), and the anytime curves recorded by the handles feed the
+//! Figure 10 benchmark report.
+
+pub mod handle;
+pub mod service;
+
+pub use handle::{PlanHandle, PlanPhase, PlanPoll};
+pub use service::{PlanRequest, PlanService};

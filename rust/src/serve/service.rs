@@ -1,0 +1,176 @@
+//! [`PlanService`]: a worker pool that queues plan requests.
+//!
+//! The service bounds how many planner pipelines run concurrently (each
+//! pipeline already parallelizes its branch & bound internally) and hands
+//! every submission back as a [`PlanHandle`], so callers poll, cancel and
+//! join exactly as with a dedicated thread. Requests are served FIFO.
+
+use super::handle::PlanHandle;
+use crate::graph::Graph;
+use crate::olla::planner::PlannerOptions;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// One plan request: a graph plus planner options and anytime limits.
+pub struct PlanRequest {
+    /// The training graph to plan memory for.
+    pub graph: Graph,
+    /// Planner configuration (per-phase limits, control edges, …).
+    pub opts: PlannerOptions,
+    /// Whole-pipeline deadline, measured from when a worker picks the
+    /// request up (queue wait is not counted).
+    pub deadline: Option<Duration>,
+    /// Stop each embedded solve at this proven relative gap.
+    pub gap: Option<f64>,
+}
+
+impl PlanRequest {
+    /// A request with default options and no anytime limits.
+    pub fn new(graph: Graph) -> PlanRequest {
+        PlanRequest { graph, opts: PlannerOptions::default(), deadline: None, gap: None }
+    }
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct ServiceShared {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// A fixed pool of planner workers serving queued [`PlanRequest`]s.
+///
+/// Dropping the service stops the workers after the queued jobs drain;
+/// cancel outstanding handles first for a prompt shutdown.
+pub struct PlanService {
+    shared: Arc<ServiceShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl PlanService {
+    /// Start a service with `workers` planner threads (`0` = one per
+    /// available core, capped at 4 — each pipeline multiplies out into its
+    /// own branch-and-bound pool).
+    pub fn new(workers: usize) -> PlanService {
+        let n = if workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4)
+        } else {
+            workers
+        };
+        let shared = Arc::new(ServiceShared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let mut handles = Vec::with_capacity(n);
+        for _ in 0..n {
+            let sh = shared.clone();
+            handles.push(std::thread::spawn(move || loop {
+                let job = {
+                    let mut q = sh.queue.lock().unwrap();
+                    loop {
+                        if let Some(j) = q.pop_front() {
+                            break j;
+                        }
+                        if sh.shutdown.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        q = sh.cv.wait(q).unwrap();
+                    }
+                };
+                job();
+            }));
+        }
+        PlanService { shared, workers: handles }
+    }
+
+    /// Queue a request and return its handle immediately. The handle's
+    /// phase stays `Queued` until a worker picks the request up.
+    pub fn submit(&self, req: PlanRequest) -> PlanHandle {
+        let (handle, body) = PlanHandle::make(req.graph, req.opts, req.deadline, req.gap);
+        self.shared.queue.lock().unwrap().push_back(body);
+        self.shared.cv.notify_one();
+        handle
+    }
+
+    /// Requests waiting for a worker (excludes the ones already running).
+    pub fn pending(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    /// Number of worker threads in the pool.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for PlanService {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::random::random_trainlike;
+    use crate::olla::validate_plan;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn service_runs_queued_requests_to_valid_plans() {
+        let svc = PlanService::new(2);
+        assert_eq!(svc.workers(), 2);
+        let mut rng = Rng::new(21);
+        let graphs: Vec<_> = (0..3).map(|_| random_trainlike(&mut rng, 2)).collect();
+        let handles: Vec<_> = graphs
+            .iter()
+            .map(|g| {
+                let mut req = PlanRequest::new(g.clone());
+                req.opts = PlannerOptions::fast_test();
+                req.deadline = Some(Duration::from_secs(10));
+                svc.submit(req)
+            })
+            .collect();
+        for (g, h) in graphs.iter().zip(handles) {
+            let plan = h.join();
+            validate_plan(g, &plan).unwrap();
+        }
+        assert_eq!(svc.pending(), 0);
+    }
+
+    #[test]
+    fn queued_requests_report_queued_phase() {
+        // A single-worker service with a running job keeps later
+        // submissions queued; their handles must say so.
+        let svc = PlanService::new(1);
+        let mut rng = Rng::new(23);
+        let g1 = random_trainlike(&mut rng, 3);
+        let g2 = random_trainlike(&mut rng, 2);
+        let h1 = svc.submit(PlanRequest {
+            graph: g1.clone(),
+            opts: PlannerOptions::fast_test(),
+            deadline: Some(Duration::from_secs(5)),
+            gap: None,
+        });
+        let h2 = svc.submit(PlanRequest {
+            graph: g2.clone(),
+            opts: PlannerOptions::fast_test(),
+            deadline: Some(Duration::from_secs(5)),
+            gap: None,
+        });
+        // h2 is either still queued or already running/done once h1 ends;
+        // both handles must eventually produce valid plans.
+        let p1 = h1.join();
+        validate_plan(&g1, &p1).unwrap();
+        let p2 = h2.join();
+        validate_plan(&g2, &p2).unwrap();
+    }
+}

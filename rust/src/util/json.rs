@@ -14,11 +14,17 @@ use std::fmt;
 /// A dynamically-typed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (JSON does not distinguish integers from floats).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array of values.
     Arr(Vec<Json>),
+    /// An object (sorted keys, for deterministic serialization).
     Obj(BTreeMap<String, Json>),
 }
 
