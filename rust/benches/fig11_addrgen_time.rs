@@ -8,7 +8,9 @@
 //! (simplex iterations, B&B nodes, warm-start hit rate) so engine
 //! efficiency is tracked alongside wall-clock.
 
-use olla::bench_support::{fmt_secs, phase_cap, section, solver_stats_json, BenchReport};
+use olla::bench_support::{
+    bench_solver_threads, fmt_secs, phase_cap, section, solver_stats_json, BenchReport,
+};
 use olla::coordinator::{fragmentation_sweep, zoo_cases, Table};
 use olla::models::ModelScale;
 use olla::olla::PlacementOptions;
@@ -17,7 +19,11 @@ use olla::util::median;
 
 fn main() {
     section("Figure 11 — fragmentation elimination (address generation) times");
-    let opts = PlacementOptions { time_limit: phase_cap(), ..Default::default() };
+    let opts = PlacementOptions {
+        time_limit: phase_cap(),
+        solver_threads: bench_solver_threads(),
+        ..Default::default()
+    };
     let cases = zoo_cases(&[1, 32], ModelScale::Reduced);
     // Cases run serially (threads = 1) so per-case wall-clock matches the
     // paper's protocol — the solver's own node pool still parallelizes

@@ -7,7 +7,9 @@
 //! (simplex iterations, B&B nodes, warm-start hit rate) so engine
 //! efficiency is tracked alongside wall-clock.
 
-use olla::bench_support::{fmt_secs, phase_cap, section, solver_stats_json, BenchReport};
+use olla::bench_support::{
+    bench_solver_threads, fmt_secs, phase_cap, section, solver_stats_json, BenchReport,
+};
 use olla::coordinator::{reorder_sweep, zoo_cases, Table};
 use olla::models::ModelScale;
 use olla::olla::ScheduleOptions;
@@ -16,7 +18,11 @@ use olla::util::median;
 
 fn main() {
     section("Figure 9 — node ordering times");
-    let opts = ScheduleOptions { time_limit: phase_cap(), ..Default::default() };
+    let opts = ScheduleOptions {
+        time_limit: phase_cap(),
+        solver_threads: bench_solver_threads(),
+        ..Default::default()
+    };
     let cases = zoo_cases(&[1, 32], ModelScale::Reduced);
     // Cases run serially (threads = 1) so per-case wall-clock matches the
     // paper's protocol — the solver's own node pool still parallelizes

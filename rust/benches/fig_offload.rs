@@ -1,0 +1,84 @@
+//! Offload frontier: peak device memory vs. bytes offloaded per zoo
+//! model under constrained device capacities (no paper figure — this is
+//! the memory-topology extension on top of eq. 15).
+//!
+//! For each model the PyTorch-order lifetimes are placed once
+//! unconstrained, then against device+host topologies whose device
+//! capacity is a fraction of the unconstrained arena. Writes
+//! `BENCH_fig_offload.json`: one row per (model, capacity fraction) with
+//! the device peak, the bytes offloaded, the transfer cost and the solver
+//! statistics — the frontier the region-aware placement ILP traces.
+
+use olla::bench_support::{
+    bench_solver_threads, fmt_secs, has_flag, phase_cap, section, solver_stats_json, BenchReport,
+};
+use olla::coordinator::{offload_sweep, zoo_cases, Table};
+use olla::models::ModelScale;
+use olla::olla::PlacementOptions;
+use olla::util::human_bytes;
+use olla::util::json::{num, obj, s, Json};
+
+fn main() {
+    section("Offload frontier — peak device memory vs bytes offloaded");
+    let fractions = [0.9, 0.75, 0.5];
+    let host_penalty = 0.5; // objective cost per offloaded byte
+    let opts = PlacementOptions {
+        time_limit: phase_cap(),
+        solver_threads: bench_solver_threads(),
+        ..Default::default()
+    };
+    let cases = zoo_cases(&[1], ModelScale::Reduced);
+    let threads = if has_flag("--serial") { 1 } else { 0 };
+    let rows = offload_sweep(&cases, &fractions, host_penalty, &opts, threads);
+
+    let mut table = Table::new(&[
+        "model", "cap%", "device cap", "device peak", "offloaded", "ok", "method", "time",
+    ]);
+    let mut report = BenchReport::new("fig_offload");
+    let mut satisfied = 0usize;
+    let mut offloading = 0usize;
+    for row in &rows {
+        if row.cap_satisfied {
+            satisfied += 1;
+        }
+        if row.cap_satisfied && row.host_bytes > 0 {
+            offloading += 1;
+        }
+        table.row(vec![
+            row.model.clone(),
+            format!("{:.0}%", 100.0 * row.cap_fraction),
+            human_bytes(row.device_cap),
+            human_bytes(row.device_peak),
+            human_bytes(row.host_bytes),
+            if row.cap_satisfied { "yes".into() } else { "NO".into() },
+            row.method.clone(),
+            fmt_secs(row.solve_secs),
+        ]);
+        report.push(obj(vec![
+            ("model", s(&row.model)),
+            ("batch", num(row.batch as f64)),
+            ("cap_fraction", num(row.cap_fraction)),
+            ("device_cap_bytes", num(row.device_cap as f64)),
+            ("unconstrained_peak_bytes", num(row.unconstrained_peak as f64)),
+            ("device_peak_bytes", num(row.device_peak as f64)),
+            ("host_bytes", num(row.host_bytes as f64)),
+            ("transfer_cost", num(row.transfer_cost)),
+            ("cap_satisfied", Json::Bool(row.cap_satisfied)),
+            ("method", s(&row.method)),
+            ("solve_secs", num(row.solve_secs)),
+            (
+                "solver",
+                solver_stats_json(row.simplex_iters, row.nodes, row.warm_attempts, row.warm_hits),
+            ),
+        ]));
+    }
+    table.print();
+    println!(
+        "{satisfied}/{} capacity cases satisfied; {offloading} satisfied by actually offloading",
+        rows.len()
+    );
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench report: {e}"),
+    }
+}

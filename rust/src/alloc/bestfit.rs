@@ -191,6 +191,35 @@ pub fn best_fit_multi(items: &[PlacementItem], align: u64) -> (Vec<u64>, u64) {
     best.unwrap_or((Vec::new(), 0))
 }
 
+/// Place items independently per memory region: the items assigned to
+/// each region (by `region_of`) are packed with [`best_fit_multi`] as if
+/// they were alone — cross-region pairs never constrain each other.
+/// Returns `(offsets, per-region arena sizes)`. With one region this is
+/// exactly `best_fit_multi` (the bit-identical single-topology rail).
+pub fn best_fit_regions(
+    items: &[PlacementItem],
+    region_of: &[usize],
+    num_regions: usize,
+    align: u64,
+) -> (Vec<u64>, Vec<u64>) {
+    debug_assert_eq!(items.len(), region_of.len());
+    let mut offsets = vec![0u64; items.len()];
+    let mut sizes = vec![0u64; num_regions];
+    for k in 0..num_regions {
+        let idxs: Vec<usize> = (0..items.len()).filter(|&i| region_of[i] == k).collect();
+        if idxs.is_empty() {
+            continue;
+        }
+        let sub: Vec<PlacementItem> = idxs.iter().map(|&i| items[i]).collect();
+        let (sub_offs, sz) = best_fit_multi(&sub, align);
+        for (pos, &i) in idxs.iter().enumerate() {
+            offsets[i] = sub_offs[pos];
+        }
+        sizes[k] = sz;
+    }
+    (offsets, sizes)
+}
+
 /// First-fit-by-offset following an explicit item order.
 fn place_in_order(items: &[PlacementItem], order: &[usize], align: u64) -> Vec<u64> {
     let n = items.len();
@@ -277,6 +306,45 @@ mod tests {
             assert_eq!(o % 64, 0, "offset {o} not aligned");
         }
         assert!(check_placement(&items, &offs, 1000).is_ok());
+    }
+
+    #[test]
+    fn region_bestfit_with_one_region_is_bit_identical_to_best_fit_multi() {
+        check("bestfit_regions_single", 25, |rng: &mut Rng| {
+            let n = rng.range(1, 30);
+            let items: Vec<PlacementItem> = (0..n)
+                .map(|i| {
+                    let start = rng.range(0, 15);
+                    let len = rng.range(1, 8);
+                    item(i as u32, rng.range(1, 400) as u64, start, start + len)
+                })
+                .collect();
+            let (offs, sz) = best_fit_multi(&items, 1);
+            let all_device = vec![0usize; items.len()];
+            let (r_offs, r_sizes) = best_fit_regions(&items, &all_device, 1, 1);
+            ensure(offs == r_offs && r_sizes == vec![sz], || {
+                format!("single-region best-fit diverged: {sz} vs {r_sizes:?}")
+            })
+        });
+    }
+
+    #[test]
+    fn region_bestfit_packs_each_region_independently() {
+        // Two co-resident pairs split across regions: each region packs
+        // its own pair, and the placement validates per region.
+        let items = vec![
+            item(0, 100, 0, 4),
+            item(1, 50, 0, 4),
+            item(2, 80, 0, 4),
+            item(3, 40, 0, 4),
+        ];
+        let region_of = vec![0, 0, 1, 1];
+        let (offs, sizes) = best_fit_regions(&items, &region_of, 2, 1);
+        assert_eq!(sizes, vec![150, 120]);
+        let caps = vec![None, None];
+        let got =
+            crate::alloc::check_placement_regions(&items, &region_of, &offs, &caps).unwrap();
+        assert_eq!(got, sizes);
     }
 
     #[test]

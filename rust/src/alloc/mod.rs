@@ -90,6 +90,60 @@ pub fn check_placement(
     Ok(())
 }
 
+/// Validate a multi-region placement: every item must respect its
+/// region's capacity (when one is set), and two time-overlapping items
+/// may only overlap in address space when they live in *different*
+/// regions — cross-region pairs share nothing, which is exactly why the
+/// region-aware ILP can skip their no-overlap gadgets.
+///
+/// `caps[k]` is region `k`'s byte capacity (`None` = unbounded). Returns
+/// the per-region arena sizes implied by the placement. With a single
+/// unbounded region this is [`check_placement`] against the implied
+/// arena.
+pub fn check_placement_regions(
+    items: &[PlacementItem],
+    regions: &[usize],
+    offsets: &[u64],
+    caps: &[Option<u64>],
+) -> Result<Vec<u64>, String> {
+    if offsets.len() != items.len() || regions.len() != items.len() {
+        return Err("offsets/regions length mismatch".into());
+    }
+    let mut sizes = vec![0u64; caps.len()];
+    for (i, it) in items.iter().enumerate() {
+        let k = regions[i];
+        if k >= caps.len() {
+            return Err(format!("item {} ({}) assigned to unknown region {}", i, it.edge, k));
+        }
+        let end = offsets[i] + it.size;
+        if let Some(cap) = caps[k] {
+            if end > cap {
+                return Err(format!(
+                    "item {} ({}) at {}+{} exceeds region {} capacity {}",
+                    i, it.edge, offsets[i], it.size, k, cap
+                ));
+            }
+        }
+        sizes[k] = sizes[k].max(end);
+    }
+    for i in 0..items.len() {
+        for j in (i + 1)..items.len() {
+            if regions[i] != regions[j] || !items[i].overlaps(&items[j]) {
+                continue;
+            }
+            let (a0, a1) = (offsets[i], offsets[i] + items[i].size);
+            let (b0, b1) = (offsets[j], offsets[j] + items[j].size);
+            if a0 < b1 && b0 < a1 {
+                return Err(format!(
+                    "items {} and {} overlap in time and space in region {} ([{a0},{a1}) vs [{b0},{b1}))",
+                    items[i].edge, items[j].edge, regions[i]
+                ));
+            }
+        }
+    }
+    Ok(sizes)
+}
+
 /// Fragmentation ratio as defined in §5.4: `(MR - RS) / MR` where `MR` is
 /// reserved memory and `RS` the resident-set size, measured when `MR` peaks.
 pub fn fragmentation(reserved_at_peak: u64, resident_at_peak: u64) -> f64 {
@@ -143,6 +197,35 @@ mod tests {
         assert!(check_placement(&items, &[0, 0], 20).is_err());
         assert!(check_placement(&items, &[0, 10], 20).is_ok());
         assert!(check_placement(&items, &[0, 15], 20).is_err()); // out of arena
+    }
+
+    #[test]
+    fn region_check_allows_cross_region_address_overlap() {
+        // Two co-resident tensors at the same offset are fine when they
+        // live in different regions — and an error in the same region.
+        let items = vec![item(10, 0, 2), item(10, 1, 3)];
+        let caps = vec![Some(16u64), None];
+        let sizes = check_placement_regions(&items, &[0, 1], &[0, 0], &caps).unwrap();
+        assert_eq!(sizes, vec![10, 10]);
+        assert!(check_placement_regions(&items, &[0, 0], &[0, 0], &caps).is_err());
+    }
+
+    #[test]
+    fn region_check_enforces_capacity() {
+        let items = vec![item(10, 0, 2)];
+        let caps = vec![Some(8u64), None];
+        let err = check_placement_regions(&items, &[0], &[0], &caps).unwrap_err();
+        assert!(err.contains("capacity"), "unexpected error: {err}");
+        // The same item is fine in the unbounded region.
+        let sizes = check_placement_regions(&items, &[1], &[0], &caps).unwrap();
+        assert_eq!(sizes, vec![0, 10]);
+    }
+
+    #[test]
+    fn region_check_rejects_unknown_regions_and_bad_lengths() {
+        let items = vec![item(10, 0, 2)];
+        assert!(check_placement_regions(&items, &[2], &[0], &[None]).is_err());
+        assert!(check_placement_regions(&items, &[], &[0], &[None]).is_err());
     }
 
     #[test]

@@ -62,6 +62,18 @@ pub fn phase_cap() -> Duration {
     Duration::from_secs_f64(secs)
 }
 
+/// Solver worker threads for bench solves: `OLLA_BENCH_SOLVER_THREADS`
+/// overrides (default 0 = auto). The regression gate (`check_bench`) sets
+/// this to 1 in CI: the parallel branch-and-bound pool makes node and
+/// iteration counts run-to-run noisy, while the serial path is
+/// deterministic up to wall-clock time limits.
+pub fn bench_solver_threads() -> usize {
+    std::env::var("OLLA_BENCH_SOLVER_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(0)
+}
+
 /// An anytime incumbent curve as a JSON array of `{secs, arena_bytes}`
 /// points, for the Figure 10/12 reports (`BENCH_fig10_anytime.json`).
 pub fn anytime_curve_json(curve: &[(f64, u64)]) -> Json {
@@ -94,6 +106,133 @@ pub fn solver_stats_json(
         ("warm_start_hits", Json::Num(warm_hits as f64)),
         ("warm_start_hit_rate", Json::Num(hit_rate)),
     ])
+}
+
+/// One comparable solver-efficiency sample extracted from a
+/// `BENCH_*.json` report row (any row carrying a `solver` object).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SolverSample {
+    /// Stable row key: `<bench>/<model>[@<batch>]`.
+    pub key: String,
+    /// Total simplex iterations of the row.
+    pub simplex_iters: f64,
+    /// Branch-and-bound nodes explored.
+    pub bnb_nodes: f64,
+    /// Warm-start acceptance rate over child LPs.
+    pub warm_hit_rate: f64,
+}
+
+/// Extract the solver-efficiency samples of a `BENCH_*.json` document
+/// (rows without a `solver` object are skipped).
+pub fn solver_samples(report: &Json) -> Vec<SolverSample> {
+    let bench = report.get("bench").and_then(Json::as_str).unwrap_or("bench");
+    let mut out = Vec::new();
+    let Some(rows) = report.get("rows").and_then(Json::as_arr) else { return out };
+    for row in rows {
+        let Some(solver) = row.get("solver") else { continue };
+        let model = row.get("model").and_then(Json::as_str).unwrap_or("?");
+        let key = match row.get("batch").and_then(Json::as_u64) {
+            Some(batch) => format!("{bench}/{model}@{batch}"),
+            None => format!("{bench}/{model}"),
+        };
+        out.push(SolverSample {
+            key,
+            simplex_iters: solver.get("simplex_iters").and_then(Json::as_f64).unwrap_or(0.0),
+            bnb_nodes: solver.get("bnb_nodes").and_then(Json::as_f64).unwrap_or(0.0),
+            warm_hit_rate: solver
+                .get("warm_start_hit_rate")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+        });
+    }
+    out
+}
+
+/// Serialize samples as the baseline document consumed by
+/// [`compare_solver_samples`] (and the `check_bench` binary).
+pub fn samples_to_baseline_json(samples: &[SolverSample]) -> Json {
+    Json::Arr(
+        samples
+            .iter()
+            .map(|sm| {
+                obj(vec![
+                    ("key", Json::Str(sm.key.clone())),
+                    ("simplex_iters", Json::Num(sm.simplex_iters)),
+                    ("bnb_nodes", Json::Num(sm.bnb_nodes)),
+                    ("warm_hit_rate", Json::Num(sm.warm_hit_rate)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Parse a baseline document written by [`samples_to_baseline_json`].
+pub fn samples_from_baseline_json(doc: &Json) -> Vec<SolverSample> {
+    let Some(rows) = doc.as_arr() else { return Vec::new() };
+    rows.iter()
+        .filter_map(|row| {
+            Some(SolverSample {
+                key: row.get("key")?.as_str()?.to_string(),
+                simplex_iters: row.get("simplex_iters").and_then(Json::as_f64).unwrap_or(0.0),
+                bnb_nodes: row.get("bnb_nodes").and_then(Json::as_f64).unwrap_or(0.0),
+                warm_hit_rate: row.get("warm_hit_rate").and_then(Json::as_f64).unwrap_or(0.0),
+            })
+        })
+        .collect()
+}
+
+/// Compare current solver-efficiency samples against a baseline:
+/// per matching key, simplex iterations or branch-and-bound nodes
+/// growing by more than `tolerance` (relative, e.g. 0.25 = +25%), or the
+/// warm-start hit rate dropping by more than `tolerance` (absolute
+/// fraction of the baseline rate), is a regression. Returns one
+/// human-readable failure line per regression — empty means the engine is
+/// no slower than the baseline within tolerance. Keys present on only
+/// one side are ignored (the caller decides whether that is an error).
+///
+/// Tiny baselines are exempted by an absolute floor (64 iterations /
+/// 8 nodes): noise around near-instant solves is not a regression.
+pub fn compare_solver_samples(
+    baseline: &[SolverSample],
+    current: &[SolverSample],
+    tolerance: f64,
+) -> Vec<String> {
+    let mut failures = Vec::new();
+    for base in baseline {
+        let Some(cur) = current.iter().find(|c| c.key == base.key) else { continue };
+        let iters_floor = base.simplex_iters.max(64.0);
+        if cur.simplex_iters > iters_floor * (1.0 + tolerance) {
+            failures.push(format!(
+                "{}: simplex iterations regressed {:.0} -> {:.0} (>{:.0}% over baseline)",
+                base.key,
+                base.simplex_iters,
+                cur.simplex_iters,
+                100.0 * tolerance
+            ));
+        }
+        let nodes_floor = base.bnb_nodes.max(8.0);
+        if cur.bnb_nodes > nodes_floor * (1.0 + tolerance) {
+            failures.push(format!(
+                "{}: B&B nodes regressed {:.0} -> {:.0} (>{:.0}% over baseline)",
+                base.key,
+                base.bnb_nodes,
+                cur.bnb_nodes,
+                100.0 * tolerance
+            ));
+        }
+        if base.warm_hit_rate > 0.0
+            && cur.warm_hit_rate < base.warm_hit_rate * (1.0 - tolerance)
+        {
+            failures.push(format!(
+                "{}: warm-start hit rate regressed {:.0}% -> {:.0}% (>{:.0}% drop)",
+                base.key,
+                100.0 * base.warm_hit_rate,
+                100.0 * cur.warm_hit_rate,
+                100.0 * tolerance
+            ));
+        }
+    }
+    failures
 }
 
 /// A machine-readable benchmark report, written as `BENCH_<name>.json`.
@@ -179,6 +318,88 @@ mod tests {
         assert_eq!(arr.len(), 2);
         assert_eq!(arr[0].get("secs").unwrap().as_f64(), Some(0.5));
         assert_eq!(arr[1].get("arena_bytes").unwrap().as_u64(), Some(800));
+    }
+
+    #[test]
+    fn solver_samples_roundtrip_and_compare() {
+        let mut report = BenchReport::new("fig9");
+        report.push(crate::util::json::obj(vec![
+            ("model", crate::util::json::s("alexnet")),
+            ("batch", Json::Num(1.0)),
+            ("solver", solver_stats_json(1000, 50, 40, 36)),
+        ]));
+        report.push(crate::util::json::obj(vec![
+            ("model", crate::util::json::s("TOTAL")),
+            ("solver", solver_stats_json(5000, 220, 180, 150)),
+        ]));
+        let samples = solver_samples(&report.to_json());
+        assert_eq!(samples.len(), 2);
+        assert_eq!(samples[0].key, "fig9/alexnet@1");
+        assert_eq!(samples[1].key, "fig9/TOTAL");
+        assert_eq!(samples[0].simplex_iters, 1000.0);
+        assert!((samples[1].warm_hit_rate - 150.0 / 180.0).abs() < 1e-12);
+        // Round-trip through the baseline document format.
+        let doc = samples_to_baseline_json(&samples);
+        let parsed =
+            Json::parse(&doc.to_string_pretty()).expect("baseline serializes to valid JSON");
+        assert_eq!(samples_from_baseline_json(&parsed), samples);
+        // Identical samples never regress.
+        assert!(compare_solver_samples(&samples, &samples, 0.25).is_empty());
+    }
+
+    #[test]
+    fn compare_flags_regressions_beyond_tolerance() {
+        let base = vec![SolverSample {
+            key: "fig9/TOTAL".into(),
+            simplex_iters: 1000.0,
+            bnb_nodes: 100.0,
+            warm_hit_rate: 0.8,
+        }];
+        // Within 25%: fine.
+        let ok = vec![SolverSample {
+            key: "fig9/TOTAL".into(),
+            simplex_iters: 1200.0,
+            bnb_nodes: 120.0,
+            warm_hit_rate: 0.7,
+        }];
+        assert!(compare_solver_samples(&base, &ok, 0.25).is_empty());
+        // Iterations +60%, nodes +200%, hit rate halved: three failures.
+        let bad = vec![SolverSample {
+            key: "fig9/TOTAL".into(),
+            simplex_iters: 1600.0,
+            bnb_nodes: 300.0,
+            warm_hit_rate: 0.4,
+        }];
+        let failures = compare_solver_samples(&base, &bad, 0.25);
+        assert_eq!(failures.len(), 3, "{failures:?}");
+        assert!(failures[0].contains("simplex"), "{failures:?}");
+        // Unmatched keys are ignored.
+        let other = vec![SolverSample {
+            key: "fig11/TOTAL".into(),
+            simplex_iters: 9.0e9,
+            bnb_nodes: 9.0e9,
+            warm_hit_rate: 0.0,
+        }];
+        assert!(compare_solver_samples(&base, &other, 0.25).is_empty());
+    }
+
+    #[test]
+    fn compare_ignores_noise_on_tiny_baselines() {
+        // A 10-iteration baseline doubling to 20 is noise, not a
+        // regression: the absolute floor (64 iters / 8 nodes) absorbs it.
+        let base = vec![SolverSample {
+            key: "fig9/small".into(),
+            simplex_iters: 10.0,
+            bnb_nodes: 2.0,
+            warm_hit_rate: 0.0,
+        }];
+        let cur = vec![SolverSample {
+            key: "fig9/small".into(),
+            simplex_iters: 20.0,
+            bnb_nodes: 6.0,
+            warm_hit_rate: 0.0,
+        }];
+        assert!(compare_solver_samples(&base, &cur, 0.25).is_empty());
     }
 
     #[test]

@@ -1,0 +1,139 @@
+//! `check_bench` — the solver-efficiency regression gate.
+//!
+//! Compares the solver statistics (simplex iterations, branch-and-bound
+//! nodes, warm-start hit rate) in one or more `BENCH_*.json` reports
+//! against a checked-in baseline and exits non-zero — loudly — when any
+//! sample regressed by more than the tolerance (default 25%).
+//!
+//! ```text
+//! # after: cargo bench --bench fig9_ordering_time --bench fig11_addrgen_time
+//! cargo run --release --bin check_bench -- \
+//!     --baseline baselines/solver_baseline.json \
+//!     --current BENCH_fig9_ordering_time.json \
+//!     --current BENCH_fig11_addrgen_time.json
+//!
+//! # record a new baseline from the same reports (commit the file):
+//! cargo run --release --bin check_bench -- --bless \
+//!     --baseline baselines/solver_baseline.json --current ...
+//! ```
+//!
+//! `--bless-if-missing` writes the baseline only when the file does not
+//! exist yet (used by CI to self-seed a runner-local baseline before the
+//! second measurement run). Samples whose key appears on only one side
+//! are reported but never fail the run: bench sets may grow.
+
+use olla::bench_support::{
+    compare_solver_samples, samples_from_baseline_json, samples_to_baseline_json,
+    solver_samples, SolverSample,
+};
+use olla::util::json::Json;
+use std::path::Path;
+use std::process::ExitCode;
+
+fn flag_values(args: &[String], name: &str) -> Vec<String> {
+    args.iter()
+        .enumerate()
+        .filter(|(_, a)| a.as_str() == name)
+        .filter_map(|(i, _)| args.get(i + 1).cloned())
+        .collect()
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let baseline_path = flag_values(&args, "--baseline")
+        .pop()
+        .unwrap_or_else(|| "baselines/solver_baseline.json".to_string());
+    let current_paths = flag_values(&args, "--current");
+    let tolerance: f64 = flag_values(&args, "--tolerance")
+        .pop()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.25);
+    let bless = args.iter().any(|a| a == "--bless");
+    let bless_if_missing = args.iter().any(|a| a == "--bless-if-missing");
+
+    if current_paths.is_empty() {
+        eprintln!("usage: check_bench --baseline FILE --current BENCH_x.json [--current ...] \\");
+        eprintln!("                   [--tolerance 0.25] [--bless | --bless-if-missing]");
+        return ExitCode::from(2);
+    }
+
+    let mut current: Vec<SolverSample> = Vec::new();
+    for path in &current_paths {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("check_bench: cannot read {path}: {e}");
+                return ExitCode::from(2);
+            }
+        };
+        match Json::parse(&text) {
+            Ok(doc) => current.extend(solver_samples(&doc)),
+            Err(e) => {
+                eprintln!("check_bench: {path} is not valid JSON: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    println!("check_bench: {} solver samples from {} report(s)", current.len(), current_paths.len());
+
+    let baseline_exists = Path::new(&baseline_path).exists();
+    if bless || (bless_if_missing && !baseline_exists) {
+        let doc = samples_to_baseline_json(&current);
+        if let Some(dir) = Path::new(&baseline_path).parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        if let Err(e) = std::fs::write(&baseline_path, doc.to_string_pretty()) {
+            eprintln!("check_bench: cannot write baseline {baseline_path}: {e}");
+            return ExitCode::from(2);
+        }
+        println!("check_bench: blessed {} samples into {baseline_path}", current.len());
+        return ExitCode::SUCCESS;
+    }
+
+    let baseline_text = match std::fs::read_to_string(&baseline_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("check_bench: cannot read baseline {baseline_path}: {e} (run with --bless first)");
+            return ExitCode::from(2);
+        }
+    };
+    let baseline = match Json::parse(&baseline_text) {
+        Ok(doc) => samples_from_baseline_json(&doc),
+        Err(e) => {
+            eprintln!("check_bench: baseline {baseline_path} is not valid JSON: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if baseline.is_empty() {
+        println!(
+            "check_bench: baseline {baseline_path} holds no samples yet — nothing to compare \
+             (bless one with --bless)"
+        );
+        return ExitCode::SUCCESS;
+    }
+    let matched = baseline
+        .iter()
+        .filter(|b| current.iter().any(|c| c.key == b.key))
+        .count();
+    println!(
+        "check_bench: comparing {matched}/{} baseline samples (tolerance {:.0}%)",
+        baseline.len(),
+        100.0 * tolerance
+    );
+
+    let failures = compare_solver_samples(&baseline, &current, tolerance);
+    if failures.is_empty() {
+        println!("check_bench: OK — no solver-efficiency regression beyond tolerance");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("check_bench: SOLVER EFFICIENCY REGRESSION ({} failure(s)):", failures.len());
+        for f in &failures {
+            eprintln!("  ✗ {f}");
+        }
+        eprintln!(
+            "check_bench: if this slowdown is intended, re-bless the baseline with --bless \
+             and commit it"
+        );
+        ExitCode::FAILURE
+    }
+}

@@ -7,8 +7,9 @@ pub mod experiments;
 pub mod table;
 
 pub use experiments::{
-    anytime_experiment, fragmentation_experiment, fragmentation_sweep, par_map,
-    reorder_experiment, reorder_sweep, runtime_overhead_experiment, total_experiment,
-    total_sweep, zoo_cases, AnytimeRow, FragRow, ModelCase, ReorderRow, RuntimeRow, TotalRow,
+    anytime_experiment, fragmentation_experiment, fragmentation_sweep, offload_experiment,
+    offload_sweep, par_map, reorder_experiment, reorder_sweep, runtime_overhead_experiment,
+    total_experiment, total_sweep, zoo_cases, AnytimeRow, FragRow, ModelCase, OffloadRow,
+    ReorderRow, RuntimeRow, TotalRow,
 };
 pub use table::Table;

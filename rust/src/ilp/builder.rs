@@ -237,6 +237,37 @@ impl IlpBuilder {
         pv
     }
 
+    /// The region-aware extension of [`IlpBuilder::pair_no_overlap`]: the
+    /// same eq. 6/7a/7b gadget (free or fixed positions compose as
+    /// before), but the two ordering binaries are only *forced* to commit
+    /// when both items sit in the same memory region. For every region
+    /// `k` both items may inhabit, `shared_regions` carries their region
+    /// indicator pair `(r_ik, r_jk)` and the gadget adds the coupling row
+    ///
+    /// `below + above >= r_ik + r_jk - 1`
+    ///
+    /// so cross-region assignments relax the disjunction entirely (both
+    /// binaries 0). Pairs whose allowed-region sets are disjoint should
+    /// not call this at all — skipping them is what keeps the
+    /// multi-region encoding as sparse as the single-arena one.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pair_no_overlap_regions(
+        &mut self,
+        key: (usize, usize),
+        pos_i: Pos,
+        size_i: f64,
+        pos_j: Pos,
+        size_j: f64,
+        big_m: f64,
+        shared_regions: &[(VarId, VarId)],
+    ) -> PairVars {
+        let pv = self.pair_no_overlap(key, pos_i, size_i, pos_j, size_j, big_m, false);
+        for &(ri, rj) in shared_regions {
+            self.ge(vec![(pv.below, 1.0), (pv.above, 1.0), (ri, -1.0), (rj, -1.0)], -1.0);
+        }
+        pv
+    }
+
     /// Number of variables so far.
     pub fn num_vars(&self) -> usize {
         self.model.num_vars()
@@ -306,6 +337,75 @@ mod tests {
         assert!(m.check_feasible(&[1.0, 0.0, 0.0], 1e-9).is_err());
         // sum_le_var allows x=0,y=1,cap>=4 (violates exactly_one? x+y=1 ok).
         assert!(m.check_feasible(&[0.0, 1.0, 4.0], 1e-9).is_ok());
+    }
+
+    #[test]
+    fn regional_pair_gadget_separates_only_within_a_region() {
+        // Two co-resident tensors of size 10, two regions of capacity 10
+        // each (modeled as address upper bounds). If both land in region
+        // 0 they cannot both fit; splitting regions lets both sit at
+        // offset 0. The objective rewards keeping the addresses low, so
+        // the optimum must use the cross-region relaxation.
+        let big_m = 100.0;
+        let mut b = IlpBuilder::new();
+        let ai = b.continuous("A", "A[0]", 0.0, 0.0, 1.0); // size 10 in a 10-byte region
+        let aj = b.continuous("A", "A[1]", 0.0, 0.0, 1.0);
+        let ri0 = b.binary("R", "R[0,0]", 0.0);
+        let ri1 = b.binary("R", "R[0,1]", 0.0);
+        let rj0 = b.binary("R", "R[1,0]", 0.0);
+        let rj1 = b.binary("R", "R[1,1]", 0.0);
+        b.exactly_one([ri0, ri1]);
+        b.exactly_one([rj0, rj1]);
+        let pv = b.pair_no_overlap_regions(
+            (0, 1),
+            Pos::Var(ai),
+            10.0,
+            Pos::Var(aj),
+            10.0,
+            big_m,
+            &[(ri0, rj0), (ri1, rj1)],
+        );
+        let (m, meta) = b.into_parts();
+        assert!(meta.pairs.contains_key(&(0, 1)));
+        let s = ilp::solve(&m, &SolveOptions::default());
+        assert_eq!(s.status, SolveStatus::Optimal);
+        // Both addresses pinned at 0: feasible only by splitting regions.
+        assert_ne!(
+            s.bool_value(ri0),
+            s.bool_value(rj0),
+            "co-resident same-offset tensors must be in different regions"
+        );
+        // And the ordering binaries stay relaxed for the cross-region pair.
+        assert!(!s.bool_value(pv.below) || !s.bool_value(pv.above));
+    }
+
+    #[test]
+    fn regional_pair_gadget_forces_order_in_shared_region() {
+        // Same pair, but both pinned to region 0 with room for both: the
+        // coupling row must force one of the orderings.
+        let big_m = 100.0;
+        let mut b = IlpBuilder::new();
+        let ai = b.continuous("A", "A[0]", 0.0, 90.0, 1.0);
+        let aj = b.continuous("A", "A[1]", 0.0, 90.0, 1.0);
+        let ri0 = b.binary("R", "R[0,0]", 0.0);
+        let rj0 = b.binary("R", "R[1,0]", 0.0);
+        b.fix(ri0, 1.0);
+        b.fix(rj0, 1.0);
+        let pv = b.pair_no_overlap_regions(
+            (0, 1),
+            Pos::Var(ai),
+            10.0,
+            Pos::Var(aj),
+            20.0,
+            big_m,
+            &[(ri0, rj0)],
+        );
+        let (m, _) = b.into_parts();
+        let s = ilp::solve(&m, &SolveOptions::default());
+        assert_eq!(s.status, SolveStatus::Optimal);
+        assert!(s.bool_value(pv.below) ^ s.bool_value(pv.above));
+        let (oi, oj) = (s.value(ai), s.value(aj));
+        assert!(oi + 10.0 <= oj + 1e-6 || oj + 20.0 <= oi + 1e-6, "A[0]={oi} A[1]={oj}");
     }
 
     #[test]

@@ -15,7 +15,7 @@
 use olla::coordinator::{reorder_sweep, zoo_cases, Table};
 use olla::graph::dot::to_dot;
 use olla::models::{build_graph, ModelScale, ZOO};
-use olla::olla::{PlacementOptions, PlannerOptions, ScheduleOptions};
+use olla::olla::{MemoryTopology, PlacementOptions, PlannerOptions, ScheduleOptions};
 use olla::runtime::{Engine, Manifest, Trainer};
 use olla::serve::{PlanHandle, PlanPhase, PlanRequest, PlanService};
 use olla::util::anyhow;
@@ -65,11 +65,16 @@ COMMANDS:
       --batch N               batch size (default 1)
       --scale full|reduced    depth scale (default reduced)
       --time-limit SECS       per-phase ILP cap (default 30)
+      --device-cap BYTES      device memory capacity, e.g. 64MB (optional:
+                              enables offload-aware device+host placement)
+      --host-penalty COST     objective cost per offloaded byte (default 0.5)
   plan                        anytime planning: best valid plan by a deadline
       --model NAME --batch N  [--scale full|reduced]
       --deadline-ms MS        whole-pipeline deadline (default 10000)
       --gap PCT               stop at a proven gap, e.g. 5 for 5% (optional)
       --poll-ms MS            progress print cadence (default 500)
+      --device-cap BYTES      device capacity for offload-aware placement
+      --host-penalty COST     objective cost per offloaded byte (default 0.5)
   serve                       queue plan requests through the PlanService
       --models A,B,C          zoo models (default: whole zoo)
       --batch N               batch size (default 1)
@@ -108,6 +113,40 @@ fn parse_secs(rest: &[String], name: &str, default: f64) -> Duration {
     Duration::from_secs_f64(flag(rest, name).and_then(|s| s.parse().ok()).unwrap_or(default))
 }
 
+/// Parse a byte size like `1048576`, `512KB`, `64MB` or `1.5GB`
+/// (case-insensitive, 1024-based).
+fn parse_bytes(text: &str) -> Option<u64> {
+    let t = text.trim().to_ascii_uppercase();
+    let (digits, mult) = if let Some(p) = t.strip_suffix("GB") {
+        (p, 1u64 << 30)
+    } else if let Some(p) = t.strip_suffix("MB") {
+        (p, 1u64 << 20)
+    } else if let Some(p) = t.strip_suffix("KB") {
+        (p, 1u64 << 10)
+    } else if let Some(p) = t.strip_suffix('B') {
+        (p, 1u64)
+    } else {
+        (t.as_str(), 1u64)
+    };
+    let v: f64 = digits.trim().parse().ok()?;
+    if v < 0.0 {
+        return None;
+    }
+    Some((v * mult as f64).round() as u64)
+}
+
+/// Build the memory topology requested by `--device-cap BYTES`
+/// (+ optional `--host-penalty COST_PER_BYTE`, default 0.5). Without
+/// `--device-cap` the planner keeps the single-region default.
+fn parse_topology(rest: &[String]) -> anyhow::Result<Option<MemoryTopology>> {
+    let Some(cap_text) = flag(rest, "--device-cap") else { return Ok(None) };
+    let cap = parse_bytes(&cap_text)
+        .ok_or_else(|| anyhow::anyhow!("bad --device-cap '{cap_text}' (try 64MB, 1.5GB)"))?;
+    let penalty: f64 =
+        flag(rest, "--host-penalty").and_then(|v| v.parse().ok()).unwrap_or(0.5);
+    Ok(Some(MemoryTopology::device_host(cap, penalty)))
+}
+
 fn cmd_zoo() -> anyhow::Result<()> {
     let mut t =
         Table::new(&["model", "|V| (bs1)", "|E| (bs1)", "params", "peak@bs1 (pytorch)"]);
@@ -135,11 +174,15 @@ fn cmd_optimize(rest: &[String]) -> anyhow::Result<()> {
     let cap = parse_secs(rest, "--time-limit", 30.0);
     let g = build_graph(&model, batch, scale)
         .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
-    let opts = PlannerOptions {
+    let topology = parse_topology(rest)?;
+    let mut opts = PlannerOptions {
         schedule: ScheduleOptions { time_limit: cap, ..Default::default() },
         placement: PlacementOptions { time_limit: cap, ..Default::default() },
         ..Default::default()
     };
+    if let Some(topo) = &topology {
+        opts.placement.topology = topo.clone();
+    }
     let baseline =
         olla::sched::sim::peak_bytes(&g, &olla::sched::orders::pytorch_order(&g));
     let plan = olla::olla::optimize(&g, &opts);
@@ -161,6 +204,15 @@ fn cmd_optimize(rest: &[String]) -> anyhow::Result<()> {
         100.0 * plan.placement.fragmentation,
         plan.placement.method,
     );
+    if let Some(topo) = &topology {
+        let cap = topo.regions[0].capacity.unwrap_or(u64::MAX);
+        println!(
+            "device cap          : {}  ({}, {} offloaded to host)",
+            human_bytes(cap),
+            if plan.arena_size <= cap { "satisfied" } else { "VIOLATED" },
+            human_bytes(plan.bytes_offloaded()),
+        );
+    }
     println!(
         "planning time       : {} (schedule {}, placement {})",
         human_duration(Duration::from_secs_f64(plan.total_secs)),
@@ -181,16 +233,26 @@ fn cmd_plan(rest: &[String]) -> anyhow::Result<()> {
     let poll_ms: u64 = flag(rest, "--poll-ms").and_then(|v| v.parse().ok()).unwrap_or(500);
     let g = build_graph(&model, batch, scale)
         .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
+    let topology = parse_topology(rest)?;
+    let mut plan_opts = PlannerOptions::default();
+    if let Some(topo) = &topology {
+        plan_opts.placement.topology = topo.clone();
+    }
     let baseline =
         olla::sched::sim::peak_bytes(&g, &olla::sched::orders::pytorch_order(&g));
     println!(
-        "planning {model} (batch {batch}, {scale:?}) with a {} deadline{}",
+        "planning {model} (batch {batch}, {scale:?}) with a {} deadline{}{}",
         human_duration(Duration::from_millis(deadline_ms)),
         gap.map(|gp| format!(" and a {:.1}% gap target", 100.0 * gp)).unwrap_or_default(),
+        topology
+            .as_ref()
+            .and_then(|t| t.regions[0].capacity)
+            .map(|c| format!(" under a {} device cap", human_bytes(c)))
+            .unwrap_or_default(),
     );
     let handle = PlanHandle::spawn(
         g.clone(),
-        PlannerOptions::default(),
+        plan_opts,
         Some(Duration::from_millis(deadline_ms)),
         gap,
     );
@@ -221,6 +283,13 @@ fn cmd_plan(rest: &[String]) -> anyhow::Result<()> {
         100.0 * (1.0 - plan.arena_size as f64 / baseline.max(1) as f64),
         plan.schedule.status,
     );
+    if topology.is_some() {
+        println!(
+            "  offloaded to host  : {}  (device region {})",
+            human_bytes(plan.bytes_offloaded()),
+            human_bytes(plan.region_sizes.first().copied().unwrap_or(0)),
+        );
+    }
     println!("  anytime curve      : {} improvements", final_snap.anytime.len());
     for (t, bytes) in &final_snap.anytime {
         println!("    {:>7.2}s  {}", t, human_bytes(*bytes));
@@ -251,7 +320,8 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
             .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
         let mut req = PlanRequest::new(g);
         req.deadline = Some(Duration::from_millis(deadline_ms));
-        handles.push((name.clone(), svc.submit(req)));
+        let handle = svc.submit(req).map_err(|e| anyhow::anyhow!("{name}: {e}"))?;
+        handles.push((name.clone(), handle));
     }
     let mut t = Table::new(&["model", "arena", "status", "gap", "time"]);
     for (name, handle) in handles {

@@ -5,6 +5,11 @@
 //! the paper's primary formulation, and (b) as a ground-truth oracle on
 //! small graphs for the property test that the split loses no optimality
 //! (the paper's empirical §4.4 claim).
+//!
+//! The oracle models the degenerate single-region
+//! [`crate::olla::topology::MemoryTopology`] (one unbounded device
+//! arena); offload-aware multi-region placement only exists in the split
+//! pipeline, where lifetimes are fixed before regions are assigned.
 
 use super::scheduling::{build_scheduling_model, decode_order, warm_start_assignment};
 use crate::graph::analysis::{never_coresident, ReachMatrix};

@@ -7,6 +7,8 @@
 //! * [`control_edges`] — §4.3, Functions 3–4;
 //! * [`prealloc`] — §4.5, Function 5 (pyramid preplacement);
 //! * [`joint`] — the monolithic program (9), used as an oracle;
+//! * [`topology`] — the [`topology::MemoryTopology`] region model behind
+//!   offload-aware placement (device + host arenas);
 //! * [`planner`] — the production pipeline (§4.4 split) producing a
 //!   [`planner::MemoryPlan`].
 
@@ -16,6 +18,7 @@ pub mod placement;
 pub mod planner;
 pub mod prealloc;
 pub mod scheduling;
+pub mod topology;
 
 pub use planner::{
     materialize_plan, optimize, optimize_anytime, validate_plan, MemoryPlan, PlanSink,
@@ -25,3 +28,4 @@ pub use placement::{optimize_placement, PlacementOptions, PlacementResult};
 pub use scheduling::{
     optimize_schedule, optimize_schedule_anytime, OrderSink, ScheduleOptions, ScheduleResult,
 };
+pub use topology::{MemoryRegion, MemoryTopology};

@@ -6,9 +6,12 @@ use super::placement::{optimize_placement, PlacementMethod, PlacementOptions, Pl
 use super::scheduling::{
     optimize_schedule_anytime, OrderSink, ScheduleOptions, ScheduleResult,
 };
+use super::topology::{
+    assign_and_pack, bytes_offloaded, region_lower_bound, transfer_cost, MemoryTopology,
+};
 use crate::alloc::arena::ArenaPlan;
 use crate::alloc::bestfit::best_fit_multi;
-use crate::alloc::{check_placement, items_from_trace, resident_lower_bound};
+use crate::alloc::{check_placement_regions, items_from_trace, resident_lower_bound};
 use crate::graph::{EdgeId, Graph, NodeId};
 use crate::ilp::SolveStatus;
 use crate::sched::sim::{check_order, simulate};
@@ -80,10 +83,17 @@ impl PlannerOptions {
 pub struct MemoryPlan {
     /// Optimized execution order (valid for the input graph).
     pub order: Vec<NodeId>,
-    /// Byte offset per tensor.
+    /// Byte offset per tensor, within its region's arena.
     pub offsets: HashMap<EdgeId, u64>,
-    /// Arena size (`peak_mem`).
+    /// Device arena size (`peak_mem` of region 0).
     pub arena_size: u64,
+    /// Memory region per tensor (absent entries mean region 0; always
+    /// empty for single-region topologies).
+    pub region_of: HashMap<EdgeId, usize>,
+    /// Arena size per region (`region_sizes[0] == arena_size`).
+    pub region_sizes: Vec<u64>,
+    /// The topology the plan was placed into.
+    pub topology: MemoryTopology,
     /// Scheduling phase details (Figures 7, 9, 10).
     pub schedule: ScheduleResult,
     /// Placement phase details (Figures 8, 11, 12).
@@ -95,9 +105,28 @@ pub struct MemoryPlan {
 }
 
 impl MemoryPlan {
-    /// Convert to a runtime [`ArenaPlan`].
+    /// Convert to a runtime [`ArenaPlan`] for the device region. The
+    /// runtime arena models one physical buffer, so offloaded tensors
+    /// are *excluded*: their offsets are host-region-relative and would
+    /// alias device addresses. Replaying a trace that allocates an
+    /// offloaded tensor through the returned plan is a caller error (the
+    /// arena will fail loudly on the missing offset).
     pub fn arena_plan(&self) -> ArenaPlan {
-        ArenaPlan { offsets: self.offsets.clone(), arena_size: self.arena_size }
+        let offsets = if self.region_of.is_empty() {
+            self.offsets.clone()
+        } else {
+            self.offsets
+                .iter()
+                .filter(|(e, _)| self.region_of.get(e).copied().unwrap_or(0) == 0)
+                .map(|(e, &o)| (*e, o))
+                .collect()
+        };
+        ArenaPlan { offsets, arena_size: self.arena_size }
+    }
+
+    /// Bytes this plan places outside the device region.
+    pub fn bytes_offloaded(&self) -> u64 {
+        self.placement.bytes_offloaded
     }
 }
 
@@ -110,21 +139,39 @@ pub fn optimize(g: &Graph, opts: &PlannerOptions) -> MemoryPlan {
 /// using the fast best-fit placer. This is how mid-solve scheduling
 /// incumbents become servable best-plan-so-far snapshots: the order comes
 /// from an ILP incumbent (not necessarily the optimum), the placement from
-/// the heuristic, and the result passes [`validate_plan`] or is rejected.
+/// the heuristic (greedy offload + per-region best-fit under a
+/// multi-region `topology`), and the result passes [`validate_plan`] or is
+/// rejected.
 pub fn materialize_plan(
     g: &Graph,
     order: Vec<NodeId>,
     ilp_obj: f64,
     control_edges_added: usize,
+    topology: &MemoryTopology,
 ) -> Result<MemoryPlan, String> {
     check_order(g, &order)?;
     let trace = simulate(g, &order);
     let items = items_from_trace(g, &trace);
-    let (offs, arena) = best_fit_multi(&items, 1);
-    let lb = resident_lower_bound(&items);
+    let (offs, regions, region_sizes) = if topology.is_single() {
+        let (o, sz) = best_fit_multi(&items, 1);
+        (o, vec![0usize; items.len()], vec![sz])
+    } else {
+        let (assign, o, sizes) = assign_and_pack(&items, topology, 1);
+        (o, assign, sizes)
+    };
+    let arena = region_sizes[0];
+    let lb = if topology.is_single() {
+        resident_lower_bound(&items)
+    } else {
+        region_lower_bound(&items, &regions, 0)
+    };
     let mut offsets = HashMap::new();
+    let mut region_of = HashMap::new();
     for (k, it) in items.iter().enumerate() {
         offsets.insert(it.edge, offs[k]);
+        if regions[k] != 0 {
+            region_of.insert(it.edge, regions[k]);
+        }
     }
     let schedule = ScheduleResult {
         order: order.clone(),
@@ -152,11 +199,18 @@ pub fn materialize_plan(
         simplex_iters: 0,
         warm_attempts: 0,
         warm_hits: 0,
+        bytes_offloaded: bytes_offloaded(&items, &regions),
+        transfer_cost: transfer_cost(&items, &regions, topology),
+        regions,
+        region_sizes: region_sizes.clone(),
     };
     let plan = MemoryPlan {
         order,
         offsets,
         arena_size: arena,
+        region_of,
+        region_sizes,
+        topology: topology.clone(),
         schedule,
         placement,
         control_edges_added,
@@ -200,8 +254,10 @@ pub fn optimize_anytime(
     let order_sink: Option<OrderSink> = on_plan.as_ref().map(|cb| {
         let g2 = g.clone();
         let cb = cb.clone();
+        let topo = opts.placement.topology.clone();
         Arc::new(move |order: Vec<NodeId>, ilp_obj: f64| {
-            if let Ok(plan) = materialize_plan(&g2, order, ilp_obj, control_edges_added) {
+            if let Ok(plan) = materialize_plan(&g2, order, ilp_obj, control_edges_added, &topo)
+            {
                 cb(plan);
             }
         }) as OrderSink
@@ -234,6 +290,7 @@ pub fn optimize_anytime(
             schedule.order.clone(),
             schedule.ilp_peak as f64,
             control_edges_added,
+            &opts.placement.topology,
         ) {
             cb(plan);
         }
@@ -248,18 +305,37 @@ pub fn optimize_anytime(
     let trace = simulate(g, &schedule.order);
     let items = items_from_trace(g, &trace);
     let placement = optimize_placement(&items, &place_opts);
+    // Single-region placements are always feasible, so a violation there
+    // is a placer bug worth catching at the source. Multi-region
+    // topologies are exempt: on an unsatisfiable topology the region
+    // placer deliberately returns a best-effort layout, and
+    // `validate_plan` is the authoritative gate that reports it.
     debug_assert!(
-        check_placement(&items, &placement.offsets, placement.arena_size).is_ok()
+        !place_opts.topology.is_single()
+            || check_placement_regions(
+                &items,
+                &placement.regions,
+                &placement.offsets,
+                &place_opts.topology.capacities(),
+            )
+            .is_ok()
     );
 
     let mut offsets = HashMap::new();
+    let mut region_of = HashMap::new();
     for (k, it) in items.iter().enumerate() {
         offsets.insert(it.edge, placement.offsets[k]);
+        if placement.regions.get(k).copied().unwrap_or(0) != 0 {
+            region_of.insert(it.edge, placement.regions[k]);
+        }
     }
     let plan = MemoryPlan {
         order: schedule.order.clone(),
         offsets,
         arena_size: placement.arena_size,
+        region_of,
+        region_sizes: placement.region_sizes.clone(),
+        topology: place_opts.topology.clone(),
         schedule,
         placement,
         control_edges_added,
@@ -271,20 +347,34 @@ pub fn optimize_anytime(
     plan
 }
 
-/// Validate a plan against its graph: topological order, in-arena placement,
-/// and no address overlap between concurrently live tensors.
+/// Validate a plan against its graph: topological order, in-arena /
+/// in-capacity placement per memory region, and no address overlap
+/// between concurrently live tensors of the same region. A plan whose
+/// device region exceeds the topology's device capacity — or whose
+/// device tensors spill past the published `arena_size` — is rejected.
 pub fn validate_plan(g: &Graph, plan: &MemoryPlan) -> Result<(), String> {
     check_order(g, &plan.order)?;
     let trace = simulate(g, &plan.order);
     let items = items_from_trace(g, &trace);
     let mut offs: Vec<u64> = Vec::with_capacity(items.len());
+    let mut regions: Vec<usize> = Vec::with_capacity(items.len());
     for it in &items {
         match plan.offsets.get(&it.edge).copied() {
             Some(o) => offs.push(o),
             None => return Err(format!("plan is missing an offset for live tensor {}", it.edge)),
         }
+        regions.push(plan.region_of.get(&it.edge).copied().unwrap_or(0));
     }
-    check_placement(&items, &offs, plan.arena_size)
+    let caps = plan.topology.capacities();
+    let sizes = check_placement_regions(&items, &regions, &offs, &caps)?;
+    let device = sizes.first().copied().unwrap_or(0);
+    if device > plan.arena_size {
+        return Err(format!(
+            "device tensors occupy {} bytes but the plan advertises an arena of {}",
+            device, plan.arena_size
+        ));
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -322,13 +412,63 @@ mod tests {
     #[test]
     fn materialize_plan_rejects_invalid_orders() {
         let g = diamond();
+        let single = MemoryTopology::single();
         let mut order: Vec<crate::graph::NodeId> = g.node_ids().collect();
         order.reverse(); // sinks before sources: not a topological order
-        assert!(materialize_plan(&g, order, 0.0, 0).is_err());
+        assert!(materialize_plan(&g, order, 0.0, 0, &single).is_err());
         // A valid order materializes into a validated plan.
-        let plan = materialize_plan(&g, pytorch_order(&g), 0.0, 0).unwrap();
+        let plan = materialize_plan(&g, pytorch_order(&g), 0.0, 0, &single).unwrap();
         validate_plan(&g, &plan).unwrap();
         assert!(plan.arena_size > 0);
+    }
+
+    #[test]
+    fn materialize_plan_places_per_region_under_a_capped_device() {
+        // A device cap below the single-arena peak forces the snapshot
+        // path to offload — and the result must still validate.
+        let g = fig3_graph();
+        let single = materialize_plan(&g, pytorch_order(&g), 0.0, 0, &MemoryTopology::single())
+            .unwrap();
+        assert!(single.arena_size > 1, "degenerate graph for this test");
+        let cap = single.arena_size - 1;
+        let topo = MemoryTopology::device_host(cap, 1.0);
+        let plan = materialize_plan(&g, pytorch_order(&g), 0.0, 0, &topo).unwrap();
+        validate_plan(&g, &plan).unwrap();
+        assert!(plan.arena_size <= cap, "cap {cap} violated: {}", plan.arena_size);
+        assert!(plan.bytes_offloaded() > 0, "cap below peak must offload something");
+        assert_eq!(plan.region_sizes.len(), 2);
+    }
+
+    #[test]
+    fn validate_plan_rejects_device_capacity_violation() {
+        let g = diamond();
+        let mut plan = optimize(&g, &PlannerOptions::fast_test());
+        validate_plan(&g, &plan).unwrap();
+        assert!(plan.arena_size > 1);
+        // Retroactively shrink the device capacity below the arena the
+        // plan actually uses: validation must reject it.
+        plan.topology = MemoryTopology::device_host(plan.arena_size - 1, 1.0);
+        let err = validate_plan(&g, &plan).unwrap_err();
+        assert!(err.contains("capacity"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn offload_plan_end_to_end_validates_and_respects_cap() {
+        // Full pipeline under a capped device: the plan must satisfy the
+        // cap by offloading, and validate_plan must stay clean.
+        let g = fig3_graph();
+        let base = optimize(&g, &PlannerOptions::fast_test());
+        let cap = base.arena_size.saturating_sub(8).max(1);
+        let mut opts = PlannerOptions::fast_test();
+        opts.placement.topology = MemoryTopology::device_host(cap, 1.0);
+        let plan = optimize(&g, &opts);
+        validate_plan(&g, &plan).unwrap();
+        assert!(plan.arena_size <= cap, "cap {cap} violated: {}", plan.arena_size);
+        assert!(plan.bytes_offloaded() > 0);
+        assert_eq!(
+            plan.region_sizes[0], plan.arena_size,
+            "device region size must equal the advertised arena"
+        );
     }
 
     #[test]

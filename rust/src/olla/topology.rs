@@ -1,0 +1,391 @@
+//! [`MemoryTopology`]: the memory-region model behind offload-aware
+//! placement.
+//!
+//! The original OLLA formulation assumes one flat arena (device HBM). At
+//! full zoo scale a single arena is not always enough: when the device
+//! capacity is exceeded, the costly alternative the paper frames —
+//! spilling tensors to a slower region (host DRAM) — becomes part of the
+//! optimization itself. Following the profile-guided memory optimization
+//! of Sekiyama et al. (2018), *which* tensors live in the slow region is
+//! decided jointly with *where* they are placed: the placement ILP gains
+//! per-item region indicators, a device-capacity constraint and a
+//! transfer-cost objective term (see [`crate::olla::placement`]).
+//!
+//! A topology is an **ordered** set of regions: index 0 is the fast
+//! device region whose arena size the objective minimizes; later regions
+//! are progressively slower fallbacks. The degenerate single-region
+//! topology ([`MemoryTopology::single`]) reproduces the pre-topology
+//! behavior of the whole stack exactly — it is the refactor's safety
+//! rail, asserted bit-for-bit by property tests.
+
+use crate::alloc::PlacementItem;
+
+/// One addressable memory region of the execution platform.
+///
+/// ```
+/// use olla::olla::topology::MemoryRegion;
+///
+/// let hbm = MemoryRegion { name: "device".into(), capacity: Some(16 << 30), penalty_per_byte: 0.0 };
+/// assert!(hbm.fits(1 << 20));
+/// assert!(!hbm.fits(32 << 30));
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryRegion {
+    /// Human-readable region name (`"device"`, `"host"`, …).
+    pub name: String,
+    /// Hard byte capacity, or `None` for an unbounded region (host DRAM
+    /// is modeled as unbounded).
+    pub capacity: Option<u64>,
+    /// Objective cost per byte for placing a tensor here (the transfer /
+    /// access penalty of eq. 15's offload extension). The device region
+    /// conventionally has penalty 0.
+    pub penalty_per_byte: f64,
+}
+
+impl MemoryRegion {
+    /// Can a tensor of `size` bytes be placed in this region at all?
+    pub fn fits(&self, size: u64) -> bool {
+        self.capacity.map_or(true, |cap| size <= cap)
+    }
+}
+
+/// An ordered set of [`MemoryRegion`]s. Region 0 is the device arena
+/// whose peak the placement objective minimizes; later regions absorb
+/// offloaded tensors at their per-byte penalty.
+///
+/// ```
+/// use olla::olla::topology::MemoryTopology;
+///
+/// let single = MemoryTopology::single();
+/// assert!(single.is_single());
+/// let topo = MemoryTopology::device_host(1 << 20, 0.5);
+/// assert_eq!(topo.regions.len(), 2);
+/// assert_eq!(topo.regions[0].capacity, Some(1 << 20));
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryTopology {
+    /// The regions, fastest (device) first.
+    pub regions: Vec<MemoryRegion>,
+}
+
+impl Default for MemoryTopology {
+    fn default() -> Self {
+        MemoryTopology::single()
+    }
+}
+
+impl MemoryTopology {
+    /// The degenerate single-region topology: one unbounded device arena
+    /// with no penalty. Every pre-topology code path is equivalent to
+    /// this; `optimize_placement` short-circuits to the original
+    /// single-arena algorithm when it sees it.
+    pub fn single() -> MemoryTopology {
+        MemoryTopology {
+            regions: vec![MemoryRegion {
+                name: "device".to_string(),
+                capacity: None,
+                penalty_per_byte: 0.0,
+            }],
+        }
+    }
+
+    /// The canonical two-region topology: device HBM with a hard
+    /// `device_capacity`, plus unbounded host DRAM whose tensors pay
+    /// `host_penalty_per_byte` in the objective.
+    pub fn device_host(device_capacity: u64, host_penalty_per_byte: f64) -> MemoryTopology {
+        MemoryTopology {
+            regions: vec![
+                MemoryRegion {
+                    name: "device".to_string(),
+                    capacity: Some(device_capacity),
+                    penalty_per_byte: 0.0,
+                },
+                MemoryRegion {
+                    name: "host".to_string(),
+                    capacity: None,
+                    penalty_per_byte: host_penalty_per_byte,
+                },
+            ],
+        }
+    }
+
+    /// True for a one-region topology (the pre-topology fast path).
+    pub fn is_single(&self) -> bool {
+        self.regions.len() == 1
+    }
+
+    /// Number of regions.
+    pub fn num_regions(&self) -> usize {
+        self.regions.len()
+    }
+
+    /// Per-region capacities (`None` = unbounded), in region order.
+    pub fn capacities(&self) -> Vec<Option<u64>> {
+        self.regions.iter().map(|r| r.capacity).collect()
+    }
+}
+
+/// Total objective penalty of a region assignment:
+/// `Σ penalty_per_byte(region(i)) · size(i)` (the transfer-cost term).
+pub fn transfer_cost(
+    items: &[PlacementItem],
+    region_of: &[usize],
+    topology: &MemoryTopology,
+) -> f64 {
+    items
+        .iter()
+        .zip(region_of)
+        .map(|(it, &k)| topology.regions[k].penalty_per_byte * it.size as f64)
+        .sum()
+}
+
+/// Bytes assigned outside the device region (region 0).
+pub fn bytes_offloaded(items: &[PlacementItem], region_of: &[usize]) -> u64 {
+    items.iter().zip(region_of).filter(|(_, &k)| k != 0).map(|(it, _)| it.size).sum()
+}
+
+/// Resident-set lower bound of the items assigned to region `k`: the
+/// minimum arena that region can possibly need under this assignment.
+pub fn region_lower_bound(items: &[PlacementItem], region_of: &[usize], k: usize) -> u64 {
+    let sub: Vec<PlacementItem> = items
+        .iter()
+        .zip(region_of)
+        .filter(|(_, &r)| r == k)
+        .map(|(it, _)| *it)
+        .collect();
+    crate::alloc::resident_lower_bound(&sub)
+}
+
+/// Peak live bytes per timestep for the items assigned to region `k`,
+/// returned as `(timestep_of_peak, peak_bytes)` (`(0, 0)` when empty).
+fn region_peak(items: &[PlacementItem], region_of: &[usize], k: usize) -> (usize, u64) {
+    let mut events: Vec<(usize, i64)> = Vec::new();
+    for (it, &r) in items.iter().zip(region_of) {
+        if r == k {
+            events.push((it.start, it.size as i64));
+            events.push((it.end, -(it.size as i64)));
+        }
+    }
+    events.sort();
+    let mut live = 0i64;
+    let mut peak = 0i64;
+    let mut peak_t = 0usize;
+    for (t, delta) in events {
+        live += delta;
+        if live > peak {
+            peak = live;
+            peak_t = t;
+        }
+    }
+    (peak_t, peak.max(0) as u64)
+}
+
+/// Offload-aware greedy region assignment: start with everything on the
+/// device and, while any capped region's resident lower bound exceeds its
+/// capacity, move the largest tensor live at the overflowing timestep to
+/// the first *later* region that can hold it. This is the warm start for
+/// the region-aware placement ILP and the fallback when the instance is
+/// too large for it.
+///
+/// Items that fit in no region at all are left where they are (best
+/// effort); `crate::alloc::check_placement_regions` reports the violation.
+pub fn assign_regions_greedy(items: &[PlacementItem], topology: &MemoryTopology) -> Vec<usize> {
+    let kk = topology.num_regions();
+    let mut region_of = vec![0usize; items.len()];
+    // Pin items that cannot fit region 0 to the first region that holds
+    // them at all.
+    for (i, it) in items.iter().enumerate() {
+        if !topology.regions[0].fits(it.size) {
+            if let Some(k) = (1..kk).find(|&k| topology.regions[k].fits(it.size)) {
+                region_of[i] = k;
+            }
+        }
+    }
+    // Relieve capped regions front to back; victims only ever move to a
+    // strictly later region, so the loop terminates. Each recomputation
+    // of the live profile clears one whole peak timestep (largest
+    // tensors first, ties towards longer lifetimes then lower index for
+    // determinism) instead of evicting one tensor at a time — this runs
+    // per incumbent snapshot on the anytime hot path, so the profile
+    // sweep must not be paid per eviction.
+    loop {
+        let mut moved = false;
+        for k in 0..kk {
+            let Some(cap) = topology.regions[k].capacity else { continue };
+            loop {
+                let (peak_t, peak) = region_peak(items, &region_of, k);
+                if peak <= cap {
+                    break;
+                }
+                let mut victims: Vec<usize> = (0..items.len())
+                    .filter(|&i| {
+                        region_of[i] == k
+                            && items[i].start <= peak_t
+                            && peak_t < items[i].end
+                    })
+                    .collect();
+                victims.sort_by_key(|&i| {
+                    (
+                        std::cmp::Reverse(items[i].size),
+                        std::cmp::Reverse(items[i].end - items[i].start),
+                        i,
+                    )
+                });
+                let mut excess = peak - cap;
+                let mut moved_here = false;
+                for v in victims {
+                    if excess == 0 {
+                        break;
+                    }
+                    let Some(dest) =
+                        ((k + 1)..kk).find(|&j| topology.regions[j].fits(items[v].size))
+                    else {
+                        continue; // nowhere later to go: leave best-effort
+                    };
+                    region_of[v] = dest;
+                    excess = excess.saturating_sub(items[v].size);
+                    moved_here = true;
+                }
+                if !moved_here {
+                    break; // nothing at this peak is movable
+                }
+                moved = true;
+            }
+        }
+        if !moved {
+            break;
+        }
+    }
+    region_of
+}
+
+/// Greedy offload assignment plus per-region best-fit packing, with a
+/// packing-repair loop: [`assign_regions_greedy`] bounds each region's
+/// *resident set*, but best-fit can still fragment the device arena past
+/// a hard capacity — when it does, the tensor topping the device arena is
+/// offloaded and the regions repacked until the packing itself fits (or
+/// nothing movable remains). This is the heuristic the placement ILP
+/// warm-starts from and the fallback that must validate on its own.
+/// Returns `(region_of, offsets, region_sizes)`.
+pub fn assign_and_pack(
+    items: &[PlacementItem],
+    topology: &MemoryTopology,
+    align: u64,
+) -> (Vec<usize>, Vec<u64>, Vec<u64>) {
+    let kk = topology.num_regions();
+    let mut region_of = assign_regions_greedy(items, topology);
+    let (mut offs, mut sizes) =
+        crate::alloc::bestfit::best_fit_regions(items, &region_of, kk, align);
+    if topology.regions.iter().any(|r| r.capacity.is_some()) {
+        // Batched rounds keep this off the quadratic regime: every
+        // tensor whose packing crosses its region's cap is evicted to a
+        // later region in one sweep, then the regions repack once. This
+        // runs on the anytime hot path (each scheduling-incumbent
+        // snapshot), so one repack per eviction would be too slow on
+        // zoo-scale graphs. Victims only ever move to strictly later
+        // regions, bounding the rounds.
+        for _round in 0..items.len() * kk {
+            let mut moved_any = false;
+            for k in 0..kk {
+                let Some(cap) = topology.regions[k].capacity else { continue };
+                if sizes[k] <= cap {
+                    continue;
+                }
+                for i in 0..items.len() {
+                    if region_of[i] != k || offs[i] + items[i].size <= cap {
+                        continue;
+                    }
+                    if let Some(dest) =
+                        ((k + 1)..kk).find(|&j| topology.regions[j].fits(items[i].size))
+                    {
+                        region_of[i] = dest;
+                        moved_any = true;
+                    }
+                }
+            }
+            if !moved_any {
+                break;
+            }
+            let (o2, s2) = crate::alloc::bestfit::best_fit_regions(items, &region_of, kk, align);
+            offs = o2;
+            sizes = s2;
+        }
+    }
+    (region_of, offs, sizes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::EdgeId;
+
+    fn item(id: u32, size: u64, start: usize, end: usize) -> PlacementItem {
+        PlacementItem { edge: EdgeId(id), size, start, end }
+    }
+
+    #[test]
+    fn single_topology_assigns_everything_to_region_zero() {
+        let items = vec![item(0, 100, 0, 4), item(1, 50, 1, 3)];
+        let topo = MemoryTopology::single();
+        let assign = assign_regions_greedy(&items, &topo);
+        assert_eq!(assign, vec![0, 0]);
+        assert_eq!(bytes_offloaded(&items, &assign), 0);
+        assert_eq!(transfer_cost(&items, &assign, &topo), 0.0);
+    }
+
+    #[test]
+    fn greedy_offloads_until_device_cap_is_met() {
+        // Three co-resident tensors of 10 bytes with a 20-byte device: at
+        // least one must be offloaded.
+        let items = vec![item(0, 10, 0, 4), item(1, 10, 0, 4), item(2, 10, 0, 4)];
+        let topo = MemoryTopology::device_host(20, 1.0);
+        let assign = assign_regions_greedy(&items, &topo);
+        assert!(region_lower_bound(&items, &assign, 0) <= 20, "{assign:?}");
+        assert_eq!(bytes_offloaded(&items, &assign), 10, "{assign:?}");
+        assert_eq!(transfer_cost(&items, &assign, &topo), 10.0);
+    }
+
+    #[test]
+    fn oversized_items_are_pinned_off_device() {
+        let items = vec![item(0, 100, 0, 2), item(1, 8, 0, 2)];
+        let topo = MemoryTopology::device_host(32, 1.0);
+        let assign = assign_regions_greedy(&items, &topo);
+        assert_eq!(assign[0], 1, "oversized tensor must be pinned to host");
+        assert_eq!(assign[1], 0);
+    }
+
+    #[test]
+    fn disjoint_lifetimes_share_the_device() {
+        // Two 10-byte tensors that are never co-resident fit a 10-byte
+        // device without any offload.
+        let items = vec![item(0, 10, 0, 2), item(1, 10, 2, 4)];
+        let topo = MemoryTopology::device_host(10, 1.0);
+        let assign = assign_regions_greedy(&items, &topo);
+        assert_eq!(assign, vec![0, 0]);
+    }
+
+    #[test]
+    fn assign_and_pack_fits_the_device_cap() {
+        let items = vec![
+            item(0, 10, 0, 4),
+            item(1, 10, 0, 4),
+            item(2, 10, 0, 4),
+            item(3, 6, 1, 3),
+        ];
+        let topo = MemoryTopology::device_host(20, 1.0);
+        let (region_of, offs, sizes) = assign_and_pack(&items, &topo, 1);
+        assert!(sizes[0] <= 20, "device packing exceeds cap: {sizes:?}");
+        let caps = topo.capacities();
+        let got =
+            crate::alloc::check_placement_regions(&items, &region_of, &offs, &caps).unwrap();
+        assert_eq!(got, sizes);
+    }
+
+    #[test]
+    fn region_lower_bound_is_per_region() {
+        let items = vec![item(0, 10, 0, 4), item(1, 20, 0, 4)];
+        let region_of = vec![0, 1];
+        assert_eq!(region_lower_bound(&items, &region_of, 0), 10);
+        assert_eq!(region_lower_bound(&items, &region_of, 1), 20);
+    }
+}

@@ -4,7 +4,9 @@
 //! ([`crate::olla::planner::optimize_anytime`]) running on a worker thread:
 //! the scheduling ILP streams every improved incumbent out through the
 //! solver's incumbent callback, the planner materializes each one into a
-//! complete validated [`MemoryPlan`] (best-fit placed), and the handle keeps
+//! complete validated [`MemoryPlan`] (best-fit placed — per memory region
+//! when the planner options carry a multi-region
+//! [`crate::olla::MemoryTopology`]), and the handle keeps
 //! the best plan seen so far plus the anytime curve `(seconds, arena
 //! bytes)`. Callers poll at any moment and always receive a plan that
 //! passes [`crate::olla::validate_plan`] — long before the solve proves
@@ -77,20 +79,30 @@ pub(crate) struct HandleInner {
     started: Instant,
 }
 
+/// What the serving layer minimizes across candidate plans: the device
+/// arena plus the placement's transfer-cost term. For single-region
+/// topologies the transfer cost is always 0, so this is exactly the old
+/// arena-only comparison; under a multi-region topology it stops an
+/// over-offloaded greedy snapshot (small device arena, huge transfer
+/// cost) from permanently beating the objectively better final plan.
+fn plan_score(plan: &MemoryPlan) -> f64 {
+    plan.arena_size as f64 + plan.placement.transfer_cost
+}
+
 impl HandleInner {
     /// Fold one plan into the state: the anytime curve gets a point only
-    /// for the first plan and strict arena improvements (so its length is
-    /// the number of distinct improvements), while `best` also absorbs
-    /// equal-arena plans — the final pipeline plan replaces an equal
-    /// provisional one because it carries real solver metadata.
+    /// for the first plan and strict objective improvements (so its
+    /// length is the number of distinct improvements), while `best` also
+    /// absorbs equal-objective plans — the final pipeline plan replaces
+    /// an equal provisional one because it carries real solver metadata.
     fn accept(st: &mut HandleState, elapsed: f64, plan: &MemoryPlan) {
         let improved =
-            st.best.as_ref().map_or(true, |b| plan.arena_size < b.arena_size);
+            st.best.as_ref().map_or(true, |b| plan_score(plan) < plan_score(b));
         if improved || st.curve.is_empty() {
             st.curve.push((elapsed, plan.arena_size));
         }
         let acceptable =
-            st.best.as_ref().map_or(true, |b| plan.arena_size <= b.arena_size);
+            st.best.as_ref().map_or(true, |b| plan_score(plan) <= plan_score(b));
         if acceptable {
             st.best = Some(plan.clone());
         }
@@ -106,11 +118,19 @@ impl HandleInner {
         HandleInner::accept(&mut st, elapsed, &plan);
     }
 
+    /// Record the pipeline's final plan and mark the request done. The
+    /// final plan passes the same [`validate_plan`] gate as streamed
+    /// snapshots: an invalid best-effort result (e.g. an unsatisfiable
+    /// memory topology) is dropped rather than served, so `poll`/`join`
+    /// never hand out a plan that fails validation.
     fn finish(&self, plan: MemoryPlan) {
+        let valid = validate_plan(&self.graph, &plan).is_ok();
         let elapsed = self.started.elapsed().as_secs_f64();
         let mut st = self.state.lock().unwrap();
-        HandleInner::accept(&mut st, elapsed, &plan);
-        st.final_plan = Some(plan);
+        if valid {
+            HandleInner::accept(&mut st, elapsed, &plan);
+            st.final_plan = Some(plan);
+        }
         st.phase = PlanPhase::Done;
         drop(st);
         self.done.notify_all();
@@ -271,7 +291,8 @@ impl PlanHandle {
     /// In the common case this is the pipeline's final plan, which carries
     /// real solver metadata (status, node counts, incumbent log). On the
     /// rare instances where an earlier streamed snapshot ended up with a
-    /// strictly smaller arena than the final pipeline plan, that snapshot
+    /// strictly smaller objective (device arena + transfer cost) than the
+    /// final pipeline plan, that snapshot
     /// is returned instead — its `schedule.status` honestly reads
     /// time-limit/feasible (it is an unproven incumbent, whatever the
     /// final solve proved about a *different* order), and its solver
@@ -279,7 +300,9 @@ impl PlanHandle {
     /// non-`Optimal` status as "returned plan not proven optimal".
     ///
     /// # Panics
-    /// Panics if the planner worker panicked before producing any plan.
+    /// Panics if the planner worker panicked before producing any plan,
+    /// or if no produced plan ever passed `validate_plan` (e.g. the
+    /// request's memory topology admits no valid placement).
     pub fn join(mut self) -> MemoryPlan {
         {
             let st = self.inner.state.lock().unwrap();
@@ -295,7 +318,7 @@ impl PlanHandle {
         let st = self.inner.state.lock().unwrap();
         match (st.final_plan.clone(), st.best.clone()) {
             (Some(fin), Some(b)) => {
-                if b.arena_size < fin.arena_size {
+                if plan_score(&b) < plan_score(&fin) {
                     b
                 } else {
                     fin

@@ -15,16 +15,24 @@
 //!   cooperatively, `join()` for the final plan. Deadlines and proven-gap
 //!   targets stop the solve early with honest bounds — never an `Optimal`
 //!   label on an interrupted solve.
-//! * [`PlanService`] — a FIFO worker pool multiplexing many requests over a
+//! * [`PlanService`] — a worker pool multiplexing many requests over a
 //!   bounded number of pipelines, returning a [`PlanHandle`] per
-//!   submission.
+//!   submission. The wait queue is bounded (submissions beyond capacity
+//!   bounce with [`service::SubmitError::QueueFull`] backpressure) and
+//!   two-level prioritized ([`service::Priority::High`] overtakes queued
+//!   normal work).
 //!
-//! The CLI front ends live in `main.rs` (`olla plan --deadline-ms --gap`,
-//! `olla serve`), and the anytime curves recorded by the handles feed the
-//! Figure 10 benchmark report.
+//! Plans served through either layer honor the planner's
+//! [`crate::olla::MemoryTopology`]: snapshots of mid-solve incumbents are
+//! placed per region (greedy offload + per-region best-fit), so polls
+//! stay `validate_plan`-clean even under a capped device.
+//!
+//! The CLI front ends live in `main.rs` (`olla plan --deadline-ms --gap
+//! --device-cap`, `olla serve`), and the anytime curves recorded by the
+//! handles feed the Figure 10 benchmark report.
 
 pub mod handle;
 pub mod service;
 
 pub use handle::{PlanHandle, PlanPhase, PlanPoll};
-pub use service::{PlanRequest, PlanService};
+pub use service::{PlanRequest, PlanService, Priority, SubmitError};

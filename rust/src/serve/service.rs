@@ -3,45 +3,117 @@
 //! The service bounds how many planner pipelines run concurrently (each
 //! pipeline already parallelizes its branch & bound internally) and hands
 //! every submission back as a [`PlanHandle`], so callers poll, cancel and
-//! join exactly as with a dedicated thread. Requests are served FIFO.
+//! join exactly as with a dedicated thread.
+//!
+//! Production hardening on top of the plain pool:
+//!
+//! * **bounded queue with backpressure** — the wait queue holds at most
+//!   [`PlanService::with_capacity`]'s `capacity` requests; further
+//!   submissions fail fast with [`SubmitError::QueueFull`] instead of
+//!   growing without bound, so an overloaded service sheds load at the
+//!   edge rather than by latency collapse;
+//! * **two-level priority** — [`Priority::High`] requests (interactive
+//!   planning sessions) jump ahead of [`Priority::Normal`] batch work;
+//!   within a level, service stays FIFO.
 
 use super::handle::PlanHandle;
 use crate::graph::Graph;
 use crate::olla::planner::PlannerOptions;
 use std::collections::VecDeque;
+use std::fmt;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
+
+/// Scheduling priority of a plan request (two levels, high first).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    /// Served before any queued normal request (interactive traffic).
+    High,
+    /// Default batch priority, FIFO among itself.
+    #[default]
+    Normal,
+}
+
+/// Why a submission was rejected.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The wait queue already holds `capacity` requests; retry later or
+    /// shed the request (backpressure).
+    QueueFull {
+        /// The configured queue capacity that was exhausted.
+        capacity: usize,
+    },
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::QueueFull { capacity } => {
+                write!(f, "plan queue full ({capacity} requests waiting)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// One plan request: a graph plus planner options and anytime limits.
 pub struct PlanRequest {
     /// The training graph to plan memory for.
     pub graph: Graph,
-    /// Planner configuration (per-phase limits, control edges, …).
+    /// Planner configuration (per-phase limits, control edges, memory
+    /// topology, …).
     pub opts: PlannerOptions,
     /// Whole-pipeline deadline, measured from when a worker picks the
     /// request up (queue wait is not counted).
     pub deadline: Option<Duration>,
     /// Stop each embedded solve at this proven relative gap.
     pub gap: Option<f64>,
+    /// Queue priority (two levels; default [`Priority::Normal`]).
+    pub priority: Priority,
 }
 
 impl PlanRequest {
-    /// A request with default options and no anytime limits.
+    /// A request with default options, normal priority and no anytime
+    /// limits.
     pub fn new(graph: Graph) -> PlanRequest {
-        PlanRequest { graph, opts: PlannerOptions::default(), deadline: None, gap: None }
+        PlanRequest {
+            graph,
+            opts: PlannerOptions::default(),
+            deadline: None,
+            gap: None,
+            priority: Priority::Normal,
+        }
     }
 }
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-struct ServiceShared {
-    queue: Mutex<VecDeque<Job>>,
-    cv: Condvar,
-    shutdown: AtomicBool,
+struct Queues {
+    high: VecDeque<Job>,
+    normal: VecDeque<Job>,
 }
 
-/// A fixed pool of planner workers serving queued [`PlanRequest`]s.
+impl Queues {
+    fn len(&self) -> usize {
+        self.high.len() + self.normal.len()
+    }
+
+    fn pop(&mut self) -> Option<Job> {
+        self.high.pop_front().or_else(|| self.normal.pop_front())
+    }
+}
+
+struct ServiceShared {
+    queue: Mutex<Queues>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    capacity: usize,
+}
+
+/// A fixed pool of planner workers serving queued [`PlanRequest`]s with a
+/// bounded, two-level-priority wait queue.
 ///
 /// Dropping the service stops the workers after the queued jobs drain;
 /// cancel outstanding handles first for a prompt shutdown.
@@ -53,17 +125,26 @@ pub struct PlanService {
 impl PlanService {
     /// Start a service with `workers` planner threads (`0` = one per
     /// available core, capped at 4 — each pipeline multiplies out into its
-    /// own branch-and-bound pool).
+    /// own branch-and-bound pool) and an effectively unbounded queue.
     pub fn new(workers: usize) -> PlanService {
+        PlanService::with_capacity(workers, usize::MAX)
+    }
+
+    /// Like [`PlanService::new`], but the wait queue holds at most
+    /// `capacity` requests — submissions beyond that are rejected with
+    /// [`SubmitError::QueueFull`] (requests already running on a worker
+    /// do not count against the capacity).
+    pub fn with_capacity(workers: usize, capacity: usize) -> PlanService {
         let n = if workers == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4)
         } else {
             workers
         };
         let shared = Arc::new(ServiceShared {
-            queue: Mutex::new(VecDeque::new()),
+            queue: Mutex::new(Queues { high: VecDeque::new(), normal: VecDeque::new() }),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            capacity,
         });
         let mut handles = Vec::with_capacity(n);
         for _ in 0..n {
@@ -72,7 +153,7 @@ impl PlanService {
                 let job = {
                     let mut q = sh.queue.lock().unwrap();
                     loop {
-                        if let Some(j) = q.pop_front() {
+                        if let Some(j) = q.pop() {
                             break j;
                         }
                         if sh.shutdown.load(Ordering::Relaxed) {
@@ -87,18 +168,36 @@ impl PlanService {
         PlanService { shared, workers: handles }
     }
 
-    /// Queue a request and return its handle immediately. The handle's
+    /// Queue a request and return its handle immediately, or reject it
+    /// with backpressure when the wait queue is at capacity. The handle's
     /// phase stays `Queued` until a worker picks the request up.
-    pub fn submit(&self, req: PlanRequest) -> PlanHandle {
+    pub fn submit(&self, req: PlanRequest) -> Result<PlanHandle, SubmitError> {
+        // Reject before building the handle machinery (controls, state,
+        // worker closure): a hammered full queue then sheds load without
+        // paying the per-request setup. Holding the lock across `make`
+        // keeps check-then-insert atomic; it never touches the queue.
+        let mut q = self.shared.queue.lock().unwrap();
+        if q.len() >= self.shared.capacity {
+            return Err(SubmitError::QueueFull { capacity: self.shared.capacity });
+        }
         let (handle, body) = PlanHandle::make(req.graph, req.opts, req.deadline, req.gap);
-        self.shared.queue.lock().unwrap().push_back(body);
+        match req.priority {
+            Priority::High => q.high.push_back(body),
+            Priority::Normal => q.normal.push_back(body),
+        }
+        drop(q);
         self.shared.cv.notify_one();
-        handle
+        Ok(handle)
     }
 
     /// Requests waiting for a worker (excludes the ones already running).
     pub fn pending(&self) -> usize {
         self.shared.queue.lock().unwrap().len()
+    }
+
+    /// Maximum number of waiting requests before `submit` rejects.
+    pub fn capacity(&self) -> usize {
+        self.shared.capacity
     }
 
     /// Number of worker threads in the pool.
@@ -123,11 +222,13 @@ mod tests {
     use crate::graph::random::random_trainlike;
     use crate::olla::validate_plan;
     use crate::util::rng::Rng;
+    use std::time::Instant;
 
     #[test]
     fn service_runs_queued_requests_to_valid_plans() {
         let svc = PlanService::new(2);
         assert_eq!(svc.workers(), 2);
+        assert_eq!(svc.capacity(), usize::MAX);
         let mut rng = Rng::new(21);
         let graphs: Vec<_> = (0..3).map(|_| random_trainlike(&mut rng, 2)).collect();
         let handles: Vec<_> = graphs
@@ -136,7 +237,7 @@ mod tests {
                 let mut req = PlanRequest::new(g.clone());
                 req.opts = PlannerOptions::fast_test();
                 req.deadline = Some(Duration::from_secs(10));
-                svc.submit(req)
+                svc.submit(req).expect("unbounded queue never rejects")
             })
             .collect();
         for (g, h) in graphs.iter().zip(handles) {
@@ -154,23 +255,140 @@ mod tests {
         let mut rng = Rng::new(23);
         let g1 = random_trainlike(&mut rng, 3);
         let g2 = random_trainlike(&mut rng, 2);
-        let h1 = svc.submit(PlanRequest {
-            graph: g1.clone(),
-            opts: PlannerOptions::fast_test(),
-            deadline: Some(Duration::from_secs(5)),
-            gap: None,
-        });
-        let h2 = svc.submit(PlanRequest {
-            graph: g2.clone(),
-            opts: PlannerOptions::fast_test(),
-            deadline: Some(Duration::from_secs(5)),
-            gap: None,
-        });
+        let h1 = svc
+            .submit(PlanRequest {
+                graph: g1.clone(),
+                opts: PlannerOptions::fast_test(),
+                deadline: Some(Duration::from_secs(5)),
+                gap: None,
+                priority: Priority::Normal,
+            })
+            .unwrap();
+        let h2 = svc
+            .submit(PlanRequest {
+                graph: g2.clone(),
+                opts: PlannerOptions::fast_test(),
+                deadline: Some(Duration::from_secs(5)),
+                gap: None,
+                priority: Priority::Normal,
+            })
+            .unwrap();
         // h2 is either still queued or already running/done once h1 ends;
         // both handles must eventually produce valid plans.
         let p1 = h1.join();
         validate_plan(&g1, &p1).unwrap();
         let p2 = h2.join();
         validate_plan(&g2, &p2).unwrap();
+    }
+
+    /// Wait (bounded) until the worker has drained the queue.
+    fn wait_until_pending(svc: &PlanService, want: usize) {
+        let t0 = Instant::now();
+        while svc.pending() != want {
+            assert!(t0.elapsed() < Duration::from_secs(30), "queue never reached {want}");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    #[test]
+    fn bounded_queue_rejects_with_queue_full() {
+        // One worker, queue capacity 1. A long-running blocker occupies
+        // the worker; the first follow-up fills the queue and the second
+        // must bounce with QueueFull. Cancelling drains everything to
+        // valid plans — backpressure never corrupts accepted requests.
+        let svc = PlanService::with_capacity(1, 1);
+        let mut rng = Rng::new(29);
+        let g = random_trainlike(&mut rng, 4);
+        let blocker = svc
+            .submit(PlanRequest {
+                graph: g.clone(),
+                opts: PlannerOptions::default(), // generous limits: runs long
+                deadline: None,
+                gap: None,
+                priority: Priority::Normal,
+            })
+            .unwrap();
+        wait_until_pending(&svc, 0); // worker picked the blocker up
+        let queued = svc
+            .submit(PlanRequest {
+                graph: g.clone(),
+                opts: PlannerOptions::fast_test(),
+                deadline: Some(Duration::from_secs(5)),
+                gap: None,
+                priority: Priority::Normal,
+            })
+            .unwrap();
+        let rejected = svc.submit(PlanRequest {
+            graph: g.clone(),
+            opts: PlannerOptions::fast_test(),
+            deadline: Some(Duration::from_secs(5)),
+            gap: None,
+            priority: Priority::Normal,
+        });
+        match rejected {
+            Err(SubmitError::QueueFull { capacity }) => assert_eq!(capacity, 1),
+            other => panic!("expected QueueFull, got {:?}", other.map(|_| "handle")),
+        }
+        blocker.cancel();
+        let p1 = blocker.join();
+        validate_plan(&g, &p1).unwrap();
+        let p2 = queued.join();
+        validate_plan(&g, &p2).unwrap();
+    }
+
+    #[test]
+    fn high_priority_overtakes_queued_normal_requests() {
+        // One worker busy with a blocker; a normal request is queued
+        // first, then a high one. The high request must complete while
+        // the normal one has not even finished — FIFO order would finish
+        // the normal request strictly first.
+        let svc = PlanService::with_capacity(1, 8);
+        let mut rng = Rng::new(31);
+        let g = random_trainlike(&mut rng, 4);
+        let blocker = svc
+            .submit(PlanRequest {
+                graph: g.clone(),
+                opts: PlannerOptions::default(),
+                deadline: None,
+                gap: None,
+                priority: Priority::Normal,
+            })
+            .unwrap();
+        wait_until_pending(&svc, 0);
+        let normal = svc
+            .submit(PlanRequest {
+                graph: g.clone(),
+                opts: PlannerOptions::fast_test(),
+                deadline: Some(Duration::from_secs(5)),
+                gap: None,
+                priority: Priority::Normal,
+            })
+            .unwrap();
+        let high = svc
+            .submit(PlanRequest {
+                graph: g.clone(),
+                opts: PlannerOptions::fast_test(),
+                deadline: Some(Duration::from_secs(5)),
+                gap: None,
+                priority: Priority::High,
+            })
+            .unwrap();
+        blocker.cancel();
+        let _ = blocker.join();
+        // Busy-wait for the first moment the high request is done: the
+        // normal one must still be unfinished at that instant.
+        let t0 = Instant::now();
+        while !high.is_finished() {
+            assert!(t0.elapsed() < Duration::from_secs(60), "high request never finished");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(
+            !normal.is_finished(),
+            "normal request finished before the high-priority one was served"
+        );
+        let ph = high.join();
+        validate_plan(&g, &ph).unwrap();
+        let pn = normal.join();
+        validate_plan(&g, &pn).unwrap();
     }
 }
