@@ -1,0 +1,92 @@
+//! Recompute frontier: peak device memory vs recomputation/offload
+//! overhead per zoo model under constrained device capacities (no paper
+//! figure — this is the capacity-aware extension of the eq.-14 scheduler;
+//! see `docs/FORMULATION.md`, §"Capacity & recomputation rows").
+//!
+//! For each model the lifetimes are scheduled once uncapped (the baseline
+//! peak), then against device+host topologies whose device capacity is a
+//! fraction of that peak: the scheduler may hold idle tensors off-device
+//! at `recompute_penalty` per byte-step to fit. Writes
+//! `BENCH_fig_recompute.json`: one row per (model, capacity fraction)
+//! with the scheduled device peak, the off-device byte-steps, the
+//! materialized plan's device arena and the solver statistics — the
+//! peak-device vs recompute-overhead frontier.
+
+use olla::bench_support::{
+    bench_solver_threads, fmt_secs, has_flag, phase_cap, section, solver_stats_json, BenchReport,
+};
+use olla::coordinator::{recompute_sweep, zoo_cases, Table};
+use olla::models::ModelScale;
+use olla::olla::ScheduleOptions;
+use olla::util::human_bytes;
+use olla::util::json::{num, obj, s, Json};
+
+fn main() {
+    section("Recompute frontier — peak device memory vs off-device byte-steps");
+    let fractions = [0.9, 0.8, 0.65];
+    let recompute_penalty = 0.05; // objective cost per off-device byte-step
+    let opts = ScheduleOptions {
+        time_limit: phase_cap(),
+        solver_threads: bench_solver_threads(),
+        ..Default::default()
+    };
+    let cases = zoo_cases(&[1], ModelScale::Reduced);
+    let threads = if has_flag("--serial") { 1 } else { 0 };
+    let rows = recompute_sweep(&cases, &fractions, recompute_penalty, &opts, threads);
+
+    let mut table = Table::new(&[
+        "model", "cap%", "device cap", "device peak", "spilled", "byte-steps", "ok", "time",
+    ]);
+    let mut report = BenchReport::new("fig_recompute");
+    let mut satisfied = 0usize;
+    let mut spilling = 0usize;
+    for row in &rows {
+        if row.cap_satisfied {
+            satisfied += 1;
+        }
+        if row.cap_satisfied && row.spilled_byte_steps > 0 {
+            spilling += 1;
+        }
+        table.row(vec![
+            row.model.clone(),
+            format!("{:.0}%", 100.0 * row.cap_fraction),
+            human_bytes(row.device_cap),
+            human_bytes(row.device_peak),
+            row.spilled_tensors.to_string(),
+            row.spilled_byte_steps.to_string(),
+            if row.cap_satisfied && row.plan_valid { "yes".into() } else { "NO".into() },
+            fmt_secs(row.solve_secs),
+        ]);
+        report.push(obj(vec![
+            ("model", s(&row.model)),
+            ("batch", num(row.batch as f64)),
+            ("cap_fraction", num(row.cap_fraction)),
+            ("device_cap_bytes", num(row.device_cap as f64)),
+            ("uncapped_peak_bytes", num(row.uncapped_peak as f64)),
+            ("device_peak_bytes", num(row.device_peak as f64)),
+            ("sim_peak_bytes", num(row.sim_peak as f64)),
+            ("spilled_tensors", num(row.spilled_tensors as f64)),
+            ("spilled_byte_steps", num(row.spilled_byte_steps as f64)),
+            ("recompute_cost", num(row.recompute_cost)),
+            ("cap_satisfied", Json::Bool(row.cap_satisfied)),
+            ("plan_valid", Json::Bool(row.plan_valid)),
+            ("plan_device_arena_bytes", num(row.plan_device_arena as f64)),
+            ("status", s(&row.status)),
+            ("solve_secs", num(row.solve_secs)),
+            (
+                "solver",
+                solver_stats_json(row.simplex_iters, row.nodes, row.warm_attempts, row.warm_hits),
+            ),
+        ]));
+    }
+    table.print();
+    println!(
+        "{satisfied}/{} capacity cases satisfied; {spilling} satisfied by actually \
+         holding tensors off-device",
+        rows.len()
+    );
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench report: {e}"),
+    }
+}

@@ -235,6 +235,120 @@ pub fn compare_solver_samples(
     failures
 }
 
+/// One anytime-behaviour sample extracted from a fig10-style report row:
+/// the time to the first valid plan and the proven relative gap at the
+/// deadline. These are the serving-quality numbers the anytime-curve
+/// regression gate (`check_bench --anytime-baseline`) compares
+/// cross-commit per zoo case.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AnytimeSample {
+    /// Stable row key: `<bench>/<model>[@<batch>]`.
+    pub key: String,
+    /// Seconds until the first `validate_plan`-clean plan was servable.
+    pub first_plan_secs: f64,
+    /// Relative scheduling gap proven when the deadline fired (reports
+    /// cap unknown gaps at 1e12).
+    pub gap_at_deadline: f64,
+}
+
+/// Extract the anytime samples of a `BENCH_*.json` document (rows without
+/// a `first_plan_secs` field are skipped).
+pub fn anytime_samples(report: &Json) -> Vec<AnytimeSample> {
+    let bench = report.get("bench").and_then(Json::as_str).unwrap_or("bench");
+    let mut out = Vec::new();
+    let Some(rows) = report.get("rows").and_then(Json::as_arr) else { return out };
+    for row in rows {
+        let Some(first) = row.get("first_plan_secs").and_then(Json::as_f64) else {
+            continue;
+        };
+        let model = row.get("model").and_then(Json::as_str).unwrap_or("?");
+        let key = match row.get("batch").and_then(Json::as_u64) {
+            Some(batch) => format!("{bench}/{model}@{batch}"),
+            None => format!("{bench}/{model}"),
+        };
+        out.push(AnytimeSample {
+            key,
+            first_plan_secs: first,
+            gap_at_deadline: row.get("final_gap").and_then(Json::as_f64).unwrap_or(1e12),
+        });
+    }
+    out
+}
+
+/// Serialize anytime samples as the baseline document consumed by
+/// [`compare_anytime_samples`] (and `check_bench --anytime-baseline`).
+pub fn anytime_to_baseline_json(samples: &[AnytimeSample]) -> Json {
+    Json::Arr(
+        samples
+            .iter()
+            .map(|sm| {
+                obj(vec![
+                    ("key", Json::Str(sm.key.clone())),
+                    ("first_plan_secs", Json::Num(sm.first_plan_secs)),
+                    ("gap_at_deadline", Json::Num(sm.gap_at_deadline)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Parse a baseline document written by [`anytime_to_baseline_json`].
+pub fn anytime_from_baseline_json(doc: &Json) -> Vec<AnytimeSample> {
+    let Some(rows) = doc.as_arr() else { return Vec::new() };
+    rows.iter()
+        .filter_map(|row| {
+            Some(AnytimeSample {
+                key: row.get("key")?.as_str()?.to_string(),
+                first_plan_secs: row
+                    .get("first_plan_secs")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0),
+                gap_at_deadline: row
+                    .get("gap_at_deadline")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(1e12),
+            })
+        })
+        .collect()
+}
+
+/// Compare current anytime samples against a baseline: per matching key,
+/// the time-to-first-valid-plan growing by more than `tolerance`
+/// (relative, over a 0.5 s absolute floor that absorbs scheduler jitter
+/// on near-instant plans), or the gap-at-deadline worsening by more than
+/// `tolerance` absolute gap points, is a regression. A baseline row whose
+/// gap was unknown (1e12) never constrains the gap; a current run that
+/// *loses* a previously known gap fails loudly. Keys present on only one
+/// side are ignored (bench sets may grow).
+pub fn compare_anytime_samples(
+    baseline: &[AnytimeSample],
+    current: &[AnytimeSample],
+    tolerance: f64,
+) -> Vec<String> {
+    let mut failures = Vec::new();
+    for base in baseline {
+        let Some(cur) = current.iter().find(|c| c.key == base.key) else { continue };
+        let first_floor = base.first_plan_secs.max(0.5);
+        if cur.first_plan_secs > first_floor * (1.0 + tolerance) {
+            failures.push(format!(
+                "{}: time to first valid plan regressed {:.2}s -> {:.2}s (>{:.0}% over baseline)",
+                base.key,
+                base.first_plan_secs,
+                cur.first_plan_secs,
+                100.0 * tolerance
+            ));
+        }
+        if base.gap_at_deadline < 1e12 && cur.gap_at_deadline > base.gap_at_deadline + tolerance
+        {
+            failures.push(format!(
+                "{}: gap at deadline regressed {:.4} -> {:.4} (>{:.2} absolute worsening)",
+                base.key, base.gap_at_deadline, cur.gap_at_deadline, tolerance
+            ));
+        }
+    }
+    failures
+}
+
 /// A machine-readable benchmark report, written as `BENCH_<name>.json`.
 ///
 /// Rows are arbitrary JSON objects (one per table row); [`BenchReport::write`]
@@ -400,6 +514,66 @@ mod tests {
             warm_hit_rate: 0.0,
         }];
         assert!(compare_solver_samples(&base, &cur, 0.25).is_empty());
+    }
+
+    #[test]
+    fn anytime_samples_roundtrip_and_compare() {
+        let mut report = BenchReport::new("fig10_anytime");
+        report.push(crate::util::json::obj(vec![
+            ("model", crate::util::json::s("efficientnet")),
+            ("batch", Json::Num(1.0)),
+            ("first_plan_secs", Json::Num(0.8)),
+            ("final_gap", Json::Num(0.02)),
+        ]));
+        report.push(crate::util::json::obj(vec![
+            // No first_plan_secs: not an anytime row, skipped.
+            ("model", crate::util::json::s("TOTAL")),
+        ]));
+        let samples = anytime_samples(&report.to_json());
+        assert_eq!(samples.len(), 1);
+        assert_eq!(samples[0].key, "fig10_anytime/efficientnet@1");
+        let doc = anytime_to_baseline_json(&samples);
+        let parsed = Json::parse(&doc.to_string_pretty()).unwrap();
+        assert_eq!(anytime_from_baseline_json(&parsed), samples);
+        assert!(compare_anytime_samples(&samples, &samples, 0.25).is_empty());
+    }
+
+    #[test]
+    fn anytime_compare_flags_regressions_beyond_tolerance() {
+        let base = vec![AnytimeSample {
+            key: "fig10_anytime/efficientnet@1".into(),
+            first_plan_secs: 1.0,
+            gap_at_deadline: 0.05,
+        }];
+        // Within tolerance: +20% first-plan latency, +0.1 gap points.
+        let ok = vec![AnytimeSample {
+            key: "fig10_anytime/efficientnet@1".into(),
+            first_plan_secs: 1.2,
+            gap_at_deadline: 0.14,
+        }];
+        assert!(compare_anytime_samples(&base, &ok, 0.25).is_empty());
+        // First plan 2x slower and the gap lost entirely: two failures.
+        let bad = vec![AnytimeSample {
+            key: "fig10_anytime/efficientnet@1".into(),
+            first_plan_secs: 2.0,
+            gap_at_deadline: 1e12,
+        }];
+        let failures = compare_anytime_samples(&base, &bad, 0.25);
+        assert_eq!(failures.len(), 2, "{failures:?}");
+        // A near-instant baseline doubling inside the 0.5 s floor is noise.
+        let tiny_base = vec![AnytimeSample {
+            key: "fig10_anytime/alexnet@1".into(),
+            first_plan_secs: 0.05,
+            gap_at_deadline: 1e12,
+        }];
+        let tiny_cur = vec![AnytimeSample {
+            key: "fig10_anytime/alexnet@1".into(),
+            first_plan_secs: 0.1,
+            gap_at_deadline: 1e12,
+        }];
+        assert!(compare_anytime_samples(&tiny_base, &tiny_cur, 0.25).is_empty());
+        // Unknown baseline gap never constrains the current gap.
+        assert!(compare_anytime_samples(&tiny_base, &tiny_base, 0.25).is_empty());
     }
 
     #[test]

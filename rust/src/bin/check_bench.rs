@@ -1,18 +1,24 @@
-//! `check_bench` — the solver-efficiency regression gate.
+//! `check_bench` — the solver-efficiency and anytime-curve regression
+//! gates.
 //!
 //! Compares the solver statistics (simplex iterations, branch-and-bound
 //! nodes, warm-start hit rate) in one or more `BENCH_*.json` reports
 //! against a checked-in baseline and exits non-zero — loudly — when any
-//! sample regressed by more than the tolerance (default 25%).
+//! sample regressed by more than the tolerance (default 25%). With
+//! `--anytime-baseline`/`--anytime-current` it additionally gates the
+//! anytime serving quality of `BENCH_fig10_anytime.json`-style reports:
+//! time-to-first-valid-plan and gap-at-deadline per zoo case.
 //!
 //! ```text
 //! # after: cargo bench --bench fig9_ordering_time --bench fig11_addrgen_time
 //! cargo run --release --bin check_bench -- \
 //!     --baseline baselines/solver_baseline.json \
 //!     --current BENCH_fig9_ordering_time.json \
-//!     --current BENCH_fig11_addrgen_time.json
+//!     --current BENCH_fig11_addrgen_time.json \
+//!     --anytime-baseline baselines/anytime_baseline.json \
+//!     --anytime-current BENCH_fig10_anytime.json
 //!
-//! # record a new baseline from the same reports (commit the file):
+//! # record new baselines from the same reports (commit the files):
 //! cargo run --release --bin check_bench -- --bless \
 //!     --baseline baselines/solver_baseline.json --current ...
 //! ```
@@ -23,8 +29,9 @@
 //! are reported but never fail the run: bench sets may grow.
 
 use olla::bench_support::{
-    compare_solver_samples, samples_from_baseline_json, samples_to_baseline_json,
-    solver_samples, SolverSample,
+    anytime_from_baseline_json, anytime_samples, anytime_to_baseline_json,
+    compare_anytime_samples, compare_solver_samples, samples_from_baseline_json,
+    samples_to_baseline_json, solver_samples, AnytimeSample, SolverSample,
 };
 use olla::util::json::Json;
 use std::path::Path;
@@ -38,12 +45,51 @@ fn flag_values(args: &[String], name: &str) -> Vec<String> {
         .collect()
 }
 
+/// Parse every report path into a JSON document, or explain which one
+/// failed.
+fn read_reports(paths: &[String]) -> Result<Vec<Json>, String> {
+    let mut docs = Vec::with_capacity(paths.len());
+    for path in paths {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {path}: {e}"))?;
+        docs.push(Json::parse(&text).map_err(|e| format!("{path} is not valid JSON: {e}"))?);
+    }
+    Ok(docs)
+}
+
+/// Write a baseline document, creating the parent directory as needed.
+fn write_baseline(path: &str, doc: &Json, what: &str, count: usize) -> Result<(), String> {
+    if let Some(dir) = Path::new(path).parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    std::fs::write(path, doc.to_string_pretty())
+        .map_err(|e| format!("cannot write baseline {path}: {e}"))?;
+    println!("check_bench: blessed {count} {what} samples into {path}");
+    Ok(())
+}
+
+/// Load a baseline document; `Ok(None)` when the file does not exist.
+fn read_baseline(path: &str) -> Result<Option<Json>, String> {
+    if !Path::new(path).exists() {
+        return Ok(None);
+    }
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read baseline {path}: {e}"))?;
+    Ok(Some(
+        Json::parse(&text).map_err(|e| format!("baseline {path} is not valid JSON: {e}"))?,
+    ))
+}
+
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let baseline_path = flag_values(&args, "--baseline")
         .pop()
         .unwrap_or_else(|| "baselines/solver_baseline.json".to_string());
     let current_paths = flag_values(&args, "--current");
+    let anytime_baseline_path = flag_values(&args, "--anytime-baseline")
+        .pop()
+        .unwrap_or_else(|| "baselines/anytime_baseline.json".to_string());
+    let anytime_current_paths = flag_values(&args, "--anytime-current");
     let tolerance: f64 = flag_values(&args, "--tolerance")
         .pop()
         .and_then(|v| v.parse().ok())
@@ -51,82 +97,168 @@ fn main() -> ExitCode {
     let bless = args.iter().any(|a| a == "--bless");
     let bless_if_missing = args.iter().any(|a| a == "--bless-if-missing");
 
-    if current_paths.is_empty() {
+    if current_paths.is_empty() && anytime_current_paths.is_empty() {
         eprintln!("usage: check_bench --baseline FILE --current BENCH_x.json [--current ...] \\");
+        eprintln!("                   [--anytime-baseline FILE --anytime-current BENCH_y.json] \\");
         eprintln!("                   [--tolerance 0.25] [--bless | --bless-if-missing]");
         return ExitCode::from(2);
     }
 
     let mut current: Vec<SolverSample> = Vec::new();
-    for path in &current_paths {
-        let text = match std::fs::read_to_string(path) {
-            Ok(t) => t,
-            Err(e) => {
-                eprintln!("check_bench: cannot read {path}: {e}");
-                return ExitCode::from(2);
-            }
-        };
-        match Json::parse(&text) {
-            Ok(doc) => current.extend(solver_samples(&doc)),
-            Err(e) => {
-                eprintln!("check_bench: {path} is not valid JSON: {e}");
-                return ExitCode::from(2);
+    match read_reports(&current_paths) {
+        Ok(docs) => {
+            for doc in &docs {
+                current.extend(solver_samples(doc));
             }
         }
-    }
-    println!("check_bench: {} solver samples from {} report(s)", current.len(), current_paths.len());
-
-    let baseline_exists = Path::new(&baseline_path).exists();
-    if bless || (bless_if_missing && !baseline_exists) {
-        let doc = samples_to_baseline_json(&current);
-        if let Some(dir) = Path::new(&baseline_path).parent() {
-            let _ = std::fs::create_dir_all(dir);
-        }
-        if let Err(e) = std::fs::write(&baseline_path, doc.to_string_pretty()) {
-            eprintln!("check_bench: cannot write baseline {baseline_path}: {e}");
-            return ExitCode::from(2);
-        }
-        println!("check_bench: blessed {} samples into {baseline_path}", current.len());
-        return ExitCode::SUCCESS;
-    }
-
-    let baseline_text = match std::fs::read_to_string(&baseline_path) {
-        Ok(t) => t,
         Err(e) => {
-            eprintln!("check_bench: cannot read baseline {baseline_path}: {e} (run with --bless first)");
+            eprintln!("check_bench: {e}");
             return ExitCode::from(2);
         }
-    };
-    let baseline = match Json::parse(&baseline_text) {
-        Ok(doc) => samples_from_baseline_json(&doc),
-        Err(e) => {
-            eprintln!("check_bench: baseline {baseline_path} is not valid JSON: {e}");
-            return ExitCode::from(2);
-        }
-    };
-    if baseline.is_empty() {
-        println!(
-            "check_bench: baseline {baseline_path} holds no samples yet — nothing to compare \
-             (bless one with --bless)"
-        );
-        return ExitCode::SUCCESS;
     }
-    let matched = baseline
-        .iter()
-        .filter(|b| current.iter().any(|c| c.key == b.key))
-        .count();
+    let mut anytime_current: Vec<AnytimeSample> = Vec::new();
+    match read_reports(&anytime_current_paths) {
+        Ok(docs) => {
+            for doc in &docs {
+                anytime_current.extend(anytime_samples(doc));
+            }
+        }
+        Err(e) => {
+            eprintln!("check_bench: {e}");
+            return ExitCode::from(2);
+        }
+    }
     println!(
-        "check_bench: comparing {matched}/{} baseline samples (tolerance {:.0}%)",
-        baseline.len(),
-        100.0 * tolerance
+        "check_bench: {} solver samples from {} report(s), {} anytime samples from {}",
+        current.len(),
+        current_paths.len(),
+        anytime_current.len(),
+        anytime_current_paths.len()
     );
 
-    let failures = compare_solver_samples(&baseline, &current, tolerance);
+    if bless || bless_if_missing {
+        let mut blessed_any = false;
+        if !current_paths.is_empty()
+            && (bless || !Path::new(&baseline_path).exists())
+        {
+            let doc = samples_to_baseline_json(&current);
+            if let Err(e) = write_baseline(&baseline_path, &doc, "solver", current.len()) {
+                eprintln!("check_bench: {e}");
+                return ExitCode::from(2);
+            }
+            blessed_any = true;
+        }
+        if !anytime_current_paths.is_empty()
+            && (bless || !Path::new(&anytime_baseline_path).exists())
+        {
+            let doc = anytime_to_baseline_json(&anytime_current);
+            if let Err(e) = write_baseline(
+                &anytime_baseline_path,
+                &doc,
+                "anytime",
+                anytime_current.len(),
+            ) {
+                eprintln!("check_bench: {e}");
+                return ExitCode::from(2);
+            }
+            blessed_any = true;
+        }
+        if !blessed_any {
+            println!("check_bench: baselines already exist — nothing to bless");
+        }
+        if bless {
+            return ExitCode::SUCCESS;
+        }
+        // `--bless-if-missing` falls through to the comparison: a freshly
+        // self-seeded baseline compares vacuously against itself, while a
+        // pre-existing one still gates this run.
+    }
+
+    let mut failures: Vec<String> = Vec::new();
+
+    if !current_paths.is_empty() {
+        match read_baseline(&baseline_path) {
+            Ok(None) => {
+                eprintln!(
+                    "check_bench: cannot read baseline {baseline_path}: not found \
+                     (run with --bless first)"
+                );
+                return ExitCode::from(2);
+            }
+            Ok(Some(doc)) => {
+                let baseline = samples_from_baseline_json(&doc);
+                if baseline.is_empty() {
+                    println!(
+                        "check_bench: baseline {baseline_path} holds no samples yet — nothing \
+                         to compare (bless one with --bless)"
+                    );
+                } else {
+                    let matched = baseline
+                        .iter()
+                        .filter(|b| current.iter().any(|c| c.key == b.key))
+                        .count();
+                    println!(
+                        "check_bench: comparing {matched}/{} solver baseline samples \
+                         (tolerance {:.0}%)",
+                        baseline.len(),
+                        100.0 * tolerance
+                    );
+                    failures.extend(compare_solver_samples(&baseline, &current, tolerance));
+                }
+            }
+            Err(e) => {
+                eprintln!("check_bench: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    if !anytime_current_paths.is_empty() {
+        match read_baseline(&anytime_baseline_path) {
+            Ok(None) => {
+                eprintln!(
+                    "check_bench: cannot read anytime baseline {anytime_baseline_path}: not \
+                     found (run with --bless first)"
+                );
+                return ExitCode::from(2);
+            }
+            Ok(Some(doc)) => {
+                let baseline = anytime_from_baseline_json(&doc);
+                if baseline.is_empty() {
+                    println!(
+                        "check_bench: anytime baseline {anytime_baseline_path} holds no samples \
+                         yet — nothing to compare (bless one with --bless)"
+                    );
+                } else {
+                    let matched = baseline
+                        .iter()
+                        .filter(|b| anytime_current.iter().any(|c| c.key == b.key))
+                        .count();
+                    println!(
+                        "check_bench: comparing {matched}/{} anytime baseline samples \
+                         (tolerance {:.0}%)",
+                        baseline.len(),
+                        100.0 * tolerance
+                    );
+                    failures.extend(compare_anytime_samples(
+                        &baseline,
+                        &anytime_current,
+                        tolerance,
+                    ));
+                }
+            }
+            Err(e) => {
+                eprintln!("check_bench: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
     if failures.is_empty() {
-        println!("check_bench: OK — no solver-efficiency regression beyond tolerance");
+        println!("check_bench: OK — no regression beyond tolerance");
         ExitCode::SUCCESS
     } else {
-        eprintln!("check_bench: SOLVER EFFICIENCY REGRESSION ({} failure(s)):", failures.len());
+        eprintln!("check_bench: REGRESSION ({} failure(s)):", failures.len());
         for f in &failures {
             eprintln!("  ✗ {f}");
         }

@@ -420,6 +420,143 @@ pub fn offload_sweep(
     .collect()
 }
 
+/// Recompute-frontier row (`BENCH_fig_recompute.json`): one zoo model
+/// scheduled by the capacity-aware eq.-14 extension under one constrained
+/// device capacity (see `docs/FORMULATION.md`, §"Capacity & recomputation
+/// rows").
+#[derive(Debug, Clone)]
+pub struct RecomputeRow {
+    /// Model name.
+    pub model: String,
+    /// Batch size.
+    pub batch: usize,
+    /// Device capacity the case ran under (bytes).
+    pub device_cap: u64,
+    /// `device_cap / uncapped_peak` (the sweep's knob).
+    pub cap_fraction: f64,
+    /// Sim peak of the *uncapped* schedule (bytes).
+    pub uncapped_peak: u64,
+    /// Device-resident peak of the capacity-aware schedule once its spill
+    /// certificate is applied (bytes).
+    pub device_peak: u64,
+    /// Raw resident peak of the chosen order, spills ignored (bytes).
+    pub sim_peak: u64,
+    /// Number of tensors the schedule holds off-device at some point.
+    pub spilled_tensors: usize,
+    /// Off-device byte-steps — the recompute/transfer overhead measure.
+    pub spilled_byte_steps: u64,
+    /// Objective charge for the spills (`recompute_penalty · byte_steps`).
+    pub recompute_cost: f64,
+    /// True when the scheduled device peak respects the capacity.
+    pub cap_satisfied: bool,
+    /// Device arena of the materialized (best-fit, spill-pinned) plan, or
+    /// 0 when materialization failed validation.
+    pub plan_device_arena: u64,
+    /// True when the materialized plan passed `validate_plan`.
+    pub plan_valid: bool,
+    /// Scheduling ILP status string.
+    pub status: String,
+    /// Scheduling wall-clock seconds.
+    pub solve_secs: f64,
+    /// Total simplex iterations.
+    pub simplex_iters: u64,
+    /// Branch-and-bound nodes explored.
+    pub nodes: u64,
+    /// Child LPs that attempted a warm start from their parent's basis.
+    pub warm_attempts: u64,
+    /// Warm-start attempts accepted by the dual re-solve path.
+    pub warm_hits: u64,
+}
+
+/// Run the recompute-frontier experiment on one case: schedule once
+/// uncapped (the baseline peak), then once per capacity fraction with the
+/// capacity-aware scheduler against a device+host topology, materializing
+/// each capped schedule into a validated plan. Each row records the
+/// peak-device vs recompute-overhead trade the optimizer found.
+pub fn recompute_experiment(
+    case: &ModelCase,
+    fractions: &[f64],
+    recompute_penalty: f64,
+    opts: &ScheduleOptions,
+) -> Vec<RecomputeRow> {
+    use crate::olla::topology::MemoryTopology;
+    let g = &case.graph;
+    let base = olla::optimize_schedule(g, opts);
+    let uncapped = base.sim_peak;
+    // No cap below a single node's in+out bytes is satisfiable: clamp so
+    // every row is a feasible instance and the frontier stays meaningful.
+    let floor = olla::capacity_floor(g);
+    fractions
+        .iter()
+        .map(|&f| {
+            let cap = ((uncapped as f64 * f) as u64).max(floor).max(1);
+            let topo = MemoryTopology::device_host(cap, 0.5);
+            let case_opts = ScheduleOptions {
+                topology: topo.clone(),
+                recompute_penalty,
+                ..opts.clone()
+            };
+            let r = olla::optimize_schedule(g, &case_opts);
+            let byte_steps = olla::spilled_byte_steps(g, &r.spills);
+            let plan = olla::materialize_plan(
+                g,
+                r.order.clone(),
+                r.ilp_peak as f64,
+                0,
+                &topo,
+                r.spills.clone(),
+            );
+            let (plan_valid, plan_device_arena) = match &plan {
+                Ok(p) => (true, p.arena_size),
+                Err(_) => (false, 0),
+            };
+            RecomputeRow {
+                model: case.name.clone(),
+                batch: case.batch,
+                device_cap: cap,
+                cap_fraction: f,
+                uncapped_peak: uncapped,
+                device_peak: r.device_peak,
+                sim_peak: r.sim_peak,
+                spilled_tensors: r.spills.len(),
+                spilled_byte_steps: byte_steps,
+                recompute_cost: recompute_penalty * byte_steps as f64,
+                cap_satisfied: r.device_peak <= cap,
+                plan_device_arena,
+                plan_valid,
+                status: r.status.to_string(),
+                solve_secs: r.solve_secs,
+                simplex_iters: r.simplex_iters,
+                nodes: r.nodes,
+                warm_attempts: r.warm_attempts,
+                warm_hits: r.warm_hits,
+            }
+        })
+        .collect()
+}
+
+/// Run the recompute-frontier experiment over many cases on a worker
+/// pool; rows come back flattened in case order (one row per capacity
+/// fraction per case).
+pub fn recompute_sweep(
+    cases: &[ModelCase],
+    fractions: &[f64],
+    recompute_penalty: f64,
+    opts: &ScheduleOptions,
+    threads: usize,
+) -> Vec<RecomputeRow> {
+    let mut per_case = opts.clone();
+    if threads != 1 {
+        per_case.solver_threads = 1;
+    }
+    par_map(cases, threads, |case| {
+        recompute_experiment(case, fractions, recompute_penalty, &per_case)
+    })
+    .into_iter()
+    .flatten()
+    .collect()
+}
+
 /// Figure 10/12 row: the anytime behaviour of one plan request served
 /// through [`crate::serve::PlanHandle`] under a deadline.
 #[derive(Debug, Clone)]
@@ -650,6 +787,29 @@ mod tests {
             rows[1].device_cap, rows[1].device_peak
         );
         assert!(rows[1].device_peak <= rows[1].device_cap);
+    }
+
+    #[test]
+    fn recompute_experiment_traces_a_frontier() {
+        let case = small_case();
+        // Keep the instance on the ILP path regardless of the full-horizon
+        // row growth; the 5 s cap bounds the test either way.
+        let opts = ScheduleOptions { max_ilp_rows: usize::MAX, ..quick_sched() };
+        let rows = recompute_experiment(&case, &[1.25, 0.7], 0.0625, &opts);
+        assert_eq!(rows.len(), 2);
+        // Roomy capacity: nothing needs to leave the device.
+        assert!(rows[0].cap_satisfied, "{:?}", rows[0]);
+        assert!(rows[0].plan_valid, "{:?}", rows[0]);
+        // Binding capacity: the scheduled device peak must respect the
+        // cap, and the materialized plan must stay valid.
+        assert!(rows[1].cap_satisfied, "{:?}", rows[1]);
+        assert!(rows[1].device_peak <= rows[1].device_cap, "{:?}", rows[1]);
+        assert!(rows[1].plan_valid, "{:?}", rows[1]);
+        assert!(
+            rows[1].plan_device_arena <= rows[1].device_cap,
+            "materialized arena exceeds the cap: {:?}",
+            rows[1]
+        );
     }
 
     #[test]

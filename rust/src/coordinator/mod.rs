@@ -8,8 +8,9 @@ pub mod table;
 
 pub use experiments::{
     anytime_experiment, fragmentation_experiment, fragmentation_sweep, offload_experiment,
-    offload_sweep, par_map, reorder_experiment, reorder_sweep, runtime_overhead_experiment,
-    total_experiment, total_sweep, zoo_cases, AnytimeRow, FragRow, ModelCase, OffloadRow,
-    ReorderRow, RuntimeRow, TotalRow,
+    offload_sweep, par_map, recompute_experiment, recompute_sweep, reorder_experiment,
+    reorder_sweep, runtime_overhead_experiment, total_experiment, total_sweep, zoo_cases,
+    AnytimeRow, FragRow, ModelCase, OffloadRow, RecomputeRow, ReorderRow, RuntimeRow,
+    TotalRow,
 };
 pub use table::Table;

@@ -19,7 +19,8 @@
 //!   variable names.
 //!
 //! [`IlpBuilder::into_parts`] yields the finished [`Model`] plus the
-//! [`IlpMeta`] (groups + pair registry).
+//! [`IlpMeta`] (groups + pair registry). The equation-by-equation map
+//! from the paper to these gadgets lives in `docs/FORMULATION.md`.
 
 use super::model::{Cmp, Model, VarId};
 use std::collections::HashMap;
@@ -237,6 +238,54 @@ impl IlpBuilder {
         pv
     }
 
+    /// The Checkmate-style spill/regeneration indicator of the
+    /// capacity-aware scheduling extension (see `docs/FORMULATION.md`,
+    /// §"Capacity & recomputation rows"): a binary `S` that is 1 when a
+    /// preserved tensor is held *off-device* at a timestep — spilled to
+    /// host, to be transferred back (or recomputed, à la Checkmate's
+    /// `R[v,t]`) before its next use. Adds
+    ///
+    /// * `S <= preserved` — only a preserved tensor can be off-device;
+    /// * `S + u <= 1` for each `u` in `uses` — the tensor must be
+    ///   device-resident at any timestep where one of its consumers runs.
+    ///
+    /// `cost` is the objective charge per timestep of off-device
+    /// residency (`recompute_penalty * size` in the scheduling model).
+    pub fn spill_indicator(
+        &mut self,
+        group: &str,
+        name: impl Into<String>,
+        cost: f64,
+        preserved: VarId,
+        uses: impl IntoIterator<Item = VarId>,
+    ) -> VarId {
+        let s = self.binary(group, name, cost);
+        self.implies(s, preserved);
+        for u in uses {
+            self.at_most_one([s, u]);
+        }
+        s
+    }
+
+    /// Eq.-13 device-residency accounting with the spill relaxation:
+    /// `sum(resident) - sum(spilled) <= cap`. `resident` carries the
+    /// creation/preservation binaries with their positive byte sizes,
+    /// `spilled` the [`IlpBuilder::spill_indicator`] binaries with the
+    /// same sizes (a spilled tensor stops counting against the device
+    /// peak). With `spilled` empty this is exactly
+    /// [`IlpBuilder::sum_le_var`].
+    pub fn resident_le_var(
+        &mut self,
+        mut resident: Vec<(VarId, f64)>,
+        spilled: &[(VarId, f64)],
+        cap: VarId,
+    ) {
+        for &(v, size) in spilled {
+            resident.push((v, -size));
+        }
+        self.sum_le_var(resident, cap);
+    }
+
     /// The region-aware extension of [`IlpBuilder::pair_no_overlap`]: the
     /// same eq. 6/7a/7b gadget (free or fixed positions compose as
     /// before), but the two ordering binaries are only *forced* to commit
@@ -406,6 +455,40 @@ mod tests {
         assert!(s.bool_value(pv.below) ^ s.bool_value(pv.above));
         let (oi, oj) = (s.value(ai), s.value(aj));
         assert!(oi + 10.0 <= oj + 1e-6 || oj + 20.0 <= oi + 1e-6, "A[0]={oi} A[1]={oj}");
+    }
+
+    #[test]
+    fn spill_indicator_relieves_the_cap_only_while_idle() {
+        // One preserved tensor of size 10 against a minimized peak
+        // variable: spilling drops it from the residency row at cost 0.25.
+        let mut b = IlpBuilder::new();
+        let p = b.binary("P", "P", 0.0);
+        let u = b.binary("C", "C", 0.0);
+        b.fix(p, 1.0);
+        let s = b.spill_indicator("S", "S", 0.25, p, [u]);
+        let cap = b.continuous("obj", "peak", 0.0, 100.0, 1.0);
+        b.resident_le_var(vec![(p, 10.0)], &[(s, 10.0)], cap);
+        let (m, _) = b.into_parts();
+        let sol = ilp::solve(&m, &SolveOptions::default());
+        assert_eq!(sol.status, SolveStatus::Optimal);
+        assert!(sol.bool_value(s), "idle tensor should be spilled");
+        assert!((sol.objective - 0.25).abs() < 1e-6, "obj={}", sol.objective);
+
+        // Same tensor, but its consumer runs this timestep: `S + C <= 1`
+        // forbids the spill and the peak pays the full residency.
+        let mut b = IlpBuilder::new();
+        let p = b.binary("P", "P", 0.0);
+        let u = b.binary("C", "C", 0.0);
+        b.fix(p, 1.0);
+        b.fix(u, 1.0);
+        let s = b.spill_indicator("S", "S", 0.25, p, [u]);
+        let cap = b.continuous("obj", "peak", 0.0, 100.0, 1.0);
+        b.resident_le_var(vec![(p, 10.0), (u, 5.0)], &[(s, 10.0)], cap);
+        let (m, _) = b.into_parts();
+        let sol = ilp::solve(&m, &SolveOptions::default());
+        assert_eq!(sol.status, SolveStatus::Optimal);
+        assert!(!sol.bool_value(s), "in-use tensor must stay on device");
+        assert!((sol.objective - 15.0).abs() < 1e-6, "obj={}", sol.objective);
     }
 
     #[test]

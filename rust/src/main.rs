@@ -68,6 +68,12 @@ COMMANDS:
       --device-cap BYTES      device memory capacity, e.g. 64MB (optional:
                               enables offload-aware device+host placement)
       --host-penalty COST     objective cost per offloaded byte (default 0.5)
+      --sched-device-cap B    make the eq.-14 scheduler capacity-aware: bound
+                              per-step device residency by B, spilling /
+                              recomputing tensors to fit (implies a device+host
+                              placement topology unless --device-cap is given)
+      --recompute-penalty C   objective cost per byte-step a tensor spends
+                              off-device in the schedule (default 0.05)
   plan                        anytime planning: best valid plan by a deadline
       --model NAME --batch N  [--scale full|reduced]
       --deadline-ms MS        whole-pipeline deadline (default 10000)
@@ -75,6 +81,8 @@ COMMANDS:
       --poll-ms MS            progress print cadence (default 500)
       --device-cap BYTES      device capacity for offload-aware placement
       --host-penalty COST     objective cost per offloaded byte (default 0.5)
+      --sched-device-cap B    capacity-aware scheduling under cap B (see above)
+      --recompute-penalty C   off-device cost per byte-step (default 0.05)
   serve                       queue plan requests through the PlanService
       --models A,B,C          zoo models (default: whole zoo)
       --batch N               batch size (default 1)
@@ -147,6 +155,42 @@ fn parse_topology(rest: &[String]) -> anyhow::Result<Option<MemoryTopology>> {
     Ok(Some(MemoryTopology::device_host(cap, penalty)))
 }
 
+/// Build the capacity-aware *scheduling* topology requested by
+/// `--sched-device-cap BYTES` (+ optional `--recompute-penalty COST`,
+/// default 0.05 per off-device byte-step). Returns the topology plus the
+/// penalty; the device+host split reuses `--host-penalty` for the
+/// placement-side transfer cost.
+fn parse_sched_topology(rest: &[String]) -> anyhow::Result<Option<(MemoryTopology, f64)>> {
+    let Some(cap_text) = flag(rest, "--sched-device-cap") else { return Ok(None) };
+    let cap = parse_bytes(&cap_text).ok_or_else(|| {
+        anyhow::anyhow!("bad --sched-device-cap '{cap_text}' (try 64MB, 1.5GB)")
+    })?;
+    let host_penalty: f64 =
+        flag(rest, "--host-penalty").and_then(|v| v.parse().ok()).unwrap_or(0.5);
+    let recompute_penalty: f64 = flag(rest, "--recompute-penalty")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(olla::olla::scheduling::DEFAULT_RECOMPUTE_PENALTY);
+    Ok(Some((MemoryTopology::device_host(cap, host_penalty), recompute_penalty)))
+}
+
+/// Apply `--sched-device-cap` / `--recompute-penalty` to planner options:
+/// the scheduler becomes capacity-aware, and — unless `--device-cap`
+/// already chose a placement topology — placement offloads into the same
+/// device+host split so the scheduled cap is actually realizable.
+fn apply_sched_topology(
+    opts: &mut PlannerOptions,
+    sched: &Option<(MemoryTopology, f64)>,
+    placement_already_set: bool,
+) {
+    if let Some((topo, penalty)) = sched {
+        opts.schedule.topology = topo.clone();
+        opts.schedule.recompute_penalty = *penalty;
+        if !placement_already_set {
+            opts.placement.topology = topo.clone();
+        }
+    }
+}
+
 fn cmd_zoo() -> anyhow::Result<()> {
     let mut t =
         Table::new(&["model", "|V| (bs1)", "|E| (bs1)", "params", "peak@bs1 (pytorch)"]);
@@ -175,6 +219,7 @@ fn cmd_optimize(rest: &[String]) -> anyhow::Result<()> {
     let g = build_graph(&model, batch, scale)
         .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
     let topology = parse_topology(rest)?;
+    let sched_topology = parse_sched_topology(rest)?;
     let mut opts = PlannerOptions {
         schedule: ScheduleOptions { time_limit: cap, ..Default::default() },
         placement: PlacementOptions { time_limit: cap, ..Default::default() },
@@ -183,6 +228,7 @@ fn cmd_optimize(rest: &[String]) -> anyhow::Result<()> {
     if let Some(topo) = &topology {
         opts.placement.topology = topo.clone();
     }
+    apply_sched_topology(&mut opts, &sched_topology, topology.is_some());
     let baseline =
         olla::sched::sim::peak_bytes(&g, &olla::sched::orders::pytorch_order(&g));
     let plan = olla::olla::optimize(&g, &opts);
@@ -204,13 +250,22 @@ fn cmd_optimize(rest: &[String]) -> anyhow::Result<()> {
         100.0 * plan.placement.fragmentation,
         plan.placement.method,
     );
-    if let Some(topo) = &topology {
+    if let Some(topo) = topology.as_ref().or_else(|| sched_topology.as_ref().map(|(t, _)| t)) {
         let cap = topo.regions[0].capacity.unwrap_or(u64::MAX);
         println!(
             "device cap          : {}  ({}, {} offloaded to host)",
             human_bytes(cap),
             if plan.arena_size <= cap { "satisfied" } else { "VIOLATED" },
             human_bytes(plan.bytes_offloaded()),
+        );
+    }
+    if sched_topology.is_some() {
+        let byte_steps = olla::olla::spilled_byte_steps(&g, &plan.spills);
+        println!(
+            "sched device peak   : {}  ({} tensors spilled, {} byte-steps off-device)",
+            human_bytes(plan.schedule.device_peak),
+            plan.spills.len(),
+            byte_steps,
         );
     }
     println!(
@@ -234,20 +289,27 @@ fn cmd_plan(rest: &[String]) -> anyhow::Result<()> {
     let g = build_graph(&model, batch, scale)
         .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
     let topology = parse_topology(rest)?;
+    let sched_topology = parse_sched_topology(rest)?;
     let mut plan_opts = PlannerOptions::default();
     if let Some(topo) = &topology {
         plan_opts.placement.topology = topo.clone();
     }
+    apply_sched_topology(&mut plan_opts, &sched_topology, topology.is_some());
     let baseline =
         olla::sched::sim::peak_bytes(&g, &olla::sched::orders::pytorch_order(&g));
     println!(
-        "planning {model} (batch {batch}, {scale:?}) with a {} deadline{}{}",
+        "planning {model} (batch {batch}, {scale:?}) with a {} deadline{}{}{}",
         human_duration(Duration::from_millis(deadline_ms)),
         gap.map(|gp| format!(" and a {:.1}% gap target", 100.0 * gp)).unwrap_or_default(),
         topology
             .as_ref()
             .and_then(|t| t.regions[0].capacity)
             .map(|c| format!(" under a {} device cap", human_bytes(c)))
+            .unwrap_or_default(),
+        sched_topology
+            .as_ref()
+            .and_then(|(t, _)| t.regions[0].capacity)
+            .map(|c| format!(" (capacity-aware schedule, {} cap)", human_bytes(c)))
             .unwrap_or_default(),
     );
     let handle = PlanHandle::spawn(
@@ -283,11 +345,19 @@ fn cmd_plan(rest: &[String]) -> anyhow::Result<()> {
         100.0 * (1.0 - plan.arena_size as f64 / baseline.max(1) as f64),
         plan.schedule.status,
     );
-    if topology.is_some() {
+    if topology.is_some() || sched_topology.is_some() {
         println!(
             "  offloaded to host  : {}  (device region {})",
             human_bytes(plan.bytes_offloaded()),
             human_bytes(plan.region_sizes.first().copied().unwrap_or(0)),
+        );
+    }
+    if sched_topology.is_some() {
+        println!(
+            "  sched device peak  : {}  ({} tensors spilled, {} byte-steps off-device)",
+            human_bytes(plan.schedule.device_peak),
+            plan.spills.len(),
+            olla::olla::spilled_byte_steps(&g, &plan.spills),
         );
     }
     println!("  anytime curve      : {} improvements", final_snap.anytime.len());

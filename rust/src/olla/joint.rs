@@ -8,8 +8,12 @@
 //!
 //! The oracle models the degenerate single-region
 //! [`crate::olla::topology::MemoryTopology`] (one unbounded device
-//! arena); offload-aware multi-region placement only exists in the split
-//! pipeline, where lifetimes are fixed before regions are assigned.
+//! arena); offload-aware multi-region placement and the capacity-aware
+//! scheduling extension (spill indicators bounding the device-resident
+//! profile — see [`crate::olla::scheduling::build_capacity_model`] and
+//! `docs/FORMULATION.md`) only exist in the split pipeline, where
+//! lifetimes are fixed before regions are assigned. The joint model
+//! therefore grows from the *uncapped* scheduling model, asserted below.
 
 use super::scheduling::{build_scheduling_model, decode_order, warm_start_assignment};
 use crate::graph::analysis::{never_coresident, ReachMatrix};
@@ -52,6 +56,10 @@ pub fn optimize_joint_controlled(
 ) -> JointResult {
     let watch = Stopwatch::start();
     let mut sm = build_scheduling_model(g, None);
+    // The oracle grows from the degenerate uncapped scheduling model: no
+    // spill indicators, no device-capacity bound (program (9) has a
+    // single unbounded arena).
+    debug_assert!(sm.s.is_empty() && sm.device_cap.is_none());
     // Demote the split-objective variable: eq. 9 minimizes only peak_mem.
     sm.model.vars[sm.peak.0].obj = 0.0;
 

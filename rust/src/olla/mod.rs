@@ -1,7 +1,9 @@
 //! The paper's contribution: OLLA itself.
 //!
 //! * [`scheduling`] — the tensor-lifetime ILP (eq. 14) with §4.1 span
-//!   bounding;
+//!   bounding, plus the capacity-aware extension (device-capacity rows +
+//!   Checkmate-style spill/recompute indicators; see
+//!   `docs/FORMULATION.md` for the equation-by-equation map);
 //! * [`placement`] — the tensor-location ILP (eq. 15) with §4.2 precedence
 //!   pruning and the zero-fragmentation fast path;
 //! * [`control_edges`] — §4.3, Functions 3–4;
@@ -26,6 +28,8 @@ pub use planner::{
 };
 pub use placement::{optimize_placement, PlacementOptions, PlacementResult};
 pub use scheduling::{
-    optimize_schedule, optimize_schedule_anytime, OrderSink, ScheduleOptions, ScheduleResult,
+    build_capacity_model, capacity_floor, check_spills, device_profile, optimize_schedule,
+    optimize_schedule_anytime, spilled_byte_steps, OrderSink, ScheduleOptions,
+    ScheduleResult, SpillIntervals,
 };
 pub use topology::{MemoryRegion, MemoryTopology};

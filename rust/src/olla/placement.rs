@@ -1,4 +1,6 @@
-//! The tensor-location (address-assignment) ILP — eq. 15 of the paper.
+//! The tensor-location (address-assignment) ILP — eq. 15 of the paper
+//! (`docs/FORMULATION.md` maps every equation to the code that builds its
+//! rows).
 //!
 //! Given tensor lifetimes fixed by the schedule, assign each tensor a base
 //! address so that tensors whose lifetimes overlap never overlap in memory

@@ -4,10 +4,11 @@
 
 use super::placement::{optimize_placement, PlacementMethod, PlacementOptions, PlacementResult};
 use super::scheduling::{
-    optimize_schedule_anytime, OrderSink, ScheduleOptions, ScheduleResult,
+    check_spills_with_trace, device_profile_with_trace, optimize_schedule_anytime, OrderSink,
+    ScheduleOptions, ScheduleResult, SpillIntervals,
 };
 use super::topology::{
-    assign_and_pack, bytes_offloaded, region_lower_bound, transfer_cost, MemoryTopology,
+    assign_and_pack_pinned, bytes_offloaded, region_lower_bound, transfer_cost, MemoryTopology,
 };
 use crate::alloc::arena::ArenaPlan;
 use crate::alloc::bestfit::best_fit_multi;
@@ -76,6 +77,18 @@ impl PlannerOptions {
             ..Default::default()
         }
     }
+
+    /// Point *both* phases at one memory topology: scheduling becomes
+    /// capacity-aware (the eq.-14 solve bounds the per-timestep device
+    /// residency by the device cap, spilling at `recompute_penalty` per
+    /// byte-step), and placement offloads into the same regions. This is
+    /// what `olla plan --sched-device-cap` threads through.
+    pub fn with_topology(mut self, topology: MemoryTopology, recompute_penalty: f64) -> Self {
+        self.schedule.topology = topology.clone();
+        self.schedule.recompute_penalty = recompute_penalty;
+        self.placement.topology = topology;
+        self
+    }
 }
 
 /// A complete OLLA memory plan.
@@ -94,6 +107,14 @@ pub struct MemoryPlan {
     pub region_sizes: Vec<u64>,
     /// The topology the plan was placed into.
     pub topology: MemoryTopology,
+    /// The capacity-aware scheduler's spill certificate: per-tensor
+    /// order-step intervals during which the schedule holds the tensor
+    /// off-device (empty without a scheduling device cap). These are the
+    /// *schedule-level* residency decisions that justify the order under
+    /// the cap; `region_of` records where placement ultimately put each
+    /// whole tensor. [`validate_plan`] checks the certificate itself
+    /// (within-lifetime, never spilled while consumed).
+    pub spills: SpillIntervals,
     /// Scheduling phase details (Figures 7, 9, 10).
     pub schedule: ScheduleResult,
     /// Placement phase details (Figures 8, 11, 12).
@@ -142,21 +163,33 @@ pub fn optimize(g: &Graph, opts: &PlannerOptions) -> MemoryPlan {
 /// the heuristic (greedy offload + per-region best-fit under a
 /// multi-region `topology`), and the result passes [`validate_plan`] or is
 /// rejected.
+///
+/// `spills` is the capacity-aware scheduler's certificate for this order
+/// (empty when scheduling ran uncapped). It is validated against the
+/// order, recorded on the plan, and — under a multi-region topology —
+/// used to *pin* the spilled tensors off-device before the greedy packer
+/// runs: whole-tensor offload of every spilled tensor keeps the device
+/// resident set at or below the schedule's in-cap spilled profile, so the
+/// certificate transfers to the placement model.
 pub fn materialize_plan(
     g: &Graph,
     order: Vec<NodeId>,
     ilp_obj: f64,
     control_edges_added: usize,
     topology: &MemoryTopology,
+    spills: SpillIntervals,
 ) -> Result<MemoryPlan, String> {
     check_order(g, &order)?;
     let trace = simulate(g, &order);
+    check_spills_with_trace(g, &order, &trace, &spills)?;
     let items = items_from_trace(g, &trace);
     let (offs, regions, region_sizes) = if topology.is_single() {
         let (o, sz) = best_fit_multi(&items, 1);
         (o, vec![0usize; items.len()], vec![sz])
     } else {
-        let (assign, o, sizes) = assign_and_pack(&items, topology, 1);
+        let pins: Vec<bool> =
+            items.iter().map(|it| spills.contains_key(&it.edge)).collect();
+        let (assign, o, sizes) = assign_and_pack_pinned(&items, topology, 1, &pins);
         (o, assign, sizes)
     };
     let arena = region_sizes[0];
@@ -173,10 +206,14 @@ pub fn materialize_plan(
             region_of.insert(it.edge, regions[k]);
         }
     }
+    let device_peak =
+        device_profile_with_trace(g, &trace, &spills).into_iter().max().unwrap_or(0);
     let schedule = ScheduleResult {
         order: order.clone(),
         ilp_peak: ilp_obj.max(0.0).round() as u64,
         sim_peak: trace.peak_bytes,
+        spills: spills.clone(),
+        device_peak,
         status: SolveStatus::TimeLimitFeasible,
         solve_secs: 0.0,
         incumbents: Vec::new(),
@@ -211,6 +248,7 @@ pub fn materialize_plan(
         region_of,
         region_sizes,
         topology: topology.clone(),
+        spills,
         schedule,
         placement,
         control_edges_added,
@@ -255,8 +293,9 @@ pub fn optimize_anytime(
         let g2 = g.clone();
         let cb = cb.clone();
         let topo = opts.placement.topology.clone();
-        Arc::new(move |order: Vec<NodeId>, ilp_obj: f64| {
-            if let Ok(plan) = materialize_plan(&g2, order, ilp_obj, control_edges_added, &topo)
+        Arc::new(move |order: Vec<NodeId>, ilp_obj: f64, spills: SpillIntervals| {
+            if let Ok(plan) =
+                materialize_plan(&g2, order, ilp_obj, control_edges_added, &topo, spills)
             {
                 cb(plan);
             }
@@ -267,16 +306,29 @@ pub fn optimize_anytime(
     // §4.3 is a solver-speed heuristic; on some graphs the forced-early
     // updates exclude the best order (the w/dw/w_new transient lands on the
     // activation peak). Orders valid for the *unconstrained* graph are
-    // always valid plans, so keep the best of both.
+    // always valid plans, so keep the best of both. Under a scheduling
+    // device cap, a heuristic order only replaces the certified one when
+    // it fits the cap without spilling at all.
     {
+        let sched_cap =
+            opts.schedule.topology.regions.first().and_then(|r| r.capacity);
         let constrained = simulate(g, &schedule.order).peak_bytes;
         for cand in [
             crate::sched::orders::pytorch_order(g),
             crate::sched::greedy_order(g),
         ] {
-            if simulate(g, &cand).peak_bytes < constrained.min(schedule.sim_peak) {
-                schedule.sim_peak = simulate(g, &cand).peak_bytes;
+            let p = simulate(g, &cand).peak_bytes;
+            let better = match sched_cap {
+                None => p < constrained.min(schedule.sim_peak),
+                Some(cap) => {
+                    p <= cap && p < schedule.device_peak.min(constrained)
+                }
+            };
+            if better {
+                schedule.sim_peak = p;
+                schedule.device_peak = p;
                 schedule.order = cand;
+                schedule.spills = SpillIntervals::new();
             }
         }
         schedule.sim_peak = simulate(g, &schedule.order).peak_bytes;
@@ -291,6 +343,7 @@ pub fn optimize_anytime(
             schedule.ilp_peak as f64,
             control_edges_added,
             &opts.placement.topology,
+            schedule.spills.clone(),
         ) {
             cb(plan);
         }
@@ -336,6 +389,7 @@ pub fn optimize_anytime(
         region_of,
         region_sizes: placement.region_sizes.clone(),
         topology: place_opts.topology.clone(),
+        spills: schedule.spills.clone(),
         schedule,
         placement,
         control_edges_added,
@@ -351,10 +405,13 @@ pub fn optimize_anytime(
 /// in-capacity placement per memory region, and no address overlap
 /// between concurrently live tensors of the same region. A plan whose
 /// device region exceeds the topology's device capacity — or whose
-/// device tensors spill past the published `arena_size` — is rejected.
+/// device tensors spill past the published `arena_size` — is rejected,
+/// as is a corrupt spill certificate (an interval escaping the tensor's
+/// lifetime, or covering a step where a consumer runs).
 pub fn validate_plan(g: &Graph, plan: &MemoryPlan) -> Result<(), String> {
     check_order(g, &plan.order)?;
     let trace = simulate(g, &plan.order);
+    check_spills_with_trace(g, &plan.order, &trace, &plan.spills)?;
     let items = items_from_trace(g, &trace);
     let mut offs: Vec<u64> = Vec::with_capacity(items.len());
     let mut regions: Vec<usize> = Vec::with_capacity(items.len());
@@ -415,9 +472,11 @@ mod tests {
         let single = MemoryTopology::single();
         let mut order: Vec<crate::graph::NodeId> = g.node_ids().collect();
         order.reverse(); // sinks before sources: not a topological order
-        assert!(materialize_plan(&g, order, 0.0, 0, &single).is_err());
+        assert!(materialize_plan(&g, order, 0.0, 0, &single, SpillIntervals::new()).is_err());
         // A valid order materializes into a validated plan.
-        let plan = materialize_plan(&g, pytorch_order(&g), 0.0, 0, &single).unwrap();
+        let plan =
+            materialize_plan(&g, pytorch_order(&g), 0.0, 0, &single, SpillIntervals::new())
+                .unwrap();
         validate_plan(&g, &plan).unwrap();
         assert!(plan.arena_size > 0);
     }
@@ -427,16 +486,86 @@ mod tests {
         // A device cap below the single-arena peak forces the snapshot
         // path to offload — and the result must still validate.
         let g = fig3_graph();
-        let single = materialize_plan(&g, pytorch_order(&g), 0.0, 0, &MemoryTopology::single())
-            .unwrap();
+        let single = materialize_plan(
+            &g,
+            pytorch_order(&g),
+            0.0,
+            0,
+            &MemoryTopology::single(),
+            SpillIntervals::new(),
+        )
+        .unwrap();
         assert!(single.arena_size > 1, "degenerate graph for this test");
         let cap = single.arena_size - 1;
         let topo = MemoryTopology::device_host(cap, 1.0);
-        let plan = materialize_plan(&g, pytorch_order(&g), 0.0, 0, &topo).unwrap();
+        let plan =
+            materialize_plan(&g, pytorch_order(&g), 0.0, 0, &topo, SpillIntervals::new())
+                .unwrap();
         validate_plan(&g, &plan).unwrap();
         assert!(plan.arena_size <= cap, "cap {cap} violated: {}", plan.arena_size);
         assert!(plan.bytes_offloaded() > 0, "cap below peak must offload something");
         assert_eq!(plan.region_sizes.len(), 2);
+    }
+
+    #[test]
+    fn materialize_plan_pins_spilled_tensors_off_device() {
+        // Hand a materialization the scheduler's spill certificate for a
+        // long-lived tensor: the plan must place that tensor on the host
+        // (the pin honors the certificate) and still validate.
+        let g = fig3_graph();
+        let order = pytorch_order(&g);
+        let trace = simulate(&g, &order);
+        // Pick a sized tensor that stays idle for at least one interior
+        // step, and spill it for one such step.
+        let mut spills = SpillIntervals::new();
+        'outer: for e in g.edge_ids() {
+            if g.edge(e).size == 0 {
+                continue;
+            }
+            let (lo, hi) = trace.lifetime[e.idx()];
+            let mut pos = vec![usize::MAX; g.num_nodes()];
+            for (i, &v) in order.iter().enumerate() {
+                pos[v.idx()] = i;
+            }
+            for step in (lo + 1)..hi.min(order.len()) {
+                if g.edge(e).snks.iter().all(|&v| pos[v.idx()] != step) {
+                    spills.insert(e, vec![(step, step + 1)]);
+                    break 'outer;
+                }
+            }
+        }
+        assert!(!spills.is_empty(), "fig3 must have an idle interior step");
+        let spilled_edge = *spills.keys().next().unwrap();
+        let topo = MemoryTopology::device_host(1 << 20, 1.0);
+        let plan =
+            materialize_plan(&g, order, 0.0, 0, &topo, spills.clone()).unwrap();
+        validate_plan(&g, &plan).unwrap();
+        assert_eq!(
+            plan.region_of.get(&spilled_edge),
+            Some(&1),
+            "spilled tensor must be pinned to the host region"
+        );
+        assert_eq!(plan.spills, spills);
+    }
+
+    #[test]
+    fn validate_plan_rejects_corrupt_spill_certificates() {
+        let g = diamond();
+        let mut plan = optimize(&g, &PlannerOptions::fast_test());
+        validate_plan(&g, &plan).unwrap();
+        // Spill a tensor over the step where its consumer runs: invalid.
+        let mut pos = vec![usize::MAX; g.num_nodes()];
+        for (i, &v) in plan.order.iter().enumerate() {
+            pos[v.idx()] = i;
+        }
+        let e = g
+            .edge_ids()
+            .find(|&e| g.edge(e).size > 0 && !g.edge(e).snks.is_empty())
+            .unwrap();
+        let use_step = g.edge(e).snks.iter().map(|&v| pos[v.idx()]).max().unwrap();
+        plan.spills.insert(e, vec![(use_step, use_step + 1)]);
+        let err = validate_plan(&g, &plan).unwrap_err();
+        assert!(err.contains("spilled"), "unexpected error: {err}");
     }
 
     #[test]
@@ -468,6 +597,51 @@ mod tests {
         assert_eq!(
             plan.region_sizes[0], plan.arena_size,
             "device region size must equal the advertised arena"
+        );
+    }
+
+    #[test]
+    fn capped_pipeline_fits_zoo_model_where_uncapped_violates() {
+        // The acceptance case for offload-aware scheduling: a zoo model
+        // whose uncapped plan busts the device cap must, with the
+        // capacity-aware scheduler + matching placement topology, produce
+        // a validate_plan-clean plan whose device arena and scheduled
+        // device peak both respect the cap.
+        use crate::models::{build_graph, ModelScale};
+        let g = build_graph("alexnet", 1, ModelScale::Reduced).unwrap();
+        let mut base_opts = PlannerOptions::fast_test();
+        base_opts.schedule.time_limit = Duration::from_secs(10);
+        base_opts.placement.time_limit = Duration::from_secs(10);
+        let base = optimize(&g, &base_opts);
+        validate_plan(&g, &base).unwrap();
+        let floor = crate::olla::scheduling::capacity_floor(&g);
+        let cap = (base.arena_size * 7 / 8).max(floor.saturating_add(1));
+        assert!(
+            cap < base.arena_size,
+            "cap {cap} must bind below the uncapped arena {}",
+            base.arena_size
+        );
+        let mut opts = base_opts
+            .clone()
+            .with_topology(MemoryTopology::device_host(cap, 0.5), 0.0625);
+        // Keep the capacity-aware model on the ILP path whatever its row
+        // count: the warm start already certifies an in-cap incumbent.
+        opts.schedule.max_ilp_rows = usize::MAX;
+        let plan = optimize(&g, &opts);
+        validate_plan(&g, &plan).unwrap();
+        assert!(
+            plan.arena_size <= cap,
+            "device arena {} exceeds the cap {cap}",
+            plan.arena_size
+        );
+        assert!(
+            plan.schedule.device_peak <= cap,
+            "scheduled device peak {} exceeds the cap {cap}",
+            plan.schedule.device_peak
+        );
+        assert!(
+            !plan.spills.is_empty() || plan.schedule.sim_peak <= cap,
+            "a binding cap must either spill or find a raw-fitting order"
         );
     }
 

@@ -1,5 +1,8 @@
 //! The tensor-lifetime (node-ordering) ILP — eq. 14 of the paper, with the
-//! §4.1 span-bounding reductions baked into variable creation.
+//! §4.1 span-bounding reductions baked into variable creation, plus the
+//! capacity-aware extension that lets the solver trade recomputation /
+//! host offload against the device memory cap (the equation-by-equation
+//! map lives in `docs/FORMULATION.md`).
 //!
 //! Variable layout: one binary `C[v,t]` per node `v` and timestep
 //! `t ∈ SPAN(v)` (this encodes eq. 5 — all sibling output tensors of `v` are
@@ -7,7 +10,21 @@
 //! one binary `P[e,t]` per tensor `e` and timestep in its preservable range.
 //! Variables forced by eq. 10–12 are created fixed so presolve eliminates
 //! them.
+//!
+//! With a capped device region in [`ScheduleOptions::topology`]
+//! ([`build_capacity_model`]), each sized `P[e,t]` gains a Checkmate-style
+//! spill indicator `S[e,t]` ([`IlpBuilder::spill_indicator`]): the tensor
+//! is logically preserved but held off-device for the timestep, paying
+//! [`ScheduleOptions::recompute_penalty`] per byte in the objective. The
+//! eq.-13 accounting rows then bound `Σ size·(C + P - S)` by a peak
+//! variable whose upper bound is the device capacity, so the solver picks
+//! orders whose resident set *can* be repaired cheaply instead of
+//! discovering downstream that only massive offload fits the cap. The
+//! degenerate single-region topology builds the exact pre-extension model
+//! (no `S` variables, identical variable and row layout) — property-tested
+//! bit-for-bit, which is why the paper figures cannot move.
 
+use super::topology::MemoryTopology;
 use crate::graph::analysis::Spans;
 use crate::graph::{EdgeId, Graph, NodeId};
 use crate::ilp::{self, IlpBuilder, Model, SolveControl, SolveOptions, SolveStatus, VarId};
@@ -18,11 +35,20 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Duration;
 
+/// Off-device intervals per tensor, in *order-step* space: tensor `e` is
+/// spilled (host-resident / awaiting recomputation) during every half-open
+/// `[from, to)` interval recorded under `e`. Produced by [`decode_spills`],
+/// validated by [`check_spills`], consumed by the planner's materialize /
+/// validate pipeline.
+pub type SpillIntervals = HashMap<EdgeId, Vec<(usize, usize)>>;
+
 /// Callback receiving each improved schedule incumbent as a decoded
-/// execution order plus its ILP objective (bytes). Runs on a solver worker
-/// thread; used by the `serve` layer to materialize best-plan-so-far
-/// snapshots while the search keeps improving.
-pub type OrderSink = Arc<dyn Fn(Vec<NodeId>, f64) + Send + Sync>;
+/// execution order, its ILP objective (bytes, plus the recompute-penalty
+/// term under a capped topology), and the decoded spill certificate
+/// (empty for uncapped models). Runs on a solver worker thread; used by
+/// the `serve` layer to materialize best-plan-so-far snapshots while the
+/// search keeps improving.
+pub type OrderSink = Arc<dyn Fn(Vec<NodeId>, f64, SpillIntervals) + Send + Sync>;
 
 /// Options for the scheduling optimization.
 #[derive(Debug, Clone)]
@@ -73,7 +99,25 @@ pub struct ScheduleOptions {
     /// the solve, cleared afterwards) — don't install your own callback on
     /// a control you hand in together with a sink.
     pub control: Option<Arc<SolveControl>>,
+    /// Memory topology the *scheduler* sees. With the default
+    /// single-region topology (device capacity `None`) the model is the
+    /// paper's eq. 14 unchanged. With a capped device region (e.g.
+    /// [`MemoryTopology::device_host`]) the model gains per-tensor spill
+    /// indicators and bounds the per-timestep device-resident bytes by
+    /// the capacity — see [`build_capacity_model`].
+    pub topology: MemoryTopology,
+    /// Objective cost per byte-timestep of off-device residency under a
+    /// capped topology (the transfer/recompute penalty of the `S[e,t]`
+    /// indicators). Small values let the solver spill aggressively to
+    /// shrink the device peak; large values spill only what the capacity
+    /// forces. Ignored without a device cap.
+    pub recompute_penalty: f64,
 }
+
+/// Default [`ScheduleOptions::recompute_penalty`]: cheap enough that
+/// fitting a binding cap is always preferred over infeasibility, dear
+/// enough that the solver does not hide the whole working set on the host.
+pub const DEFAULT_RECOMPUTE_PENALTY: f64 = 0.05;
 
 impl Default for ScheduleOptions {
     fn default() -> Self {
@@ -87,6 +131,8 @@ impl Default for ScheduleOptions {
             solver_threads: 0,
             stop_gap: None,
             control: None,
+            topology: MemoryTopology::single(),
+            recompute_penalty: DEFAULT_RECOMPUTE_PENALTY,
         }
     }
 }
@@ -102,7 +148,14 @@ pub struct SchedulingModel {
     pub c: HashMap<(NodeId, usize), VarId>,
     /// `P[e,t]` variables, keyed by `(edge, timestep)`.
     pub p: HashMap<(EdgeId, usize), VarId>,
-    /// The `peak_mem_no_frag` objective variable.
+    /// `S[e,t]` spill indicators, keyed by `(edge, timestep)`. Empty
+    /// unless the model was built against a capped device region.
+    pub s: HashMap<(EdgeId, usize), VarId>,
+    /// Device capacity the model was built against (`None` = unbounded,
+    /// i.e. the paper's original eq. 14).
+    pub device_cap: Option<u64>,
+    /// The `peak_mem_no_frag` objective variable (device peak under a
+    /// capped topology).
     pub peak: VarId,
 }
 
@@ -114,8 +167,19 @@ pub struct ScheduleResult {
     /// Objective value reported by the ILP (bytes, concurrency-granular).
     pub ilp_peak: u64,
     /// Peak of the *sequentialized* order measured by the resident-set
-    /// simulator (what Figure 7 reports). Always `<= ilp_peak`.
+    /// simulator (what Figure 7 reports). Always `<= ilp_peak` for
+    /// uncapped models; under a capped topology it is the *raw* resident
+    /// peak, which may exceed the cap — the spilled profile
+    /// ([`ScheduleResult::device_peak`]) is what respects it.
     pub sim_peak: u64,
+    /// Off-device intervals per tensor decided by the capacity-aware
+    /// solve (order-step space; empty for uncapped models). A valid
+    /// certificate per [`check_spills`].
+    pub spills: SpillIntervals,
+    /// Peak device-resident bytes of the order once the spilled intervals
+    /// are subtracted ([`device_profile`]); equals `sim_peak` when
+    /// `spills` is empty.
+    pub device_peak: u64,
     /// Solver status.
     pub status: SolveStatus,
     /// Solve wall-clock seconds (Figure 9).
@@ -135,8 +199,28 @@ pub struct ScheduleResult {
 }
 
 /// Build the eq.-14 scheduling model for `g` on the shared
-/// [`IlpBuilder`] API (variable groups `C`, `P`, `obj`).
+/// [`IlpBuilder`] API (variable groups `C`, `P`, `obj`). This is the
+/// degenerate single-region instantiation of [`build_capacity_model`];
+/// the two produce the identical [`Model`].
 pub fn build_scheduling_model(g: &Graph, timesteps: Option<usize>) -> SchedulingModel {
+    build_capacity_model(g, timesteps, &MemoryTopology::single(), 0.0)
+}
+
+/// Build the capacity-aware eq.-14 model: the paper's formulation plus,
+/// when `topology`'s device region carries a hard capacity, per-tensor
+/// spill indicators `S[e,t]` (group `S`, one per sized `P[e,t]`) and
+/// device-residency accounting `Σ size·(C + P - S) <= peak` with
+/// `peak <= capacity`. `recompute_penalty` is charged per byte-timestep
+/// of off-device residency. Without a device capacity the built model is
+/// bit-for-bit the plain [`build_scheduling_model`] one (same variables,
+/// same rows, no `S` group).
+pub fn build_capacity_model(
+    g: &Graph,
+    timesteps: Option<usize>,
+    topology: &MemoryTopology,
+    recompute_penalty: f64,
+) -> SchedulingModel {
+    let device_cap = topology.regions.first().and_then(|r| r.capacity);
     let spans = match timesteps {
         Some(t) => Spans::compute_with_timesteps(g, t),
         None => Spans::compute(g),
@@ -220,11 +304,49 @@ pub fn build_scheduling_model(g: &Graph, timesteps: Option<usize>) -> Scheduling
         }
     }
 
+    // Capacity extension: one spill indicator per sized preservation
+    // binary. `S[e,t] = 1` keeps the tensor logically preserved but
+    // off-device for the timestep, at `recompute_penalty` per byte; the
+    // gadget forbids spilling at any timestep where a consumer could run
+    // (eq. 4 made device residency a precondition of consumption).
+    let mut s: HashMap<(EdgeId, usize), VarId> = HashMap::new();
+    if device_cap.is_some() {
+        for e in g.edge_ids() {
+            let edge = g.edge(e);
+            let size = edge.size;
+            if size == 0 {
+                continue; // control edges occupy no memory
+            }
+            let (mul_lo, mul_hi) = spans.mul(g, e);
+            for t in (mul_lo + 1)..=mul_hi.min(t_max - 1) {
+                let Some(&pv) = p.get(&(e, t)) else { continue };
+                let uses: Vec<VarId> =
+                    edge.snks.iter().filter_map(|&v| c.get(&(v, t)).copied()).collect();
+                let var = b.spill_indicator(
+                    "S",
+                    format!("S[{e},{t}]"),
+                    recompute_penalty * size as f64,
+                    pv,
+                    uses,
+                );
+                s.insert((e, t), var);
+            }
+        }
+    }
+
     // Eq. 13: per-timestep memory accounting against the peak variable.
+    // Under a capped topology the rows account *device-resident* bytes
+    // (spilled tensors subtract out) and the peak's upper bound is the
+    // device capacity itself — the hard rows of the extension.
     let total = g.total_bytes() as f64;
-    let peak = b.continuous("obj", "peak_mem_no_frag", 0.0, total, 1.0);
+    let peak_ub = match device_cap {
+        Some(cap) => total.min(cap as f64),
+        None => total,
+    };
+    let peak = b.continuous("obj", "peak_mem_no_frag", 0.0, peak_ub, 1.0);
     for t in 0..t_max {
         let mut terms: Vec<(VarId, f64)> = Vec::new();
+        let mut spilled: Vec<(VarId, f64)> = Vec::new();
         for e in g.edge_ids() {
             let size = g.edge(e).size as f64;
             if size == 0.0 {
@@ -236,14 +358,21 @@ pub fn build_scheduling_model(g: &Graph, timesteps: Option<usize>) -> Scheduling
             if let Some(&pv) = p.get(&(e, t)) {
                 terms.push((pv, size));
             }
+            if let Some(&sv) = s.get(&(e, t)) {
+                spilled.push((sv, size));
+            }
         }
         if !terms.is_empty() {
-            b.sum_le_var(terms, peak);
+            if spilled.is_empty() {
+                b.sum_le_var(terms, peak);
+            } else {
+                b.resident_le_var(terms, &spilled, peak);
+            }
         }
     }
 
     let (model, _meta) = b.into_parts();
-    SchedulingModel { model, spans, c, p, peak }
+    SchedulingModel { model, spans, c, p, s, device_cap, peak }
 }
 
 /// Build a feasible assignment from per-node creation timesteps. Times must
@@ -268,6 +397,42 @@ pub fn assignment_from_times(g: &Graph, sm: &SchedulingModel, times: &[usize]) -
         let last_use = edge.snks.iter().map(|s| times[s.idx()]).max().unwrap_or(t_end);
         for t in created..=last_use {
             per_t[t] += edge.size;
+        }
+    }
+    // Capacity-aware models: repair overloaded timesteps by spilling the
+    // largest idle tensors (preserved, not consumed this step) until the
+    // device capacity holds — the same move the solver's `S` variables
+    // make. Best-effort: a timestep that cannot fit leaves the peak above
+    // its bound and the caller's feasibility gate drops the warm start.
+    if let Some(cap) = sm.device_cap {
+        for t in 0..sm.spans.num_timesteps {
+            if per_t[t] <= cap {
+                continue;
+            }
+            let mut idle: Vec<EdgeId> = g
+                .edge_ids()
+                .filter(|&e| {
+                    let edge = g.edge(e);
+                    if edge.size == 0 {
+                        return false;
+                    }
+                    let created = times[edge.src.idx()];
+                    let last_use =
+                        edge.snks.iter().map(|k| times[k.idx()]).max().unwrap_or(t_end);
+                    t > created
+                        && t <= last_use
+                        && edge.snks.iter().all(|k| times[k.idx()] != t)
+                        && sm.s.contains_key(&(e, t))
+                })
+                .collect();
+            idle.sort_by_key(|&e| (std::cmp::Reverse(g.edge(e).size), e.0));
+            for e in idle {
+                if per_t[t] <= cap {
+                    break;
+                }
+                x[sm.s[&(e, t)].0] = 1.0;
+                per_t[t] -= g.edge(e).size;
+            }
         }
     }
     x[sm.peak.0] = per_t.iter().copied().max().unwrap_or(0) as f64;
@@ -323,6 +488,206 @@ pub fn decode_order(g: &Graph, sm: &SchedulingModel, values: &[f64]) -> Vec<Node
     order
 }
 
+/// Decode the `S[e,t]` indicators of a capacity-aware solution into
+/// order-step spill intervals for `order` (the order decoded from the
+/// same solution). An order step is spilled when the solution spills the
+/// tensor at the timestep its node executes in; runs of spilled steps are
+/// compacted into half-open `[from, to)` intervals, clipped to the
+/// tensor's simulated lifetime. Returns an empty map for uncapped models.
+pub fn decode_spills(
+    g: &Graph,
+    sm: &SchedulingModel,
+    values: &[f64],
+    order: &[NodeId],
+) -> SpillIntervals {
+    if sm.s.is_empty() {
+        return HashMap::new();
+    }
+    let trace = simulate(g, order);
+    decode_spills_with_trace(g, sm, values, order, &trace)
+}
+
+/// [`decode_spills`] against a precomputed simulation `trace` of the same
+/// `order` (hot-path variant for the incumbent callback and the solve
+/// epilogue, which already hold the trace).
+pub fn decode_spills_with_trace(
+    g: &Graph,
+    sm: &SchedulingModel,
+    values: &[f64],
+    order: &[NodeId],
+    trace: &crate::sched::sim::MemTrace,
+) -> SpillIntervals {
+    if sm.s.is_empty() {
+        return HashMap::new();
+    }
+    let mut when = vec![usize::MAX; g.num_nodes()];
+    for ((v, t), var) in &sm.c {
+        if values[var.0] > 0.5 {
+            when[v.idx()] = *t;
+        }
+    }
+    let mut spills: SpillIntervals = HashMap::new();
+    for e in g.edge_ids() {
+        let (lo, hi) = trace.lifetime[e.idx()];
+        if lo == usize::MAX || g.edge(e).size == 0 {
+            continue;
+        }
+        let mut intervals: Vec<(usize, usize)> = Vec::new();
+        let mut open: Option<usize> = None;
+        // The creation step (lo) can never be spilled (`S <= P` and the
+        // creation binary excludes preservation at that timestep).
+        for step in (lo + 1)..hi.min(order.len()) {
+            let t = when[order[step].idx()];
+            let spilled =
+                sm.s.get(&(e, t)).map(|var| values[var.0] > 0.5).unwrap_or(false);
+            match (spilled, open) {
+                (true, None) => open = Some(step),
+                (false, Some(from)) => {
+                    intervals.push((from, step));
+                    open = None;
+                }
+                _ => {}
+            }
+        }
+        if let Some(from) = open {
+            intervals.push((from, hi.min(order.len())));
+        }
+        if !intervals.is_empty() {
+            spills.insert(e, intervals);
+        }
+    }
+    spills
+}
+
+/// Validate a spill certificate against an execution order: every
+/// interval must be non-empty, lie strictly inside the tensor's simulated
+/// lifetime (a tensor cannot be off-device at its creation step), may not
+/// cover any step where one of the tensor's consumers runs, and a
+/// tensor's intervals must be sorted and non-overlapping (overlap would
+/// double-count the spilled bytes in [`device_profile`]).
+pub fn check_spills(
+    g: &Graph,
+    order: &[NodeId],
+    spills: &SpillIntervals,
+) -> Result<(), String> {
+    check_order(g, order)?;
+    let trace = simulate(g, order);
+    check_spills_with_trace(g, order, &trace, spills)
+}
+
+/// [`check_spills`] against a precomputed simulation `trace` of the same
+/// `order` (hot-path variant: the anytime snapshot path validates every
+/// incumbent and already holds the trace). The order itself must have
+/// been validated by [`check_order`].
+pub fn check_spills_with_trace(
+    g: &Graph,
+    order: &[NodeId],
+    trace: &crate::sched::sim::MemTrace,
+    spills: &SpillIntervals,
+) -> Result<(), String> {
+    let mut pos = vec![usize::MAX; g.num_nodes()];
+    for (i, &v) in order.iter().enumerate() {
+        pos[v.idx()] = i;
+    }
+    for (&e, intervals) in spills {
+        if e.idx() >= g.num_edges() {
+            return Err(format!("spill certificate names unknown tensor {e}"));
+        }
+        let (lo, hi) = trace.lifetime[e.idx()];
+        if lo == usize::MAX {
+            return Err(format!("spill certificate names never-allocated tensor {e}"));
+        }
+        let mut prev_to = 0usize;
+        for &(from, to) in intervals {
+            if from >= to {
+                return Err(format!("empty spill interval [{from}, {to}) for {e}"));
+            }
+            if from < prev_to {
+                return Err(format!(
+                    "spill intervals for {e} overlap or are unsorted at [{from}, {to})"
+                ));
+            }
+            prev_to = to;
+            if from <= lo || to > hi {
+                return Err(format!(
+                    "spill interval [{from}, {to}) for {e} escapes its lifetime [{lo}, {hi})"
+                ));
+            }
+            for &v in &g.edge(e).snks {
+                let pv = pos[v.idx()];
+                if pv >= from && pv < to {
+                    return Err(format!(
+                        "tensor {e} is spilled over step {pv} where consumer {v} runs"
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Per-order-step *device-resident* bytes: the simulator's resident set
+/// minus the sizes of tensors spilled at each step. This is the profile a
+/// capacity-aware schedule keeps under the device cap.
+pub fn device_profile(
+    g: &Graph,
+    order: &[NodeId],
+    spills: &SpillIntervals,
+) -> Vec<u64> {
+    let trace = simulate(g, order);
+    device_profile_with_trace(g, &trace, spills)
+}
+
+/// [`device_profile`] against a precomputed simulation trace of the same
+/// order (hot-path variant; the certificate must be non-overlapping per
+/// [`check_spills`], or spilled sizes are subtracted more than once).
+pub fn device_profile_with_trace(
+    g: &Graph,
+    trace: &crate::sched::sim::MemTrace,
+    spills: &SpillIntervals,
+) -> Vec<u64> {
+    let mut profile = trace.resident_per_step.clone();
+    for (e, intervals) in spills {
+        let size = g.edge(*e).size;
+        for &(from, to) in intervals {
+            for step in from..to.min(profile.len()) {
+                profile[step] = profile[step].saturating_sub(size);
+            }
+        }
+    }
+    profile
+}
+
+/// Smallest device capacity any schedule of `g` can satisfy: a node's
+/// inputs and outputs are simultaneously device-resident while it runs
+/// (eq. 4 plus the spill gadget forbid moving them off-device), so no
+/// cap below the largest such single-node footprint is feasible. Benches
+/// and tests clamp their capacity sweeps to this floor.
+pub fn capacity_floor(g: &Graph) -> u64 {
+    g.node_ids()
+        .map(|v| {
+            let fin: u64 = g.node(v).fanin.iter().map(|&e| g.edge(e).size).sum();
+            let fout: u64 = g.node(v).fanout.iter().map(|&e| g.edge(e).size).sum();
+            fin + fout
+        })
+        .max()
+        .unwrap_or(0)
+}
+
+/// Total off-device byte-steps of a spill certificate,
+/// `Σ size(e) · |spilled steps|` — the transfer/recompute overhead the
+/// capacity-aware objective charges at
+/// [`ScheduleOptions::recompute_penalty`] per byte-step.
+pub fn spilled_byte_steps(g: &Graph, spills: &SpillIntervals) -> u64 {
+    spills
+        .iter()
+        .map(|(e, intervals)| {
+            let steps: u64 = intervals.iter().map(|&(from, to)| (to - from) as u64).sum();
+            steps * g.edge(*e).size
+        })
+        .sum()
+}
+
 /// Run the full eq.-14 optimization for a graph.
 pub fn optimize_schedule(g: &Graph, opts: &ScheduleOptions) -> ScheduleResult {
     optimize_schedule_anytime(g, opts, None)
@@ -343,7 +708,19 @@ pub fn optimize_schedule_anytime(
     on_order: Option<OrderSink>,
 ) -> ScheduleResult {
     let watch = Stopwatch::start();
+    let capped = opts.topology.regions.first().and_then(|r| r.capacity).is_some();
     let timesteps = opts.timesteps.unwrap_or_else(|| {
+        if capped {
+            // Capacity-aware solves keep the paper's full `T = |V|`
+            // horizon: every sequential order is then representable with
+            // one node per timestep, so the greedy warm start (order +
+            // spill repair) certifies an in-cap incumbent whenever the
+            // cap is sequentially satisfiable at all. The compressed
+            // horizon packs several nodes per timestep, whose combined
+            // in-use tensors can bust a cap no sequential execution
+            // would.
+            return g.num_nodes();
+        }
         let crit = crate::graph::analysis::forward_levels(g)
             .iter()
             .copied()
@@ -352,7 +729,12 @@ pub fn optimize_schedule_anytime(
             + 1;
         g.num_nodes().min(crit + opts.horizon_slack)
     });
-    let sm = Arc::new(build_scheduling_model(g, Some(timesteps)));
+    let sm = Arc::new(build_capacity_model(
+        g,
+        Some(timesteps),
+        &opts.topology,
+        opts.recompute_penalty,
+    ));
     let model_size = (sm.model.num_vars(), sm.model.num_cons());
 
     let lb0: Vec<f64> = sm.model.vars.iter().map(|v| v.lb).collect();
@@ -366,13 +748,20 @@ pub fn optimize_schedule_anytime(
         let trace = simulate(g, &order);
         let wa = warm_start_assignment(g, &sm, &order);
         let ilp_peak = wa[sm.peak.0].round() as u64;
+        let spills = decode_spills_with_trace(g, &sm, &wa, &order, &trace);
+        let device_peak = device_profile_with_trace(g, &trace, &spills)
+            .into_iter()
+            .max()
+            .unwrap_or(0);
         if let Some(sink) = &on_order {
-            sink(order.clone(), ilp_peak as f64);
+            sink(order.clone(), ilp_peak as f64, spills.clone());
         }
         return ScheduleResult {
             order,
             ilp_peak,
             sim_peak: trace.peak_bytes,
+            spills,
+            device_peak,
             status: SolveStatus::TimeLimitFeasible,
             solve_secs: watch.secs(),
             incumbents: vec![(watch.secs(), ilp_peak as f64)],
@@ -399,19 +788,39 @@ pub fn optimize_schedule_anytime(
         let gc = g.clone();
         let sink = sink.clone();
         ctrl.set_on_incumbent(Some(Box::new(move |x: &[f64], obj: f64| {
-            sink(decode_order(&gc, &smc, x), obj);
+            let order = decode_order(&gc, &smc, x);
+            let trace = simulate(&gc, &order);
+            let spills = decode_spills_with_trace(&gc, &smc, x, &order, &trace);
+            // Report the device-peak component to the sink, not the full
+            // capped objective (which also carries the fractional
+            // recompute-penalty term) — same correction the final
+            // ScheduleResult applies.
+            let peak_obj = if smc.s.is_empty() { obj } else { x[smc.peak.0] };
+            sink(order, peak_obj, spills);
         })));
     }
 
     let initial = if opts.warm_start {
-        Some(warm_start_assignment(g, &sm, &greedy_order(g)))
+        let wa = warm_start_assignment(g, &sm, &greedy_order(g));
+        // Capacity-aware models: the greedy spill repair is best-effort,
+        // so gate the warm start on actual feasibility instead of handing
+        // the solver an over-cap incumbent (which it would silently drop).
+        if sm.device_cap.is_some() && sm.model.check_feasible(&wa, 1e-6).is_err() {
+            None
+        } else {
+            Some(wa)
+        }
     } else {
         None
     };
     let solve_opts = SolveOptions {
         time_limit: opts.time_limit,
         initial,
-        integral_objective: true,
+        // The uncapped objective is pure bytes (integral granules) and
+        // profits from ceil-strengthened node bounds; the capped
+        // objective adds fractional recompute penalties, so the
+        // strengthening must be off or it could prune the true optimum.
+        integral_objective: sm.s.is_empty(),
         max_nodes: opts.max_nodes,
         threads: opts.solver_threads,
         stop_gap: opts.stop_gap,
@@ -425,36 +834,64 @@ pub fn optimize_schedule_anytime(
         ctrl.set_on_incumbent(None);
     }
 
-    let (order, ilp_peak) = if sol.has_solution() {
-        (decode_order(g, &sm, &sol.values), sol.objective.round() as u64)
+    let (order, ilp_peak, spills, trace) = if sol.has_solution() {
+        let order = decode_order(g, &sm, &sol.values);
+        let trace = simulate(g, &order);
+        let spills = decode_spills_with_trace(g, &sm, &sol.values, &order, &trace);
+        // Uncapped models: the objective *is* the peak (bit-for-bit the
+        // old report). Capped models: the objective carries the recompute
+        // penalty too, so report the peak variable itself.
+        let ilp_peak = if sm.s.is_empty() {
+            sol.objective.round() as u64
+        } else {
+            sol.value(sm.peak).round().max(0.0) as u64
+        };
+        (order, ilp_peak, spills, trace)
     } else {
         // Paper protocol: fall back to the best heuristic order.
         let o = greedy_order(g);
-        let peak = simulate(g, &o).peak_bytes;
-        (o, peak)
+        let trace = simulate(g, &o);
+        let peak = trace.peak_bytes;
+        (o, peak, HashMap::new(), trace)
     };
     debug_assert_eq!(check_order(g, &order), Ok(()));
+    debug_assert_eq!(check_spills(g, &order, &spills), Ok(()));
     // OLLA must never regress below the cheap baselines: keep the best of
     // the decoded order and the heuristic orders (relevant when the solver
-    // hits its cap with only the warm-start incumbent).
+    // hits its cap with only the warm-start incumbent). Under a device
+    // cap the decoded order comes with a spill certificate, so a
+    // heuristic order only replaces it when it fits the cap *without*
+    // spilling anything and still beats the spilled device peak.
     let mut order = order;
-    let mut best_peak = simulate(g, &order).peak_bytes;
+    let mut spills = spills;
+    let mut sim_peak = trace.peak_bytes;
+    let mut device_peak = device_profile_with_trace(g, &trace, &spills)
+        .into_iter()
+        .max()
+        .unwrap_or(0);
     for cand in [
         crate::sched::orders::pytorch_order(g),
         crate::sched::orders::tensorflow_order(g),
         greedy_order(g),
     ] {
         let p = simulate(g, &cand).peak_bytes;
-        if p < best_peak {
-            best_peak = p;
+        let better = match sm.device_cap {
+            None => p < device_peak,
+            Some(cap) => p <= cap && p < device_peak,
+        };
+        if better {
+            device_peak = p;
+            sim_peak = p;
             order = cand;
+            spills = HashMap::new();
         }
     }
-    let sim_peak = best_peak;
     ScheduleResult {
         order,
         ilp_peak,
         sim_peak,
+        spills,
+        device_peak,
         status: sol.status,
         solve_secs: watch.secs(),
         incumbents: sol.incumbents,
@@ -566,6 +1003,273 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Structural equality of two models: identical variables (name,
+    /// kind, bounds, objective) and identical rows in identical order.
+    fn models_identical(a: &Model, b: &Model) -> bool {
+        a.num_vars() == b.num_vars()
+            && a.num_cons() == b.num_cons()
+            && a.vars.iter().zip(&b.vars).all(|(x, y)| {
+                x.name == y.name
+                    && x.kind == y.kind
+                    && x.lb == y.lb
+                    && x.ub == y.ub
+                    && x.obj == y.obj
+            })
+            && a
+                .cons
+                .iter()
+                .zip(&b.cons)
+                .all(|(x, y)| x.terms == y.terms && x.cmp == y.cmp && x.rhs == y.rhs)
+    }
+
+    #[test]
+    fn uncapped_topology_reproduces_the_paper_model_bit_for_bit() {
+        // The cap=∞ safety rail: a single-region topology must build the
+        // exact pre-extension model — same variables, same rows, no spill
+        // group — whatever the recompute penalty says.
+        check("uncapped_identity", 8, |rng| {
+            let nodes = rng.range(4, 10);
+            let g = random_dag(
+                rng,
+                &RandomDagConfig { num_nodes: nodes, ..Default::default() },
+            );
+            let plain = build_scheduling_model(&g, None);
+            let degenerate =
+                build_capacity_model(&g, None, &MemoryTopology::single(), 0.25);
+            if !degenerate.s.is_empty() || degenerate.device_cap.is_some() {
+                return crate::util::quickcheck::Outcome::Fail(
+                    "degenerate model grew capacity structure".into(),
+                );
+            }
+            ensure(models_identical(&plain.model, &degenerate.model), || {
+                "single-topology model differs from the paper model".into()
+            })
+        });
+    }
+
+    #[test]
+    fn uncapped_options_reproduce_the_same_order_bit_for_bit() {
+        // Solve-level identity: default options and an explicit uncapped
+        // topology (with a non-default penalty) must produce the same
+        // order on the deterministic single-threaded path.
+        check("uncapped_same_order", 4, |rng| {
+            let nodes = rng.range(4, 9);
+            let g = random_dag(
+                rng,
+                &RandomDagConfig { num_nodes: nodes, ..Default::default() },
+            );
+            let base = ScheduleOptions { solver_threads: 1, ..quick_opts() };
+            let alt = ScheduleOptions {
+                topology: MemoryTopology::single(),
+                recompute_penalty: 1.7,
+                ..base.clone()
+            };
+            let a = optimize_schedule(&g, &base);
+            let b = optimize_schedule(&g, &alt);
+            ensure(a.order == b.order && b.spills.is_empty(), || {
+                format!("orders diverged: {:?} vs {:?}", a.order, b.order)
+            })
+        });
+    }
+
+    /// Enumerate every timestep assignment of `g`'s nodes over the full
+    /// `T = |V|` horizon — the capacity model's own solution space on
+    /// tiny graphs — calling `visit` for each precedence-respecting one.
+    fn enumerate_times(
+        g: &Graph,
+        topo: &[NodeId],
+        idx: usize,
+        t_max: usize,
+        times: &mut Vec<usize>,
+        visit: &mut impl FnMut(&[usize]),
+    ) {
+        if idx == topo.len() {
+            visit(times);
+            return;
+        }
+        let v = topo[idx];
+        let lo = g
+            .node(v)
+            .fanin
+            .iter()
+            .map(|&e| times[g.edge(e).src.idx()] + 1)
+            .max()
+            .unwrap_or(0);
+        for t in lo..t_max {
+            times[v.idx()] = t;
+            enumerate_times(g, topo, idx + 1, t_max, times, visit);
+        }
+    }
+
+    /// Optimal `max device bytes + penalty · spilled byte-steps` of one
+    /// timestep assignment under `cap`, or `None` when it cannot fit.
+    /// Spill choices are independent per timestep: at each step any
+    /// preserved tensor that is neither created nor consumed there may be
+    /// held off-device.
+    fn assignment_cost(
+        g: &Graph,
+        times: &[usize],
+        t_max: usize,
+        cap: u64,
+        penalty: f64,
+    ) -> Option<f64> {
+        let mut resident = vec![0u64; t_max];
+        let mut spillable: Vec<Vec<u64>> = vec![Vec::new(); t_max];
+        for e in g.edge_ids() {
+            let edge = g.edge(e);
+            if edge.size == 0 {
+                continue;
+            }
+            let created = times[edge.src.idx()];
+            let last =
+                edge.snks.iter().map(|s| times[s.idx()]).max().unwrap_or(t_max - 1);
+            for t in created..=last {
+                resident[t] += edge.size;
+                let in_use =
+                    t == created || edge.snks.iter().any(|s| times[s.idx()] == t);
+                if !in_use {
+                    spillable[t].push(edge.size);
+                }
+            }
+        }
+        // Sorted subset sums of the spillable bytes per step, and every
+        // achievable in-cap device value as a candidate peak.
+        use std::collections::BTreeSet;
+        let mut sums: Vec<Vec<u64>> = Vec::with_capacity(t_max);
+        let mut candidates: BTreeSet<u64> = BTreeSet::new();
+        for t in 0..t_max {
+            let mut set: BTreeSet<u64> = BTreeSet::new();
+            set.insert(0);
+            for &sz in &spillable[t] {
+                let prev: Vec<u64> = set.iter().copied().collect();
+                for p in prev {
+                    set.insert(p + sz);
+                }
+            }
+            let sorted: Vec<u64> = set.into_iter().collect();
+            for &b in &sorted {
+                let dev = resident[t].saturating_sub(b);
+                if dev <= cap {
+                    candidates.insert(dev);
+                }
+            }
+            sums.push(sorted);
+        }
+        let mut best: Option<f64> = None;
+        'cand: for &pc in &candidates {
+            let mut byte_steps: u64 = 0;
+            let mut max_dev: u64 = 0;
+            for t in 0..t_max {
+                if resident[t] <= pc {
+                    max_dev = max_dev.max(resident[t]);
+                    continue;
+                }
+                let deficit = resident[t] - pc;
+                let Some(&b) = sums[t].iter().find(|&&b| b >= deficit) else {
+                    continue 'cand;
+                };
+                byte_steps += b;
+                max_dev = max_dev.max(resident[t] - b);
+            }
+            let cost = max_dev as f64 + penalty * byte_steps as f64;
+            best = Some(best.map_or(cost, |x: f64| x.min(cost)));
+        }
+        best
+    }
+
+    /// Brute-force oracle: the optimum of the capacity-aware objective
+    /// over *all* (timestep assignment, spill) choices.
+    fn capacity_oracle(g: &Graph, cap: u64, penalty: f64) -> Option<f64> {
+        let t_max = g.num_nodes();
+        let topo = crate::graph::analysis::topo_order(g).unwrap();
+        let mut best: Option<f64> = None;
+        let mut times = vec![0usize; g.num_nodes()];
+        enumerate_times(g, &topo, 0, t_max, &mut times, &mut |times| {
+            if let Some(cost) = assignment_cost(g, times, t_max, cap, penalty) {
+                best = Some(best.map_or(cost, |b: f64| b.min(cost)));
+            }
+        });
+        best
+    }
+
+    #[test]
+    fn capacity_model_matches_exhaustive_oracle_on_tiny_graphs() {
+        check("capacity_vs_oracle", 4, |rng| {
+            let nodes = rng.range(3, 5);
+            let g = random_dag(
+                rng,
+                &RandomDagConfig {
+                    num_nodes: nodes,
+                    size_range: (1, 32),
+                    ..Default::default()
+                },
+            );
+            let penalty = 0.0625;
+            // With a prohibitive penalty and no cap the oracle returns the
+            // pure no-spill optimal peak, from which a binding cap is cut.
+            let nospill_peak =
+                capacity_oracle(&g, u64::MAX, 1e12).unwrap().round() as u64;
+            let cap = (nospill_peak * 3 / 4).max(capacity_floor(&g)).max(1);
+            let topo = MemoryTopology::device_host(cap, 1.0);
+            let sm = build_capacity_model(&g, Some(g.num_nodes()), &topo, penalty);
+            let sol = ilp::solve(
+                &sm.model,
+                &SolveOptions {
+                    time_limit: Duration::from_secs(30),
+                    ..Default::default()
+                },
+            );
+            if sol.status != SolveStatus::Optimal {
+                return crate::util::quickcheck::Outcome::Discard;
+            }
+            let best = capacity_oracle(&g, cap, penalty)
+                .expect("a cap at or above the per-node floor is always feasible");
+            ensure(
+                (sol.objective - best).abs() <= 1e-5 * (1.0 + best.abs()),
+                || format!("ilp objective {} != oracle {}", sol.objective, best),
+            )
+        });
+    }
+
+    #[test]
+    fn capped_schedule_fits_and_certifies_on_random_graphs() {
+        check("capped_schedule", 6, |rng| {
+            let nodes = rng.range(5, 10);
+            let g = random_dag(
+                rng,
+                &RandomDagConfig { num_nodes: nodes, ..Default::default() },
+            );
+            let base = optimize_schedule(&g, &quick_opts());
+            let cap = (base.sim_peak * 3 / 4).max(capacity_floor(&g)).max(1);
+            if cap >= base.sim_peak {
+                return crate::util::quickcheck::Outcome::Discard; // cap not binding
+            }
+            let opts = ScheduleOptions {
+                topology: MemoryTopology::device_host(cap, 1.0),
+                recompute_penalty: 0.0625,
+                ..quick_opts()
+            };
+            let r = optimize_schedule(&g, &opts);
+            if !matches!(
+                r.status,
+                SolveStatus::Optimal | SolveStatus::TimeLimitFeasible
+            ) {
+                return crate::util::quickcheck::Outcome::Discard;
+            }
+            if let Err(e) = check_spills(&g, &r.order, &r.spills) {
+                return crate::util::quickcheck::Outcome::Fail(e);
+            }
+            let profile_peak =
+                device_profile(&g, &r.order, &r.spills).into_iter().max().unwrap_or(0);
+            ensure(r.device_peak <= cap && r.device_peak == profile_peak, || {
+                format!(
+                    "device peak {} (profile {profile_peak}) over cap {cap}",
+                    r.device_peak
+                )
+            })
+        });
     }
 
     #[test]

@@ -190,12 +190,29 @@ fn region_peak(items: &[PlacementItem], region_of: &[usize], k: usize) -> (usize
 /// Items that fit in no region at all are left where they are (best
 /// effort); `crate::alloc::check_placement_regions` reports the violation.
 pub fn assign_regions_greedy(items: &[PlacementItem], topology: &MemoryTopology) -> Vec<usize> {
+    assign_regions_greedy_pinned(items, topology, &[])
+}
+
+/// [`assign_regions_greedy`] with offload pins: items flagged in
+/// `pin_off_device` (missing entries mean unpinned) are assigned to the
+/// first non-device region that holds them *before* the relief loop runs.
+/// The planner uses this to honor the capacity-aware scheduler's spill
+/// certificate — tensors the eq.-14 solve already decided to hold
+/// off-device start on the host instead of being re-discovered by the
+/// greedy eviction. Pins are best-effort on a single-region topology
+/// (there is nowhere else to go).
+pub fn assign_regions_greedy_pinned(
+    items: &[PlacementItem],
+    topology: &MemoryTopology,
+    pin_off_device: &[bool],
+) -> Vec<usize> {
     let kk = topology.num_regions();
     let mut region_of = vec![0usize; items.len()];
-    // Pin items that cannot fit region 0 to the first region that holds
-    // them at all.
+    // Pin items that cannot fit region 0 — or that the caller pinned
+    // off-device — to the first region that holds them at all.
     for (i, it) in items.iter().enumerate() {
-        if !topology.regions[0].fits(it.size) {
+        let pinned = pin_off_device.get(i).copied().unwrap_or(false);
+        if pinned || !topology.regions[0].fits(it.size) {
             if let Some(k) = (1..kk).find(|&k| topology.regions[k].fits(it.size)) {
                 region_of[i] = k;
             }
@@ -272,8 +289,21 @@ pub fn assign_and_pack(
     topology: &MemoryTopology,
     align: u64,
 ) -> (Vec<usize>, Vec<u64>, Vec<u64>) {
+    assign_and_pack_pinned(items, topology, align, &[])
+}
+
+/// [`assign_and_pack`] with offload pins (see
+/// [`assign_regions_greedy_pinned`]): the pinned items are host-assigned
+/// up front, then the usual relief + packing-repair loop runs. Returns
+/// `(region_of, offsets, region_sizes)`.
+pub fn assign_and_pack_pinned(
+    items: &[PlacementItem],
+    topology: &MemoryTopology,
+    align: u64,
+    pin_off_device: &[bool],
+) -> (Vec<usize>, Vec<u64>, Vec<u64>) {
     let kk = topology.num_regions();
-    let mut region_of = assign_regions_greedy(items, topology);
+    let mut region_of = assign_regions_greedy_pinned(items, topology, pin_off_device);
     let (mut offs, mut sizes) =
         crate::alloc::bestfit::best_fit_regions(items, &region_of, kk, align);
     if topology.regions.iter().any(|r| r.capacity.is_some()) {
@@ -379,6 +409,23 @@ mod tests {
         let got =
             crate::alloc::check_placement_regions(&items, &region_of, &offs, &caps).unwrap();
         assert_eq!(got, sizes);
+    }
+
+    #[test]
+    fn pinned_items_start_off_device() {
+        // A roomy device would keep both items, but the pin sends item 0
+        // to the host up front (the scheduler's spill certificate).
+        let items = vec![item(0, 10, 0, 4), item(1, 10, 0, 4)];
+        let topo = MemoryTopology::device_host(64, 1.0);
+        let assign = assign_regions_greedy_pinned(&items, &topo, &[true, false]);
+        assert_eq!(assign, vec![1, 0]);
+        let (regions, _, sizes) = assign_and_pack_pinned(&items, &topo, 1, &[true, false]);
+        assert_eq!(regions, vec![1, 0]);
+        assert_eq!(sizes[0], 10);
+        // Single-region topologies have nowhere to pin to: best effort.
+        let single = MemoryTopology::single();
+        let assign = assign_regions_greedy_pinned(&items, &single, &[true, true]);
+        assert_eq!(assign, vec![0, 0]);
     }
 
     #[test]

@@ -11,6 +11,13 @@
 //! bytes)`. Callers poll at any moment and always receive a plan that
 //! passes [`crate::olla::validate_plan`] — long before the solve proves
 //! optimality.
+//!
+//! Under a capacity-aware scheduling topology
+//! ([`crate::olla::ScheduleOptions::topology`]), each decoded incumbent
+//! arrives with its spill certificate: the materialized snapshot pins the
+//! spilled tensors off-device, records the certificate in
+//! [`MemoryPlan::spills`], and re-validates it — so mid-solve polls
+//! already honor the device cap the scheduler is optimizing under.
 
 use crate::graph::Graph;
 use crate::ilp::SolveControl;

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Bless the solver-efficiency and anytime-curve baselines with the exact
+# settings CI's gates use (2 s phase caps, serial solver), then write
+# them into rust/baselines/ for committing. Run on the reference machine;
+# re-run whenever the runner hardware generation changes (cap-limited
+# iteration counts scale with host speed).
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+export OLLA_BENCH_CAP_SECS=2
+export OLLA_BENCH_SOLVER_THREADS=1
+export OLLA_BENCH_DIR=bless_out
+mkdir -p bless_out
+
+cargo bench --bench fig9_ordering_time
+cargo bench --bench fig11_addrgen_time
+cargo bench --bench fig10_anytime
+
+cargo run --release --bin check_bench -- --bless \
+  --baseline baselines/solver_baseline.json \
+  --current bless_out/BENCH_fig9_ordering_time.json \
+  --current bless_out/BENCH_fig11_addrgen_time.json \
+  --anytime-baseline baselines/anytime_baseline.json \
+  --anytime-current bless_out/BENCH_fig10_anytime.json
+
+echo "blessed — commit rust/baselines/solver_baseline.json and rust/baselines/anytime_baseline.json"

@@ -1,0 +1,47 @@
+#!/usr/bin/env bash
+# Verify the code anchors in docs/FORMULATION.md: every `rust/....rs`
+# path it references must exist, and every `rust/....rs::symbol` anchor
+# must name a symbol that still appears in that file. Run from anywhere;
+# CI runs it in the docs job so the paper-to-code map cannot rot.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+doc="docs/FORMULATION.md"
+if [ ! -f "$doc" ]; then
+  echo "missing $doc" >&2
+  exit 1
+fi
+
+fail=0
+
+# Plain file anchors: `rust/src/foo/bar.rs`
+while IFS= read -r path; do
+  if [ ! -f "$path" ]; then
+    echo "✗ $doc references missing file: $path" >&2
+    fail=1
+  fi
+done < <(grep -oE '`rust/[A-Za-z0-9_/.-]+\.rs`' "$doc" | tr -d '`' | sort -u)
+
+# Symbol anchors: `rust/src/foo/bar.rs::symbol`
+while IFS= read -r ref; do
+  path=${ref%%::*}
+  sym=${ref##*::}
+  if [ ! -f "$path" ]; then
+    echo "✗ $doc references missing file: $path (from $ref)" >&2
+    fail=1
+    continue
+  fi
+  # Word-boundary match: a renamed symbol must not pass just because it
+  # survives as a substring of another identifier (e.g. `check_spills`
+  # inside `check_spills_with_trace`).
+  if ! grep -qE "\b${sym}\b" "$path"; then
+    echo "✗ $doc anchor '$sym' not found in $path" >&2
+    fail=1
+  fi
+done < <(grep -oE '`rust/[A-Za-z0-9_/.-]+\.rs::[A-Za-z0-9_]+`' "$doc" | tr -d '`' | sort -u)
+
+if [ "$fail" -eq 0 ]; then
+  count=$(grep -cE '`rust/[A-Za-z0-9_/.-]+\.rs(::[A-Za-z0-9_]+)?`' "$doc" || true)
+  echo "check_formulation_links: OK ($count anchor line(s) verified)"
+fi
+exit "$fail"
