@@ -9,8 +9,12 @@
 //! at `recompute_penalty` per byte-step to fit. Writes
 //! `BENCH_fig_recompute.json`: one row per (model, capacity fraction)
 //! with the scheduled device peak, the off-device byte-steps, the
-//! materialized plan's device arena and the solver statistics — the
-//! peak-device vs recompute-overhead frontier.
+//! materialized plan's device arena under spill-interval segment
+//! placement (one device address per on-device interval of each spilled
+//! tensor) next to the whole-lifetime-reservation baseline arena — the
+//! recovered device reuse between swap windows at equal spilled
+//! byte-steps — and the solver statistics: the peak-device vs
+//! recompute-overhead frontier.
 
 use olla::bench_support::{
     bench_solver_threads, fmt_secs, has_flag, phase_cap, section, solver_stats_json, BenchReport,
@@ -35,17 +39,22 @@ fn main() {
     let rows = recompute_sweep(&cases, &fractions, recompute_penalty, &opts, threads);
 
     let mut table = Table::new(&[
-        "model", "cap%", "device cap", "device peak", "spilled", "byte-steps", "ok", "time",
+        "model", "cap%", "device cap", "device peak", "spilled", "byte-steps", "seg arena",
+        "whole arena", "ok", "time",
     ]);
     let mut report = BenchReport::new("fig_recompute");
     let mut satisfied = 0usize;
     let mut spilling = 0usize;
+    let mut reusing = 0usize;
     for row in &rows {
         if row.cap_satisfied {
             satisfied += 1;
         }
         if row.cap_satisfied && row.spilled_byte_steps > 0 {
             spilling += 1;
+        }
+        if row.plan_valid && row.plan_device_arena < row.plan_whole_arena {
+            reusing += 1;
         }
         table.row(vec![
             row.model.clone(),
@@ -54,6 +63,8 @@ fn main() {
             human_bytes(row.device_peak),
             row.spilled_tensors.to_string(),
             row.spilled_byte_steps.to_string(),
+            human_bytes(row.plan_device_arena),
+            human_bytes(row.plan_whole_arena),
             if row.cap_satisfied && row.plan_valid { "yes".into() } else { "NO".into() },
             fmt_secs(row.solve_secs),
         ]);
@@ -71,6 +82,9 @@ fn main() {
             ("cap_satisfied", Json::Bool(row.cap_satisfied)),
             ("plan_valid", Json::Bool(row.plan_valid)),
             ("plan_device_arena_bytes", num(row.plan_device_arena as f64)),
+            ("plan_whole_arena_bytes", num(row.plan_whole_arena as f64)),
+            ("plan_segment_tensors", num(row.plan_segment_tensors as f64)),
+            ("plan_segments", num(row.plan_segments as f64)),
             ("status", s(&row.status)),
             ("solve_secs", num(row.solve_secs)),
             (
@@ -82,7 +96,8 @@ fn main() {
     table.print();
     println!(
         "{satisfied}/{} capacity cases satisfied; {spilling} satisfied by actually \
-         holding tensors off-device",
+         holding tensors off-device; {reusing} with a segment arena strictly below \
+         whole-tensor reservation (device reuse between swap windows)",
         rows.len()
     );
     match report.write() {

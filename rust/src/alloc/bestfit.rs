@@ -202,22 +202,79 @@ pub fn best_fit_regions(
     num_regions: usize,
     align: u64,
 ) -> (Vec<u64>, Vec<u64>) {
+    let (offsets, _, sizes) =
+        best_fit_regions_segments(items, &[], region_of, num_regions, align);
+    (offsets, sizes)
+}
+
+/// [`best_fit_regions`] over *segment* intervals: device-region items with
+/// spill windows are packed as their device-resident segments
+/// ([`crate::alloc::resident_segments`]), each segment getting its own
+/// address — so the device arena reuses a spilled tensor's bytes between
+/// its swap windows. Items in later regions (and device items without
+/// windows) are packed whole, exactly as before.
+///
+/// `windows` rides along `items` per [`crate::alloc::windows_of`] (pass
+/// `&[]` for the unsegmented behavior — that call is bit-for-bit
+/// [`best_fit_regions`], the empty-certificate safety rail).
+///
+/// Returns `(offsets, segments, region_sizes)`: `offsets[i]` is the
+/// item's single address (for a segmented device item, its *first*
+/// segment's address); `segments[i]` lists `(start, end, offset)` per
+/// device-resident segment and is non-empty exactly for device items with
+/// spill windows.
+pub fn best_fit_regions_segments(
+    items: &[PlacementItem],
+    windows: &[Vec<(usize, usize)>],
+    region_of: &[usize],
+    num_regions: usize,
+    align: u64,
+) -> (Vec<u64>, Vec<crate::alloc::SegmentPlacements>, Vec<u64>) {
     debug_assert_eq!(items.len(), region_of.len());
     let mut offsets = vec![0u64; items.len()];
+    let mut segments: Vec<crate::alloc::SegmentPlacements> = vec![Vec::new(); items.len()];
     let mut sizes = vec![0u64; num_regions];
     for k in 0..num_regions {
         let idxs: Vec<usize> = (0..items.len()).filter(|&i| region_of[i] == k).collect();
         if idxs.is_empty() {
             continue;
         }
-        let sub: Vec<PlacementItem> = idxs.iter().map(|&i| items[i]).collect();
-        let (sub_offs, sz) = best_fit_multi(&sub, align);
-        for (pos, &i) in idxs.iter().enumerate() {
-            offsets[i] = sub_offs[pos];
+        // Expand device items into their resident segments; everything
+        // else (and every unspilled item) stays one whole-interval atom.
+        let mut atoms: Vec<PlacementItem> = Vec::with_capacity(idxs.len());
+        let mut owner: Vec<usize> = Vec::with_capacity(idxs.len());
+        for &i in &idxs {
+            let win = crate::alloc::windows_of(windows, i);
+            if k == 0 && !win.is_empty() {
+                for (s, e) in crate::alloc::resident_segments(items[i].start, items[i].end, win)
+                {
+                    atoms.push(PlacementItem {
+                        edge: items[i].edge,
+                        size: items[i].size,
+                        start: s,
+                        end: e,
+                    });
+                    owner.push(i);
+                }
+            } else {
+                atoms.push(items[i]);
+                owner.push(i);
+            }
+        }
+        let (atom_offs, sz) = best_fit_multi(&atoms, align);
+        let mut seen = vec![false; items.len()];
+        for (pos, &i) in owner.iter().enumerate() {
+            if !seen[i] {
+                offsets[i] = atom_offs[pos];
+                seen[i] = true;
+            }
+            if k == 0 && !crate::alloc::windows_of(windows, i).is_empty() {
+                segments[i].push((atoms[pos].start, atoms[pos].end, atom_offs[pos]));
+            }
         }
         sizes[k] = sz;
     }
-    (offsets, sizes)
+    (offsets, segments, sizes)
 }
 
 /// First-fit-by-offset following an explicit item order.
@@ -345,6 +402,64 @@ mod tests {
         let got =
             crate::alloc::check_placement_regions(&items, &region_of, &offs, &caps).unwrap();
         assert_eq!(got, sizes);
+    }
+
+    #[test]
+    fn segment_packing_reuses_device_addresses_between_spill_windows() {
+        // A (10 bytes, [0,6)) is spilled during [2,4) — exactly when B
+        // (10 bytes) lives. Whole-lifetime packing needs 20 bytes; the
+        // segment packing slots B into A's spill window and needs 10.
+        let items = vec![item(0, 10, 0, 6), item(1, 10, 2, 4)];
+        let windows = vec![vec![(2usize, 4usize)], vec![]];
+        let (whole_offs, whole_sz) = best_fit_multi(&items, 1);
+        assert_eq!(whole_sz, 20);
+        assert!(check_placement(&items, &whole_offs, whole_sz).is_ok());
+        let (offs, segs, sizes) =
+            best_fit_regions_segments(&items, &windows, &[0, 0], 1, 1);
+        assert_eq!(sizes, vec![10], "segments must reuse A's bytes during its window");
+        assert_eq!(segs[0].len(), 2, "A must be placed as two device segments");
+        assert_eq!((segs[0][0].0, segs[0][0].1), (0, 2));
+        assert_eq!((segs[0][1].0, segs[0][1].1), (4, 6));
+        assert_eq!(offs[0], segs[0][0].2, "item offset is the first segment's");
+        assert!(segs[1].is_empty(), "unspilled items are not segmented");
+        // The expanded placement is valid per region semantics.
+        let expanded = vec![
+            item(0, 10, 0, 2),
+            item(0, 10, 4, 6),
+            item(1, 10, 2, 4),
+        ];
+        let exp_offs = vec![segs[0][0].2, segs[0][1].2, offs[1]];
+        let got = crate::alloc::check_placement_regions(
+            &expanded,
+            &[0, 0, 0],
+            &exp_offs,
+            &[Some(10)],
+        )
+        .unwrap();
+        assert_eq!(got, sizes);
+    }
+
+    #[test]
+    fn empty_windows_make_segment_packing_identical_to_plain_regions() {
+        check("bestfit_segments_empty_windows", 20, |rng: &mut Rng| {
+            let n = rng.range(1, 25);
+            let items: Vec<PlacementItem> = (0..n)
+                .map(|i| {
+                    let start = rng.range(0, 12);
+                    let len = rng.range(1, 8);
+                    item(i as u32, rng.range(1, 300) as u64, start, start + len)
+                })
+                .collect();
+            let region_of: Vec<usize> = (0..n).map(|_| rng.range(0, 2)).collect();
+            let (o1, s1) = best_fit_regions(&items, &region_of, 2, 1);
+            let empties = vec![Vec::new(); n];
+            let (o2, segs, s2) =
+                best_fit_regions_segments(&items, &empties, &region_of, 2, 1);
+            ensure(
+                o1 == o2 && s1 == s2 && segs.iter().all(Vec::is_empty),
+                || "empty-window segment packing diverged from best_fit_regions".into(),
+            )
+        });
     }
 
     #[test]

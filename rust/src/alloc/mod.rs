@@ -36,6 +36,62 @@ impl PlacementItem {
     }
 }
 
+/// The device-resident segments of a live interval `[start, end)` once the
+/// sorted, non-overlapping spill `windows` are subtracted: the maximal
+/// half-open step ranges during which a spilled tensor actually occupies
+/// device memory. With no windows the whole interval is the single
+/// segment. Windows are clipped to the interval; empty clips are skipped.
+///
+/// This is the substrate of spill-interval segment placement: each
+/// returned segment becomes a first-class placement item with its own
+/// address, so the device arena can reuse the tensor's bytes between its
+/// swap windows (the address reuse that whole-lifetime reservation — one
+/// address held across every window — leaves on the table).
+///
+/// ```
+/// use olla::alloc::resident_segments;
+///
+/// assert_eq!(resident_segments(0, 6, &[]), vec![(0, 6)]);
+/// assert_eq!(resident_segments(0, 6, &[(2, 4)]), vec![(0, 2), (4, 6)]);
+/// assert_eq!(resident_segments(0, 8, &[(1, 2), (5, 7)]), vec![(0, 1), (2, 5), (7, 8)]);
+/// ```
+pub fn resident_segments(
+    start: usize,
+    end: usize,
+    windows: &[(usize, usize)],
+) -> Vec<(usize, usize)> {
+    let mut segs = Vec::with_capacity(windows.len() + 1);
+    let mut cursor = start;
+    for &(from, to) in windows {
+        let from = from.max(start);
+        let to = to.min(end);
+        if from >= to {
+            continue;
+        }
+        if cursor < from {
+            segs.push((cursor, from));
+        }
+        cursor = cursor.max(to);
+    }
+    if cursor < end {
+        segs.push((cursor, end));
+    }
+    segs
+}
+
+/// The device-resident segment placements of one tensor under
+/// spill-interval segment placement: ordered `(start, end, offset)`
+/// triples, one per on-device interval (see [`resident_segments`]).
+pub type SegmentPlacements = Vec<(usize, usize, u64)>;
+
+/// Per-item spill-window accessor for the window lists that ride along a
+/// placement-item slice: `windows` may be shorter than the item list
+/// (missing entries mean "no spill windows"), which lets unspilled call
+/// sites pass `&[]` instead of allocating a vector of empties.
+pub fn windows_of(windows: &[Vec<(usize, usize)>], i: usize) -> &[(usize, usize)] {
+    windows.get(i).map(Vec::as_slice).unwrap_or(&[])
+}
+
 /// Lower bound on any arena size: the max over steps of the sum of live
 /// tensor sizes. A placement achieving this bound has zero fragmentation.
 pub fn resident_lower_bound(items: &[PlacementItem]) -> u64 {
@@ -226,6 +282,46 @@ mod tests {
         let items = vec![item(10, 0, 2)];
         assert!(check_placement_regions(&items, &[2], &[0], &[None]).is_err());
         assert!(check_placement_regions(&items, &[], &[0], &[None]).is_err());
+    }
+
+    #[test]
+    fn resident_segments_subtract_windows() {
+        // No windows: the lifetime itself.
+        assert_eq!(resident_segments(2, 7, &[]), vec![(2, 7)]);
+        // Interior window splits the lifetime.
+        assert_eq!(resident_segments(0, 6, &[(2, 4)]), vec![(0, 2), (4, 6)]);
+        // Window touching the end leaves only the head.
+        assert_eq!(resident_segments(0, 6, &[(3, 6)]), vec![(0, 3)]);
+        // Out-of-range windows are clipped; empty clips are dropped.
+        assert_eq!(resident_segments(4, 8, &[(0, 2), (5, 6)]), vec![(4, 5), (6, 8)]);
+        // Adjacent windows leave no segment between them.
+        assert_eq!(resident_segments(0, 8, &[(1, 3), (3, 5)]), vec![(0, 1), (5, 8)]);
+    }
+
+    #[test]
+    fn windows_of_tolerates_short_lists() {
+        let w = vec![vec![(1usize, 2usize)]];
+        assert_eq!(windows_of(&w, 0), &[(1, 2)]);
+        assert!(windows_of(&w, 5).is_empty());
+        assert!(windows_of(&[], 0).is_empty());
+    }
+
+    #[test]
+    fn segments_of_one_spilled_tensor_can_share_addresses_across_windows() {
+        // The tentpole in miniature: A (size 10) is spilled during B's
+        // whole life, so A's two device segments and B never overlap in
+        // time — all three can sit at offset 0, which
+        // check_placement_regions accepts while the whole-lifetime view
+        // of A would conflict with B.
+        let a_segs = resident_segments(0, 6, &[(2, 4)]);
+        let items = vec![
+            item(10, a_segs[0].0, a_segs[0].1),
+            item(10, a_segs[1].0, a_segs[1].1),
+            item(10, 2, 4),
+        ];
+        let caps = vec![Some(10u64)];
+        let sizes = check_placement_regions(&items, &[0, 0, 0], &[0, 0, 0], &caps).unwrap();
+        assert_eq!(sizes, vec![10]);
     }
 
     #[test]

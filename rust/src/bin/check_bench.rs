@@ -27,6 +27,11 @@
 //! exist yet (used by CI to self-seed a runner-local baseline before the
 //! second measurement run). Samples whose key appears on only one side
 //! are reported but never fail the run: bench sets may grow.
+//!
+//! A baseline file that exists but holds **no samples** (the state the
+//! repo ships in until someone blesses real numbers) makes its gate
+//! vacuous: the run still passes, but a loud `VACUOUS` warning is printed
+//! so nobody mistakes a trivially-green gate for a real one.
 
 use olla::bench_support::{
     anytime_from_baseline_json, anytime_samples, anytime_to_baseline_json,
@@ -188,9 +193,11 @@ fn main() -> ExitCode {
             Ok(Some(doc)) => {
                 let baseline = samples_from_baseline_json(&doc);
                 if baseline.is_empty() {
-                    println!(
-                        "check_bench: baseline {baseline_path} holds no samples yet — nothing \
-                         to compare (bless one with --bless)"
+                    eprintln!(
+                        "check_bench: WARNING — solver baseline {baseline_path} holds no \
+                         samples: this gate is VACUOUS and passes trivially. Run \
+                         scripts/bless_baselines.sh on the reference machine and commit the \
+                         baseline so regressions actually bite."
                     );
                 } else {
                     let matched = baseline
@@ -225,9 +232,11 @@ fn main() -> ExitCode {
             Ok(Some(doc)) => {
                 let baseline = anytime_from_baseline_json(&doc);
                 if baseline.is_empty() {
-                    println!(
-                        "check_bench: anytime baseline {anytime_baseline_path} holds no samples \
-                         yet — nothing to compare (bless one with --bless)"
+                    eprintln!(
+                        "check_bench: WARNING — anytime baseline {anytime_baseline_path} holds \
+                         no samples: this gate is VACUOUS and passes trivially. Run \
+                         scripts/bless_baselines.sh on the reference machine and commit the \
+                         baseline so regressions actually bite."
                     );
                 } else {
                     let matched = baseline

@@ -267,6 +267,12 @@ fn cmd_optimize(rest: &[String]) -> anyhow::Result<()> {
             plan.spills.len(),
             byte_steps,
         );
+        let segs: usize = plan.segment_offsets.values().map(Vec::len).sum();
+        println!(
+            "segment placement   : {} spilled tensors device-homed across {} device segments",
+            plan.segment_offsets.len(),
+            segs,
+        );
     }
     println!(
         "planning time       : {} (schedule {}, placement {})",
@@ -359,6 +365,21 @@ fn cmd_plan(rest: &[String]) -> anyhow::Result<()> {
             plan.spills.len(),
             olla::olla::spilled_byte_steps(&g, &plan.spills),
         );
+        let segs: usize = plan.segment_offsets.values().map(Vec::len).sum();
+        println!(
+            "  segment placement  : {} spilled tensors device-homed across {} device segments",
+            plan.segment_offsets.len(),
+            segs,
+        );
+        let mut by_edge: Vec<_> = plan.segment_offsets.iter().collect();
+        by_edge.sort_by_key(|(e, _)| e.0);
+        for (e, list) in by_edge {
+            let view: Vec<String> = list
+                .iter()
+                .map(|&(s, t, off)| format!("[{s},{t})@{off}"))
+                .collect();
+            println!("    segment offsets {e}: {}", view.join(" "));
+        }
     }
     println!("  anytime curve      : {} improvements", final_snap.anytime.len());
     for (t, bytes) in &final_snap.anytime {

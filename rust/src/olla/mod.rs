@@ -26,7 +26,9 @@ pub use planner::{
     materialize_plan, optimize, optimize_anytime, validate_plan, MemoryPlan, PlanSink,
     PlannerOptions,
 };
-pub use placement::{optimize_placement, PlacementOptions, PlacementResult};
+pub use placement::{
+    optimize_placement, optimize_placement_spilled, PlacementOptions, PlacementResult,
+};
 pub use scheduling::{
     build_capacity_model, capacity_floor, check_spills, device_profile, optimize_schedule,
     optimize_schedule_anytime, spilled_byte_steps, OrderSink, ScheduleOptions,

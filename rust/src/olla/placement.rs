@@ -19,11 +19,23 @@
 //! matches the resident-set lower bound, the bound proves optimality and the
 //! ILP is skipped entirely (the paper's §4.4 observation that fragmentation
 //! is always fully eliminated).
+//!
+//! Under a capacity-aware schedule's spill certificate,
+//! [`optimize_placement_spilled`] switches to spill-interval segment
+//! placement: each spilled tensor's device-resident segments become
+//! first-class placement items with their own addresses, so the device
+//! arena reuses bytes between swap windows (see `docs/FORMULATION.md`,
+//! §"Per-segment placement rows").
 
-use super::topology::{bytes_offloaded, region_lower_bound, transfer_cost, MemoryTopology};
+use super::topology::{
+    assign_and_pack_segments, bytes_offloaded, region_lower_bound,
+    region_lower_bound_segments, spill_crossing_cost, transfer_cost, transfer_cost_segments,
+    MemoryTopology,
+};
 use crate::alloc::bestfit::{arena_size, best_fit_multi, best_fit_offsets, FitOrder};
 use crate::alloc::{
-    check_placement, check_placement_regions, resident_lower_bound, PlacementItem,
+    check_placement, check_placement_regions, resident_lower_bound, resident_segments,
+    windows_of, PlacementItem,
 };
 use crate::ilp::{self, IlpBuilder, IlpMeta, Pos, SolveControl, SolveOptions, SolveStatus, VarId};
 use crate::util::Stopwatch;
@@ -125,8 +137,15 @@ pub struct PlacementResult {
     /// Bytes placed outside the device region.
     pub bytes_offloaded: u64,
     /// Transfer-cost term of the objective
-    /// (`Σ penalty_per_byte(region) · size`).
+    /// (`Σ penalty_per_byte(region) · size`, plus per-crossing charges
+    /// for device-homed spilled tensors under segment placement).
     pub transfer_cost: f64,
+    /// Per-item device-resident segment placements `(start, end, offset)`
+    /// under spill-interval segment placement
+    /// ([`optimize_placement_spilled`]): non-empty exactly for
+    /// device-homed items with spill windows. Empty (for every item) on
+    /// the unsegmented paths.
+    pub segments: Vec<crate::alloc::SegmentPlacements>,
 }
 
 /// Run the eq.-15 optimization.
@@ -163,6 +182,30 @@ pub fn optimize_placement(items: &[PlacementItem], opts: &PlacementOptions) -> P
     first
 }
 
+/// [`optimize_placement`] with a spill certificate: `windows[i]` lists
+/// the order-step intervals during which the capacity-aware schedule
+/// holds item `i` off-device. Under a multi-region topology each spilled
+/// tensor is placed as its device-resident *segments*
+/// ([`crate::alloc::resident_segments`]) — one address per on-device
+/// interval, freed during the spill windows — so the device arena reuses
+/// bytes between swap windows instead of offloading the whole tensor
+/// (the spill-interval segment placement of `docs/FORMULATION.md`,
+/// §"Per-segment placement rows").
+///
+/// Single-region topologies and all-empty certificates delegate to
+/// [`optimize_placement`] unchanged: the empty certificate reproduces
+/// today's placement bit for bit (the safety rail, property-tested).
+pub fn optimize_placement_spilled(
+    items: &[PlacementItem],
+    windows: &[Vec<(usize, usize)>],
+    opts: &PlacementOptions,
+) -> PlacementResult {
+    if opts.topology.is_single() || windows.iter().all(|w| w.is_empty()) {
+        return optimize_placement(items, opts);
+    }
+    optimize_placement_segments(items, windows, opts)
+}
+
 fn optimize_placement_once(
     items: &[PlacementItem],
     opts: &PlacementOptions,
@@ -187,6 +230,7 @@ fn optimize_placement_once(
             region_sizes: vec![0],
             bytes_offloaded: 0,
             transfer_cost: 0.0,
+            segments: Vec::new(),
         };
     }
 
@@ -232,6 +276,7 @@ fn optimize_placement_once(
             region_sizes: vec![heur_size],
             bytes_offloaded: 0,
             transfer_cost: 0.0,
+            segments: Vec::new(),
         };
     }
 
@@ -357,6 +402,7 @@ fn optimize_placement_once(
         region_sizes: vec![size],
         bytes_offloaded: 0,
         transfer_cost: 0.0,
+        segments: Vec::new(),
     }
 }
 
@@ -412,6 +458,7 @@ fn optimize_placement_regions(
             region_sizes: vec![0; kk],
             bytes_offloaded: 0,
             transfer_cost: 0.0,
+            segments: Vec::new(),
         };
     }
 
@@ -443,6 +490,7 @@ fn optimize_placement_regions(
         region_sizes: heur_sizes.clone(),
         bytes_offloaded: heur_off_bytes,
         transfer_cost: heur_cost,
+        segments: Vec::new(),
     };
 
     // Fast paths: nothing offloaded, device arena tight and within
@@ -641,6 +689,361 @@ fn optimize_placement_regions(
                     out.transfer_cost = cost;
                     out.regions = regions;
                     out.region_sizes = sizes;
+                    out.method = if sol.status == SolveStatus::Optimal {
+                        PlacementMethod::Ilp
+                    } else {
+                        PlacementMethod::IlpTimeLimit
+                    };
+                }
+            }
+        }
+    }
+    incumbents.extend(sol.incumbents.iter().copied());
+    out.incumbents = incumbents;
+    out.solve_secs = watch.secs();
+    out
+}
+
+/// The spill-interval variant of [`optimize_placement_regions`]: spilled
+/// tensors are device-committed (their certificate says they are
+/// device-resident outside their windows, so region indicators exist only
+/// for region 0, carrying a per-crossing transfer charge —
+/// [`spill_crossing_cost`] — instead of a whole-residency penalty), and
+/// every placement *atom* is either a whole unspilled item or one
+/// device-resident segment of a spilled item. Fit and no-overlap rows are
+/// built per atom: two atoms of different items that overlap in time get
+/// the eq. 6/7a/7b gadget guarded by their owners' shared region
+/// indicators, so a tensor slotted into another tensor's spill window
+/// costs no device bytes at all. Segments of the same tensor never
+/// coexist and need no gadget.
+///
+/// The segment-aware greedy packing ([`assign_and_pack_segments`])
+/// provides the incumbent and the fallback; the ILP decode is accepted
+/// only when it validates per region over the expanded atoms and does not
+/// worsen `device_arena + transfer_cost`.
+fn optimize_placement_segments(
+    items: &[PlacementItem],
+    windows: &[Vec<(usize, usize)>],
+    opts: &PlacementOptions,
+) -> PlacementResult {
+    let watch = Stopwatch::start();
+    let topo = &opts.topology;
+    let kk = topo.num_regions();
+    let caps = topo.capacities();
+    let n = items.len();
+    if n == 0 {
+        let mut empty = optimize_placement_regions(items, opts);
+        empty.solve_secs = watch.secs();
+        return empty;
+    }
+
+    // Segment-aware greedy incumbent (and fallback).
+    let heur = assign_and_pack_segments(items, windows, topo, opts.align);
+    let heur_cost = transfer_cost_segments(items, windows, &heur.region_of, topo);
+    let heur_off_bytes = bytes_offloaded(items, &heur.region_of);
+    let lb = region_lower_bound_segments(items, windows, &heur.region_of, 0);
+    let heur_obj = heur.region_sizes[0] as f64 + heur_cost;
+    let mut incumbents = vec![(watch.secs(), heur_obj)];
+
+    let fallback = PlacementResult {
+        offsets: heur.offsets.clone(),
+        arena_size: heur.region_sizes[0],
+        lower_bound: lb,
+        fragmentation: frag(heur.region_sizes[0], lb),
+        method: PlacementMethod::HeuristicFallback,
+        solve_secs: 0.0,
+        incumbents: incumbents.clone(),
+        model_size: (0, 0),
+        nodes: 0,
+        simplex_iters: 0,
+        warm_attempts: 0,
+        warm_hits: 0,
+        regions: heur.region_of.clone(),
+        region_sizes: heur.region_sizes.clone(),
+        bytes_offloaded: heur_off_bytes,
+        transfer_cost: heur_cost,
+        segments: heur.segments.clone(),
+    };
+
+    // Fast path, mirroring `optimize_placement_regions`: nothing
+    // offloaded, the device arena matches the *segment* lower bound, the
+    // cap holds, and no unspilled offload can pay for itself. Spilled
+    // tensors are device-committed in this formulation, so their
+    // crossing charge is a constant across every representable
+    // placement — the regions-path optimality argument transfers
+    // unchanged and the ILP can be skipped.
+    let cap_ok = caps[0].map_or(true, |c| heur.region_sizes[0] <= c);
+    let no_profitable_offload = topo.regions[1..]
+        .iter()
+        .all(|r| r.penalty_per_byte >= 1.0 + topo.regions[0].penalty_per_byte);
+    let tight =
+        heur_off_bytes == 0 && heur.region_sizes[0] == lb && cap_ok && no_profitable_offload;
+    if opts.skip_ilp_if_tight && tight {
+        return PlacementResult {
+            method: PlacementMethod::BoundProven,
+            solve_secs: watch.secs(),
+            ..fallback
+        };
+    }
+
+    // Placement atoms: one per device-resident segment of a spilled item,
+    // one whole-interval atom per unspilled item.
+    let mut atom_owner: Vec<usize> = Vec::new();
+    let mut atom_span: Vec<(usize, usize)> = Vec::new();
+    for (i, it) in items.iter().enumerate() {
+        let win = windows_of(windows, i);
+        if win.is_empty() {
+            atom_owner.push(i);
+            atom_span.push((it.start, it.end));
+        } else {
+            if !topo.regions[0].fits(it.size) {
+                // A spilled tensor that cannot live on the device at all
+                // cannot honor its certificate segment-wise: keep the
+                // greedy best effort, validation reports any violation.
+                return PlacementResult { solve_secs: watch.secs(), ..fallback };
+            }
+            for (s, e) in resident_segments(it.start, it.end, win) {
+                atom_owner.push(i);
+                atom_span.push((s, e));
+            }
+        }
+    }
+    if atom_owner.len() > opts.max_ilp_items {
+        return PlacementResult { solve_secs: watch.secs(), ..fallback };
+    }
+
+    let total_bytes: u64 = items.iter().map(|it| it.size).sum();
+    let bound: Vec<f64> = caps
+        .iter()
+        .map(|c| match c {
+            Some(cap) => *cap as f64,
+            None => total_bytes as f64,
+        })
+        .collect();
+    let b_max = bound.iter().fold(0.0f64, |a, &x| a.max(x));
+    let big_m = b_max.max(1.0);
+    let mut b = IlpBuilder::new();
+
+    // Region indicators: unspilled items choose among every region that
+    // fits them (flat per-byte penalty, as in the unsegmented model);
+    // spilled items are fixed to the device with the per-crossing charge.
+    let mut r_vars: Vec<Vec<Option<VarId>>> = Vec::with_capacity(n);
+    for (i, it) in items.iter().enumerate() {
+        let win = windows_of(windows, i);
+        let row: Vec<Option<VarId>> = (0..kk)
+            .map(|k| {
+                if !topo.regions[k].fits(it.size) || (k != 0 && !win.is_empty()) {
+                    return None;
+                }
+                let cost = topo.regions[k].penalty_per_byte * it.size as f64
+                    + if k == 0 { spill_crossing_cost(topo, it.size, win.len()) } else { 0.0 };
+                Some(b.binary("R", format!("R[{},{}]", it.edge, k), cost))
+            })
+            .collect();
+        let avail: Vec<VarId> = row.iter().flatten().copied().collect();
+        if avail.is_empty() {
+            // This tensor fits nowhere: stay on the best-effort greedy.
+            return PlacementResult { solve_secs: watch.secs(), ..fallback };
+        }
+        if avail.len() == 1 {
+            b.fix(avail[0], 1.0);
+        } else {
+            b.exactly_one(avail);
+        }
+        r_vars.push(row);
+    }
+
+    let a_vars: Vec<VarId> = atom_owner
+        .iter()
+        .zip(&atom_span)
+        .map(|(&i, &(s, e))| {
+            let it = &items[i];
+            let ub = (0..kk)
+                .filter(|&k| r_vars[i][k].is_some())
+                .map(|k| bound[k] - it.size as f64)
+                .fold(0.0f64, |a, x| a.max(x));
+            b.continuous("A", format!("A[{},{s}..{e}]", it.edge), 0.0, ub, 0.0)
+        })
+        .collect();
+
+    let peak_dev = b.continuous("obj", "peak_dev", 0.0, bound[0], 1.0);
+    for (x, &i) in atom_owner.iter().enumerate() {
+        let size = items[i].size as f64;
+        let spilled = !windows_of(windows, i).is_empty();
+        if let Some(r0) = r_vars[i][0] {
+            if spilled {
+                // Device-committed: the fit row holds unconditionally.
+                b.le(vec![(a_vars[x], 1.0), (peak_dev, -1.0)], -size);
+            } else {
+                b.indicator_le(
+                    r0,
+                    vec![(a_vars[x], 1.0), (peak_dev, -1.0)],
+                    -size,
+                    big_m + size,
+                );
+            }
+        }
+        for k in 1..kk {
+            let (Some(rk), Some(cap)) = (r_vars[i][k], caps[k]) else { continue };
+            b.indicator_le(rk, vec![(a_vars[x], 1.0)], cap as f64 - size, big_m);
+        }
+    }
+
+    for x in 0..atom_owner.len() {
+        for y in (x + 1)..atom_owner.len() {
+            let (i, j) = (atom_owner[x], atom_owner[y]);
+            if i == j {
+                continue; // segments of one tensor never coexist
+            }
+            let ((sx, ex), (sy, ey)) = (atom_span[x], atom_span[y]);
+            if sx >= ey || sy >= ex {
+                continue; // §4.2: never co-resident, no constraint needed
+            }
+            let shared: Vec<(VarId, VarId)> = (0..kk)
+                .filter_map(|k| match (r_vars[i][k], r_vars[j][k]) {
+                    (Some(ri), Some(rj)) => Some((ri, rj)),
+                    _ => None,
+                })
+                .collect();
+            if shared.is_empty() {
+                continue; // cross-region pair: skipped entirely
+            }
+            b.pair_no_overlap_regions(
+                (x, y),
+                Pos::Var(a_vars[x]),
+                items[i].size as f64,
+                Pos::Var(a_vars[y]),
+                items[j].size as f64,
+                big_m,
+                &shared,
+            );
+        }
+    }
+    let model_size = (b.num_vars(), b.num_cons());
+    let (m, meta) = b.into_parts();
+
+    // Warm start straight from the segment-aware greedy incumbent —
+    // representable only when the greedy kept every spilled tensor on the
+    // device (eviction under cap pressure may have exiled one, which the
+    // ILP's device commitment cannot express).
+    let atom_heur_off: Option<Vec<u64>> = {
+        let ok = (0..n).all(|i| windows_of(windows, i).is_empty() || heur.region_of[i] == 0)
+            && (0..n).all(|i| r_vars[i][heur.region_of[i]].is_some());
+        if ok {
+            let mut per_item_seg = vec![0usize; n];
+            let offs: Vec<u64> = atom_owner
+                .iter()
+                .map(|&i| {
+                    if windows_of(windows, i).is_empty() {
+                        heur.offsets[i]
+                    } else {
+                        let s = per_item_seg[i];
+                        per_item_seg[i] += 1;
+                        heur.segments[i][s].2
+                    }
+                })
+                .collect();
+            Some(offs)
+        } else {
+            None
+        }
+    };
+    let initial = atom_heur_off.as_ref().map(|atom_offs| {
+        let mut warm = vec![0.0; m.num_vars()];
+        for i in 0..n {
+            if let Some(rv) = r_vars[i][heur.region_of[i]] {
+                warm[rv.0] = 1.0;
+            }
+        }
+        for (x, &o) in atom_offs.iter().enumerate() {
+            warm[a_vars[x].0] = o as f64;
+        }
+        warm[peak_dev.0] = heur.region_sizes[0] as f64;
+        for (&(x, y), pv) in &meta.pairs {
+            let (i, j) = (atom_owner[x], atom_owner[y]);
+            if heur.region_of[i] != heur.region_of[j] {
+                continue; // cross-region incumbent pair: both binaries stay 0
+            }
+            let x_below = atom_offs[x] + items[i].size <= atom_offs[y];
+            warm[pv.below.0] = if x_below { 1.0 } else { 0.0 };
+            warm[pv.above.0] = if x_below { 0.0 } else { 1.0 };
+        }
+        warm
+    });
+
+    let sol = ilp::solve(
+        &m,
+        &SolveOptions {
+            time_limit: opts.time_limit.saturating_sub(watch.elapsed()),
+            initial,
+            // Crossing charges are fractional in general, so the
+            // bound-rounding strengthening must stay off.
+            integral_objective: false,
+            threads: opts.solver_threads,
+            stop_gap: opts.stop_gap,
+            control: opts.control.clone(),
+            ..Default::default()
+        },
+    );
+
+    let mut out = fallback;
+    out.model_size = model_size;
+    out.nodes = sol.nodes;
+    out.simplex_iters = sol.simplex_iters;
+    out.warm_attempts = sol.warm_attempts;
+    out.warm_hits = sol.warm_hits;
+    if sol.has_solution() {
+        let mut regions = vec![0usize; n];
+        let mut decoded = true;
+        for i in 0..n {
+            match (0..kk).find(|&k| r_vars[i][k].is_some_and(|v| sol.value(v) > 0.5)) {
+                Some(k) => regions[i] = k,
+                None => {
+                    decoded = false;
+                    break;
+                }
+            }
+        }
+        if decoded {
+            let mut offs = vec![0u64; n];
+            let mut segs: Vec<crate::alloc::SegmentPlacements> = vec![Vec::new(); n];
+            let mut atom_items: Vec<PlacementItem> = Vec::with_capacity(atom_owner.len());
+            let mut atom_regions: Vec<usize> = Vec::with_capacity(atom_owner.len());
+            let mut atom_offs: Vec<u64> = Vec::with_capacity(atom_owner.len());
+            let mut seen = vec![false; n];
+            for (x, &i) in atom_owner.iter().enumerate() {
+                let o = sol.value(a_vars[x]).round().max(0.0) as u64;
+                if !seen[i] {
+                    offs[i] = o;
+                    seen[i] = true;
+                }
+                if !windows_of(windows, i).is_empty() && regions[i] == 0 {
+                    segs[i].push((atom_span[x].0, atom_span[x].1, o));
+                }
+                atom_items.push(PlacementItem {
+                    edge: items[i].edge,
+                    size: items[i].size,
+                    start: atom_span[x].0,
+                    end: atom_span[x].1,
+                });
+                atom_regions.push(regions[i]);
+                atom_offs.push(o);
+            }
+            if let Ok(sizes) =
+                check_placement_regions(&atom_items, &atom_regions, &atom_offs, &caps)
+            {
+                let cost = transfer_cost_segments(items, windows, &regions, topo);
+                let obj = sizes[0] as f64 + cost;
+                if obj <= heur_obj + 1e-6 {
+                    out.lower_bound = region_lower_bound_segments(items, windows, &regions, 0);
+                    out.fragmentation = frag(sizes[0], out.lower_bound);
+                    out.arena_size = sizes[0];
+                    out.offsets = offs;
+                    out.bytes_offloaded = bytes_offloaded(items, &regions);
+                    out.transfer_cost = cost;
+                    out.regions = regions;
+                    out.region_sizes = sizes;
+                    out.segments = segs;
                     out.method = if sol.status == SolveStatus::Optimal {
                         PlacementMethod::Ilp
                     } else {
@@ -889,6 +1292,81 @@ mod tests {
                 .is_err(),
             "impossible topology must surface as a validation error"
         );
+    }
+
+    #[test]
+    fn empty_certificate_spilled_placement_is_the_plain_placement() {
+        // Safety rail: optimize_placement_spilled with an all-empty
+        // certificate must reproduce optimize_placement bit for bit on
+        // multi-region instances (serial solver for determinism).
+        check("spilled_empty_cert_identity", 8, |rng: &mut Rng| {
+            let n = rng.range(2, 10);
+            let items: Vec<PlacementItem> = (0..n)
+                .map(|i| {
+                    let start = rng.range(0, 8);
+                    let len = rng.range(1, 6);
+                    item(i as u32, 8 * rng.range(1, 24) as u64, start, start + len)
+                })
+                .collect();
+            let opts = PlacementOptions {
+                topology: MemoryTopology::device_host(8 * rng.range(16, 128) as u64, 1.0),
+                solver_threads: 1,
+                ..quick()
+            };
+            let plain = optimize_placement(&items, &opts);
+            let empties = vec![Vec::new(); items.len()];
+            let spilled = optimize_placement_spilled(&items, &empties, &opts);
+            ensure(
+                plain.offsets == spilled.offsets
+                    && plain.regions == spilled.regions
+                    && plain.arena_size == spilled.arena_size
+                    && spilled.segments.iter().all(Vec::is_empty),
+                || "empty-certificate spilled placement diverged".into(),
+            )
+        });
+    }
+
+    #[test]
+    fn segmented_placement_reuses_device_between_spill_windows() {
+        // A (10 bytes, [0,6)) is certified spilled during [2,4), exactly
+        // when B (10 bytes) lives: the segmented formulation places A as
+        // two device segments and B inside A's window — a 10-byte arena,
+        // where whole-lifetime reservation needs 20.
+        let items = vec![item(0, 10, 0, 6), item(1, 10, 2, 4)];
+        let windows = vec![vec![(2usize, 4usize)], vec![]];
+        let opts = PlacementOptions {
+            topology: MemoryTopology::device_host(10, 1.0),
+            ..quick()
+        };
+        let r = optimize_placement_spilled(&items, &windows, &opts);
+        assert_eq!(r.arena_size, 10, "regions={:?}", r.regions);
+        assert_eq!(r.regions, vec![0, 0]);
+        assert_eq!(r.segments[0].len(), 2, "A must carry two segment placements");
+        assert_eq!((r.segments[0][0].0, r.segments[0][0].1), (0, 2));
+        assert_eq!((r.segments[0][1].0, r.segments[0][1].1), (4, 6));
+        assert!(r.segments[1].is_empty());
+        // One crossing pair through the host at penalty 1.0/byte, factor 0.5.
+        assert!((r.transfer_cost - 5.0).abs() < 1e-9, "cost={}", r.transfer_cost);
+    }
+
+    #[test]
+    fn segmented_placement_still_offloads_unspilled_tensors_under_cap() {
+        // C (12 bytes, [1,5)) overlaps both of A's device segments, so a
+        // 12-byte device cannot hold both at once: C must go to the host
+        // (it is the larger eviction victim) while spilled A keeps its
+        // segment placements — its certificate commits it to the device.
+        let items = vec![item(0, 10, 0, 6), item(1, 12, 1, 5)];
+        let windows = vec![vec![(2usize, 4usize)], vec![]];
+        let opts = PlacementOptions {
+            topology: MemoryTopology::device_host(12, 1.0),
+            ..quick()
+        };
+        let r = optimize_placement_spilled(&items, &windows, &opts);
+        assert_eq!(r.regions, vec![0, 1], "C must be offloaded: {:?}", r.regions);
+        assert!(r.arena_size <= 12);
+        assert_eq!(r.bytes_offloaded, 12);
+        assert_eq!(r.segments[0].len(), 2);
+        assert!(r.segments[1].is_empty());
     }
 
     #[test]

@@ -144,26 +144,142 @@ pub fn bytes_offloaded(items: &[PlacementItem], region_of: &[usize]) -> u64 {
     items.iter().zip(region_of).filter(|(_, &k)| k != 0).map(|(it, _)| it.size).sum()
 }
 
+/// Fraction of a region's per-byte residency penalty charged for one
+/// spill-window crossing pair (transfer out at the window's start,
+/// transfer back before its end). Whole-region residency keeps the flat
+/// per-byte penalty, so a tensor with a single swap window prefers
+/// device-homed segments (half the host charge plus whatever device
+/// space its segments need) while a many-window tensor degrades toward
+/// whole-host residency.
+pub const SPILL_CROSSING_FACTOR: f64 = 0.5;
+
+/// Placement-side transfer cost of keeping a spilled tensor device-homed
+/// with per-segment addresses: each of its `num_windows` spill windows is
+/// one out+in crossing pair through the first non-device region that can
+/// stage the tensor, charged at [`SPILL_CROSSING_FACTOR`] of that
+/// region's per-byte penalty. Zero when the tensor has no windows or the
+/// topology has no staging region.
+pub fn spill_crossing_cost(
+    topology: &MemoryTopology,
+    size: u64,
+    num_windows: usize,
+) -> f64 {
+    if num_windows == 0 {
+        return 0.0;
+    }
+    let staging = topology.regions[1..].iter().find(|r| r.fits(size));
+    match staging {
+        Some(r) => SPILL_CROSSING_FACTOR * r.penalty_per_byte * size as f64 * num_windows as f64,
+        None => 0.0,
+    }
+}
+
+/// [`transfer_cost`] under spill-interval segment placement: items in
+/// later regions pay their region's flat per-byte penalty as before,
+/// while device-homed items with spill windows pay the per-crossing
+/// charge of [`spill_crossing_cost`]. With all-empty `windows` this is
+/// exactly [`transfer_cost`].
+pub fn transfer_cost_segments(
+    items: &[PlacementItem],
+    windows: &[Vec<(usize, usize)>],
+    region_of: &[usize],
+    topology: &MemoryTopology,
+) -> f64 {
+    items
+        .iter()
+        .enumerate()
+        .zip(region_of)
+        .map(|((i, it), &k)| {
+            let win = crate::alloc::windows_of(windows, i);
+            if k == 0 && !win.is_empty() {
+                topology.regions[0].penalty_per_byte * it.size as f64
+                    + spill_crossing_cost(topology, it.size, win.len())
+            } else {
+                topology.regions[k].penalty_per_byte * it.size as f64
+            }
+        })
+        .sum()
+}
+
 /// Resident-set lower bound of the items assigned to region `k`: the
 /// minimum arena that region can possibly need under this assignment.
 pub fn region_lower_bound(items: &[PlacementItem], region_of: &[usize], k: usize) -> u64 {
-    let sub: Vec<PlacementItem> = items
-        .iter()
-        .zip(region_of)
-        .filter(|(_, &r)| r == k)
-        .map(|(it, _)| *it)
-        .collect();
+    region_lower_bound_segments(items, &[], region_of, k)
+}
+
+/// [`region_lower_bound`] over segment intervals: device-region items
+/// with spill windows contribute only their device-resident segments
+/// ([`crate::alloc::resident_segments`]) to region 0's bound, so the
+/// bound reflects the address reuse segment placement can achieve between
+/// swap windows. `windows` rides along `items` per
+/// [`crate::alloc::windows_of`]; `&[]` reproduces [`region_lower_bound`].
+pub fn region_lower_bound_segments(
+    items: &[PlacementItem],
+    windows: &[Vec<(usize, usize)>],
+    region_of: &[usize],
+    k: usize,
+) -> u64 {
+    let mut sub: Vec<PlacementItem> = Vec::new();
+    for (i, it) in items.iter().enumerate() {
+        if region_of[i] != k {
+            continue;
+        }
+        let win = crate::alloc::windows_of(windows, i);
+        if k == 0 && !win.is_empty() {
+            for (s, e) in crate::alloc::resident_segments(it.start, it.end, win) {
+                sub.push(PlacementItem { edge: it.edge, size: it.size, start: s, end: e });
+            }
+        } else {
+            sub.push(*it);
+        }
+    }
     crate::alloc::resident_lower_bound(&sub)
 }
 
-/// Peak live bytes per timestep for the items assigned to region `k`,
-/// returned as `(timestep_of_peak, peak_bytes)` (`(0, 0)` when empty).
-fn region_peak(items: &[PlacementItem], region_of: &[usize], k: usize) -> (usize, u64) {
+/// The step intervals during which item `i` occupies region `k` under
+/// this assignment: its device-resident segments when it sits in the
+/// device region with spill windows, its whole lifetime otherwise
+/// (off-device regions hold a tensor for its entire life; the transient
+/// host staging of a device-homed tensor's windows is not placed).
+fn occupancy_intervals(
+    items: &[PlacementItem],
+    windows: &[Vec<(usize, usize)>],
+    i: usize,
+    k: usize,
+) -> Vec<(usize, usize)> {
+    let win = crate::alloc::windows_of(windows, i);
+    if k == 0 && !win.is_empty() {
+        crate::alloc::resident_segments(items[i].start, items[i].end, win)
+    } else {
+        vec![(items[i].start, items[i].end)]
+    }
+}
+
+/// Peak live bytes per timestep for the items assigned to region `k`
+/// (segment-aware), returned as `(timestep_of_peak, peak_bytes)`
+/// (`(0, 0)` when empty). `clip` restricts the sweep to a step range —
+/// the occupancy question an eviction destination asks.
+fn region_peak_segments(
+    items: &[PlacementItem],
+    windows: &[Vec<(usize, usize)>],
+    region_of: &[usize],
+    k: usize,
+    clip: Option<(usize, usize)>,
+) -> (usize, u64) {
     let mut events: Vec<(usize, i64)> = Vec::new();
-    for (it, &r) in items.iter().zip(region_of) {
-        if r == k {
-            events.push((it.start, it.size as i64));
-            events.push((it.end, -(it.size as i64)));
+    for i in 0..items.len() {
+        if region_of[i] != k {
+            continue;
+        }
+        for (s, e) in occupancy_intervals(items, windows, i, k) {
+            let (s, e) = match clip {
+                Some((lo, hi)) => (s.max(lo), e.min(hi)),
+                None => (s, e),
+            };
+            if s < e {
+                events.push((s, items[i].size as i64));
+                events.push((e, -(items[i].size as i64)));
+            }
         }
     }
     events.sort();
@@ -180,6 +296,41 @@ fn region_peak(items: &[PlacementItem], region_of: &[usize], k: usize) -> (usize
     (peak_t, peak.max(0) as u64)
 }
 
+/// Pick the eviction destination for item `victim` leaving region `k`:
+/// the first later region that statically fits the item *and* whose
+/// current occupancy over the victim's live range still leaves room under
+/// its capacity. Falls back to the first statically-fitting later region
+/// when every later region is already full (best effort — validation
+/// reports the overflow downstream). The purely static choice this
+/// replaces could park a victim in a region with no room left while a
+/// roomier region lay just beyond it, overfilling a capped host region.
+fn eviction_destination(
+    items: &[PlacementItem],
+    windows: &[Vec<(usize, usize)>],
+    region_of: &[usize],
+    topology: &MemoryTopology,
+    k: usize,
+    victim: usize,
+) -> Option<usize> {
+    let kk = topology.num_regions();
+    let size = items[victim].size;
+    let span = (items[victim].start, items[victim].end);
+    let with_room = ((k + 1)..kk).find(|&j| {
+        if !topology.regions[j].fits(size) {
+            return false;
+        }
+        match topology.regions[j].capacity {
+            None => true,
+            Some(cap) => {
+                let (_, occupied) =
+                    region_peak_segments(items, windows, region_of, j, Some(span));
+                occupied + size <= cap
+            }
+        }
+    });
+    with_room.or_else(|| ((k + 1)..kk).find(|&j| topology.regions[j].fits(size)))
+}
+
 /// Offload-aware greedy region assignment: start with everything on the
 /// device and, while any capped region's resident lower bound exceeds its
 /// capacity, move the largest tensor live at the overflowing timestep to
@@ -190,21 +341,49 @@ fn region_peak(items: &[PlacementItem], region_of: &[usize], k: usize) -> (usize
 /// Items that fit in no region at all are left where they are (best
 /// effort); `crate::alloc::check_placement_regions` reports the violation.
 pub fn assign_regions_greedy(items: &[PlacementItem], topology: &MemoryTopology) -> Vec<usize> {
-    assign_regions_greedy_pinned(items, topology, &[])
+    assign_regions_core(items, &[], &[], topology)
 }
 
 /// [`assign_regions_greedy`] with offload pins: items flagged in
 /// `pin_off_device` (missing entries mean unpinned) are assigned to the
 /// first non-device region that holds them *before* the relief loop runs.
-/// The planner uses this to honor the capacity-aware scheduler's spill
-/// certificate — tensors the eq.-14 solve already decided to hold
-/// off-device start on the host instead of being re-discovered by the
-/// greedy eviction. Pins are best-effort on a single-region topology
-/// (there is nowhere else to go).
+/// Pins are best-effort on a single-region topology (there is nowhere
+/// else to go). The planner used to honor spill certificates this way
+/// (whole-tensor offload); certificate materialization now goes through
+/// [`assign_and_pack_segments`], which keeps only the spilled *windows*
+/// off-device.
 pub fn assign_regions_greedy_pinned(
     items: &[PlacementItem],
     topology: &MemoryTopology,
     pin_off_device: &[bool],
+) -> Vec<usize> {
+    assign_regions_core(items, &[], pin_off_device, topology)
+}
+
+/// Segment-aware greedy region assignment: items keep their device home,
+/// but an item's spill `windows` are subtracted from its device occupancy
+/// ([`crate::alloc::resident_segments`]), so the relief loop sees the
+/// spill-adjusted device profile the capacity-aware schedule certified —
+/// a spilled tensor is only a relief victim at steps where it is actually
+/// device-resident. With all-empty windows this is exactly
+/// [`assign_regions_greedy`].
+pub fn assign_regions_greedy_segments(
+    items: &[PlacementItem],
+    windows: &[Vec<(usize, usize)>],
+    topology: &MemoryTopology,
+) -> Vec<usize> {
+    assign_regions_core(items, windows, &[], topology)
+}
+
+/// The shared greedy core behind the pinned and segment-aware entry
+/// points: pins force items off-device up front, windows thin the device
+/// occupancy to resident segments, and the relief loop evicts
+/// occupancy-aware ([`eviction_destination`]).
+fn assign_regions_core(
+    items: &[PlacementItem],
+    windows: &[Vec<(usize, usize)>],
+    pin_off_device: &[bool],
+    topology: &MemoryTopology,
 ) -> Vec<usize> {
     let kk = topology.num_regions();
     let mut region_of = vec![0usize; items.len()];
@@ -230,15 +409,17 @@ pub fn assign_regions_greedy_pinned(
         for k in 0..kk {
             let Some(cap) = topology.regions[k].capacity else { continue };
             loop {
-                let (peak_t, peak) = region_peak(items, &region_of, k);
+                let (peak_t, peak) =
+                    region_peak_segments(items, windows, &region_of, k, None);
                 if peak <= cap {
                     break;
                 }
                 let mut victims: Vec<usize> = (0..items.len())
                     .filter(|&i| {
                         region_of[i] == k
-                            && items[i].start <= peak_t
-                            && peak_t < items[i].end
+                            && occupancy_intervals(items, windows, i, k)
+                                .iter()
+                                .any(|&(s, e)| s <= peak_t && peak_t < e)
                     })
                     .collect();
                 victims.sort_by_key(|&i| {
@@ -255,7 +436,7 @@ pub fn assign_regions_greedy_pinned(
                         break;
                     }
                     let Some(dest) =
-                        ((k + 1)..kk).find(|&j| topology.regions[j].fits(items[v].size))
+                        eviction_destination(items, windows, &region_of, topology, k, v)
                     else {
                         continue; // nowhere later to go: leave best-effort
                     };
@@ -289,7 +470,8 @@ pub fn assign_and_pack(
     topology: &MemoryTopology,
     align: u64,
 ) -> (Vec<usize>, Vec<u64>, Vec<u64>) {
-    assign_and_pack_pinned(items, topology, align, &[])
+    let p = assign_and_pack_core(items, &[], &[], topology, align);
+    (p.region_of, p.offsets, p.region_sizes)
 }
 
 /// [`assign_and_pack`] with offload pins (see
@@ -302,10 +484,60 @@ pub fn assign_and_pack_pinned(
     align: u64,
     pin_off_device: &[bool],
 ) -> (Vec<usize>, Vec<u64>, Vec<u64>) {
+    let p = assign_and_pack_core(items, &[], pin_off_device, topology, align);
+    (p.region_of, p.offsets, p.region_sizes)
+}
+
+/// A segment-aware greedy packing: region assignment, per-item offsets,
+/// per-segment device placements and per-region arena sizes.
+#[derive(Debug, Clone)]
+pub struct SegmentPacking {
+    /// Region index per item.
+    pub region_of: Vec<usize>,
+    /// Byte offset per item within its region's arena (for a segmented
+    /// device item, its first segment's offset).
+    pub offsets: Vec<u64>,
+    /// Per-item device-resident segment placements `(start, end, offset)`
+    /// — non-empty exactly for device-homed items with spill windows.
+    pub segments: Vec<crate::alloc::SegmentPlacements>,
+    /// Arena size per region.
+    pub region_sizes: Vec<u64>,
+}
+
+/// The spill-interval replacement for whole-tensor pinning
+/// ([`assign_and_pack_pinned`]): instead of exiling every spilled tensor
+/// to the host, each one keeps its device home and is packed as its
+/// device-resident *segments* ([`crate::alloc::resident_segments`]) —
+/// one address per on-device interval, freed during the spill windows so
+/// other tensors can reuse the bytes between swap windows (Sekiyama et
+/// al.'s address-reuse observation). Only the spilled windows themselves
+/// are off-device, exactly as the schedule's certificate states. The
+/// relief and packing-repair loops run on the spill-adjusted device
+/// occupancy and may still evict whole items (segments and all) to later
+/// regions under capacity pressure, choosing destinations
+/// occupancy-aware. With all-empty `windows` this is bit-for-bit
+/// [`assign_and_pack`] — the empty-certificate safety rail, property-
+/// tested below.
+pub fn assign_and_pack_segments(
+    items: &[PlacementItem],
+    windows: &[Vec<(usize, usize)>],
+    topology: &MemoryTopology,
+    align: u64,
+) -> SegmentPacking {
+    assign_and_pack_core(items, windows, &[], topology, align)
+}
+
+fn assign_and_pack_core(
+    items: &[PlacementItem],
+    windows: &[Vec<(usize, usize)>],
+    pin_off_device: &[bool],
+    topology: &MemoryTopology,
+    align: u64,
+) -> SegmentPacking {
     let kk = topology.num_regions();
-    let mut region_of = assign_regions_greedy_pinned(items, topology, pin_off_device);
-    let (mut offs, mut sizes) =
-        crate::alloc::bestfit::best_fit_regions(items, &region_of, kk, align);
+    let mut region_of = assign_regions_core(items, windows, pin_off_device, topology);
+    let (mut offs, mut segs, mut sizes) =
+        crate::alloc::bestfit::best_fit_regions_segments(items, windows, &region_of, kk, align);
     if topology.regions.iter().any(|r| r.capacity.is_some()) {
         // Batched rounds keep this off the quadratic regime: every
         // tensor whose packing crosses its region's cap is evicted to a
@@ -322,11 +554,21 @@ pub fn assign_and_pack_pinned(
                     continue;
                 }
                 for i in 0..items.len() {
-                    if region_of[i] != k || offs[i] + items[i].size <= cap {
+                    if region_of[i] != k {
+                        continue;
+                    }
+                    // A segmented device item crosses the cap when any of
+                    // its segment placements does.
+                    let crossing = if !segs[i].is_empty() {
+                        segs[i].iter().any(|&(_, _, o)| o + items[i].size > cap)
+                    } else {
+                        offs[i] + items[i].size > cap
+                    };
+                    if !crossing {
                         continue;
                     }
                     if let Some(dest) =
-                        ((k + 1)..kk).find(|&j| topology.regions[j].fits(items[i].size))
+                        eviction_destination(items, windows, &region_of, topology, k, i)
                     {
                         region_of[i] = dest;
                         moved_any = true;
@@ -336,18 +578,22 @@ pub fn assign_and_pack_pinned(
             if !moved_any {
                 break;
             }
-            let (o2, s2) = crate::alloc::bestfit::best_fit_regions(items, &region_of, kk, align);
+            let (o2, g2, s2) = crate::alloc::bestfit::best_fit_regions_segments(
+                items, windows, &region_of, kk, align,
+            );
             offs = o2;
+            segs = g2;
             sizes = s2;
         }
     }
-    (region_of, offs, sizes)
+    SegmentPacking { region_of, offsets: offs, segments: segs, region_sizes: sizes }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::EdgeId;
+    use crate::util::quickcheck::{check, ensure};
 
     fn item(id: u32, size: u64, start: usize, end: usize) -> PlacementItem {
         PlacementItem { edge: EdgeId(id), size, start, end }
@@ -434,5 +680,142 @@ mod tests {
         let region_of = vec![0, 1];
         assert_eq!(region_lower_bound(&items, &region_of, 0), 10);
         assert_eq!(region_lower_bound(&items, &region_of, 1), 20);
+    }
+
+    #[test]
+    fn segment_packing_shrinks_device_arena_at_equal_spilled_byte_steps() {
+        // A (10 bytes, [0,6)) is certified spilled during [2,4); B
+        // (10 bytes) lives exactly then. Whole-lifetime reservation of A
+        // (one address held across the window — the only way to honor the
+        // certificate without segments) needs a 20-byte device; segment
+        // placement frees A's address during the window and fits both in
+        // 10 bytes, the spilled byte-steps being identical by
+        // construction (same certificate).
+        let items = vec![item(0, 10, 0, 6), item(1, 10, 2, 4)];
+        let windows = vec![vec![(2usize, 4usize)], vec![]];
+        let topo = MemoryTopology::device_host(10, 1.0);
+        let p = assign_and_pack_segments(&items, &windows, &topo, 1);
+        assert_eq!(p.region_of, vec![0, 0], "a binding cap is unnecessary here");
+        assert_eq!(p.region_sizes[0], 10, "segments must reuse A's bytes");
+        assert_eq!(p.segments[0].len(), 2);
+        assert_eq!((p.segments[0][0].0, p.segments[0][0].1), (0, 2));
+        assert_eq!((p.segments[0][1].0, p.segments[0][1].1), (4, 6));
+        assert!(p.segments[1].is_empty());
+        // The whole-lifetime baseline cannot do better than stacking.
+        let (_, whole_sz) = crate::alloc::bestfit::best_fit_multi(&items, 1);
+        assert_eq!(whole_sz, 20);
+        assert!(p.region_sizes[0] < whole_sz);
+    }
+
+    #[test]
+    fn segment_greedy_sees_the_spill_adjusted_device_profile() {
+        // Tensor 0 (10 bytes, [0,4)) is certified spilled during [1,3),
+        // exactly when tensor 1 (20 bytes) lives; the spill-adjusted
+        // device profile peaks at 20 and fits the cap with no eviction.
+        // The empty-certificate run sees the raw 30-byte peak and must
+        // offload tensor 1 (the pre-segment behavior).
+        let items = vec![item(0, 10, 0, 4), item(1, 20, 1, 3)];
+        let topo = MemoryTopology::device_host(20, 1.0);
+        let spilled = vec![vec![(1usize, 3usize)], vec![]];
+        let with_cert = assign_regions_greedy_segments(&items, &spilled, &topo);
+        assert_eq!(with_cert, vec![0, 0], "spill windows relieve the cap");
+        let without = assign_regions_greedy_segments(&items, &[], &topo);
+        assert_eq!(bytes_offloaded(&items, &without), 20);
+    }
+
+    #[test]
+    fn empty_windows_make_segment_packing_identical_to_assign_and_pack() {
+        // The empty-certificate safety rail, property-tested: the
+        // segment-aware path with no windows must reproduce the pinned
+        // path (with no pins) bit for bit — regions, offsets and sizes.
+        check("segments_empty_cert_identity", 20, |rng| {
+            let n = rng.range(1, 20);
+            let items: Vec<PlacementItem> = (0..n)
+                .map(|i| {
+                    let start = rng.range(0, 10);
+                    let len = rng.range(1, 6);
+                    item(i as u32, 4 * rng.range(1, 40) as u64, start, start + len)
+                })
+                .collect();
+            let cap = 4 * rng.range(20, 200) as u64;
+            let topo = MemoryTopology::device_host(cap, 1.0);
+            let (r1, o1, s1) = assign_and_pack_pinned(&items, &topo, 1, &[]);
+            let p = assign_and_pack_segments(&items, &[], &topo, 1);
+            ensure(
+                r1 == p.region_of
+                    && o1 == p.offsets
+                    && s1 == p.region_sizes
+                    && p.segments.iter().all(Vec::is_empty),
+                || "segment path diverged from the pinned path on an empty certificate".into(),
+            )
+        });
+    }
+
+    #[test]
+    fn eviction_destination_is_occupancy_aware() {
+        // mid (cap 10) is exactly full with A during the victim's whole
+        // life; big has room. The static rule this replaces would pick
+        // mid (6 <= 10 statically) and overfill it — the new choice skips
+        // to big.
+        let items = vec![item(0, 10, 0, 4), item(1, 6, 0, 4)];
+        let topo = MemoryTopology {
+            regions: vec![
+                MemoryRegion { name: "device".into(), capacity: Some(4), penalty_per_byte: 0.0 },
+                MemoryRegion { name: "mid".into(), capacity: Some(10), penalty_per_byte: 1.0 },
+                MemoryRegion { name: "big".into(), capacity: Some(32), penalty_per_byte: 2.0 },
+            ],
+        };
+        let region_of = vec![1, 0]; // A already fills mid; victim 1 leaves device
+        let naive = (1..topo.num_regions()).find(|&j| topo.regions[j].fits(items[1].size));
+        assert_eq!(naive, Some(1), "the static rule parks the victim in the full region");
+        let dest = eviction_destination(&items, &[], &region_of, &topo, 0, 1);
+        assert_eq!(dest, Some(2), "occupancy-aware choice must skip the full region");
+        // When every later region is genuinely full, fall back to the
+        // static best-effort choice instead of refusing to move.
+        let region_of_full = vec![2, 0];
+        let items_full = vec![item(0, 32, 0, 4), item(1, 11, 0, 4)];
+        let dest = eviction_destination(&items_full, &[], &region_of_full, &topo, 0, 1);
+        assert_eq!(dest, Some(2), "best-effort fallback keeps the old behavior");
+    }
+
+    #[test]
+    fn occupancy_aware_eviction_respects_capped_host_regions() {
+        // Three co-resident tensors must leave a 12-byte device: A (10)
+        // fills mid exactly, so W (6) must go straight to big — parking W
+        // in mid on static fit (the old rule) would overfill a capped
+        // host region. K (12) stays on the device.
+        let items = vec![item(0, 10, 0, 4), item(1, 6, 0, 4), item(2, 12, 0, 4)];
+        let topo = MemoryTopology {
+            regions: vec![
+                MemoryRegion { name: "device".into(), capacity: Some(12), penalty_per_byte: 0.0 },
+                MemoryRegion { name: "mid".into(), capacity: Some(10), penalty_per_byte: 1.0 },
+                MemoryRegion { name: "big".into(), capacity: Some(6), penalty_per_byte: 2.0 },
+            ],
+        };
+        let (region_of, offs, sizes) = assign_and_pack(&items, &topo, 1);
+        let caps = topo.capacities();
+        let got = crate::alloc::check_placement_regions(&items, &region_of, &offs, &caps)
+            .expect("occupancy-aware eviction must not overfill any capped region");
+        assert_eq!(got, sizes);
+        assert_eq!(region_of, vec![1, 2, 0], "A→mid, W→big (not the full mid), K stays");
+    }
+
+    #[test]
+    fn spill_crossing_cost_charges_per_window() {
+        let topo = MemoryTopology::device_host(64, 1.0);
+        assert_eq!(spill_crossing_cost(&topo, 10, 0), 0.0);
+        assert!((spill_crossing_cost(&topo, 10, 1) - 5.0).abs() < 1e-9);
+        assert!((spill_crossing_cost(&topo, 10, 3) - 15.0).abs() < 1e-9);
+        // No staging region at all: nothing to charge.
+        assert_eq!(spill_crossing_cost(&MemoryTopology::single(), 10, 2), 0.0);
+        // transfer_cost_segments folds crossing charges in; with empty
+        // windows it is exactly transfer_cost.
+        let items = vec![item(0, 10, 0, 6), item(1, 8, 0, 6)];
+        let windows = vec![vec![(2usize, 4usize)], vec![]];
+        let region_of = vec![0, 1];
+        let segd = transfer_cost_segments(&items, &windows, &region_of, &topo);
+        assert!((segd - (5.0 + 8.0)).abs() < 1e-9, "crossing(A) + host(B): {segd}");
+        let plain = transfer_cost_segments(&items, &[], &region_of, &topo);
+        assert!((plain - transfer_cost(&items, &region_of, &topo)).abs() < 1e-9);
     }
 }

@@ -14,10 +14,13 @@
 //!
 //! Under a capacity-aware scheduling topology
 //! ([`crate::olla::ScheduleOptions::topology`]), each decoded incumbent
-//! arrives with its spill certificate: the materialized snapshot pins the
-//! spilled tensors off-device, records the certificate in
-//! [`MemoryPlan::spills`], and re-validates it — so mid-solve polls
-//! already honor the device cap the scheduler is optimizing under.
+//! arrives with its spill certificate: the materialized snapshot places
+//! every spilled tensor as its device-resident *segments* (one address
+//! per on-device interval, recorded in [`MemoryPlan::segment_offsets`]
+//! alongside the certificate in [`MemoryPlan::spills`]) and re-validates
+//! it — so mid-solve polls already honor the device cap the scheduler is
+//! optimizing under, including the address reuse between swap windows
+//! that whole-tensor offload used to forfeit.
 
 use crate::graph::Graph;
 use crate::ilp::SolveControl;
@@ -67,6 +70,10 @@ pub struct PlanPoll {
     pub warm_hit_rate: f64,
     /// Anytime curve: `(seconds, arena bytes)` per improved plan.
     pub anytime: Vec<(f64, u64)>,
+    /// Spilled tensors the current best plan places per device-resident
+    /// segment ([`MemoryPlan::segment_offsets`]); 0 without a plan or a
+    /// capacity-aware scheduling topology.
+    pub segment_tensors: usize,
 }
 
 struct HandleState {
@@ -264,6 +271,8 @@ impl PlanHandle {
         let pp = self.inner.place_control.progress();
         let attempts = sp.warm_attempts + pp.warm_attempts;
         let hits = sp.warm_hits + pp.warm_hits;
+        let segment_tensors =
+            plan.as_ref().map(|p| p.segment_offsets.len()).unwrap_or(0);
         PlanPoll {
             plan,
             phase,
@@ -277,6 +286,7 @@ impl PlanHandle {
             warm_hits: hits,
             warm_hit_rate: if attempts == 0 { 0.0 } else { hits as f64 / attempts as f64 },
             anytime: curve,
+            segment_tensors,
         }
     }
 
