@@ -5,13 +5,14 @@
 
 use olla::alloc::arena::Arena;
 use olla::alloc::caching::CachingAllocator;
-use olla::alloc::items_from_trace;
+use olla::alloc::{interference_components, items_from_trace, PlacementItem};
 use olla::bench_support::{section, time_median, time_once};
 use olla::graph::analysis::{ReachMatrix, Spans};
 use olla::ilp::simplex::{solve_lp_default, LpOptions};
+use olla::ilp::{Patch, PatchableModel, VarId};
 use olla::models::{build_graph, ModelScale};
 use olla::olla::scheduling::build_scheduling_model;
-use olla::olla::{optimize, PlannerOptions};
+use olla::olla::{optimize, optimize_placement, PlacementOptions, PlannerOptions};
 use olla::sched::orders::pytorch_order;
 use olla::sched::sim::simulate;
 use olla::sched::greedy_order;
@@ -76,4 +77,46 @@ fn main() {
     let mut arena = Arena::new(plan.arena_plan());
     let d = time_median(5, || arena.replay(&ptrace.events));
     println!("arena replay               : {}", human_duration(d));
+
+    // Decomposition hot paths: the component sweep itself, then one
+    // decomposed placement solve on a guaranteed multi-component
+    // instance (the big trace replayed twice back-to-back).
+    let d = time_median(5, || interference_components(&items));
+    println!("component split ({} items): {}", items.len(), human_duration(d));
+    let horizon = items.iter().map(|it| it.end).max().unwrap_or(0) + 1;
+    let mut doubled = items.clone();
+    doubled.extend(items.iter().map(|it| PlacementItem {
+        start: it.start + horizon,
+        end: it.end + horizon,
+        ..*it
+    }));
+    let comps = interference_components(&doubled).len();
+    let (r, d) = time_once(|| optimize_placement(&doubled, &PlacementOptions::default()));
+    println!(
+        "decomposed placement       : {} ({} items, {comps} components, method {:?})",
+        human_duration(d),
+        doubled.len(),
+        r.method
+    );
+
+    // Incremental re-solve: one objective-coefficient patch re-solved
+    // warm from the previous optimal basis, vs the cold rebuild.
+    let mut pm = PatchableModel::new(sma.model.clone());
+    let (_, d) = time_once(|| pm.solve_lp(&LpOptions::default()));
+    println!("patchable first LP solve   : {}", human_duration(d));
+    let old = pm.model().vars[0].obj;
+    pm.apply(&[Patch::Cost { var: VarId(0), obj: old + 0.125 }]);
+    let (r, d) = time_once(|| pm.solve_lp(&LpOptions::default()));
+    println!(
+        "patch + warm re-solve      : {} ({} iters, warm {}/{})",
+        human_duration(d),
+        r.iters,
+        pm.warm_hits,
+        pm.warm_attempts
+    );
+    let (_, d) = time_once(|| {
+        let mut cold = PatchableModel::new(pm.model().clone());
+        cold.solve_lp(&LpOptions::default())
+    });
+    println!("cold rebuild + re-solve    : {}", human_duration(d));
 }

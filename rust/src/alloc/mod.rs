@@ -92,6 +92,46 @@ pub fn windows_of(windows: &[Vec<(usize, usize)>], i: usize) -> &[(usize, usize)
     windows.get(i).map(Vec::as_slice).unwrap_or(&[])
 }
 
+/// Connected components of the lifetime-interference graph: two items
+/// interfere when their live intervals [`PlacementItem::overlaps`], and
+/// items in different components can be packed **independently** — they
+/// are never co-resident, so they share address space freely and the
+/// optimal arena is the max over per-component optima.
+///
+/// Because lifetimes are 1-D intervals, the components are exactly the
+/// maximal overlapping runs of the start-sorted sweep (no union-find
+/// needed): a run ends when the next start reaches the furthest end seen
+/// so far, matching the half-open `overlaps` semantics. `O(n log n)`.
+///
+/// Returns index lists into `items`, ordered by component start time;
+/// indices within a component are sorted ascending, so a component
+/// sub-slice preserves the input's relative item order (which keeps the
+/// downstream heuristics bit-for-bit reproducible).
+pub fn interference_components(items: &[PlacementItem]) -> Vec<Vec<usize>> {
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let mut idx: Vec<usize> = (0..items.len()).collect();
+    idx.sort_by_key(|&i| (items[i].start, items[i].end, i));
+    let mut comps: Vec<Vec<usize>> = Vec::new();
+    let mut cur: Vec<usize> = vec![idx[0]];
+    let mut run_end = items[idx[0]].end;
+    for &i in &idx[1..] {
+        if items[i].start < run_end {
+            cur.push(i);
+            run_end = run_end.max(items[i].end);
+        } else {
+            cur.sort_unstable();
+            comps.push(std::mem::take(&mut cur));
+            cur.push(i);
+            run_end = items[i].end;
+        }
+    }
+    cur.sort_unstable();
+    comps.push(cur);
+    comps
+}
+
 /// Lower bound on any arena size: the max over steps of the sum of live
 /// tensor sizes. A placement achieving this bound has zero fragmentation.
 pub fn resident_lower_bound(items: &[PlacementItem]) -> u64 {
@@ -245,6 +285,73 @@ mod tests {
     fn lower_bound_counts_concurrent_live() {
         let items = vec![item(10, 0, 3), item(20, 1, 2), item(5, 3, 4)];
         assert_eq!(resident_lower_bound(&items), 30);
+    }
+
+    #[test]
+    fn interference_components_match_pairwise_overlaps() {
+        assert!(interference_components(&[]).is_empty());
+        // One long item bridges two otherwise-disjoint short ones.
+        let items = vec![item(1, 0, 10), item(1, 2, 3), item(1, 5, 6), item(1, 10, 12)];
+        assert_eq!(interference_components(&items), vec![vec![0, 1, 2], vec![3]]);
+        // Transitive chain: a-b overlap, b-c overlap, a-c don't.
+        let items = vec![item(1, 0, 3), item(1, 2, 5), item(1, 4, 7)];
+        assert_eq!(interference_components(&items), vec![vec![0, 1, 2]]);
+        // Touching intervals (half-open) do NOT interfere.
+        let items = vec![item(1, 0, 2), item(1, 2, 4), item(1, 4, 6)];
+        assert_eq!(interference_components(&items), vec![vec![0], vec![1], vec![2]]);
+        // Within-component index order is the input order, not sweep order.
+        let items = vec![item(1, 5, 8), item(1, 4, 6)];
+        assert_eq!(interference_components(&items), vec![vec![0, 1]]);
+    }
+
+    /// Property: the sweep agrees with a brute-force union over pairwise
+    /// `overlaps` on random instances.
+    #[test]
+    fn interference_components_match_brute_force_on_random_instances() {
+        use crate::util::rng::Rng;
+        for seed in 0..200u64 {
+            let mut rng = Rng::new(0xA110C ^ seed);
+            let n = rng.range(1, 12);
+            let items: Vec<PlacementItem> = (0..n)
+                .map(|_| {
+                    let s = rng.range(0, 14);
+                    item(1 + rng.range(0, 7) as u64, s, s + rng.range(1, 5))
+                })
+                .collect();
+            // Brute-force: label propagation until fixpoint.
+            let mut label: Vec<usize> = (0..n).collect();
+            loop {
+                let mut changed = false;
+                for i in 0..n {
+                    for j in 0..n {
+                        if items[i].overlaps(&items[j]) && label[j] < label[i] {
+                            label[i] = label[j];
+                            changed = true;
+                        }
+                    }
+                }
+                if !changed {
+                    break;
+                }
+            }
+            let comps = interference_components(&items);
+            // Same partition: two items share a component iff same label.
+            let mut comp_of = vec![usize::MAX; n];
+            for (c, comp) in comps.iter().enumerate() {
+                for &i in comp {
+                    comp_of[i] = c;
+                }
+            }
+            for i in 0..n {
+                for j in 0..n {
+                    assert_eq!(
+                        comp_of[i] == comp_of[j],
+                        label[i] == label[j],
+                        "seed {seed}: items {i},{j} disagree"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

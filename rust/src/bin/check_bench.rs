@@ -31,7 +31,10 @@
 //! A baseline file that exists but holds **no samples** (the state the
 //! repo ships in until someone blesses real numbers) makes its gate
 //! vacuous: the run still passes, but a loud `VACUOUS` warning is printed
-//! so nobody mistakes a trivially-green gate for a real one.
+//! so nobody mistakes a trivially-green gate for a real one. Pass
+//! `--forbid-vacuous` to turn that warning into a non-zero exit — CI runs
+//! it on a non-blocking job so a trivially-green gate shows up as a red
+//! check without blocking merges.
 
 use olla::bench_support::{
     anytime_from_baseline_json, anytime_samples, anytime_to_baseline_json,
@@ -101,11 +104,13 @@ fn main() -> ExitCode {
         .unwrap_or(0.25);
     let bless = args.iter().any(|a| a == "--bless");
     let bless_if_missing = args.iter().any(|a| a == "--bless-if-missing");
+    let forbid_vacuous = args.iter().any(|a| a == "--forbid-vacuous");
 
     if current_paths.is_empty() && anytime_current_paths.is_empty() {
         eprintln!("usage: check_bench --baseline FILE --current BENCH_x.json [--current ...] \\");
         eprintln!("                   [--anytime-baseline FILE --anytime-current BENCH_y.json] \\");
-        eprintln!("                   [--tolerance 0.25] [--bless | --bless-if-missing]");
+        eprintln!("                   [--tolerance 0.25] [--bless | --bless-if-missing] \\");
+        eprintln!("                   [--forbid-vacuous]");
         return ExitCode::from(2);
     }
 
@@ -199,6 +204,11 @@ fn main() -> ExitCode {
                          scripts/bless_baselines.sh on the reference machine and commit the \
                          baseline so regressions actually bite."
                     );
+                    if forbid_vacuous {
+                        failures.push(format!(
+                            "solver baseline {baseline_path} is empty (--forbid-vacuous)"
+                        ));
+                    }
                 } else {
                     let matched = baseline
                         .iter()
@@ -238,6 +248,11 @@ fn main() -> ExitCode {
                          scripts/bless_baselines.sh on the reference machine and commit the \
                          baseline so regressions actually bite."
                     );
+                    if forbid_vacuous {
+                        failures.push(format!(
+                            "anytime baseline {anytime_baseline_path} is empty (--forbid-vacuous)"
+                        ));
+                    }
                 } else {
                     let matched = baseline
                         .iter()

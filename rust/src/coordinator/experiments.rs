@@ -831,7 +831,7 @@ mod tests {
         let case = small_case();
         // Keep the instance on the ILP path regardless of the full-horizon
         // row growth; the 5 s cap bounds the test either way.
-        let opts = ScheduleOptions { max_ilp_rows: usize::MAX, ..quick_sched() };
+        let opts = quick_sched().without_row_cap();
         let rows = recompute_experiment(&case, &[1.25, 0.7], 0.0625, &opts);
         assert_eq!(rows.len(), 2);
         // Roomy capacity: nothing needs to leave the device.

@@ -336,6 +336,13 @@ impl IlpBuilder {
     pub fn into_parts(self) -> (Model, IlpMeta) {
         (self.model, self.meta)
     }
+
+    /// Finish into a [`crate::ilp::patch::PatchableModel`]: the model
+    /// stays live for in-place patching and warm-basis re-solves instead
+    /// of being rebuilt from scratch on every perturbation.
+    pub fn into_patchable(self) -> (crate::ilp::patch::PatchableModel, IlpMeta) {
+        (crate::ilp::patch::PatchableModel::new(self.model), self.meta)
+    }
 }
 
 /// Fold a position operand into a constraint row: variables become terms,

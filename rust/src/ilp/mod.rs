@@ -26,7 +26,12 @@
 //!   `serve` layer builds on;
 //! * [`builder`] — [`builder::IlpBuilder`], the model-assembly API (named
 //!   variable groups, sum/indicator helpers, pair disjunctions) shared by
-//!   the eq. 9/14/15 formulations in [`crate::olla`].
+//!   the eq. 9/14/15 formulations in [`crate::olla`];
+//! * [`patch`] — [`patch::PatchableModel`], the incremental re-solve
+//!   layer: in-place [`CscMatrix`](model::CscMatrix) edits (add/remove
+//!   rows and columns, bound/cost/rhs changes) plus dual-simplex
+//!   re-optimization from the previous LU basis, so a model differing by
+//!   a few rows re-plans in a fraction of the cold time.
 //!
 //! The pre-refactor dense simplex survives as a test-only reference
 //! (`ilp::dense`) so property tests can assert the sparse and dense paths
@@ -38,6 +43,7 @@ pub mod builder;
 #[cfg(test)]
 pub mod dense;
 pub mod model;
+pub mod patch;
 pub mod presolve;
 pub mod simplex;
 
@@ -46,4 +52,5 @@ pub use bnb::{
 };
 pub use builder::{IlpBuilder, IlpMeta, PairVars, Pos};
 pub use model::{Cmp, Constraint, CscMatrix, Model, Solution, SolveStatus, VarId, VarKind, Variable};
+pub use patch::{Patch, PatchableModel};
 pub use simplex::{BasisSnapshot, LpEngine};

@@ -358,6 +358,123 @@ impl CscMatrix {
             out[*r as usize] += scale * v;
         }
     }
+
+    // ---- In-place edits (the incremental re-solve substrate) ----
+    //
+    // `PatchableModel` re-solves perturbed models from a warm basis
+    // instead of rebuilding the standard form, so the engine's matrix
+    // must support structural edits without a `from_columns` round trip.
+    // All four edits are single-pass O(nnz) splices.
+
+    /// Append a new row at index `nrows`, adding `(column, value)` entries
+    /// to the named columns. Zero values are dropped; row order within a
+    /// column is insertion order (the engine never requires it sorted).
+    pub(crate) fn add_row(&mut self, entries: &[(usize, f64)]) {
+        let row = self.nrows as u32;
+        self.nrows += 1;
+        let ncols = self.ncols();
+        let mut add: Vec<Vec<f64>> = vec![Vec::new(); ncols];
+        let mut extra = 0usize;
+        for &(c, v) in entries {
+            debug_assert!(c < ncols, "column {c} out of range ({ncols} cols)");
+            if v != 0.0 {
+                add[c].push(v);
+                extra += 1;
+            }
+        }
+        if extra == 0 {
+            return;
+        }
+        // One right-to-left splice: shift each column's old segment up by
+        // the room the columns after it need, appending the new entries
+        // at the segment end.
+        let old_nnz = self.row_idx.len();
+        self.row_idx.resize(old_nnz + extra, 0);
+        self.vals.resize(old_nnz + extra, 0.0);
+        let mut write = old_nnz + extra;
+        let mut read = old_nnz;
+        for c in (0..ncols).rev() {
+            for &v in add[c].iter().rev() {
+                write -= 1;
+                self.row_idx[write] = row;
+                self.vals[write] = v;
+            }
+            let seg_start = self.col_ptr[c];
+            while read > seg_start {
+                read -= 1;
+                write -= 1;
+                self.row_idx[write] = self.row_idx[read];
+                self.vals[write] = self.vals[read];
+            }
+        }
+        debug_assert_eq!(write, read);
+        let mut shift = 0usize;
+        for c in 0..ncols {
+            shift += add[c].len();
+            self.col_ptr[c + 1] += shift;
+        }
+        debug_assert_eq!(*self.col_ptr.last().unwrap(), self.row_idx.len());
+    }
+
+    /// Insert a new column at index `at` with the given `(row, value)`
+    /// entries (zeros dropped); existing columns at and after `at` shift
+    /// right by one.
+    pub(crate) fn insert_column(&mut self, at: usize, entries: &[(usize, f64)]) {
+        debug_assert!(at <= self.ncols());
+        let pos = self.col_ptr[at];
+        let mut added = 0usize;
+        for &(r, v) in entries {
+            debug_assert!(r < self.nrows, "row {r} out of range ({} rows)", self.nrows);
+            if v != 0.0 {
+                self.row_idx.insert(pos + added, r as u32);
+                self.vals.insert(pos + added, v);
+                added += 1;
+            }
+        }
+        self.col_ptr.insert(at + 1, pos + added);
+        for p in self.col_ptr[at + 2..].iter_mut() {
+            *p += added;
+        }
+    }
+
+    /// Remove the column at index `at`; later columns shift left by one.
+    pub(crate) fn remove_column(&mut self, at: usize) {
+        debug_assert!(at < self.ncols());
+        let (s, e) = (self.col_ptr[at], self.col_ptr[at + 1]);
+        self.row_idx.drain(s..e);
+        self.vals.drain(s..e);
+        let removed = e - s;
+        self.col_ptr.remove(at + 1);
+        for p in self.col_ptr[at + 1..].iter_mut() {
+            *p -= removed;
+        }
+    }
+
+    /// Remove row `row`: drop its entries from every column and renumber
+    /// the rows above it down by one.
+    pub(crate) fn remove_row(&mut self, row: usize) {
+        debug_assert!(row < self.nrows);
+        let r = row as u32;
+        let ncols = self.ncols();
+        let mut write = 0usize;
+        for c in 0..ncols {
+            let (s, e) = (self.col_ptr[c], self.col_ptr[c + 1]);
+            self.col_ptr[c] = write;
+            for i in s..e {
+                let ri = self.row_idx[i];
+                if ri == r {
+                    continue;
+                }
+                self.row_idx[write] = if ri > r { ri - 1 } else { ri };
+                self.vals[write] = self.vals[i];
+                write += 1;
+            }
+        }
+        self.col_ptr[ncols] = write;
+        self.row_idx.truncate(write);
+        self.vals.truncate(write);
+        self.nrows -= 1;
+    }
 }
 
 #[cfg(test)]
@@ -411,5 +528,70 @@ mod tests {
         let mut out = [0.0; 3];
         m.col_axpy(0, 2.0, &mut out);
         assert_eq!(out, [2.0, 0.0, -4.0]);
+    }
+
+    /// Flatten a matrix into per-column sorted `(row, val)` lists so edits
+    /// can be compared against a `from_columns` rebuild regardless of the
+    /// (unspecified) within-column entry order.
+    fn columns_of(m: &CscMatrix) -> Vec<Vec<(u32, f64)>> {
+        (0..m.ncols())
+            .map(|j| {
+                let (rows, vals) = m.col(j);
+                let mut col: Vec<(u32, f64)> =
+                    rows.iter().copied().zip(vals.iter().copied()).collect();
+                col.sort_by(|a, b| a.0.cmp(&b.0));
+                col
+            })
+            .collect()
+    }
+
+    #[test]
+    fn csc_add_row_matches_rebuild() {
+        let cols = vec![vec![(0, 1.0), (2, -2.0)], vec![], vec![(1, 3.0)]];
+        let mut m = CscMatrix::from_columns(3, &cols);
+        m.add_row(&[(0, 5.0), (2, -1.0), (1, 0.0)]); // zero entry dropped
+        let rebuilt = CscMatrix::from_columns(
+            4,
+            &[vec![(0, 1.0), (2, -2.0), (3, 5.0)], vec![], vec![(1, 3.0), (3, -1.0)]],
+        );
+        assert_eq!(m.nrows(), 4);
+        assert_eq!(columns_of(&m), columns_of(&rebuilt));
+        // An all-zero row still counts as a row.
+        m.add_row(&[]);
+        assert_eq!((m.nrows(), m.nnz()), (5, 5));
+    }
+
+    #[test]
+    fn csc_insert_and_remove_column_match_rebuild() {
+        let cols = vec![vec![(0, 1.0)], vec![(1, 2.0), (2, 4.0)]];
+        let mut m = CscMatrix::from_columns(3, &cols);
+        m.insert_column(1, &[(2, 7.0), (0, 0.0)]);
+        let rebuilt = CscMatrix::from_columns(
+            3,
+            &[vec![(0, 1.0)], vec![(2, 7.0)], vec![(1, 2.0), (2, 4.0)]],
+        );
+        assert_eq!(columns_of(&m), columns_of(&rebuilt));
+        m.remove_column(0);
+        let rebuilt =
+            CscMatrix::from_columns(3, &[vec![(2, 7.0)], vec![(1, 2.0), (2, 4.0)]]);
+        assert_eq!(columns_of(&m), columns_of(&rebuilt));
+        // Insert at the end is an append.
+        m.insert_column(2, &[(0, 9.0)]);
+        assert_eq!(m.col(2), (&[0u32][..], &[9.0][..]));
+    }
+
+    #[test]
+    fn csc_remove_row_renumbers() {
+        let cols = vec![vec![(0, 1.0), (1, 2.0)], vec![(1, 3.0), (2, 4.0)], vec![(2, 5.0)]];
+        let mut m = CscMatrix::from_columns(3, &cols);
+        m.remove_row(1);
+        let rebuilt =
+            CscMatrix::from_columns(2, &[vec![(0, 1.0)], vec![(1, 4.0)], vec![(1, 5.0)]]);
+        assert_eq!(m.nrows(), 2);
+        assert_eq!(columns_of(&m), columns_of(&rebuilt));
+        // Removing the last remaining rows empties the matrix.
+        m.remove_row(1);
+        m.remove_row(0);
+        assert_eq!((m.nrows(), m.nnz()), (0, 0));
     }
 }

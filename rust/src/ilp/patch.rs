@@ -1,0 +1,476 @@
+//! Incremental re-solve: in-place model patches + warm-basis reuse.
+//!
+//! A planner that re-plans a graph differing from the last one by a few
+//! nodes (dynamic batch size, one swapped layer) should not pay for a
+//! cold model build and a two-phase simplex from scratch. This module
+//! keeps a built model *live*: [`PatchableModel`] owns the [`Model`], an
+//! **unreduced** [`LpEngine`] (every variable and row materialized, so
+//! engine indices equal model indices — see [`LpEngine::new_unreduced`])
+//! and the [`BasisSnapshot`] of the last optimal basis. A [`Patch`] edits
+//! both representations in place — the engine's `CscMatrix` is spliced,
+//! never rebuilt — and the next [`PatchableModel::solve_lp`] re-solves
+//! from the previous basis through the dual simplex instead of
+//! cold-building:
+//!
+//! * **bounds** — nothing to edit in the standard form (node bounds are
+//!   per-solve inputs); the old basis stays dual feasible.
+//! * **cost** — the old basis stays *primal* feasible; the warm path's
+//!   primal clean-up phase re-optimizes directly.
+//! * **rhs** — the old basis stays *dual* feasible; the dual simplex
+//!   repairs primal feasibility (the textbook dual re-optimization).
+//! * **add row / add column** — the snapshot is lifted (new slack basic
+//!   in the new row / new column nonbasic at lower) so warmth survives
+//!   structural growth.
+//! * **remove row** — the deleted slack may be basic; the snapshot is
+//!   **dropped** and the next solve is cold (the stale-basis rejection
+//!   path, property-tested below).
+//!
+//! MILP-level re-solves ([`PatchableModel::resolve`]) go through the
+//! ordinary branch & bound but seed its incumbent with the previous
+//! solution whenever it is still feasible, so a small perturbation starts
+//! with a near-optimal bound instead of none.
+
+use super::bnb::{self, SolveOptions};
+use super::model::{Cmp, Model, Solution, VarId, VarKind, Variable};
+use super::simplex::{BasisSnapshot, LpEngine, LpOptions, LpResult, INF};
+
+/// One in-place edit to a built model.
+#[derive(Debug, Clone)]
+pub enum Patch {
+    /// Replace a variable's bounds. Patching a bound to ±infinity drops
+    /// the warm basis (a nonbasic column cannot sit at an infinite bound).
+    Bounds {
+        /// Variable to edit.
+        var: VarId,
+        /// New lower bound.
+        lb: f64,
+        /// New upper bound.
+        ub: f64,
+    },
+    /// Replace a variable's objective coefficient.
+    Cost {
+        /// Variable to edit.
+        var: VarId,
+        /// New objective coefficient.
+        obj: f64,
+    },
+    /// Replace a constraint's right-hand side.
+    Rhs {
+        /// Constraint index to edit.
+        con: usize,
+        /// New right-hand side.
+        rhs: f64,
+    },
+    /// Append a constraint row over existing variables.
+    AddCon {
+        /// Row terms (normalized like [`Model::constraint`]).
+        terms: Vec<(VarId, f64)>,
+        /// Row sense.
+        cmp: Cmp,
+        /// Right-hand side.
+        rhs: f64,
+    },
+    /// Append a variable, with coefficients into existing rows.
+    AddVar {
+        /// Variable name.
+        name: String,
+        /// Variable kind.
+        kind: VarKind,
+        /// Lower bound.
+        lb: f64,
+        /// Upper bound.
+        ub: f64,
+        /// Objective coefficient.
+        obj: f64,
+        /// `(constraint index, coefficient)` entries into existing rows.
+        terms: Vec<(usize, f64)>,
+    },
+    /// Remove a constraint row. Always drops the warm basis.
+    RemoveCon {
+        /// Constraint index to remove.
+        con: usize,
+    },
+}
+
+/// A built model that stays live for cheap re-optimization. See the
+/// module docs for the warm/cold contract per patch kind.
+#[derive(Debug, Clone)]
+pub struct PatchableModel {
+    model: Model,
+    eng: LpEngine,
+    lb: Vec<f64>,
+    ub: Vec<f64>,
+    snap: Option<BasisSnapshot>,
+    last: Option<Vec<f64>>,
+    /// LP re-solves that had a warm basis to try.
+    pub warm_attempts: u64,
+    /// LP re-solves where the warm basis actually carried the solve.
+    pub warm_hits: u64,
+}
+
+impl PatchableModel {
+    /// Wrap a built model. The engine is constructed unreduced once; all
+    /// later edits splice it in place.
+    pub fn new(model: Model) -> PatchableModel {
+        let eng = LpEngine::new_unreduced(&model);
+        let lb: Vec<f64> = model.vars.iter().map(|v| v.lb).collect();
+        let ub: Vec<f64> = model.vars.iter().map(|v| v.ub).collect();
+        PatchableModel {
+            model,
+            eng,
+            lb,
+            ub,
+            snap: None,
+            last: None,
+            warm_attempts: 0,
+            warm_hits: 0,
+        }
+    }
+
+    /// The current (patched) model.
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+
+    /// True when a warm basis from a previous solve is available.
+    pub fn has_warm_basis(&self) -> bool {
+        self.snap.is_some()
+    }
+
+    /// Apply a batch of patches to the model and the engine in place.
+    pub fn apply(&mut self, patches: &[Patch]) {
+        for p in patches {
+            match p {
+                Patch::Bounds { var, lb, ub } => {
+                    let j = var.0;
+                    self.model.vars[j].lb = *lb;
+                    self.model.vars[j].ub = *ub;
+                    self.lb[j] = *lb;
+                    self.ub[j] = *ub;
+                    // A nonbasic column cannot be restored at an infinite
+                    // bound; relaxations to ±inf force a cold solve.
+                    if *lb <= -INF || *ub >= INF {
+                        self.snap = None;
+                    }
+                }
+                Patch::Cost { var, obj } => {
+                    self.model.vars[var.0].obj = *obj;
+                    self.eng.set_var_cost(var.0, *obj);
+                }
+                Patch::Rhs { con, rhs } => {
+                    self.model.cons[*con].rhs = *rhs;
+                    self.eng.set_row_rhs(*con, *rhs);
+                }
+                Patch::AddCon { terms, cmp, rhs } => {
+                    // Normalize (sort/merge/drop zeros) through the model,
+                    // then mirror the normalized row into the engine.
+                    self.model.constraint(terms.clone(), *cmp, *rhs);
+                    let row = self.model.cons.last().expect("constraint just added");
+                    let eng_terms: Vec<(usize, f64)> =
+                        row.terms.iter().map(|&(v, a)| (v.0, a)).collect();
+                    self.eng.append_con(&eng_terms, *cmp, *rhs, self.snap.as_mut());
+                }
+                Patch::AddVar { name, kind, lb, ub, obj, terms } => {
+                    let vid = VarId(self.model.vars.len());
+                    self.model.vars.push(Variable {
+                        name: name.clone(),
+                        kind: *kind,
+                        lb: *lb,
+                        ub: *ub,
+                        obj: *obj,
+                    });
+                    // The new VarId is the largest, so pushing keeps each
+                    // row's term list sorted.
+                    for &(con, a) in terms {
+                        if a != 0.0 {
+                            self.model.cons[con].terms.push((vid, a));
+                        }
+                    }
+                    self.eng.append_var(*lb, *ub, *obj, terms, self.snap.as_mut());
+                    self.lb.push(*lb);
+                    self.ub.push(*ub);
+                    if *lb <= -INF || *ub >= INF {
+                        self.snap = None;
+                    }
+                }
+                Patch::RemoveCon { con } => {
+                    self.model.cons.remove(*con);
+                    self.eng.remove_con(*con);
+                    // The removed slack may have been basic: the old basis
+                    // is stale. Reject it and cold-solve next time.
+                    self.snap = None;
+                }
+            }
+        }
+    }
+
+    /// Solve the LP relaxation of the current model, warm-starting from
+    /// the previous optimal basis when one survives the applied patches.
+    /// Integrality of `Integer`/`Binary` variables is *not* enforced here;
+    /// use [`PatchableModel::resolve`] for the MILP.
+    pub fn solve_lp(&mut self, opts: &LpOptions) -> LpResult {
+        if self.snap.is_some() {
+            self.warm_attempts += 1;
+        }
+        let r = self.eng.solve_node(&self.lb, &self.ub, self.snap.as_ref(), opts);
+        if r.warm_used {
+            self.warm_hits += 1;
+        }
+        if let Some(b) = &r.basis {
+            self.snap = Some(b.clone());
+        }
+        LpResult { status: r.status, x: r.x, obj: r.obj, iters: r.iters }
+    }
+
+    /// Re-solve the MILP. Runs the ordinary branch & bound on the patched
+    /// model, seeding its incumbent with the previous solution whenever
+    /// that assignment is still feasible — a perturbed model then starts
+    /// from a near-optimal bound instead of from nothing.
+    pub fn resolve(&mut self, opts: &SolveOptions) -> Solution {
+        let mut o = opts.clone();
+        if o.initial.is_none() {
+            if let Some(prev) = &self.last {
+                if prev.len() == self.model.num_vars()
+                    && self.model.check_feasible(prev, 1e-6).is_ok()
+                {
+                    o.initial = Some(prev.clone());
+                }
+            }
+        }
+        let sol = bnb::solve(&self.model, &o);
+        if sol.has_solution() {
+            self.last = Some(sol.values.clone());
+        }
+        sol
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ilp::simplex::{solve_lp_default, LpStatus};
+    use crate::ilp::IlpBuilder;
+    use crate::util::quickcheck::{check, ensure, Outcome};
+    use crate::util::rng::Rng;
+
+    /// Random small LP with finite bounds (never unbounded).
+    fn random_model(rng: &mut Rng) -> Model {
+        let mut m = Model::new();
+        let nv = rng.range(2, 5);
+        for j in 0..nv {
+            let ub = 1.0 + rng.range(0, 9) as f64;
+            let obj = rng.range(0, 10) as f64 - 5.0;
+            m.continuous(format!("x{j}"), 0.0, ub, obj);
+        }
+        let nc = rng.range(1, 5);
+        for _ in 0..nc {
+            let mut terms = Vec::new();
+            for j in 0..nv {
+                if rng.chance(0.6) {
+                    let a = rng.range(0, 6) as f64 - 3.0;
+                    terms.push((VarId(j), a));
+                }
+            }
+            let cmp = *rng.choose(&[Cmp::Le, Cmp::Ge, Cmp::Eq]);
+            let rhs = rng.range(0, 20) as f64 - 6.0;
+            m.constraint(terms, cmp, rhs);
+        }
+        m
+    }
+
+    /// One random patch against the current model shape.
+    fn random_patch(rng: &mut Rng, m: &Model) -> Patch {
+        let nv = m.num_vars();
+        let nc = m.cons.len();
+        match rng.range(0, if nc > 0 { 3 } else { 2 }) {
+            0 => {
+                let j = rng.range(0, nv - 1);
+                let lb = rng.range(0, 3) as f64;
+                Patch::Bounds { var: VarId(j), lb, ub: lb + rng.range(1, 10) as f64 }
+            }
+            1 => Patch::Cost {
+                var: VarId(rng.range(0, nv - 1)),
+                obj: rng.range(0, 12) as f64 - 6.0,
+            },
+            2 => {
+                let mut terms = Vec::new();
+                for j in 0..nv {
+                    if rng.chance(0.5) {
+                        terms.push((VarId(j), rng.range(0, 4) as f64 - 2.0));
+                    }
+                }
+                Patch::AddCon {
+                    terms,
+                    cmp: *rng.choose(&[Cmp::Le, Cmp::Ge]),
+                    rhs: rng.range(0, 24) as f64 - 4.0,
+                }
+            }
+            _ => Patch::Rhs {
+                con: rng.range(0, nc - 1),
+                rhs: rng.range(0, 20) as f64 - 6.0,
+            },
+        }
+    }
+
+    /// Statuses must agree and, at optimality, objectives must match the
+    /// from-scratch solve within a scale-aware tolerance.
+    fn agree(warm: &LpResult, cold: &LpResult) -> Outcome {
+        if warm.status != cold.status {
+            return Outcome::Fail(format!(
+                "status diverged: warm {:?} vs cold {:?}",
+                warm.status, cold.status
+            ));
+        }
+        if warm.status != LpStatus::Optimal {
+            return Outcome::Pass;
+        }
+        let tol = 1e-6 * (1.0 + warm.obj.abs().max(cold.obj.abs()));
+        ensure((warm.obj - cold.obj).abs() <= tol, || {
+            format!("objective diverged: warm {} vs cold {}", warm.obj, cold.obj)
+        })
+    }
+
+    #[test]
+    fn unreduced_engine_matches_reduced_on_random_models() {
+        check("unreduced vs reduced cold solve", 60, |rng| {
+            let m = random_model(rng);
+            let mut pm = PatchableModel::new(m.clone());
+            let a = pm.solve_lp(&LpOptions::default());
+            let b = solve_lp_default(&m, &LpOptions::default());
+            agree(&a, &b)
+        });
+    }
+
+    #[test]
+    fn patch_then_warm_resolve_matches_cold_solve() {
+        check("patch + warm re-solve == cold solve", 80, |rng| {
+            let m = random_model(rng);
+            let mut pm = PatchableModel::new(m);
+            let first = pm.solve_lp(&LpOptions::default());
+            if first.status != LpStatus::Optimal {
+                return Outcome::Discard; // perturbing infeasible seeds is noise
+            }
+            let n_patches = rng.range(1, 3);
+            let patches: Vec<Patch> =
+                (0..n_patches).map(|_| random_patch(rng, pm.model())).collect();
+            pm.apply(&patches);
+            let warm = pm.solve_lp(&LpOptions::default());
+            // Reference 1: a fresh unreduced engine on the patched model.
+            let mut cold_pm = PatchableModel::new(pm.model().clone());
+            let cold = cold_pm.solve_lp(&LpOptions::default());
+            if let Outcome::Fail(msg) = agree(&warm, &cold) {
+                return Outcome::Fail(msg);
+            }
+            // Reference 2: the root-reduced engine branch & bound uses.
+            let reduced = solve_lp_default(pm.model(), &LpOptions::default());
+            agree(&warm, &reduced)
+        });
+    }
+
+    #[test]
+    fn warm_basis_actually_carries_rhs_reoptimization() {
+        // min x + y  s.t.  x + y >= 1,  x,y in [0, 1]  →  1.0;
+        // tightening the rhs to 1.5 must re-solve warm to 1.5.
+        let mut m = Model::new();
+        let x = m.continuous("x", 0.0, 1.0, 1.0);
+        let y = m.continuous("y", 0.0, 1.0, 1.0);
+        m.constraint(vec![(x, 1.0), (y, 1.0)], Cmp::Ge, 1.0);
+        let mut pm = PatchableModel::new(m);
+        let r = pm.solve_lp(&LpOptions::default());
+        assert_eq!(r.status, LpStatus::Optimal);
+        assert!((r.obj - 1.0).abs() < 1e-7, "obj {}", r.obj);
+        pm.apply(&[Patch::Rhs { con: 0, rhs: 1.5 }]);
+        let r = pm.solve_lp(&LpOptions::default());
+        assert_eq!(r.status, LpStatus::Optimal);
+        assert!((r.obj - 1.5).abs() < 1e-7, "obj {}", r.obj);
+        assert_eq!(pm.warm_attempts, 1);
+        assert_eq!(pm.warm_hits, 1, "rhs patch must re-solve from the warm basis");
+    }
+
+    #[test]
+    fn added_row_and_var_keep_the_basis_warm() {
+        let mut m = Model::new();
+        let x = m.continuous("x", 0.0, 10.0, -1.0);
+        let y = m.continuous("y", 0.0, 10.0, -1.0);
+        m.constraint(vec![(x, 1.0), (y, 1.0)], Cmp::Le, 8.0);
+        let mut pm = PatchableModel::new(m);
+        let r = pm.solve_lp(&LpOptions::default());
+        assert_eq!(r.status, LpStatus::Optimal);
+        assert!((r.obj + 8.0).abs() < 1e-7, "obj {}", r.obj);
+        // A new row cutting the optimum re-solves warm...
+        pm.apply(&[Patch::AddCon { terms: vec![(x, 1.0)], cmp: Cmp::Le, rhs: 2.0 }]);
+        assert!(pm.has_warm_basis());
+        let r = pm.solve_lp(&LpOptions::default());
+        assert_eq!(r.status, LpStatus::Optimal);
+        assert!((r.obj + 8.0).abs() < 1e-7, "obj {}", r.obj);
+        // ...and a new profitable column is picked up by the clean-up phase.
+        pm.apply(&[Patch::AddVar {
+            name: "z".into(),
+            kind: VarKind::Continuous,
+            lb: 0.0,
+            ub: 4.0,
+            obj: -2.0,
+            terms: vec![(0, 1.0)],
+        }]);
+        let r = pm.solve_lp(&LpOptions::default());
+        assert_eq!(r.status, LpStatus::Optimal);
+        assert!((r.obj + 12.0).abs() < 1e-7, "obj {}", r.obj);
+        assert_eq!(pm.warm_attempts, 2);
+        assert!(pm.warm_hits >= 1, "structural patches should keep some warmth");
+    }
+
+    #[test]
+    fn removing_a_row_rejects_the_stale_basis_and_still_matches_cold() {
+        check("remove-con stale-basis rejection", 40, |rng| {
+            let m = random_model(rng);
+            if m.cons.is_empty() {
+                return Outcome::Discard;
+            }
+            let mut pm = PatchableModel::new(m);
+            let first = pm.solve_lp(&LpOptions::default());
+            if first.status != LpStatus::Optimal {
+                return Outcome::Discard;
+            }
+            let con = rng.range(0, pm.model().cons.len() - 1);
+            pm.apply(&[Patch::RemoveCon { con }]);
+            if pm.has_warm_basis() {
+                return Outcome::Fail("basis must be dropped after RemoveCon".into());
+            }
+            let attempts_before = pm.warm_attempts;
+            let warm = pm.solve_lp(&LpOptions::default());
+            if pm.warm_attempts != attempts_before {
+                return Outcome::Fail("stale basis was offered to the engine".into());
+            }
+            let mut cold_pm = PatchableModel::new(pm.model().clone());
+            let cold = cold_pm.solve_lp(&LpOptions::default());
+            agree(&warm, &cold)
+        });
+    }
+
+    #[test]
+    fn milp_resolve_seeds_the_previous_incumbent() {
+        // Tiny knapsack through the builder: perturb one profit and
+        // re-solve; the patched MILP must match a from-scratch solve.
+        let mut b = IlpBuilder::new();
+        let items: Vec<_> = (0..6)
+            .map(|i| b.binary("take", format!("t{i}"), -((i + 1) as f64)))
+            .collect();
+        let weights: Vec<(VarId, f64)> =
+            items.iter().enumerate().map(|(i, &v)| (v, (i + 2) as f64)).collect();
+        b.le(weights, 9.0);
+        let (mut pm, _meta) = b.into_patchable();
+        let opts = SolveOptions::default();
+        let s1 = pm.resolve(&opts);
+        assert!(s1.has_solution());
+        pm.apply(&[Patch::Cost { var: items[0], obj: -20.0 }]);
+        let s2 = pm.resolve(&opts);
+        assert!(s2.has_solution());
+        let reference = bnb::solve(pm.model(), &opts);
+        assert!(
+            (s2.objective - reference.objective).abs() < 1e-6,
+            "patched resolve {} vs cold {}",
+            s2.objective,
+            reference.objective
+        );
+    }
+}

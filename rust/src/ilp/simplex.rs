@@ -125,6 +125,40 @@ pub struct BasisSnapshot {
     basis: Vec<u32>,
 }
 
+impl BasisSnapshot {
+    /// Lift across [`LpEngine::append_con`]: the new slack column enters
+    /// the basis for the new row. The bordered basis `[B 0; rᵀ 1]` is
+    /// nonsingular iff `B` is, and the slack's zero cost makes the new
+    /// row's dual price zero — old reduced costs are untouched, so dual
+    /// feasibility survives and the dual simplex repairs only the
+    /// (possibly violated) new row.
+    fn lift_appended_row(&mut self, nk: usize, m_old: usize) {
+        let slack_at = (nk + m_old) as u32;
+        for c in self.basis.iter_mut() {
+            if *c >= slack_at {
+                *c += 1;
+            }
+        }
+        self.state.insert(slack_at as usize, State::Basic(m_old as u32));
+        self.basis.push(slack_at);
+        // The appended artificial column sits locked at zero.
+        self.state.push(State::AtLower);
+    }
+
+    /// Lift across [`LpEngine::append_var`]: the new structural column
+    /// enters nonbasic at its lower bound; every column at or after the
+    /// insertion point shifts right by one.
+    fn lift_appended_var(&mut self, nk_old: usize) {
+        let at = nk_old as u32;
+        for c in self.basis.iter_mut() {
+            if *c >= at {
+                *c += 1;
+            }
+        }
+        self.state.insert(nk_old, State::AtLower);
+    }
+}
+
 /// Result of one engine solve.
 #[derive(Debug, Clone)]
 pub struct NodeLpResult {
@@ -148,6 +182,15 @@ pub struct NodeLpResult {
     /// these snapshots into the reported global bound so interrupted solves
     /// stay honest.
     pub bound: Option<f64>,
+}
+
+/// Slack-column bounds for a row of the given sense.
+fn slack_bounds(cmp: Cmp) -> (f64, f64) {
+    match cmp {
+        Cmp::Le => (0.0, INF),
+        Cmp::Ge => (-INF, 0.0),
+        Cmp::Eq => (0.0, 0.0),
+    }
 }
 
 fn fail(status: LpStatus, iters: u64, warm_used: bool) -> NodeLpResult {
@@ -327,6 +370,167 @@ impl LpEngine {
     /// True when the root bounds alone prove infeasibility.
     pub fn root_infeasible(&self) -> bool {
         self.infeasible
+    }
+
+    // ---- In-place patching (the incremental re-solve substrate) ----
+
+    /// Build an **unreduced** engine: every variable is kept (even ones
+    /// whose bounds coincide) and every constraint row is materialized, so
+    /// row `i` is model constraint `i` and structural column `j` is model
+    /// variable `j`. The standard form then depends only on the model's
+    /// *structure*, which is what makes it safely patchable: bound, cost
+    /// and rhs edits can never resurrect a row the root presolve of
+    /// [`LpEngine::new`] would have dropped as redundant. This is the
+    /// engine behind [`crate::ilp::patch::PatchableModel`]; branch & bound
+    /// keeps using the reduced form.
+    pub fn new_unreduced(model: &Model) -> LpEngine {
+        let n = model.num_vars();
+        let m = model.cons.len();
+        let mut col_entries: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+        let mut b: Vec<f64> = Vec::with_capacity(m);
+        for (i, c) in model.cons.iter().enumerate() {
+            for &(v, a) in &c.terms {
+                col_entries[v.0].push((i, a));
+            }
+            b.push(c.rhs);
+        }
+        let ncols = n + 2 * m;
+        col_entries.reserve(2 * m);
+        for i in 0..m {
+            col_entries.push(vec![(i, 1.0)]); // slack
+        }
+        for i in 0..m {
+            col_entries.push(vec![(i, 1.0)]); // artificial (locked at 0)
+        }
+        let mat = CscMatrix::from_columns(m, &col_entries);
+        let mut cost = vec![0.0; ncols];
+        let mut root_lo = vec![0.0; ncols];
+        let mut root_up = vec![0.0; ncols];
+        for (j, v) in model.vars.iter().enumerate() {
+            cost[j] = v.obj;
+            root_lo[j] = v.lb;
+            root_up[j] = v.ub;
+        }
+        for (i, c) in model.cons.iter().enumerate() {
+            let (sl, su) = slack_bounds(c.cmp);
+            root_lo[n + i] = sl;
+            root_up[n + i] = su;
+        }
+        LpEngine {
+            n,
+            nk: n,
+            m,
+            ncols,
+            mat,
+            cost,
+            b,
+            kept: (0..n).collect(),
+            vmap: (0..n).collect(),
+            root_lo,
+            root_up,
+            fixed_x: vec![0.0; n],
+            obj_fixed: 0.0,
+            infeasible: false,
+        }
+    }
+
+    /// Change one row's right-hand side in place. Costs are untouched, so
+    /// a previous optimal basis stays **dual** feasible and the warm
+    /// path's dual simplex repairs primal feasibility — the textbook dual
+    /// re-optimization. Unreduced engines only (row = constraint index).
+    pub(crate) fn set_row_rhs(&mut self, row: usize, rhs: f64) {
+        self.b[row] = rhs;
+    }
+
+    /// Change one structural column's objective coefficient in place. A
+    /// previous optimal basis stays **primal** feasible, so the warm
+    /// path's primal clean-up phase re-optimizes directly.
+    pub(crate) fn set_var_cost(&mut self, j: usize, obj: f64) {
+        self.cost[j] = obj;
+    }
+
+    /// Append a constraint row in place: structural entries are spliced
+    /// into their columns, a slack column is inserted at the end of the
+    /// slack block and an artificial column appended. `terms` use
+    /// structural column (= model variable) indices; the new row's index
+    /// is the old row count. A warm basis passed in `snap` is lifted to
+    /// stay valid (new slack basic in the new row).
+    pub(crate) fn append_con(
+        &mut self,
+        terms: &[(usize, f64)],
+        cmp: Cmp,
+        rhs: f64,
+        snap: Option<&mut BasisSnapshot>,
+    ) {
+        let m_old = self.m;
+        self.mat.add_row(terms);
+        let (sl, su) = slack_bounds(cmp);
+        let slack_at = self.nk + m_old;
+        self.mat.insert_column(slack_at, &[(m_old, 1.0)]);
+        self.cost.insert(slack_at, 0.0);
+        self.root_lo.insert(slack_at, sl);
+        self.root_up.insert(slack_at, su);
+        let art_at = self.mat.ncols();
+        self.mat.insert_column(art_at, &[(m_old, 1.0)]);
+        self.cost.push(0.0);
+        self.root_lo.push(0.0);
+        self.root_up.push(0.0);
+        self.b.push(rhs);
+        self.m += 1;
+        self.ncols += 2;
+        if let Some(s) = snap {
+            s.lift_appended_row(self.nk, m_old);
+        }
+    }
+
+    /// Append a structural variable (column) in place at the end of the
+    /// structural block. `rows` are `(constraint row, coefficient)`
+    /// entries; the new column's index is the old variable count. A warm
+    /// basis passed in `snap` is lifted (new column nonbasic at lower).
+    pub(crate) fn append_var(
+        &mut self,
+        lb: f64,
+        ub: f64,
+        obj: f64,
+        rows: &[(usize, f64)],
+        snap: Option<&mut BasisSnapshot>,
+    ) {
+        let nk_old = self.nk;
+        self.mat.insert_column(nk_old, rows);
+        self.cost.insert(nk_old, obj);
+        self.root_lo.insert(nk_old, lb);
+        self.root_up.insert(nk_old, ub);
+        self.kept.push(self.n);
+        self.vmap.push(self.n);
+        self.fixed_x.push(0.0);
+        self.n += 1;
+        self.nk += 1;
+        self.ncols += 1;
+        if let Some(s) = snap {
+            s.lift_appended_var(nk_old);
+        }
+    }
+
+    /// Remove constraint row `row` in place; its slack and artificial
+    /// columns go with it. There is no snapshot lift for a removal — the
+    /// deleted columns may be basic — so callers must drop their warm
+    /// basis and cold-solve (the stale-basis rejection path).
+    pub(crate) fn remove_con(&mut self, row: usize) {
+        debug_assert!(row < self.m);
+        self.mat.remove_row(row);
+        let slack_at = self.nk + row;
+        self.mat.remove_column(slack_at);
+        self.cost.remove(slack_at);
+        self.root_lo.remove(slack_at);
+        self.root_up.remove(slack_at);
+        let art_at = self.nk + (self.m - 1) + row;
+        self.mat.remove_column(art_at);
+        self.cost.remove(art_at);
+        self.root_lo.remove(art_at);
+        self.root_up.remove(art_at);
+        self.b.remove(row);
+        self.m -= 1;
+        self.ncols -= 2;
     }
 
     /// Solve the LP under node bounds `lb`/`ub` (original variable

@@ -34,8 +34,8 @@ use super::topology::{
 };
 use crate::alloc::bestfit::{arena_size, best_fit_multi, best_fit_offsets, FitOrder};
 use crate::alloc::{
-    check_placement, check_placement_regions, resident_lower_bound, resident_segments,
-    windows_of, PlacementItem,
+    check_placement, check_placement_regions, interference_components, resident_lower_bound,
+    resident_segments, windows_of, PlacementItem,
 };
 use crate::ilp::{self, IlpBuilder, IlpMeta, Pos, SolveControl, SolveOptions, SolveStatus, VarId};
 use crate::util::Stopwatch;
@@ -71,6 +71,13 @@ pub struct PlacementOptions {
     /// multi-region topology (e.g. [`MemoryTopology::device_host`])
     /// switches to the offload-aware region-assignment formulation.
     pub topology: MemoryTopology,
+    /// Split the instance into lifetime-interference components
+    /// ([`crate::alloc::interference_components`]) and solve one sub-ILP
+    /// per component, dispatched concurrently. Components never co-reside,
+    /// so they share the arena address space and the stitched objective is
+    /// exactly the monolithic one (property-tested below). `false` forces
+    /// the monolithic solve — the decomposition benches compare both.
+    pub decompose: bool,
 }
 
 impl Default for PlacementOptions {
@@ -85,6 +92,7 @@ impl Default for PlacementOptions {
             stop_gap: None,
             control: None,
             topology: MemoryTopology::single(),
+            decompose: true,
         }
     }
 }
@@ -163,6 +171,22 @@ pub fn optimize_placement(items: &[PlacementItem], opts: &PlacementOptions) -> P
         // safety rail, asserted by the identity property test below).
         return optimize_placement_regions(items, opts);
     }
+    if opts.decompose {
+        let comps = interference_components(items);
+        if comps.len() > 1 {
+            return optimize_placement_components(items, &comps, opts);
+        }
+    }
+    optimize_placement_single(items, opts)
+}
+
+/// The single-arena pipeline on one interference component (or on the
+/// whole instance when decomposition is off): [`optimize_placement_once`]
+/// plus the no-preplacement retry described on [`optimize_placement`].
+fn optimize_placement_single(
+    items: &[PlacementItem],
+    opts: &PlacementOptions,
+) -> PlacementResult {
     let watch = Stopwatch::start();
     let first = optimize_placement_once(items, opts);
     if first.fragmentation > 0.0 && opts.use_prealloc {
@@ -180,6 +204,127 @@ pub fn optimize_placement(items: &[PlacementItem], opts: &PlacementOptions) -> P
         }
     }
     first
+}
+
+/// The weaker of two optimality guarantees, for summarizing a stitched
+/// multi-component solve with a single [`PlacementMethod`].
+fn worse_method(a: PlacementMethod, b: PlacementMethod) -> PlacementMethod {
+    fn rank(m: PlacementMethod) -> u8 {
+        match m {
+            PlacementMethod::BoundProven => 0,
+            PlacementMethod::Ilp => 1,
+            PlacementMethod::IlpTimeLimit => 2,
+            PlacementMethod::HeuristicFallback => 3,
+        }
+    }
+    if rank(b) > rank(a) {
+        b
+    } else {
+        a
+    }
+}
+
+/// Solve each lifetime-interference component as an independent
+/// single-arena sub-problem and stitch the results.
+///
+/// Components never co-reside, so every component may reuse address 0 and
+/// the address spaces overlay freely: the stitched placement is valid, the
+/// optimal arena is the max over per-component optima, and the global
+/// resident lower bound is the max over per-component bounds (at any
+/// order step only one component is live). The stitching is therefore
+/// *exact* — it introduces no optimality gap beyond whatever gap the
+/// per-component solves themselves report.
+///
+/// Sub-solves dispatch concurrently over a scoped worker pool (each on a
+/// serial branch-and-bound, since the components themselves are the
+/// parallelism) unless the caller pinned `solver_threads: 1`, which keeps
+/// the whole path sequential and deterministic. Each dispatch sees the
+/// remaining share of the single `time_limit`, so the phase-wide deadline
+/// the planner accounts against stays a hard cap.
+fn optimize_placement_components(
+    items: &[PlacementItem],
+    comps: &[Vec<usize>],
+    opts: &PlacementOptions,
+) -> PlacementResult {
+    let watch = Stopwatch::start();
+    let sub_items: Vec<Vec<PlacementItem>> =
+        comps.iter().map(|c| c.iter().map(|&i| items[i]).collect()).collect();
+    let run = |sub: &[PlacementItem]| {
+        let sub_opts = PlacementOptions {
+            solver_threads: 1,
+            decompose: false,
+            time_limit: opts.time_limit.saturating_sub(watch.elapsed()),
+            ..opts.clone()
+        };
+        optimize_placement_single(sub, &sub_opts)
+    };
+    let results: Vec<PlacementResult> = if opts.solver_threads == 1 {
+        sub_items.iter().map(|s| run(s)).collect()
+    } else {
+        let workers = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(8)
+            .min(sub_items.len());
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let slots: Vec<std::sync::Mutex<Option<PlacementResult>>> =
+            sub_items.iter().map(|_| std::sync::Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= sub_items.len() {
+                        break;
+                    }
+                    let r = run(&sub_items[i]);
+                    *slots[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+        slots.into_iter().map(|s| s.into_inner().unwrap().unwrap()).collect()
+    };
+
+    let mut offsets = vec![0u64; items.len()];
+    let mut arena = 0u64;
+    let mut lb = 0u64;
+    let mut method = PlacementMethod::BoundProven;
+    let (mut vars, mut cons) = (0usize, 0usize);
+    let (mut nodes, mut iters, mut wa, mut wh) = (0u64, 0u64, 0u64, 0u64);
+    for (c, r) in comps.iter().zip(&results) {
+        for (local, &global) in c.iter().enumerate() {
+            offsets[global] = r.offsets[local];
+        }
+        arena = arena.max(r.arena_size);
+        lb = lb.max(r.lower_bound);
+        method = worse_method(method, r.method);
+        vars += r.model_size.0;
+        cons += r.model_size.1;
+        nodes += r.nodes;
+        iters += r.simplex_iters;
+        wa += r.warm_attempts;
+        wh += r.warm_hits;
+    }
+    debug_assert!(check_placement(items, &offsets, arena).is_ok());
+    let secs = watch.secs();
+    PlacementResult {
+        offsets,
+        arena_size: arena,
+        lower_bound: lb,
+        fragmentation: frag(arena, lb),
+        method,
+        solve_secs: secs,
+        incumbents: vec![(secs, arena as f64)],
+        model_size: (vars, cons),
+        nodes,
+        simplex_iters: iters,
+        warm_attempts: wa,
+        warm_hits: wh,
+        regions: vec![0; items.len()],
+        region_sizes: vec![arena],
+        bytes_offloaded: 0,
+        transfer_cost: 0.0,
+        segments: Vec::new(),
+    }
 }
 
 /// [`optimize_placement`] with a spill certificate: `windows[i]` lists
@@ -204,6 +349,135 @@ pub fn optimize_placement_spilled(
         return optimize_placement(items, opts);
     }
     optimize_placement_segments(items, windows, opts)
+}
+
+/// The multi-region decomposition guard.
+///
+/// The regions objective `device_arena + Σ transfer` does **not**
+/// decompose per component in general: components couple through the
+/// shared device arena *and* through their offload choices, and two
+/// per-component-optimal placements with equal objectives can stitch into
+/// different global objectives. It does decompose under a strict guard:
+/// when the device region is uncapped and every non-device region's
+/// per-byte penalty is strictly above `1 + device penalty`, moving any
+/// tensor off-device strictly worsens the objective (it saves at most
+/// `size` device-arena bytes plus `penalty_0 · size` of device penalty
+/// and costs `penalty_k · size`), so the all-device assignment is
+/// strictly optimal and the whole problem reduces to single-arena packing
+/// of the (segment-expanded) placement atoms plus a constant transfer
+/// term.
+///
+/// Returns `None` — deferring to the monolithic formulation — when the
+/// guard does not hold, when there are fewer than two interference
+/// components, or when the stitched objective fails the same
+/// greedy-incumbent acceptance gate every ILP decode in this module must
+/// pass (possible when a large component fell back to its heuristic).
+fn try_decompose_offload_free(
+    items: &[PlacementItem],
+    windows: Option<&[Vec<(usize, usize)>]>,
+    opts: &PlacementOptions,
+) -> Option<PlacementResult> {
+    let topo = &opts.topology;
+    let kk = topo.num_regions();
+    let caps = topo.capacities();
+    if !opts.decompose || items.len() < 2 || caps[0].is_some() {
+        return None;
+    }
+    let strictly_unprofitable = topo.regions[1..]
+        .iter()
+        .all(|r| r.penalty_per_byte > 1.0 + topo.regions[0].penalty_per_byte);
+    if !strictly_unprofitable {
+        return None;
+    }
+    let watch = Stopwatch::start();
+    let n = items.len();
+
+    // Expand to placement atoms: whole intervals for unspilled items, the
+    // device-resident segments for spilled items (device-committed by
+    // their certificate, so all-device is representable for them too).
+    let mut atom_owner: Vec<usize> = Vec::new();
+    let mut atoms: Vec<PlacementItem> = Vec::new();
+    for (i, it) in items.iter().enumerate() {
+        let win = windows.map_or(&[][..], |w| windows_of(w, i));
+        if win.is_empty() {
+            atom_owner.push(i);
+            atoms.push(*it);
+        } else {
+            for (s, e) in resident_segments(it.start, it.end, win) {
+                atom_owner.push(i);
+                atoms.push(PlacementItem { edge: it.edge, size: it.size, start: s, end: e });
+            }
+        }
+    }
+    let comps = interference_components(&atoms);
+    if comps.len() < 2 {
+        return None;
+    }
+    let sub_opts = PlacementOptions { topology: MemoryTopology::single(), ..opts.clone() };
+    let packed = optimize_placement_components(&atoms, &comps, &sub_opts);
+
+    let regions = vec![0usize; n];
+    let cost = match windows {
+        Some(w) => transfer_cost_segments(items, w, &regions, topo),
+        None => transfer_cost(items, &regions, topo),
+    };
+    let obj = packed.arena_size as f64 + cost;
+    let heur_obj = match windows {
+        Some(w) => {
+            let heur = assign_and_pack_segments(items, w, topo, opts.align);
+            heur.region_sizes[0] as f64
+                + transfer_cost_segments(items, w, &heur.region_of, topo)
+        }
+        None => {
+            let (heur_regions, _, heur_sizes) =
+                super::topology::assign_and_pack(items, topo, opts.align);
+            heur_sizes[0] as f64 + transfer_cost(items, &heur_regions, topo)
+        }
+    };
+    if obj > heur_obj + 1e-6 {
+        return None;
+    }
+
+    // Re-fold atom offsets into per-item offsets / segment placements.
+    let mut offsets = vec![0u64; n];
+    let mut segs: Vec<crate::alloc::SegmentPlacements> = vec![Vec::new(); n];
+    let mut seen = vec![false; n];
+    for (x, &i) in atom_owner.iter().enumerate() {
+        let o = packed.offsets[x];
+        if !seen[i] {
+            offsets[i] = o;
+            seen[i] = true;
+        }
+        if windows.is_some_and(|w| !windows_of(w, i).is_empty()) {
+            segs[i].push((atoms[x].start, atoms[x].end, o));
+        }
+    }
+    let lb = match windows {
+        Some(w) => region_lower_bound_segments(items, w, &regions, 0),
+        None => region_lower_bound(items, &regions, 0),
+    };
+    let mut region_sizes = vec![0u64; kk];
+    region_sizes[0] = packed.arena_size;
+    let secs = watch.secs();
+    Some(PlacementResult {
+        offsets,
+        arena_size: packed.arena_size,
+        lower_bound: lb,
+        fragmentation: frag(packed.arena_size, lb),
+        method: packed.method,
+        solve_secs: secs,
+        incumbents: vec![(secs, obj)],
+        model_size: packed.model_size,
+        nodes: packed.nodes,
+        simplex_iters: packed.simplex_iters,
+        warm_attempts: packed.warm_attempts,
+        warm_hits: packed.warm_hits,
+        regions,
+        region_sizes,
+        bytes_offloaded: 0,
+        transfer_cost: cost,
+        segments: segs,
+    })
 }
 
 fn optimize_placement_once(
@@ -436,6 +710,9 @@ fn optimize_placement_regions(
     items: &[PlacementItem],
     opts: &PlacementOptions,
 ) -> PlacementResult {
+    if let Some(r) = try_decompose_offload_free(items, None, opts) {
+        return r;
+    }
     let watch = Stopwatch::start();
     let topo = &opts.topology;
     let kk = topo.num_regions();
@@ -726,6 +1003,9 @@ fn optimize_placement_segments(
     windows: &[Vec<(usize, usize)>],
     opts: &PlacementOptions,
 ) -> PlacementResult {
+    if let Some(r) = try_decompose_offload_free(items, Some(windows), opts) {
+        return r;
+    }
     let watch = Stopwatch::start();
     let topo = &opts.topology;
     let kk = topo.num_regions();
@@ -1376,5 +1656,167 @@ mod tests {
         let opts = PlacementOptions { max_ilp_items: 10, skip_ilp_if_tight: false, ..quick() };
         let r = optimize_placement(&items, &opts);
         assert!(check_placement(&items, &r.offsets, r.arena_size).is_ok());
+    }
+
+    /// Random instance with a known number of well-separated interference
+    /// components (clusters of overlapping items split by time gaps).
+    fn clustered_items(rng: &mut Rng, clusters: usize) -> Vec<PlacementItem> {
+        let mut items = Vec::new();
+        let mut base = 0usize;
+        for _ in 0..clusters {
+            let n = rng.range(1, 5);
+            let mut cluster_end = base + 1;
+            for _ in 0..n {
+                let start = base + rng.range(0, 3);
+                let end = start + rng.range(1, 4);
+                cluster_end = cluster_end.max(end);
+                items.push(item(items.len() as u32, 8 * rng.range(1, 16) as u64, start, end));
+            }
+            base = cluster_end + rng.range(1, 3); // gap: next cluster can't overlap
+        }
+        items
+    }
+
+    #[test]
+    fn decomposed_placement_matches_monolithic_objective() {
+        // The tentpole's exactness claim: stitching per-component solves
+        // reproduces the monolithic arena byte for byte (components never
+        // co-reside, so they overlay in the same address space).
+        check("placement_decomposition_exact", 12, |rng: &mut Rng| {
+            let items = clustered_items(rng, rng.range(2, 4));
+            let base = PlacementOptions {
+                solver_threads: 1,
+                skip_ilp_if_tight: rng.chance(0.5),
+                ..quick()
+            };
+            let dec = optimize_placement(&items, &base);
+            let mono = optimize_placement(
+                &items,
+                &PlacementOptions { decompose: false, ..base.clone() },
+            );
+            if check_placement(&items, &dec.offsets, dec.arena_size).is_err() {
+                return crate::util::quickcheck::Outcome::Fail("invalid stitched placement".into());
+            }
+            ensure(
+                dec.arena_size == mono.arena_size && dec.lower_bound == mono.lower_bound,
+                || {
+                    format!(
+                        "decomposed arena={} (method {:?}) vs monolithic arena={} (method {:?})",
+                        dec.arena_size, dec.method, mono.arena_size, mono.method
+                    )
+                },
+            )
+        });
+    }
+
+    #[test]
+    fn singleton_components_stitch_bit_for_bit() {
+        // When no two lifetimes overlap every component is a singleton and
+        // both paths must produce the identical all-zero offset vector.
+        check("placement_singleton_identity", 10, |rng: &mut Rng| {
+            let n = rng.range(2, 10);
+            let items: Vec<PlacementItem> = (0..n)
+                .map(|i| item(i as u32, 8 * rng.range(1, 32) as u64, 2 * i, 2 * i + 1))
+                .collect();
+            let opts = PlacementOptions {
+                solver_threads: 1,
+                use_prealloc: false,
+                ..quick()
+            };
+            let dec = optimize_placement(&items, &opts);
+            let mono = optimize_placement(
+                &items,
+                &PlacementOptions { decompose: false, ..opts.clone() },
+            );
+            ensure(
+                dec.offsets == mono.offsets
+                    && dec.arena_size == mono.arena_size
+                    && dec.offsets.iter().all(|&o| o == 0),
+                || format!("singleton stitch diverged: {:?} vs {:?}", dec.offsets, mono.offsets),
+            )
+        });
+    }
+
+    #[test]
+    fn offload_free_regions_decomposition_matches_monolithic_objective() {
+        // The strict guard: uncapped device, strictly unprofitable host
+        // (2.5 > 1 + 0) — all-device is strictly optimal, so the regions
+        // solve reduces to decomposed single-arena packing.
+        let topo = MemoryTopology {
+            regions: vec![
+                crate::olla::topology::MemoryRegion {
+                    name: "device".into(),
+                    capacity: None,
+                    penalty_per_byte: 0.0,
+                },
+                crate::olla::topology::MemoryRegion {
+                    name: "host".into(),
+                    capacity: None,
+                    penalty_per_byte: 2.5,
+                },
+            ],
+        };
+        check("regions_guard_decomposition", 8, |rng: &mut Rng| {
+            let items = clustered_items(rng, rng.range(2, 3));
+            let opts = PlacementOptions {
+                topology: topo.clone(),
+                solver_threads: 1,
+                ..quick()
+            };
+            let dec = optimize_placement(&items, &opts);
+            let mono = optimize_placement(
+                &items,
+                &PlacementOptions { decompose: false, ..opts.clone() },
+            );
+            let dec_obj = dec.arena_size as f64 + dec.transfer_cost;
+            let mono_obj = mono.arena_size as f64 + mono.transfer_cost;
+            ensure(
+                dec.regions.iter().all(|&k| k == 0)
+                    && dec.region_sizes.len() == 2
+                    && (dec_obj - mono_obj).abs() < 1e-6,
+                || {
+                    format!(
+                        "guard path diverged: dec obj={dec_obj} regions={:?} vs mono obj={mono_obj}",
+                        dec.regions
+                    )
+                },
+            )
+        });
+    }
+
+    #[test]
+    fn offload_free_segments_decomposition_keeps_segment_reuse() {
+        // Segment atoms under the strict guard: A's two device segments
+        // and B decompose into three singleton components, and the
+        // stitched result still reuses A's spill window for B.
+        let items = vec![item(0, 10, 0, 6), item(1, 10, 2, 4)];
+        let windows = vec![vec![(2usize, 4usize)], vec![]];
+        let topo = MemoryTopology {
+            regions: vec![
+                crate::olla::topology::MemoryRegion {
+                    name: "device".into(),
+                    capacity: None,
+                    penalty_per_byte: 0.0,
+                },
+                crate::olla::topology::MemoryRegion {
+                    name: "host".into(),
+                    capacity: None,
+                    penalty_per_byte: 2.5,
+                },
+            ],
+        };
+        let opts = PlacementOptions { topology: topo, solver_threads: 1, ..quick() };
+        let dec = optimize_placement_spilled(&items, &windows, &opts);
+        let mono = optimize_placement_spilled(
+            &items,
+            &windows,
+            &PlacementOptions { decompose: false, ..opts.clone() },
+        );
+        assert_eq!(dec.arena_size, 10, "spill window must be reused: {:?}", dec.offsets);
+        assert_eq!(dec.arena_size, mono.arena_size);
+        assert_eq!(dec.regions, vec![0, 0]);
+        assert_eq!(dec.segments[0].len(), 2);
+        assert!(dec.segments[1].is_empty());
+        assert!((dec.transfer_cost - mono.transfer_cost).abs() < 1e-9);
     }
 }

@@ -1029,7 +1029,7 @@ mod tests {
             .with_topology(MemoryTopology::device_host(cap, 0.5), 0.0625);
         // Keep the capacity-aware model on the ILP path whatever its row
         // count: the warm start already certifies an in-cap incumbent.
-        opts.schedule.max_ilp_rows = usize::MAX;
+        opts.schedule = opts.schedule.without_row_cap();
         let plan = optimize(&g, &opts);
         validate_plan(&g, &plan).unwrap();
         assert!(

@@ -26,7 +26,7 @@
 
 use super::topology::MemoryTopology;
 use crate::graph::analysis::Spans;
-use crate::graph::{EdgeId, Graph, NodeId};
+use crate::graph::{EdgeId, Graph, NodeId, OpKind};
 use crate::ilp::{self, IlpBuilder, Model, SolveControl, SolveOptions, SolveStatus, VarId};
 use crate::sched::sim::{check_order, simulate};
 use crate::sched::greedy_order;
@@ -68,23 +68,33 @@ pub struct ScheduleOptions {
     pub warm_start: bool,
     /// Branch-and-bound node cap (safety valve for tests).
     pub max_nodes: u64,
-    /// Skip the ILP (keep the greedy incumbent) when the built model has
-    /// more constraint rows than this. Row count bounds factorization and
-    /// pricing cost even with the sparse LU basis; Gurobi has no such
-    /// limit — this is our documented capacity envelope (DESIGN.md §2,
-    /// EXPERIMENTS.md §Scale).
+    /// Row budget for any *single* ILP this scheduler solves. Row count
+    /// bounds factorization and pricing cost even with the sparse LU
+    /// basis; Gurobi has no such limit — this is our documented capacity
+    /// envelope (DESIGN.md §2, EXPERIMENTS.md §Scale).
+    ///
+    /// Semantics: when the whole-model row estimate fits the budget, one
+    /// monolithic eq.-14 solve runs as before. When it does not, an
+    /// *uncapped* model no longer falls back to plain greedy — it takes
+    /// the rolling-window path ([`optimize_schedule_windowed`]), which
+    /// re-optimizes contiguous windows of the greedy order with sub-ILPs
+    /// sized to this same per-window budget (windows halve until their
+    /// model fits). Capacity-aware (capped) models keep the greedy +
+    /// spill-repair fallback: their boundary residency interacts with the
+    /// cap globally, which a window cannot see.
     ///
     /// Calibration: the limit guarded the old dense `O(m²)` product-form
     /// inverse, whose per-LP cost exploded past ~3500 rows. With the
     /// sparse LU basis + eta updates the per-iteration cost scales with
     /// factor fill-in, not `m²`, so the envelope moved: the default is
-    /// raised 3500 → 5000 to keep more reduced-zoo cases on the ILP path;
-    /// graphs past the envelope (the largest full-scale cases) still take
-    /// the greedy fallback. Measure the envelope on your own hardware
-    /// with the ignored `calibrate_max_ilp_rows_envelope` harness
+    /// raised 3500 → 5000 to keep more reduced-zoo cases on the
+    /// single-solve path; per-window budgeting covers everything past it.
+    /// Measure the envelope on your own hardware with the ignored
+    /// `calibrate_max_ilp_rows_envelope` harness
     /// (`cargo test --release calibrate_max_ilp_rows -- --ignored
-    /// --nocapture`), which prints reduced-row estimates and solve times
-    /// across the zoo, then adjust the default to taste.
+    /// --nocapture`), which prints reduced-row estimates plus both the
+    /// unbounded single-solve and the default (windowed where it
+    /// applies) result per zoo case, then adjust the default to taste.
     pub max_ilp_rows: usize,
     /// Worker threads for the branch-and-bound node pool (0 = auto).
     /// Sweeps that already parallelize over model-zoo cases set this to 1.
@@ -134,6 +144,24 @@ impl Default for ScheduleOptions {
             topology: MemoryTopology::single(),
             recompute_penalty: DEFAULT_RECOMPUTE_PENALTY,
         }
+    }
+}
+
+impl ScheduleOptions {
+    /// Default options with the row envelope removed: every instance
+    /// stays on the monolithic full-model ILP path regardless of size.
+    /// For harnesses and tests that must exercise the full formulation;
+    /// production callers should keep the calibrated default (and its
+    /// windowed fallback) instead of an ad-hoc `usize::MAX` override.
+    pub fn unbounded() -> ScheduleOptions {
+        ScheduleOptions::default().without_row_cap()
+    }
+
+    /// This options value with the row envelope removed (the builder-style
+    /// counterpart of [`ScheduleOptions::unbounded`]).
+    pub fn without_row_cap(mut self) -> ScheduleOptions {
+        self.max_ilp_rows = usize::MAX;
+        self
     }
 }
 
@@ -742,8 +770,39 @@ pub fn optimize_schedule_anytime(
     let effective_rows =
         crate::ilp::simplex::reduced_rows_estimate(&sm.model, &lb0, &ub0);
     if effective_rows > opts.max_ilp_rows {
-        // Capacity fallback: keep the greedy order (the paper's anytime
-        // protocol degrades the same way when Gurobi's cap fires).
+        if sm.s.is_empty() {
+            // Uncapped over-budget model: rolling-window re-optimization.
+            // `max_ilp_rows` becomes a per-window budget instead of a
+            // whole-model kill switch; the result never regresses below
+            // the greedy order it starts from.
+            let wo = optimize_schedule_windowed(g, opts, effective_rows);
+            let trace = simulate(g, &wo.order);
+            debug_assert_eq!(check_order(g, &wo.order), Ok(()));
+            if let Some(sink) = &on_order {
+                sink(wo.order.clone(), trace.peak_bytes as f64, HashMap::new());
+            }
+            return ScheduleResult {
+                order: wo.order,
+                // No global ILP objective exists on this path; report the
+                // exact simulated peak for both.
+                ilp_peak: trace.peak_bytes,
+                sim_peak: trace.peak_bytes,
+                spills: HashMap::new(),
+                device_peak: trace.peak_bytes,
+                status: SolveStatus::TimeLimitFeasible,
+                solve_secs: watch.secs(),
+                incumbents: vec![(watch.secs(), trace.peak_bytes as f64)],
+                model_size: wo.model_size,
+                nodes: wo.nodes,
+                simplex_iters: wo.simplex_iters,
+                warm_attempts: wo.warm_attempts,
+                warm_hits: wo.warm_hits,
+            };
+        }
+        // Capped capacity fallback: keep the greedy order (the paper's
+        // anytime protocol degrades the same way when Gurobi's cap
+        // fires). Boundary residency of a capped model interacts with the
+        // cap globally, so the windowed path does not apply.
         let order = greedy_order(g);
         let trace = simulate(g, &order);
         let wa = warm_start_assignment(g, &sm, &order);
@@ -903,6 +962,205 @@ pub fn optimize_schedule_anytime(
     }
 }
 
+/// Accumulated statistics of a rolling-window schedule re-optimization.
+struct WindowedOutcome {
+    /// The final (valid, topological) execution order.
+    order: Vec<NodeId>,
+    /// Summed (vars, constraints) across every window sub-ILP built.
+    model_size: (usize, usize),
+    nodes: u64,
+    simplex_iters: u64,
+    warm_attempts: u64,
+    warm_hits: u64,
+}
+
+/// One window's synthetic eq.-14 sub-graph over `order[lo..hi]`, plus the
+/// map from window-graph node index (minus the boundary source) back to
+/// the original node.
+///
+/// A synthetic *source* node stands in for everything scheduled before the
+/// window and carries the boundary-residency rows through ordinary edge
+/// semantics — no new constraint kinds are needed:
+///
+/// * produced before the window, last consumed inside it → a source edge
+///   with the real size and the in-window consumers as sinks (its bytes
+///   are reclaimable, so the window ILP may free it early);
+/// * produced before, also alive after (or consumed both in and out) →
+///   its residency is constant across every window order, so only a
+///   size-0 dependency edge survives (`__dep`); pure pass-throughs with
+///   no in-window consumer vanish entirely;
+/// * produced inside the window, alive past its end (out-of-window sinks
+///   or a terminal result) → size-0 dependency edges to in-window sinks
+///   plus a sink-less `__hold` edge with the real size, which the model
+///   builder's terminal equality `P[t] = P[t-1] + C[t-1]` holds to the
+///   window horizon;
+/// * produced and fully consumed inside → copied verbatim.
+///
+/// The identity order (source, then `order[lo..hi]` as-is) is always a
+/// valid schedule of the window graph, so the current sub-order seeds the
+/// sub-ILP as a warm start.
+fn build_window_graph(
+    g: &Graph,
+    order: &[NodeId],
+    lo: usize,
+    hi: usize,
+) -> (Graph, Vec<NodeId>) {
+    let mut pos = vec![usize::MAX; g.num_nodes()];
+    for (i, &v) in order.iter().enumerate() {
+        pos[v.idx()] = i;
+    }
+    let in_window = |v: NodeId| pos[v.idx()] >= lo && pos[v.idx()] < hi;
+    let mut wg = Graph::new(format!("{}__window_{lo}", g.name));
+    let source = wg.add_node("__window_source__", OpKind::Input);
+    let mut map = vec![NodeId(u32::MAX); g.num_nodes()];
+    let mut back: Vec<NodeId> = Vec::with_capacity(hi - lo);
+    for &v in &order[lo..hi] {
+        map[v.idx()] = wg.add_node(g.node(v).name.clone(), g.node(v).kind);
+        back.push(v);
+    }
+    for e in g.edge_ids() {
+        let edge = g.edge(e);
+        let src_in = in_window(edge.src);
+        let src_before = pos[edge.src.idx()] < lo;
+        let sinks_in: Vec<NodeId> = edge
+            .snks
+            .iter()
+            .copied()
+            .filter(|&s| in_window(s))
+            .map(|s| map[s.idx()])
+            .collect();
+        let alive_after =
+            edge.snks.is_empty() || edge.snks.iter().any(|&s| pos[s.idx()] >= hi);
+        if src_in {
+            let wsrc = map[edge.src.idx()];
+            if alive_after {
+                if !sinks_in.is_empty() {
+                    wg.add_edge(format!("{}__dep", edge.name), wsrc, &sinks_in, 0);
+                }
+                wg.add_edge(format!("{}__hold", edge.name), wsrc, &[], edge.size);
+            } else {
+                // A topological base order puts every sink after its
+                // producer, so "dies before `hi`" implies in-window sinks.
+                wg.add_edge(edge.name.clone(), wsrc, &sinks_in, edge.size);
+            }
+        } else if src_before && !sinks_in.is_empty() {
+            if alive_after {
+                wg.add_edge(format!("{}__dep", edge.name), source, &sinks_in, 0);
+            } else {
+                wg.add_edge(format!("{}__in", edge.name), source, &sinks_in, edge.size);
+            }
+        }
+        // src after the window, or boundary tensors without in-window
+        // consumers: irrelevant to this window's ordering problem.
+    }
+    (wg, back)
+}
+
+/// Rolling-window re-optimization for uncapped graphs whose whole-model
+/// row estimate exceeds [`ScheduleOptions::max_ilp_rows`].
+///
+/// Starting from the greedy order, contiguous windows are re-solved as
+/// independent eq.-14 sub-ILPs over [`build_window_graph`] synthetics. The
+/// initial window size scales the whole-model estimate down to the budget
+/// and halves (to a floor of 4 nodes) whenever a window's own reduced-row
+/// estimate still overshoots — `max_ilp_rows` is a *per-window* budget
+/// here, not a kill switch. The shared `time_limit` is spread over the
+/// remaining windows and stays a hard cap for the whole pass.
+///
+/// Each window's reordered splice is accepted only when the *globally*
+/// re-simulated peak does not worsen, so the final order never regresses
+/// below the greedy baseline. Window sub-solves run without the caller's
+/// [`SolveControl`]: its incumbent callback would otherwise observe
+/// window-local variable assignments it cannot decode.
+fn optimize_schedule_windowed(
+    g: &Graph,
+    opts: &ScheduleOptions,
+    effective_rows: usize,
+) -> WindowedOutcome {
+    let watch = Stopwatch::start();
+    let n = g.num_nodes();
+    let mut order = greedy_order(g);
+    let mut best_peak = simulate(g, &order).peak_bytes;
+    let mut acc = WindowedOutcome {
+        order: Vec::new(),
+        model_size: (0, 0),
+        nodes: 0,
+        simplex_iters: 0,
+        warm_attempts: 0,
+        warm_hits: 0,
+    };
+    // Row growth is roughly quadratic in window span (pairwise rows), so
+    // the linear scale-down is only a starting point; the per-window
+    // check below halves further on overshoot.
+    let mut w =
+        (n.saturating_mul(opts.max_ilp_rows) / effective_rows.max(1)).clamp(4, n.max(4));
+    let mut lo = 0usize;
+    while lo < n {
+        if watch.elapsed() >= opts.time_limit {
+            break;
+        }
+        let hi = (lo + w).min(n);
+        if hi - lo < 2 {
+            break; // a single trailing node has nothing to reorder
+        }
+        let (wg, back) = build_window_graph(g, &order, lo, hi);
+        let sm = build_scheduling_model(&wg, Some(wg.num_nodes()));
+        let lb: Vec<f64> = sm.model.vars.iter().map(|v| v.lb).collect();
+        let ub: Vec<f64> = sm.model.vars.iter().map(|v| v.ub).collect();
+        let rows = crate::ilp::simplex::reduced_rows_estimate(&sm.model, &lb, &ub);
+        if rows > opts.max_ilp_rows && hi - lo > 4 {
+            w = ((hi - lo) / 2).max(4);
+            continue; // rebuild this window at half size
+        }
+        let remaining = opts.time_limit.saturating_sub(watch.elapsed());
+        let windows_left = ((n - lo) + (hi - lo) - 1) / (hi - lo);
+        let per_window = remaining / windows_left.max(1) as u32;
+        // The identity order of the window graph (source first, then the
+        // current sub-order) is its warm start by construction.
+        let worder: Vec<NodeId> = (0..wg.num_nodes() as u32).map(NodeId).collect();
+        let initial = Some(warm_start_assignment(&wg, &sm, &worder));
+        let sol = ilp::solve(
+            &sm.model,
+            &SolveOptions {
+                time_limit: per_window,
+                initial,
+                integral_objective: true,
+                max_nodes: opts.max_nodes,
+                threads: opts.solver_threads,
+                stop_gap: opts.stop_gap,
+                control: None,
+                ..Default::default()
+            },
+        );
+        acc.model_size.0 += sm.model.num_vars();
+        acc.model_size.1 += sm.model.num_cons();
+        acc.nodes += sol.nodes;
+        acc.simplex_iters += sol.simplex_iters;
+        acc.warm_attempts += sol.warm_attempts;
+        acc.warm_hits += sol.warm_hits;
+        if sol.has_solution() {
+            let decoded = decode_order(&wg, &sm, &sol.values);
+            // Node 0 of the window graph is the synthetic source.
+            let sub: Vec<NodeId> =
+                decoded.iter().filter(|v| v.idx() != 0).map(|v| back[v.idx() - 1]).collect();
+            if sub.len() == hi - lo {
+                let mut cand = order.clone();
+                cand[lo..hi].copy_from_slice(&sub);
+                if check_order(g, &cand) == Ok(()) {
+                    let peak = simulate(g, &cand).peak_bytes;
+                    if peak <= best_peak {
+                        best_peak = peak;
+                        order = cand;
+                    }
+                }
+            }
+        }
+        lo = hi;
+    }
+    acc.order = order;
+    acc
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -959,12 +1217,86 @@ mod tests {
         );
     }
 
+    #[test]
+    fn window_graph_carries_boundary_residency() {
+        // fig3 split at its midpoint: tensors crossing the boundary must
+        // show up as source edges (reclaimable bytes in) or hold edges
+        // (bytes out, held to the horizon), and the identity order must
+        // be a valid schedule of the window graph.
+        let g = fig3_graph();
+        let order = greedy_order(&g);
+        let n = g.num_nodes();
+        let (wg, back) = build_window_graph(&g, &order, n / 2, n);
+        assert_eq!(back.len(), n - n / 2);
+        assert_eq!(wg.num_nodes(), back.len() + 1);
+        wg.validate().unwrap();
+        let worder: Vec<NodeId> = (0..wg.num_nodes() as u32).map(NodeId).collect();
+        assert_eq!(check_order(&wg, &worder), Ok(()));
+        // fig3's tensors all flow forward, so at least one boundary
+        // tensor must enter the second half through the source.
+        let source_out = wg.node(NodeId(0)).fanout.len();
+        assert!(source_out > 0, "no boundary-in edges found");
+    }
+
+    #[test]
+    fn over_budget_uncapped_model_takes_the_windowed_path() {
+        // A row budget far below any real model forces windowing; the
+        // result must be a valid order whose peak never regresses below
+        // greedy (the acceptance rule), with window solves accounted.
+        let mut rng = crate::util::rng::Rng::new(7);
+        let g = random_dag(&mut rng, &RandomDagConfig { num_nodes: 24, ..Default::default() });
+        let greedy_peak = simulate(&g, &greedy_order(&g)).peak_bytes;
+        let opts = ScheduleOptions {
+            max_ilp_rows: 40,
+            time_limit: Duration::from_secs(20),
+            ..Default::default()
+        };
+        let r = optimize_schedule(&g, &opts);
+        assert_eq!(r.status, SolveStatus::TimeLimitFeasible);
+        assert_eq!(check_order(&g, &r.order), Ok(()));
+        assert!(r.spills.is_empty());
+        assert!(
+            r.sim_peak <= greedy_peak,
+            "windowed peak {} regressed over greedy {}",
+            r.sim_peak,
+            greedy_peak
+        );
+        assert!(r.model_size.1 > 0, "no window sub-ILPs were built");
+    }
+
+    #[test]
+    fn windowed_path_matches_simulation_on_random_dags() {
+        check("windowed_schedule_valid", 6, |rng| {
+            let g = random_dag(
+                rng,
+                &RandomDagConfig { num_nodes: 12 + rng.range(0, 10), ..Default::default() },
+            );
+            let greedy_peak = simulate(&g, &greedy_order(&g)).peak_bytes;
+            let opts = ScheduleOptions {
+                max_ilp_rows: 30 + rng.range(0, 60),
+                time_limit: Duration::from_secs(10),
+                solver_threads: 1,
+                ..Default::default()
+            };
+            let r = optimize_schedule(&g, &opts);
+            if let Err(e) = check_order(&g, &r.order) {
+                return crate::util::quickcheck::Outcome::Fail(e);
+            }
+            let resim = simulate(&g, &r.order).peak_bytes;
+            ensure(r.sim_peak <= greedy_peak && r.sim_peak == resim, || {
+                format!("peak {} vs greedy {}", r.sim_peak, greedy_peak)
+            })
+        });
+    }
+
     /// Capacity-envelope calibration harness for
     /// [`ScheduleOptions::max_ilp_rows`]: prints, for every zoo case, the
-    /// reduced-row estimate the capacity gate actually compares against
-    /// plus the time to the first solve under a short cap. Run it when
-    /// the engine or the hardware changes, then bump the default so the
-    /// graphs you care about stay on the ILP path:
+    /// reduced-row estimate the capacity gate actually compares against,
+    /// the unbounded single-model solve under a short cap, and — for the
+    /// cases past the default envelope — the per-window-budgeted rolling
+    /// solve, so the two regimes can be compared side by side. Run it
+    /// when the engine or the hardware changes, then bump the default so
+    /// the graphs you care about land on the regime you want:
     ///
     /// ```text
     /// cargo test --release calibrate_max_ilp_rows -- --ignored --nocapture
@@ -973,6 +1305,7 @@ mod tests {
     #[ignore = "calibration harness: run manually with --ignored --nocapture"]
     fn calibrate_max_ilp_rows_envelope() {
         use crate::models::{build_graph, ModelScale, ZOO};
+        let default_rows = ScheduleOptions::default().max_ilp_rows;
         for scale in [ModelScale::Reduced, ModelScale::Full] {
             for z in ZOO {
                 for batch in [1usize, 32] {
@@ -987,19 +1320,37 @@ mod tests {
                         &g,
                         &ScheduleOptions {
                             time_limit: Duration::from_secs(10),
-                            max_ilp_rows: usize::MAX,
-                            ..Default::default()
+                            ..ScheduleOptions::unbounded()
                         },
                     );
                     println!(
-                        "{:?} {:>14} bs{:<3} rows={:<6} status={:?} secs={:.2}",
+                        "{:?} {:>14} bs{:<3} rows={:<6} status={:?} secs={:.2} peak={}",
                         scale,
                         z.name,
                         batch,
                         rows,
                         r.status,
-                        watch.secs()
+                        watch.secs(),
+                        r.sim_peak
                     );
+                    if rows > default_rows {
+                        // Past the envelope: show what per-window
+                        // budgeting buys over the old greedy kill switch.
+                        let watch = crate::util::Stopwatch::start();
+                        let w = optimize_schedule(
+                            &g,
+                            &ScheduleOptions {
+                                time_limit: Duration::from_secs(10),
+                                ..Default::default()
+                            },
+                        );
+                        println!(
+                            "      windowed({} rows/window): secs={:.2} peak={}",
+                            default_rows,
+                            watch.secs(),
+                            w.sim_peak
+                        );
+                    }
                 }
             }
         }
