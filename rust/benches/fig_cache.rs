@@ -1,0 +1,164 @@
+//! Plan-cache serving latency (no paper figure — the perf companion to
+//! the content-addressed `serve::cache` layer).
+//!
+//! For each model the full pipeline is cold-solved once and inserted into
+//! a [`PlanCache`]; then:
+//!
+//! * **exact hit** — the same graph is looked up repeatedly; each lookup
+//!   re-validates the stored plan against the graph before returning it,
+//!   so the measured latency is the honest serve path, not a bare map
+//!   probe. The headline number is the median exact-hit latency vs the
+//!   cold solve.
+//! * **near hit** — single tensor sizes are perturbed (the dynamic-batch
+//!   shape of fleet traffic); each lookup maps the cached order onto the
+//!   new graph and re-solves the cached placement geometry for the new
+//!   sizes via RHS patches on a live dual-simplex basis. Timed against a
+//!   cold re-solve of the perturbed graph, with the basis warm-hit rate
+//!   reported.
+//!
+//! Writes `BENCH_fig_cache.json`; the `solver` objects feed the
+//! `check_bench` solver-efficiency gate in CI.
+
+use olla::bench_support::{
+    bench_solver_threads, fmt_secs, phase_cap, section, solver_stats_json, time_once, BenchReport,
+};
+use olla::coordinator::Table;
+use olla::models::{build_graph, ModelScale};
+use olla::olla::{optimize, validate_plan, PlacementOptions, PlannerOptions, ScheduleOptions};
+use olla::serve::{CacheLookup, PlanCache};
+use olla::util::human_bytes;
+use olla::util::json::{num, obj, s};
+
+/// Repeated exact-hit lookups per model (median reported).
+const EXACT_TRIALS: usize = 11;
+
+/// Size perturbations per model for the near-hit path.
+const NEAR_TRIALS: usize = 3;
+
+fn median(xs: &mut [f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+fn bench_opts() -> PlannerOptions {
+    PlannerOptions {
+        schedule: ScheduleOptions {
+            time_limit: phase_cap(),
+            solver_threads: bench_solver_threads(),
+            ..Default::default()
+        },
+        placement: PlacementOptions {
+            time_limit: phase_cap(),
+            solver_threads: bench_solver_threads(),
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let mut report = BenchReport::new("fig_cache");
+    let opts = bench_opts();
+    let mut table = Table::new(&[
+        "model", "arena", "cold", "exact hit", "speedup", "near hit", "near cold", "warm rate",
+    ]);
+    let mut best_exact_speedup = 0.0f64;
+
+    for &(name, batch) in &[("alexnet", 1usize), ("googlenet", 1)] {
+        section(&format!("{name} (batch {batch})"));
+        let g = build_graph(name, batch, ModelScale::Reduced).unwrap();
+        let cache = PlanCache::in_memory(8);
+
+        let (plan, cold_d) = time_once(|| optimize(&g, &opts));
+        let cold_secs = cold_d.as_secs_f64();
+        assert!(cache.insert(&g, &plan), "cold solve must be cacheable");
+
+        let mut exact_secs = Vec::with_capacity(EXACT_TRIALS);
+        for _ in 0..EXACT_TRIALS {
+            let (hit, d) = time_once(|| cache.lookup(&g));
+            match hit {
+                CacheLookup::Exact(p) => assert_eq!(p.arena_size, plan.arena_size),
+                other => panic!("{name}: expected an exact hit, got {other:?}"),
+            }
+            exact_secs.push(d.as_secs_f64());
+        }
+        let exact_med = median(&mut exact_secs);
+        let exact_speedup = cold_secs / exact_med.max(1e-9);
+        best_exact_speedup = best_exact_speedup.max(exact_speedup);
+
+        // Near hits: double a different sized tensor each trial — the
+        // skeleton matches, the sizes don't.
+        let mut sized: Vec<usize> = (0..g.edges.len()).filter(|&i| g.edges[i].size > 0).collect();
+        sized.sort_by_key(|&i| std::cmp::Reverse(g.edges[i].size));
+        let (mut near_secs, mut near_cold_secs) = (Vec::new(), Vec::new());
+        for t in 0..NEAR_TRIALS {
+            let mut g2 = g.clone();
+            g2.edges[sized[t % sized.len()]].size *= 2 + t as u64;
+            let (hit, d) = time_once(|| cache.lookup(&g2));
+            match hit {
+                CacheLookup::Near(near) => {
+                    if let Some(refined) = &near.refined {
+                        validate_plan(&g2, refined).unwrap();
+                    }
+                }
+                other => panic!("{name}: expected a near hit, got {other:?}"),
+            }
+            near_secs.push(d.as_secs_f64());
+            let (cold2, d2) = time_once(|| optimize(&g2, &opts));
+            validate_plan(&g2, &cold2).unwrap();
+            near_cold_secs.push(d2.as_secs_f64());
+        }
+        let near_med = median(&mut near_secs);
+        let near_cold_med = median(&mut near_cold_secs);
+        let near_speedup = near_cold_med / near_med.max(1e-9);
+        let st = cache.stats();
+        let warm_rate = if st.refine_attempts == 0 {
+            0.0
+        } else {
+            st.refine_warm_hits as f64 / st.refine_attempts as f64
+        };
+
+        table.row(vec![
+            name.to_string(),
+            human_bytes(plan.arena_size),
+            fmt_secs(cold_secs),
+            fmt_secs(exact_med),
+            format!("{exact_speedup:.0}x"),
+            fmt_secs(near_med),
+            fmt_secs(near_cold_med),
+            format!("{:.0}%", 100.0 * warm_rate),
+        ]);
+        report.push(obj(vec![
+            ("model", s(name)),
+            ("batch", num(batch as f64)),
+            ("arena_bytes", num(plan.arena_size as f64)),
+            ("cold_secs", num(cold_secs)),
+            ("exact_hit_secs", num(exact_med)),
+            ("exact_speedup", num(exact_speedup)),
+            ("near_hit_secs", num(near_med)),
+            ("near_cold_secs", num(near_cold_med)),
+            ("near_speedup", num(near_speedup)),
+            ("warm_hit_rate", num(warm_rate)),
+            (
+                "solver",
+                solver_stats_json(0, 0, st.refine_attempts, st.refine_warm_hits),
+            ),
+        ]));
+    }
+    table.print();
+
+    assert!(
+        best_exact_speedup >= 100.0,
+        "exact-hit serving must be >= 100x faster than a cold solve \
+         (best observed {best_exact_speedup:.0}x)"
+    );
+    println!("best exact-hit speedup: {best_exact_speedup:.0}x over cold solve");
+
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench report: {e}"),
+    }
+}

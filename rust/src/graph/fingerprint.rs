@@ -1,0 +1,552 @@
+//! Canonical, relabeling-invariant graph fingerprints.
+//!
+//! The content-addressed plan cache (`serve::cache`) keys stored plans by
+//! *what the graph is*, not by how its nodes happen to be numbered: two
+//! submissions that differ only in node/edge insertion order or in names
+//! must hash identically, while changing any tensor size, rewiring any
+//! edge, or adding/removing a node must change the hash.
+//!
+//! The canonicalization is a deterministic topo-order refinement:
+//!
+//! 1. **Weisfeiler-Lehman color refinement** — every node starts from a
+//!    color derived from its label-free local signature (op kind, fanin /
+//!    fanout arity, and — for the size-aware pass — incident tensor
+//!    sizes), then repeatedly absorbs the sorted colors of its neighbors
+//!    until the partition stops refining. Colors encode multi-hop
+//!    structure and are invariant under relabeling by construction.
+//! 2. **Canonical Kahn order** — a topological sort whose ready set is
+//!    ordered by a label-free key: the sorted `(canonical position of
+//!    producer, size)` signature of the node's fanin plus its WL color.
+//!    Every key component is itself relabeling-invariant, so ties can
+//!    only remain between structurally interchangeable (automorphic)
+//!    nodes, where the raw-id tie-break is harmless — any choice yields
+//!    the same canonical serialization.
+//! 3. **Canonical serialization** — node kinds in canonical order plus
+//!    every edge as `(producer position, sorted consumer positions,
+//!    size)`, hashed with FNV-1a.
+//!
+//! Two hashes are derived: [`GraphFingerprint::full`] runs the passes
+//! size-aware (the exact-hit cache key) and [`GraphFingerprint::skeleton`]
+//! runs them size-free (the near-hit key: same architecture, different
+//! tensor sizes — e.g. a new batch size). The property tests at the
+//! bottom pin invariance and sensitivity over the whole model zoo.
+
+use super::{EdgeId, Graph, NodeId, OpKind};
+use std::collections::BTreeSet;
+use std::fmt;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a over little-endian `u64` words.
+#[derive(Clone, Copy)]
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(FNV_OFFSET)
+    }
+
+    fn word(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.0 = (self.0 ^ u64::from(b)).wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    fn finish(self) -> u64 {
+        self.0
+    }
+}
+
+/// Stable numeric tag per op kind (names are deliberately excluded from
+/// the fingerprint; kinds are structural).
+fn kind_tag(k: OpKind) -> u64 {
+    match k {
+        OpKind::Parameter => 1,
+        OpKind::Input => 2,
+        OpKind::Compute => 3,
+        OpKind::WeightUpdate => 4,
+        OpKind::Output => 5,
+    }
+}
+
+/// Content-addressed identity of a [`Graph`], invariant under node /
+/// edge relabeling and renaming.
+///
+/// Serialized as 32 lowercase hex characters (`full` then `skeleton`);
+/// the encoding round-trips through [`GraphFingerprint::from_hex`] and is
+/// stable across processes (no randomized hashing anywhere).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GraphFingerprint {
+    /// Size-aware structural hash: the exact-hit cache key.
+    pub full: u64,
+    /// Size-free structural hash of the architecture skeleton: the
+    /// near-hit key (same topology, different tensor sizes).
+    pub skeleton: u64,
+}
+
+impl GraphFingerprint {
+    /// 32-character lowercase hex form (`full` then `skeleton`), used as
+    /// the on-disk cache file stem.
+    pub fn to_hex(&self) -> String {
+        format!("{:016x}{:016x}", self.full, self.skeleton)
+    }
+
+    /// Parse the [`GraphFingerprint::to_hex`] form; `None` on anything
+    /// that is not exactly 32 hex digits.
+    pub fn from_hex(text: &str) -> Option<GraphFingerprint> {
+        let t = text.trim();
+        if t.len() != 32 || !t.bytes().all(|b| b.is_ascii_hexdigit()) {
+            return None;
+        }
+        let full = u64::from_str_radix(&t[..16], 16).ok()?;
+        let skeleton = u64::from_str_radix(&t[16..], 16).ok()?;
+        Some(GraphFingerprint { full, skeleton })
+    }
+}
+
+impl fmt::Display for GraphFingerprint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.to_hex())
+    }
+}
+
+/// The canonical numbering produced by the topo-order refinement: a
+/// bijection between raw ids and relabeling-invariant positions, used to
+/// remap cached plans onto a differently-labeled submission of the same
+/// graph.
+#[derive(Debug, Clone)]
+pub struct CanonicalForm {
+    /// Node at each canonical position (`node_at[pos] = id`).
+    pub node_at: Vec<NodeId>,
+    /// Canonical position of each node (`node_pos[id.idx()] = pos`).
+    pub node_pos: Vec<usize>,
+    /// Edge at each canonical position.
+    pub edge_at: Vec<EdgeId>,
+    /// Canonical position of each edge.
+    pub edge_pos: Vec<usize>,
+}
+
+fn refine_colors(g: &Graph, with_sizes: bool) -> Vec<u64> {
+    let n = g.num_nodes();
+    let mut colors: Vec<u64> = g
+        .node_ids()
+        .map(|v| {
+            let nd = g.node(v);
+            let mut h = Fnv::new();
+            h.word(kind_tag(nd.kind));
+            h.word(nd.fanin.len() as u64);
+            h.word(nd.fanout.len() as u64);
+            if with_sizes {
+                let mut szs: Vec<u64> = nd.fanin.iter().map(|&e| g.edge(e).size).collect();
+                szs.sort_unstable();
+                for sz in szs {
+                    h.word(sz);
+                }
+                let mut szs: Vec<u64> = nd.fanout.iter().map(|&e| g.edge(e).size).collect();
+                szs.sort_unstable();
+                for sz in szs {
+                    h.word(sz);
+                }
+            }
+            h.finish()
+        })
+        .collect();
+    let mut distinct = count_distinct(&colors);
+    // Each round folds the old color in, so the partition only ever
+    // refines; the distinct-count sequence (and hence the number of
+    // rounds run) is itself isomorphism-invariant. The cap bounds cost
+    // on pathological graphs without breaking invariance.
+    for _ in 0..n.min(32) {
+        colors = g
+            .node_ids()
+            .map(|v| {
+                let nd = g.node(v);
+                let mut in_sigs: Vec<u64> = nd
+                    .fanin
+                    .iter()
+                    .map(|&e| {
+                        let ed = g.edge(e);
+                        let mut h = Fnv::new();
+                        h.word(1);
+                        h.word(colors[ed.src.idx()]);
+                        h.word(if with_sizes { ed.size } else { 0 });
+                        h.finish()
+                    })
+                    .collect();
+                in_sigs.sort_unstable();
+                let mut out_sigs: Vec<u64> = nd
+                    .fanout
+                    .iter()
+                    .map(|&e| {
+                        let ed = g.edge(e);
+                        let mut snk_colors: Vec<u64> =
+                            ed.snks.iter().map(|s| colors[s.idx()]).collect();
+                        snk_colors.sort_unstable();
+                        let mut h = Fnv::new();
+                        h.word(2);
+                        h.word(if with_sizes { ed.size } else { 0 });
+                        h.word(snk_colors.len() as u64);
+                        for c in snk_colors {
+                            h.word(c);
+                        }
+                        h.finish()
+                    })
+                    .collect();
+                out_sigs.sort_unstable();
+                let mut h = Fnv::new();
+                h.word(colors[v.idx()]);
+                for sig in in_sigs {
+                    h.word(sig);
+                }
+                h.word(u64::MAX);
+                for sig in out_sigs {
+                    h.word(sig);
+                }
+                h.finish()
+            })
+            .collect();
+        let d = count_distinct(&colors);
+        if d == distinct {
+            break;
+        }
+        distinct = d;
+    }
+    colors
+}
+
+fn count_distinct(xs: &[u64]) -> usize {
+    xs.iter().collect::<BTreeSet<_>>().len()
+}
+
+/// Ready-set ordering key for the canonical Kahn sort: hash of the
+/// sorted `(producer canonical position, size)` fanin signature plus the
+/// node's WL color. All predecessors are already placed when a node
+/// becomes ready, so the key is fixed at insertion time.
+fn ready_key(g: &Graph, colors: &[u64], node_pos: &[usize], v: NodeId, with_sizes: bool) -> u64 {
+    let mut sigs: Vec<u64> = g
+        .node(v)
+        .fanin
+        .iter()
+        .map(|&e| {
+            let ed = g.edge(e);
+            let mut h = Fnv::new();
+            h.word(node_pos[ed.src.idx()] as u64);
+            h.word(if with_sizes { ed.size } else { 0 });
+            h.finish()
+        })
+        .collect();
+    sigs.sort_unstable();
+    let mut h = Fnv::new();
+    h.word(sigs.len() as u64);
+    for sig in sigs {
+        h.word(sig);
+    }
+    h.word(colors[v.idx()]);
+    h.finish()
+}
+
+/// Compute the canonical numbering (§ module docs). `with_sizes` selects
+/// the size-aware (exact) or size-free (skeleton) refinement.
+pub fn canonical_form(g: &Graph, with_sizes: bool) -> CanonicalForm {
+    let n = g.num_nodes();
+    let colors = refine_colors(g, with_sizes);
+
+    // `fanin` holds one entry per (edge, sink occurrence), matching the
+    // per-occurrence decrements below.
+    let mut indeg: Vec<usize> = g.node_ids().map(|v| g.node(v).fanin.len()).collect();
+    let mut ready: BTreeSet<(u64, u32)> = BTreeSet::new();
+    let mut node_pos = vec![usize::MAX; n];
+    let mut node_at: Vec<NodeId> = Vec::with_capacity(n);
+    for v in g.node_ids() {
+        if indeg[v.idx()] == 0 {
+            ready.insert((ready_key(g, &colors, &node_pos, v, with_sizes), v.0));
+        }
+    }
+    while let Some(&entry) = ready.iter().next() {
+        ready.remove(&entry);
+        let v = NodeId(entry.1);
+        node_pos[v.idx()] = node_at.len();
+        node_at.push(v);
+        for &e in &g.node(v).fanout {
+            for &snk in &g.edge(e).snks {
+                indeg[snk.idx()] -= 1;
+                if indeg[snk.idx()] == 0 {
+                    ready.insert((ready_key(g, &colors, &node_pos, snk, with_sizes), snk.0));
+                }
+            }
+        }
+    }
+    // OLLA graphs are DAGs (Graph::validate enforces it); keep the map
+    // total anyway if a cyclic graph sneaks in: append the unplaced rest
+    // deterministically (no relabeling-invariance promise on cycles).
+    if node_at.len() < n {
+        let mut rest: Vec<NodeId> =
+            g.node_ids().filter(|v| node_pos[v.idx()] == usize::MAX).collect();
+        rest.sort_by_key(|v| (colors[v.idx()], v.0));
+        for v in rest {
+            node_pos[v.idx()] = node_at.len();
+            node_at.push(v);
+        }
+    }
+
+    // Edges ordered by their structural key; the tuple compare is exact
+    // (no hashing), so equal keys mean structurally identical edges.
+    let mut keys: Vec<(usize, Vec<usize>, u64, u32)> = g
+        .edge_ids()
+        .map(|e| {
+            let ed = g.edge(e);
+            let mut snks: Vec<usize> = ed.snks.iter().map(|v| node_pos[v.idx()]).collect();
+            snks.sort_unstable();
+            (node_pos[ed.src.idx()], snks, if with_sizes { ed.size } else { 0 }, e.0)
+        })
+        .collect();
+    keys.sort();
+    let edge_at: Vec<EdgeId> = keys.iter().map(|k| EdgeId(k.3)).collect();
+    let mut edge_pos = vec![usize::MAX; g.num_edges()];
+    for (pos, e) in edge_at.iter().enumerate() {
+        edge_pos[e.idx()] = pos;
+    }
+    CanonicalForm { node_at, node_pos, edge_at, edge_pos }
+}
+
+fn canonical_hash(g: &Graph, cf: &CanonicalForm, with_sizes: bool) -> u64 {
+    let mut h = Fnv::new();
+    h.word(g.num_nodes() as u64);
+    h.word(g.num_edges() as u64);
+    for &v in &cf.node_at {
+        h.word(kind_tag(g.node(v).kind));
+    }
+    for &e in &cf.edge_at {
+        let ed = g.edge(e);
+        h.word(cf.node_pos[ed.src.idx()] as u64);
+        let mut snks: Vec<u64> = ed.snks.iter().map(|v| cf.node_pos[v.idx()] as u64).collect();
+        snks.sort_unstable();
+        h.word(snks.len() as u64);
+        for p in snks {
+            h.word(p);
+        }
+        if with_sizes {
+            h.word(ed.size);
+        }
+    }
+    h.finish()
+}
+
+/// Fingerprint a graph: size-aware `full` hash plus size-free `skeleton`
+/// hash (see module docs for the canonicalization).
+pub fn fingerprint(g: &Graph) -> GraphFingerprint {
+    let cf_full = canonical_form(g, true);
+    let cf_skel = canonical_form(g, false);
+    GraphFingerprint {
+        full: canonical_hash(g, &cf_full, true),
+        skeleton: canonical_hash(g, &cf_skel, false),
+    }
+}
+
+/// True when two graphs are identical *including their labeling* (same
+/// ids produce/consume the same ids at the same sizes; names ignored).
+/// The cache's fast path: plans transfer with no id remapping at all.
+pub fn same_labeled_structure(a: &Graph, b: &Graph) -> bool {
+    a.num_nodes() == b.num_nodes()
+        && a.num_edges() == b.num_edges()
+        && a.nodes.iter().zip(&b.nodes).all(|(x, y)| x.kind == y.kind)
+        && a.edges
+            .iter()
+            .zip(&b.edges)
+            .all(|(x, y)| x.src == y.src && x.snks == y.snks && x.size == y.size)
+}
+
+/// Rebuild `g` with nodes and edges inserted in a random order (and
+/// fresh names): same structure, fully permuted ids. Returns the
+/// relabeled graph and the old→new node map. Shared by the fingerprint
+/// and plan-cache test suites.
+#[cfg(test)]
+pub(crate) fn relabel(g: &Graph, rng: &mut crate::util::rng::Rng) -> (Graph, Vec<NodeId>) {
+    let mut nperm: Vec<usize> = (0..g.num_nodes()).collect();
+    rng.shuffle(&mut nperm);
+    let mut new_of_old = vec![NodeId(0); g.num_nodes()];
+    let mut h = Graph::new(format!("{}-relabeled", g.name));
+    for (k, &old) in nperm.iter().enumerate() {
+        let nd = g.node(NodeId(old as u32));
+        new_of_old[old] = h.add_node(format!("n{k}"), nd.kind);
+    }
+    let mut eperm: Vec<usize> = (0..g.num_edges()).collect();
+    rng.shuffle(&mut eperm);
+    for (k, &old) in eperm.iter().enumerate() {
+        let ed = g.edge(EdgeId(old as u32));
+        let snks: Vec<NodeId> = ed.snks.iter().map(|v| new_of_old[v.idx()]).collect();
+        h.add_edge(format!("e{k}"), new_of_old[ed.src.idx()], &snks, ed.size);
+    }
+    (h, new_of_old)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::random::random_trainlike;
+    use crate::models::{build_graph, ModelScale, ZOO};
+    use crate::util::quickcheck::{check, ensure, Outcome};
+    use crate::util::rng::Rng;
+
+    fn zoo_graphs() -> Vec<(&'static str, Graph)> {
+        ZOO.iter()
+            .map(|z| (z.name, build_graph(z.name, 1, ModelScale::Reduced).unwrap()))
+            .collect()
+    }
+
+    #[test]
+    fn zoo_fingerprints_invariant_under_relabeling() {
+        let mut rng = Rng::new(7);
+        for (name, g) in zoo_graphs() {
+            let fp = fingerprint(&g);
+            for trial in 0..3 {
+                let (h, _) = relabel(&g, &mut rng);
+                h.validate().unwrap();
+                assert_eq!(
+                    fingerprint(&h),
+                    fp,
+                    "{name}: fingerprint changed under relabeling (trial {trial})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn canonical_form_maps_relabelings_isomorphically() {
+        let mut rng = Rng::new(11);
+        for (name, g) in zoo_graphs().into_iter().take(4) {
+            let (h, new_of_old) = relabel(&g, &mut rng);
+            let cg = canonical_form(&g, true);
+            let ch = canonical_form(&h, true);
+            for v in g.node_ids() {
+                let via_canon = ch.node_at[cg.node_pos[v.idx()]];
+                // Canonical positions may swap automorphic nodes, so
+                // compare structure-bearing attributes, not raw ids.
+                assert_eq!(
+                    h.node(via_canon).kind,
+                    g.node(v).kind,
+                    "{name}: kind mismatch through the canonical map"
+                );
+            }
+            for e in g.edge_ids() {
+                let via_canon = ch.edge_at[cg.edge_pos[e.idx()]];
+                assert_eq!(
+                    h.edge(via_canon).size,
+                    g.edge(e).size,
+                    "{name}: size mismatch through the canonical map"
+                );
+            }
+            // The true relabeling is *a* witness of identity even if the
+            // canonical map picked a different automorphism.
+            assert!(new_of_old.len() == g.num_nodes());
+        }
+    }
+
+    #[test]
+    fn zoo_fingerprints_sensitive_to_single_size_mutation() {
+        for (name, g) in zoo_graphs() {
+            let fp = fingerprint(&g);
+            let sized = g.edge_ids().find(|&e| g.edge(e).size > 0).unwrap();
+            let mut h = g.clone();
+            h.edges[sized.idx()].size += 1;
+            let fp2 = fingerprint(&h);
+            assert_ne!(fp2.full, fp.full, "{name}: full hash ignored a size change");
+            assert_eq!(
+                fp2.skeleton, fp.skeleton,
+                "{name}: skeleton hash must ignore pure size changes"
+            );
+        }
+    }
+
+    #[test]
+    fn zoo_fingerprints_sensitive_to_edge_mutation() {
+        for (name, g) in zoo_graphs() {
+            let fp = fingerprint(&g);
+            // Rewire: give the first multi-sink edge one fewer consumer;
+            // fall back to appending a sink if none exists.
+            let mut h = g.clone();
+            if let Some(e) = h.edge_ids().find(|&e| h.edge(e).snks.len() > 1) {
+                let dropped = h.edges[e.idx()].snks.pop().unwrap();
+                let pos = h.nodes[dropped.idx()].fanin.iter().position(|&f| f == e).unwrap();
+                h.nodes[dropped.idx()].fanin.remove(pos);
+            } else {
+                let last = NodeId(h.num_nodes() as u32 - 1);
+                let e = h
+                    .edge_ids()
+                    .find(|&e| h.edge(e).src != last && !h.edge(e).snks.contains(&last))
+                    .unwrap();
+                h.add_sink(e, last);
+            }
+            let fp2 = fingerprint(&h);
+            assert_ne!(fp2.full, fp.full, "{name}: full hash ignored an edge rewiring");
+            assert_ne!(fp2.skeleton, fp.skeleton, "{name}: skeleton hash ignored a rewiring");
+        }
+    }
+
+    #[test]
+    fn zoo_has_no_internal_collisions() {
+        let fps: Vec<(&str, GraphFingerprint)> =
+            zoo_graphs().iter().map(|(n, g)| (*n, fingerprint(g))).collect();
+        for i in 0..fps.len() {
+            for j in (i + 1)..fps.len() {
+                assert_ne!(
+                    fps[i].1.full, fps[j].1.full,
+                    "full-hash collision between {} and {}",
+                    fps[i].0, fps[j].0
+                );
+                assert_ne!(
+                    fps[i].1.skeleton, fps[j].1.skeleton,
+                    "skeleton collision between {} and {}",
+                    fps[i].0, fps[j].0
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fingerprint_ignores_names_and_roundtrips_hex() {
+        let g = build_graph("alexnet", 1, ModelScale::Reduced).unwrap();
+        let fp = fingerprint(&g);
+        let mut renamed = g.clone();
+        renamed.name = "anything".into();
+        for (k, n) in renamed.nodes.iter_mut().enumerate() {
+            n.name = format!("renamed{k}");
+        }
+        for (k, e) in renamed.edges.iter_mut().enumerate() {
+            e.name = format!("t{k}");
+        }
+        assert_eq!(fingerprint(&renamed), fp, "names must not affect the fingerprint");
+        // Deterministic across repeated computation, and hex round-trips.
+        assert_eq!(fingerprint(&g), fp);
+        let hex = fp.to_hex();
+        assert_eq!(hex.len(), 32);
+        assert_eq!(GraphFingerprint::from_hex(&hex), Some(fp));
+        assert_eq!(GraphFingerprint::from_hex("xyz"), None);
+        assert_eq!(format!("{fp}"), hex);
+    }
+
+    #[test]
+    fn random_graph_fingerprint_properties() {
+        check("fingerprint_relabel_invariance_random", 20, |rng| {
+            let g = random_trainlike(rng, rng.range(2, 5));
+            let fp = fingerprint(&g);
+            let (h, _) = relabel(&g, rng);
+            ensure(fingerprint(&h) == fp, || "relabeled fingerprint differs".into())
+        });
+        check("fingerprint_size_sensitivity_random", 20, |rng| {
+            let g = random_trainlike(rng, rng.range(2, 5));
+            let sized: Vec<EdgeId> = g.edge_ids().filter(|&e| g.edge(e).size > 0).collect();
+            if sized.is_empty() {
+                return Outcome::Discard;
+            }
+            let e = *rng.choose(&sized);
+            let mut h = g.clone();
+            h.edges[e.idx()].size *= 2;
+            let (a, b) = (fingerprint(&g), fingerprint(&h));
+            ensure(a.full != b.full && a.skeleton == b.skeleton, || {
+                "size mutation not reflected as full-only change".into()
+            })
+        });
+    }
+}

@@ -7,6 +7,7 @@
 
 pub mod analysis;
 pub mod dot;
+pub mod fingerprint;
 pub mod json_io;
 pub mod random;
 

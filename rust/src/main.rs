@@ -17,7 +17,7 @@ use olla::graph::dot::to_dot;
 use olla::models::{build_graph, ModelScale, ZOO};
 use olla::olla::{MemoryTopology, PlacementOptions, PlannerOptions, ScheduleOptions};
 use olla::runtime::{Engine, Manifest, Trainer};
-use olla::serve::{PlanHandle, PlanPhase, PlanRequest, PlanService};
+use olla::serve::{PlanCache, PlanHandle, PlanPhase, PlanRequest, PlanService};
 use olla::util::anyhow;
 use olla::util::{human_bytes, human_duration};
 use std::path::PathBuf;
@@ -88,6 +88,11 @@ COMMANDS:
       --batch N               batch size (default 1)
       --workers N             concurrent planner pipelines (default 2)
       --deadline-ms MS        per-request deadline (default 10000)
+      --cache-dir DIR         persistent content-addressed plan cache:
+                              exact-hit graphs are answered from the cache
+                              (re-validated), near-hit graphs seed the solve,
+                              and solved plans are stored for next time
+      --cache-capacity N      max cached plans before LRU eviction (default 64)
   sweep                       reordering sweep over the whole zoo (Fig. 7)
       --batch LIST            comma-separated batch sizes (default 1,32)
       --scale full|reduced    (default reduced)
@@ -398,7 +403,21 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         Some(list) => list.split(',').map(str::to_string).collect(),
         None => ZOO.iter().map(|z| z.name.to_string()).collect(),
     };
-    let svc = PlanService::new(workers);
+    let cache = match flag(rest, "--cache-dir") {
+        Some(dir) => {
+            let capacity: usize =
+                flag(rest, "--cache-capacity").and_then(|v| v.parse().ok()).unwrap_or(64);
+            let c = PlanCache::persistent(std::path::Path::new(&dir), capacity)
+                .map_err(|e| anyhow::anyhow!("--cache-dir {dir}: {e}"))?;
+            println!(
+                "plan cache: {} entries loaded from {dir} (capacity {capacity})",
+                c.len()
+            );
+            Some(std::sync::Arc::new(c))
+        }
+        None => None,
+    };
+    let svc = PlanService::new(workers).coalescing();
     println!(
         "serving {} plan requests over {} workers ({} deadline each)",
         names.len(),
@@ -411,11 +430,13 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
             .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
         let mut req = PlanRequest::new(g);
         req.deadline = Some(Duration::from_millis(deadline_ms));
-        let handle = svc.submit(req).map_err(|e| anyhow::anyhow!("{name}: {e}"))?;
-        handles.push((name.clone(), handle));
+        let (handle, tier) = svc
+            .submit_tiered(req, cache.as_ref())
+            .map_err(|e| anyhow::anyhow!("{name}: {e}"))?;
+        handles.push((name.clone(), handle, tier));
     }
-    let mut t = Table::new(&["model", "arena", "status", "gap", "time"]);
-    for (name, handle) in handles {
+    let mut t = Table::new(&["model", "arena", "status", "gap", "time", "served"]);
+    for (name, handle, tier) in handles {
         // Poll only once the request finished, so the gap column reflects
         // the final solve rather than a queued/mid-search snapshot.
         while !handle.is_finished() {
@@ -429,9 +450,21 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
             plan.schedule.status.to_string(),
             if snap.gap.is_finite() { format!("{:.2}%", 100.0 * snap.gap) } else { "?".into() },
             human_duration(Duration::from_secs_f64(plan.total_secs)),
+            tier.to_string(),
         ]);
     }
     t.print();
+    if let Some(cache) = &cache {
+        let st = cache.stats();
+        println!(
+            "cache: {} exact hits, {} near hits, {} misses, {} entries ({} corrupt rejected)",
+            st.exact_hits,
+            st.near_hits,
+            st.misses,
+            cache.len(),
+            st.rejected_corrupt,
+        );
+    }
     Ok(())
 }
 

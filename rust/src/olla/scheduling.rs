@@ -122,6 +122,14 @@ pub struct ScheduleOptions {
     /// shrink the device peak; large values spill only what the capacity
     /// forces. Ignored without a device cap.
     pub recompute_penalty: f64,
+    /// Seed order for the ILP warm start, taking precedence over the
+    /// greedy baseline when set (used by the plan cache's near-hit path
+    /// to start the solver from a cached plan's order). The seed must be
+    /// a valid topological order of the graph and encode feasibly into
+    /// the chosen horizon — otherwise it is ignored and the usual greedy
+    /// warm start applies. Only the monolithic ILP path consumes it; the
+    /// windowed and greedy fallback paths keep their own seeding.
+    pub initial_order: Option<Vec<NodeId>>,
 }
 
 /// Default [`ScheduleOptions::recompute_penalty`]: cheap enough that
@@ -143,6 +151,7 @@ impl Default for ScheduleOptions {
             control: None,
             topology: MemoryTopology::single(),
             recompute_penalty: DEFAULT_RECOMPUTE_PENALTY,
+            initial_order: None,
         }
     }
 }
@@ -860,15 +869,29 @@ pub fn optimize_schedule_anytime(
     }
 
     let initial = if opts.warm_start {
-        let wa = warm_start_assignment(g, &sm, &greedy_order(g));
-        // Capacity-aware models: the greedy spill repair is best-effort,
-        // so gate the warm start on actual feasibility instead of handing
-        // the solver an over-cap incumbent (which it would silently drop).
-        if sm.device_cap.is_some() && sm.model.check_feasible(&wa, 1e-6).is_err() {
-            None
-        } else {
-            Some(wa)
-        }
+        // A caller-provided seed order (the plan cache's near-hit path
+        // maps a cached plan's order onto this graph) takes precedence
+        // over the greedy baseline. The seed is always feasibility-gated:
+        // a foreign order can fail to encode into a compressed horizon,
+        // in which case we fall back to the greedy warm start below.
+        let seeded = opts
+            .initial_order
+            .as_ref()
+            .filter(|seed| check_order(g, seed).is_ok())
+            .map(|seed| warm_start_assignment(g, &sm, seed))
+            .filter(|wa| sm.model.check_feasible(wa, 1e-6).is_ok());
+        seeded.or_else(|| {
+            let wa = warm_start_assignment(g, &sm, &greedy_order(g));
+            // Capacity-aware models: the greedy spill repair is
+            // best-effort, so gate the warm start on actual feasibility
+            // instead of handing the solver an over-cap incumbent (which
+            // it would silently drop).
+            if sm.device_cap.is_some() && sm.model.check_feasible(&wa, 1e-6).is_err() {
+                None
+            } else {
+                Some(wa)
+            }
+        })
     } else {
         None
     };

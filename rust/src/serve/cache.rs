@@ -1,0 +1,1182 @@
+//! Content-addressed plan cache for the serving front.
+//!
+//! A planner serving fleet traffic sees the same graphs constantly: every
+//! replica of a model at a handful of batch sizes submits a structurally
+//! identical request, yet a cold eq.-14/eq.-15 solve costs seconds. OLLA's
+//! own premise is that a plan is computed once and amortized across
+//! training steps; this cache amortizes across *requests* too, keyed by
+//! the content of the graph rather than its name.
+//!
+//! The key is [`GraphFingerprint`] from [`crate::graph::fingerprint`]: a
+//! structural hash over canonical topological order, invariant under node
+//! relabeling and insertion-order permutation. Lookups resolve in three
+//! tiers:
+//!
+//! 1. **Exact hit** — the size-aware `full` hash matches. The stored plan
+//!    is remapped onto the submitted graph's IDs through the canonical
+//!    forms of both graphs and re-validated with
+//!    [`validate_plan`] before it is returned; a cached
+//!    entry can therefore never serve a plan the validator would reject
+//!    (a corrupted or stale entry is evicted and the lookup falls through).
+//! 2. **Near hit** — only the size-free `skeleton` hash matches: same
+//!    topology, some tensor sizes changed (e.g. a new batch size). The
+//!    cached order is remapped onto the submitted graph and returned as a
+//!    seed for [`crate::olla::ScheduleOptions::initial_order`], and — for
+//!    single-region, spill-free plans — a per-entry *address refinement
+//!    LP* re-derives offsets for the new sizes in milliseconds: the cached
+//!    placement's stacking order becomes difference constraints
+//!    (`x_below - x_above ≤ -size_below`), sizes are swapped in with
+//!    [`Patch::Rhs`] edits (which keep the dual-simplex basis feasible),
+//!    and [`PatchableModel::solve_lp`] warm-starts from the previous
+//!    solve's basis.
+//! 3. **Miss** — neither hash matches; the caller cold-solves and
+//!    [`PlanCache::insert`]s the result.
+//!
+//! With a `--cache-dir`, entries persist as one JSON file per fingerprint
+//! (`<32 hex digits>.json` holding the graph and the plan's certificate:
+//! order, offsets, regions, spill intervals, segment placements). A
+//! restarted `olla serve` reloads the corpus; any file that fails parsing,
+//! fingerprint verification, or plan re-validation is counted in
+//! [`CacheStats::rejected_corrupt`] and skipped — corruption degrades to a
+//! cold solve, never to a wrong answer. The cache is size-bounded with
+//! least-recently-used eviction.
+
+use crate::alloc::{items_from_trace, resident_lower_bound, SegmentPlacements};
+use crate::graph::fingerprint::{
+    canonical_form, fingerprint, same_labeled_structure, CanonicalForm, GraphFingerprint,
+};
+use crate::graph::{json_io, EdgeId, Graph, NodeId};
+use crate::ilp::patch::{Patch, PatchableModel};
+use crate::ilp::simplex::{LpOptions, LpStatus};
+use crate::ilp::{IlpBuilder, SolveStatus, VarId};
+use crate::olla::placement::{PlacementMethod, PlacementResult};
+use crate::olla::scheduling::{
+    check_spills_with_trace, device_profile_with_trace, ScheduleResult, SpillIntervals,
+};
+use crate::olla::topology::{
+    bytes_offloaded, region_lower_bound_segments, transfer_cost_segments,
+};
+use crate::olla::{validate_plan, MemoryPlan, MemoryRegion, MemoryTopology};
+use crate::sched::sim::{check_order, simulate};
+use crate::util::json::{num, obj, s, Json};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Result of a [`PlanCache::lookup`].
+#[derive(Debug)]
+pub enum CacheLookup {
+    /// The size-aware fingerprint matched: `0` is the cached plan remapped
+    /// onto the submitted graph and re-validated against it. Safe to
+    /// return to the requester as-is.
+    Exact(MemoryPlan),
+    /// Only the size-free skeleton matched: the cached solution seeds a
+    /// fresh solve instead of answering outright.
+    Near(NearHit),
+    /// Nothing cached for this graph; cold-solve and
+    /// [`PlanCache::insert`] the result.
+    Miss,
+}
+
+/// A near-hit: the cached entry's solution carried over to the submitted
+/// graph as warm-start material.
+#[derive(Debug)]
+pub struct NearHit {
+    /// The cached plan's execution order remapped onto the submitted
+    /// graph's node IDs (a verified topological order of that graph).
+    /// Feed it to [`crate::olla::ScheduleOptions::initial_order`] so the
+    /// scheduling ILP starts from the cached incumbent.
+    pub order: Vec<NodeId>,
+    /// A full validated plan produced by the address-refinement LP when
+    /// the entry is eligible (single-region, spill-free, modest size):
+    /// the cached stacking order re-solved for the new tensor sizes via
+    /// [`Patch::Rhs`] + dual-simplex warm start. `None` when refinement
+    /// is inapplicable or failed; the `order` seed still applies.
+    pub refined: Option<MemoryPlan>,
+}
+
+/// Monotonic counters describing cache behavior since construction
+/// (including entries loaded — or rejected — while reopening a
+/// persistent cache directory).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups answered with a re-validated stored plan.
+    pub exact_hits: u64,
+    /// Lookups answered with warm-start material from a skeleton match.
+    pub near_hits: u64,
+    /// Lookups that found nothing usable.
+    pub misses: u64,
+    /// Plans accepted by [`PlanCache::insert`].
+    pub insertions: u64,
+    /// Entries evicted by the LRU capacity bound.
+    pub evictions: u64,
+    /// Persisted entries rejected at load or lookup time (unparseable
+    /// JSON, fingerprint mismatch, or a plan that failed re-validation).
+    pub rejected_corrupt: u64,
+    /// Address-refinement LP solves attempted on near hits.
+    pub refine_attempts: u64,
+    /// Refinement solves where the dual-simplex warm basis carried the
+    /// re-solve (see [`PatchableModel::warm_hits`]).
+    pub refine_warm_hits: u64,
+}
+
+/// The portable certificate of a plan: exactly the fields needed to
+/// reconstruct a full [`MemoryPlan`] against a graph via [`rebuild_plan`]
+/// (everything else — lifetimes, lower bounds, costs — is recomputed).
+struct PlanParts {
+    order: Vec<NodeId>,
+    offsets: HashMap<EdgeId, u64>,
+    region_of: HashMap<EdgeId, usize>,
+    spills: SpillIntervals,
+    segment_offsets: HashMap<EdgeId, SegmentPlacements>,
+    region_sizes: Vec<u64>,
+    topology: MemoryTopology,
+    ilp_peak: u64,
+    control_edges_added: usize,
+}
+
+/// Reconstruct a validated [`MemoryPlan`] from its certificate, mirroring
+/// the recipe of [`crate::olla::planner::materialize_plan`] but taking
+/// offsets/regions/segments from `parts` instead of re-placing. Fails —
+/// rather than fabricating — whenever the certificate disagrees with the
+/// graph: bad order, out-of-range spill intervals, missing offsets, or a
+/// final [`validate_plan`] rejection.
+fn rebuild_plan(g: &Graph, parts: PlanParts) -> Result<MemoryPlan, String> {
+    check_order(g, &parts.order)?;
+    let trace = simulate(g, &parts.order);
+    check_spills_with_trace(g, &parts.order, &trace, &parts.spills)?;
+    let items = items_from_trace(g, &trace);
+    let windows: Vec<Vec<(usize, usize)>> = items
+        .iter()
+        .map(|it| parts.spills.get(&it.edge).cloned().unwrap_or_default())
+        .collect();
+    let arena = *parts.region_sizes.first().ok_or("cache entry has no region sizes")?;
+    let mut offs = Vec::with_capacity(items.len());
+    let mut regions = Vec::with_capacity(items.len());
+    for it in &items {
+        let o = parts
+            .offsets
+            .get(&it.edge)
+            .ok_or_else(|| format!("cache entry missing offset for edge {}", it.edge.0))?;
+        offs.push(*o);
+        regions.push(parts.region_of.get(&it.edge).copied().unwrap_or(0));
+    }
+    let segments: Vec<SegmentPlacements> = if parts.segment_offsets.is_empty() {
+        Vec::new()
+    } else {
+        items
+            .iter()
+            .map(|it| parts.segment_offsets.get(&it.edge).cloned().unwrap_or_default())
+            .collect()
+    };
+    let lb = if parts.topology.is_single() {
+        resident_lower_bound(&items)
+    } else {
+        region_lower_bound_segments(&items, &windows, &regions, 0)
+    };
+    let device_peak =
+        device_profile_with_trace(g, &trace, &parts.spills).into_iter().max().unwrap_or(0);
+    let ilp_peak = if parts.spills.is_empty() { parts.ilp_peak } else { device_peak };
+    let mut offsets = HashMap::new();
+    let mut region_of = HashMap::new();
+    let mut segment_offsets = HashMap::new();
+    for (k, it) in items.iter().enumerate() {
+        offsets.insert(it.edge, offs[k]);
+        if regions[k] != 0 {
+            region_of.insert(it.edge, regions[k]);
+        }
+        if let Some(segs) = segments.get(k) {
+            if !segs.is_empty() {
+                segment_offsets.insert(it.edge, segs.clone());
+            }
+        }
+    }
+    let schedule = ScheduleResult {
+        order: parts.order.clone(),
+        ilp_peak,
+        sim_peak: trace.peak_bytes,
+        spills: parts.spills.clone(),
+        device_peak,
+        status: SolveStatus::TimeLimitFeasible,
+        solve_secs: 0.0,
+        incumbents: Vec::new(),
+        model_size: (0, 0),
+        nodes: 0,
+        simplex_iters: 0,
+        warm_attempts: 0,
+        warm_hits: 0,
+    };
+    let placement = PlacementResult {
+        offsets: offs,
+        arena_size: arena,
+        lower_bound: lb,
+        fragmentation: if arena == 0 {
+            0.0
+        } else {
+            arena.saturating_sub(lb) as f64 / arena as f64
+        },
+        method: PlacementMethod::HeuristicFallback,
+        solve_secs: 0.0,
+        incumbents: Vec::new(),
+        model_size: (0, 0),
+        nodes: 0,
+        simplex_iters: 0,
+        warm_attempts: 0,
+        warm_hits: 0,
+        bytes_offloaded: bytes_offloaded(&items, &regions),
+        transfer_cost: transfer_cost_segments(&items, &windows, &regions, &parts.topology),
+        regions,
+        region_sizes: parts.region_sizes.clone(),
+        segments,
+    };
+    let plan = MemoryPlan {
+        order: parts.order,
+        offsets,
+        arena_size: arena,
+        region_of,
+        region_sizes: parts.region_sizes,
+        topology: parts.topology,
+        spills: parts.spills,
+        segment_offsets,
+        schedule,
+        placement,
+        control_edges_added: parts.control_edges_added,
+        total_secs: 0.0,
+    };
+    validate_plan(g, &plan)?;
+    Ok(plan)
+}
+
+/// Extract a plan's certificate keyed by the edges of the graph it was
+/// solved for.
+fn parts_of(plan: &MemoryPlan) -> PlanParts {
+    PlanParts {
+        order: plan.order.clone(),
+        offsets: plan.offsets.clone(),
+        region_of: plan.region_of.clone(),
+        spills: plan.spills.clone(),
+        segment_offsets: plan.segment_offsets.clone(),
+        region_sizes: plan.region_sizes.clone(),
+        topology: plan.topology.clone(),
+        ilp_peak: plan.schedule.ilp_peak,
+        control_edges_added: plan.control_edges_added,
+    }
+}
+
+/// Remap a plan solved for `cached` onto the isomorphic graph `g` by
+/// composing both graphs' size-aware canonical forms: cached ID →
+/// canonical position → submitted ID. Returns `None` when the graphs
+/// don't actually correspond (defensive against hash collisions) or the
+/// rebuilt plan fails validation.
+fn remap_plan(cached: &Graph, plan: &MemoryPlan, g: &Graph) -> Option<MemoryPlan> {
+    if cached.nodes.len() != g.nodes.len() || cached.edges.len() != g.edges.len() {
+        return None;
+    }
+    let cfc = canonical_form(cached, true);
+    let cfg = canonical_form(g, true);
+    let node = |v: NodeId| cfg.node_at[cfc.node_pos[v.idx()]];
+    let edge = |e: EdgeId| cfg.edge_at[cfc.edge_pos[e.idx()]];
+    let src = parts_of(plan);
+    let parts = PlanParts {
+        order: src.order.into_iter().map(node).collect(),
+        offsets: src.offsets.into_iter().map(|(e, o)| (edge(e), o)).collect(),
+        region_of: src.region_of.into_iter().map(|(e, r)| (edge(e), r)).collect(),
+        spills: src.spills.into_iter().map(|(e, w)| (edge(e), w)).collect(),
+        segment_offsets: src
+            .segment_offsets
+            .into_iter()
+            .map(|(e, segs)| (edge(e), segs))
+            .collect(),
+        region_sizes: src.region_sizes,
+        topology: src.topology,
+        ilp_peak: src.ilp_peak,
+        control_edges_added: src.control_edges_added,
+    };
+    rebuild_plan(g, parts).ok()
+}
+
+/// The address-refinement LP kept alive per cache entry: the cached
+/// placement's geometry as difference constraints, re-solvable for new
+/// sizes via RHS patches with a persistent dual-simplex basis.
+struct RefineLp {
+    pm: PatchableModel,
+    /// Cached-graph edge per placement item, in item order.
+    item_edges: Vec<EdgeId>,
+    /// Offset variable per item (`x[k]` in the rows below).
+    vars: Vec<VarId>,
+    /// Row index of `x[k] - peak ≤ -size[k]` per item.
+    fit_rows: Vec<usize>,
+    /// `(row, below)` for each `x[below] - x[above] ≤ -size[below]` row
+    /// encoding the cached stacking order of an overlapping pair.
+    pair_rows: Vec<(usize, usize)>,
+}
+
+/// Per-entry gates: refinement only models whole-tensor, single-region,
+/// spill-free placements, and stays small enough to re-solve in
+/// milliseconds.
+const REFINE_MAX_ITEMS: usize = 400;
+const REFINE_MAX_ROWS: usize = 20_000;
+
+/// Build the refinement LP for a cached entry, or `None` when the entry
+/// is ineligible (multi-region, spilled, segment-placed, too large, or
+/// inconsistent). The build ends with one cold solve so later patched
+/// re-solves start from an optimal basis.
+fn build_refine(g: &Graph, plan: &MemoryPlan) -> Option<RefineLp> {
+    if !plan.topology.is_single()
+        || !plan.spills.is_empty()
+        || !plan.segment_offsets.is_empty()
+        || !plan.region_of.is_empty()
+        || check_order(g, &plan.order).is_err()
+    {
+        return None;
+    }
+    let trace = simulate(g, &plan.order);
+    let items = items_from_trace(g, &trace);
+    if items.is_empty() || items.len() > REFINE_MAX_ITEMS {
+        return None;
+    }
+    let offs: Vec<u64> =
+        items.iter().map(|it| plan.offsets.get(&it.edge).copied()).collect::<Option<_>>()?;
+    let mut pairs = Vec::new();
+    for i in 0..items.len() {
+        for j in (i + 1)..items.len() {
+            if items[i].overlaps(&items[j]) {
+                // The cached plan stacks one above the other; keep that
+                // order as a difference constraint.
+                let (below, above) = if offs[i] <= offs[j] { (i, j) } else { (j, i) };
+                pairs.push((below, above));
+            }
+        }
+    }
+    if items.len() + pairs.len() > REFINE_MAX_ROWS {
+        return None;
+    }
+    let total: u64 = items.iter().map(|it| it.size).sum();
+    let big = (2 * total).max(1) as f64;
+    let mut b = IlpBuilder::new();
+    let peak = b.continuous("obj", "peak", 0.0, big, 1.0);
+    let vars: Vec<VarId> = (0..items.len())
+        .map(|k| b.continuous("x", format!("x{k}"), 0.0, big, 0.0))
+        .collect();
+    let mut fit_rows = Vec::with_capacity(items.len());
+    for (k, it) in items.iter().enumerate() {
+        fit_rows.push(b.num_cons());
+        b.le(vec![(vars[k], 1.0), (peak, -1.0)], -(it.size as f64));
+    }
+    let mut pair_rows = Vec::with_capacity(pairs.len());
+    for &(below, above) in &pairs {
+        pair_rows.push((b.num_cons(), below));
+        b.le(vec![(vars[below], 1.0), (vars[above], -1.0)], -(items[below].size as f64));
+    }
+    let (mut pm, _meta) = b.into_patchable();
+    if pm.solve_lp(&LpOptions::default()).status != LpStatus::Optimal {
+        return None;
+    }
+    let item_edges = items.iter().map(|it| it.edge).collect();
+    Some(RefineLp { pm, item_edges, vars, fit_rows, pair_rows })
+}
+
+/// Re-solve a cached entry's refinement LP for the submitted graph's
+/// sizes and rebuild a validated plan from the resulting offsets. `cfc`
+/// and `cfg` are the size-free canonical forms of the cached and
+/// submitted graphs (the edge correspondence). Any failure — ineligible
+/// entry, degenerate sizes, non-optimal LP, validation — returns `None`
+/// and the near hit degrades to an order seed.
+fn try_refine(
+    entry: &mut CacheEntry,
+    g: &Graph,
+    order: &[NodeId],
+    cfc: &CanonicalForm,
+    cfg: &CanonicalForm,
+    stats: &mut CacheStats,
+) -> Option<MemoryPlan> {
+    if entry.refine_failed {
+        return None;
+    }
+    if entry.refine.is_none() {
+        entry.refine = build_refine(&entry.graph, &entry.plan);
+        if entry.refine.is_none() {
+            entry.refine_failed = true;
+            return None;
+        }
+    }
+    let r = entry.refine.as_mut().expect("refine LP just built");
+    let mut sizes = Vec::with_capacity(r.item_edges.len());
+    let mut mapped = Vec::with_capacity(r.item_edges.len());
+    for &e in &r.item_edges {
+        let ge = cfg.edge_at[cfc.edge_pos[e.idx()]];
+        let sz = g.edge(ge).size;
+        if sz == 0 {
+            // A tensor shrank to a control edge: the item set itself
+            // changed, so the cached geometry no longer applies.
+            return None;
+        }
+        sizes.push(sz);
+        mapped.push(ge);
+    }
+    let mut patches = Vec::with_capacity(r.fit_rows.len() + r.pair_rows.len());
+    for (k, &row) in r.fit_rows.iter().enumerate() {
+        patches.push(Patch::Rhs { con: row, rhs: -(sizes[k] as f64) });
+    }
+    for &(row, below) in &r.pair_rows {
+        patches.push(Patch::Rhs { con: row, rhs: -(sizes[below] as f64) });
+    }
+    r.pm.apply(&patches);
+    let warm_before = r.pm.warm_hits;
+    let res = r.pm.solve_lp(&LpOptions::default());
+    stats.refine_attempts += 1;
+    stats.refine_warm_hits += r.pm.warm_hits - warm_before;
+    if res.status != LpStatus::Optimal {
+        return None;
+    }
+    let mut offsets = HashMap::new();
+    let mut arena = 0u64;
+    for (k, &v) in r.vars.iter().enumerate() {
+        // Difference constraints over integral data have integral
+        // vertices, so rounding recovers the exact LP solution.
+        let off = res.x[v.0].max(0.0).round() as u64;
+        offsets.insert(mapped[k], off);
+        arena = arena.max(off + sizes[k]);
+    }
+    let parts = PlanParts {
+        order: order.to_vec(),
+        offsets,
+        region_of: HashMap::new(),
+        spills: SpillIntervals::new(),
+        segment_offsets: HashMap::new(),
+        region_sizes: vec![arena],
+        topology: MemoryTopology::single(),
+        ilp_peak: arena,
+        control_edges_added: 0,
+    };
+    rebuild_plan(g, parts).ok()
+}
+
+/// One cached graph/plan pair.
+struct CacheEntry {
+    graph: Graph,
+    plan: MemoryPlan,
+    fp: GraphFingerprint,
+    last_used: u64,
+    refine: Option<RefineLp>,
+    refine_failed: bool,
+}
+
+/// Mutable cache state behind [`PlanCache`]'s lock.
+#[derive(Default)]
+struct CacheInner {
+    /// Entries keyed by `fp.to_hex()` (the persistence file stem).
+    entries: HashMap<String, CacheEntry>,
+    /// Skeleton hash → entry keys, for near-hit candidate lookup.
+    by_skeleton: HashMap<u64, Vec<String>>,
+    /// Logical clock driving LRU recency.
+    tick: u64,
+    stats: CacheStats,
+}
+
+impl CacheInner {
+    fn attach(&mut self, key: String, entry: CacheEntry) {
+        self.by_skeleton.entry(entry.fp.skeleton).or_default().push(key.clone());
+        self.entries.insert(key, entry);
+    }
+
+    fn detach(&mut self, key: &str) -> Option<CacheEntry> {
+        let entry = self.entries.remove(key)?;
+        if let Some(keys) = self.by_skeleton.get_mut(&entry.fp.skeleton) {
+            keys.retain(|k| k != key);
+            if keys.is_empty() {
+                self.by_skeleton.remove(&entry.fp.skeleton);
+            }
+        }
+        Some(entry)
+    }
+
+    /// Evict least-recently-used entries down to `capacity`, returning
+    /// the evicted keys (ties broken by key so eviction is
+    /// deterministic).
+    fn evict_to(&mut self, capacity: usize) -> Vec<String> {
+        let mut evicted = Vec::new();
+        while self.entries.len() > capacity {
+            let victim = self
+                .entries
+                .iter()
+                .map(|(k, e)| (e.last_used, k.clone()))
+                .min()
+                .expect("non-empty over capacity");
+            self.detach(&victim.1);
+            self.stats.evictions += 1;
+            evicted.push(victim.1);
+        }
+        evicted
+    }
+}
+
+/// A size-bounded, optionally persistent, content-addressed store of
+/// validated memory plans. See the module docs for the lookup tiers.
+/// All methods take `&self`; the cache is internally locked and safe to
+/// share across service workers behind an `Arc`.
+pub struct PlanCache {
+    inner: Mutex<CacheInner>,
+    dir: Option<PathBuf>,
+    capacity: usize,
+}
+
+impl PlanCache {
+    /// An in-memory cache holding at most `capacity` entries (clamped to
+    /// at least 1).
+    pub fn in_memory(capacity: usize) -> PlanCache {
+        PlanCache { inner: Mutex::new(CacheInner::default()), dir: None, capacity: capacity.max(1) }
+    }
+
+    /// A persistent cache rooted at `dir` (created if absent), holding at
+    /// most `capacity` entries. Existing `*.json` entries are loaded —
+    /// oldest files evicted first if there are more than `capacity` —
+    /// and every file that fails parsing, fingerprint verification, or
+    /// plan validation is counted in [`CacheStats::rejected_corrupt`]
+    /// and skipped.
+    pub fn persistent(dir: &Path, capacity: usize) -> std::io::Result<PlanCache> {
+        std::fs::create_dir_all(dir)?;
+        let cache = PlanCache {
+            inner: Mutex::new(CacheInner::default()),
+            dir: Some(dir.to_path_buf()),
+            capacity: capacity.max(1),
+        };
+        let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)?
+            .filter_map(|ent| ent.ok().map(|e| e.path()))
+            .filter(|p| p.extension().is_some_and(|x| x == "json"))
+            .collect();
+        paths.sort();
+        let mut inner = cache.inner.lock().expect("cache lock");
+        for path in paths {
+            match read_entry(&path) {
+                Ok((fp, graph, plan)) => {
+                    inner.tick += 1;
+                    let entry = CacheEntry {
+                        graph,
+                        plan,
+                        fp,
+                        last_used: inner.tick,
+                        refine: None,
+                        refine_failed: false,
+                    };
+                    inner.attach(fp.to_hex(), entry);
+                }
+                Err(_) => inner.stats.rejected_corrupt += 1,
+            }
+        }
+        for key in inner.evict_to(cache.capacity) {
+            let _ = std::fs::remove_file(dir.join(format!("{key}.json")));
+        }
+        drop(inner);
+        Ok(cache)
+    }
+
+    /// Insert a solved plan for `g`. The plan is validated first and
+    /// rejected (returning `false`) if it fails — the cache only ever
+    /// holds servable plans. Persists the entry when the cache has a
+    /// directory (best-effort: an I/O failure leaves the in-memory entry
+    /// in place) and evicts LRU entries over capacity.
+    pub fn insert(&self, g: &Graph, plan: &MemoryPlan) -> bool {
+        if validate_plan(g, plan).is_err() {
+            return false;
+        }
+        let fp = fingerprint(g);
+        let key = fp.to_hex();
+        let mut inner = self.inner.lock().expect("cache lock");
+        inner.tick += 1;
+        let entry = CacheEntry {
+            graph: g.clone(),
+            plan: plan.clone(),
+            fp,
+            last_used: inner.tick,
+            refine: None,
+            refine_failed: false,
+        };
+        inner.detach(&key);
+        inner.attach(key.clone(), entry);
+        inner.stats.insertions += 1;
+        let evicted = inner.evict_to(self.capacity);
+        drop(inner);
+        if let Some(dir) = &self.dir {
+            let entry_json = entry_to_json(&fp, g, plan);
+            let _ = std::fs::write(
+                dir.join(format!("{key}.json")),
+                entry_json.to_string_pretty(),
+            );
+            for k in evicted {
+                let _ = std::fs::remove_file(dir.join(format!("{k}.json")));
+            }
+        }
+        true
+    }
+
+    /// Look up a graph; computes its fingerprint and delegates to
+    /// [`PlanCache::lookup_fp`].
+    pub fn lookup(&self, g: &Graph) -> CacheLookup {
+        self.lookup_fp(g, fingerprint(g))
+    }
+
+    /// Look up a graph whose fingerprint the caller already computed.
+    /// Exact hits are remapped and re-validated before being returned;
+    /// an entry that fails re-validation is treated as corrupt, evicted
+    /// (file included), and the lookup falls through to the near tier.
+    pub fn lookup_fp(&self, g: &Graph, fp: GraphFingerprint) -> CacheLookup {
+        let mut guard = self.inner.lock().expect("cache lock");
+        let inner = &mut *guard;
+        inner.tick += 1;
+        let now = inner.tick;
+        let key = fp.to_hex();
+        if let Some(entry) = inner.entries.get_mut(&key) {
+            entry.last_used = now;
+            let candidate = if same_labeled_structure(&entry.graph, g) {
+                let p = entry.plan.clone();
+                validate_plan(g, &p).ok().map(|()| p)
+            } else {
+                remap_plan(&entry.graph, &entry.plan, g)
+            };
+            match candidate {
+                Some(p) => {
+                    inner.stats.exact_hits += 1;
+                    return CacheLookup::Exact(p);
+                }
+                None => {
+                    // Stored entry can't serve this graph: corrupt or a
+                    // hash collision. Drop it and fall through.
+                    inner.stats.rejected_corrupt += 1;
+                    inner.detach(&key);
+                    if let Some(dir) = &self.dir {
+                        let _ = std::fs::remove_file(dir.join(format!("{key}.json")));
+                    }
+                }
+            }
+        }
+        // Near tier: most-recently-used skeleton sibling with matching
+        // shape counts (ties broken by key for determinism).
+        let candidate = inner
+            .by_skeleton
+            .get(&fp.skeleton)
+            .into_iter()
+            .flatten()
+            .filter(|k| {
+                inner.entries.get(*k).is_some_and(|e| {
+                    e.graph.nodes.len() == g.nodes.len() && e.graph.edges.len() == g.edges.len()
+                })
+            })
+            .max_by_key(|k| (inner.entries[*k].last_used, std::cmp::Reverse((*k).clone())))
+            .cloned();
+        if let Some(k) = candidate {
+            let CacheInner { entries, stats, .. } = inner;
+            let entry = entries.get_mut(&k).expect("candidate key present");
+            entry.last_used = now;
+            let cfc = canonical_form(&entry.graph, false);
+            let cfg = canonical_form(g, false);
+            let order: Vec<NodeId> =
+                entry.plan.order.iter().map(|v| cfg.node_at[cfc.node_pos[v.idx()]]).collect();
+            if check_order(g, &order).is_ok() {
+                let refined = try_refine(entry, g, &order, &cfc, &cfg, stats);
+                stats.near_hits += 1;
+                return CacheLookup::Near(NearHit { order, refined });
+            }
+        }
+        inner.stats.misses += 1;
+        CacheLookup::Miss
+    }
+
+    /// Counters since construction.
+    pub fn stats(&self) -> CacheStats {
+        self.inner.lock().expect("cache lock").stats
+    }
+
+    /// Number of cached entries.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("cache lock").entries.len()
+    }
+
+    /// True when the cache holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Serialize `(e.0, payload)` pairs sorted by edge ID — never in
+/// `HashMap` iteration order, so persisted files are byte-stable.
+fn edge_pairs<T, F: Fn(&T) -> Json>(m: &HashMap<EdgeId, T>, f: F) -> Json {
+    let mut keys: Vec<EdgeId> = m.keys().copied().collect();
+    keys.sort();
+    Json::Arr(
+        keys.iter()
+            .map(|e| Json::Arr(vec![num(e.0 as f64), f(&m[e])]))
+            .collect(),
+    )
+}
+
+fn plan_to_json(plan: &MemoryPlan) -> Json {
+    obj(vec![
+        (
+            "order",
+            Json::Arr(plan.order.iter().map(|v| num(v.0 as f64)).collect()),
+        ),
+        ("offsets", edge_pairs(&plan.offsets, |&o| num(o as f64))),
+        ("region_of", edge_pairs(&plan.region_of, |&r| num(r as f64))),
+        (
+            "spills",
+            edge_pairs(&plan.spills, |w| {
+                Json::Arr(
+                    w.iter()
+                        .map(|&(a, b)| Json::Arr(vec![num(a as f64), num(b as f64)]))
+                        .collect(),
+                )
+            }),
+        ),
+        (
+            "segment_offsets",
+            edge_pairs(&plan.segment_offsets, |segs| {
+                Json::Arr(
+                    segs.iter()
+                        .map(|&(a, b, o)| {
+                            Json::Arr(vec![num(a as f64), num(b as f64), num(o as f64)])
+                        })
+                        .collect(),
+                )
+            }),
+        ),
+        (
+            "region_sizes",
+            Json::Arr(plan.region_sizes.iter().map(|&z| num(z as f64)).collect()),
+        ),
+        (
+            "topology",
+            Json::Arr(
+                plan.topology
+                    .regions
+                    .iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("name", s(&r.name)),
+                            (
+                                "capacity",
+                                r.capacity.map_or(Json::Null, |c| num(c as f64)),
+                            ),
+                            ("penalty_per_byte", num(r.penalty_per_byte)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("ilp_peak", num(plan.schedule.ilp_peak as f64)),
+        ("control_edges_added", num(plan.control_edges_added as f64)),
+    ])
+}
+
+fn entry_to_json(fp: &GraphFingerprint, g: &Graph, plan: &MemoryPlan) -> Json {
+    obj(vec![
+        ("version", num(1.0)),
+        ("fingerprint", s(&fp.to_hex())),
+        ("graph", json_io::to_json(g)),
+        ("plan", plan_to_json(plan)),
+    ])
+}
+
+fn pairs_from_json<T>(
+    v: Option<&Json>,
+    what: &str,
+    parse: impl Fn(&Json) -> Option<T>,
+) -> Result<HashMap<EdgeId, T>, String> {
+    let arr = v.and_then(Json::as_arr).ok_or_else(|| format!("bad {what}"))?;
+    let mut out = HashMap::new();
+    for pair in arr {
+        let pair = pair.as_arr().filter(|p| p.len() == 2).ok_or_else(|| format!("bad {what}"))?;
+        let e = pair[0].as_u64().ok_or_else(|| format!("bad {what} key"))? as u32;
+        let t = parse(&pair[1]).ok_or_else(|| format!("bad {what} value"))?;
+        out.insert(EdgeId(e), t);
+    }
+    Ok(out)
+}
+
+fn parts_from_json(v: &Json) -> Result<PlanParts, String> {
+    let order: Vec<NodeId> = v
+        .get("order")
+        .and_then(Json::as_arr)
+        .ok_or("bad order")?
+        .iter()
+        .map(|x| x.as_u64().map(|n| NodeId(n as u32)))
+        .collect::<Option<_>>()
+        .ok_or("bad order entry")?;
+    let offsets = pairs_from_json(v.get("offsets"), "offsets", Json::as_u64)?;
+    let region_of = pairs_from_json(v.get("region_of"), "region_of", Json::as_usize)?;
+    let spills = pairs_from_json(v.get("spills"), "spills", |w| {
+        w.as_arr()?
+            .iter()
+            .map(|iv| {
+                let iv = iv.as_arr().filter(|p| p.len() == 2)?;
+                Some((iv[0].as_usize()?, iv[1].as_usize()?))
+            })
+            .collect::<Option<Vec<(usize, usize)>>>()
+    })?;
+    let segment_offsets = pairs_from_json(v.get("segment_offsets"), "segment_offsets", |segs| {
+        segs.as_arr()?
+            .iter()
+            .map(|sv| {
+                let sv = sv.as_arr().filter(|p| p.len() == 3)?;
+                Some((sv[0].as_usize()?, sv[1].as_usize()?, sv[2].as_u64()?))
+            })
+            .collect::<Option<SegmentPlacements>>()
+    })?;
+    let region_sizes: Vec<u64> = v
+        .get("region_sizes")
+        .and_then(Json::as_arr)
+        .ok_or("bad region_sizes")?
+        .iter()
+        .map(Json::as_u64)
+        .collect::<Option<_>>()
+        .ok_or("bad region size")?;
+    let regions: Vec<MemoryRegion> = v
+        .get("topology")
+        .and_then(Json::as_arr)
+        .ok_or("bad topology")?
+        .iter()
+        .map(|r| {
+            Some(MemoryRegion {
+                name: r.get("name")?.as_str()?.to_string(),
+                capacity: match r.get("capacity")? {
+                    Json::Null => None,
+                    c => Some(c.as_u64()?),
+                },
+                penalty_per_byte: r.get("penalty_per_byte")?.as_f64()?,
+            })
+        })
+        .collect::<Option<_>>()
+        .ok_or("bad topology region")?;
+    if regions.is_empty() {
+        return Err("empty topology".into());
+    }
+    Ok(PlanParts {
+        order,
+        offsets,
+        region_of,
+        spills,
+        segment_offsets,
+        region_sizes,
+        topology: MemoryTopology { regions },
+        ilp_peak: v.get("ilp_peak").and_then(Json::as_u64).ok_or("bad ilp_peak")?,
+        control_edges_added: v
+            .get("control_edges_added")
+            .and_then(Json::as_usize)
+            .ok_or("bad control_edges_added")?,
+    })
+}
+
+/// Load and fully verify one persisted entry: parseable JSON of the
+/// current version, file stem and stored fingerprint agreeing with the
+/// fingerprint *recomputed from the stored graph*, and a certificate
+/// that rebuilds into a [`validate_plan`]-clean plan. Any failure is a
+/// rejection — the caller counts it and moves on.
+fn read_entry(path: &Path) -> Result<(GraphFingerprint, Graph, MemoryPlan), String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("unreadable: {e}"))?;
+    let v = Json::parse(&text).map_err(|_| "unparseable JSON".to_string())?;
+    if v.get("version").and_then(Json::as_u64) != Some(1) {
+        return Err("unknown version".into());
+    }
+    let fp_str = v.get("fingerprint").and_then(Json::as_str).ok_or("missing fingerprint")?;
+    let fp = GraphFingerprint::from_hex(fp_str).ok_or("malformed fingerprint")?;
+    if path.file_stem().and_then(|x| x.to_str()) != Some(fp_str) {
+        return Err("file name disagrees with fingerprint".into());
+    }
+    let graph =
+        json_io::from_json(v.get("graph").ok_or("missing graph")?).map_err(|e| e.to_string())?;
+    if fingerprint(&graph) != fp {
+        return Err("fingerprint disagrees with stored graph".into());
+    }
+    let parts = parts_from_json(v.get("plan").ok_or("missing plan")?)?;
+    let plan = rebuild_plan(&graph, parts)?;
+    Ok((fp, graph, plan))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::fingerprint::relabel;
+    use crate::graph::random::random_trainlike;
+    use crate::graph::OpKind;
+    use crate::olla::{optimize, PlannerOptions};
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+
+    fn small_graph(seed: u64, layers: usize) -> Graph {
+        let mut rng = Rng::new(seed);
+        random_trainlike(&mut rng, layers)
+    }
+
+    fn solve(g: &Graph) -> MemoryPlan {
+        optimize(g, &PlannerOptions::fast_test())
+    }
+
+    fn tdir(name: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("olla_cache_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn expect_exact(l: CacheLookup) -> MemoryPlan {
+        match l {
+            CacheLookup::Exact(p) => p,
+            other => panic!("expected an exact hit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn exact_hit_is_bit_for_bit_and_validates() {
+        let g = small_graph(7, 3);
+        let plan = solve(&g);
+        let cache = PlanCache::in_memory(4);
+        assert!(matches!(cache.lookup(&g), CacheLookup::Miss));
+        assert!(cache.insert(&g, &plan));
+        let p = expect_exact(cache.lookup(&g));
+        validate_plan(&g, &p).unwrap();
+        assert_eq!(p.order, plan.order);
+        assert_eq!(p.offsets, plan.offsets);
+        assert_eq!(p.arena_size, plan.arena_size);
+        assert_eq!(p.region_sizes, plan.region_sizes);
+        let st = cache.stats();
+        assert_eq!(st.misses, 1);
+        assert_eq!(st.exact_hits, 1);
+        assert_eq!(st.insertions, 1);
+    }
+
+    #[test]
+    fn exact_hit_survives_relabeling() {
+        let g = small_graph(11, 3);
+        let plan = solve(&g);
+        let cache = PlanCache::in_memory(4);
+        assert!(cache.insert(&g, &plan));
+        let mut rng = Rng::new(13);
+        for _ in 0..3 {
+            let (h, _) = relabel(&g, &mut rng);
+            let p = expect_exact(cache.lookup(&h));
+            validate_plan(&h, &p).unwrap();
+            assert_eq!(p.arena_size, plan.arena_size);
+        }
+    }
+
+    #[test]
+    fn insert_rejects_invalid_plans() {
+        let g = small_graph(17, 3);
+        let mut plan = solve(&g);
+        plan.arena_size = 0;
+        plan.region_sizes = vec![0];
+        let cache = PlanCache::in_memory(4);
+        assert!(!cache.insert(&g, &plan));
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn persistent_cache_survives_reopen() {
+        let g = small_graph(19, 3);
+        let plan = solve(&g);
+        let dir = tdir("roundtrip");
+        {
+            let cache = PlanCache::persistent(&dir, 4).unwrap();
+            assert!(cache.insert(&g, &plan));
+        }
+        let cache = PlanCache::persistent(&dir, 4).unwrap();
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.stats().rejected_corrupt, 0);
+        let p = expect_exact(cache.lookup(&g));
+        validate_plan(&g, &p).unwrap();
+        assert_eq!(p.arena_size, plan.arena_size);
+        assert_eq!(p.order, plan.order);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Apply `f` to the single persisted entry's JSON object and write the
+    /// mutated text back.
+    fn tamper(dir: &Path, f: impl Fn(&mut BTreeMap<String, Json>)) {
+        let path = std::fs::read_dir(dir)
+            .unwrap()
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .find(|p| p.extension().is_some_and(|x| x == "json"))
+            .expect("one persisted entry");
+        let mut v = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        match &mut v {
+            Json::Obj(m) => f(m),
+            _ => panic!("entry is not an object"),
+        }
+        std::fs::write(&path, v.to_string_pretty()).unwrap();
+    }
+
+    fn seeded_dir(name: &str, g: &Graph, plan: &MemoryPlan) -> PathBuf {
+        let dir = tdir(name);
+        let cache = PlanCache::persistent(&dir, 4).unwrap();
+        assert!(cache.insert(g, plan));
+        dir
+    }
+
+    #[test]
+    fn corrupted_entries_are_rejected_and_fall_through() {
+        let g = small_graph(23, 3);
+        let plan = solve(&g);
+
+        // Truncated JSON.
+        let dir = tdir("trunc");
+        {
+            let cache = PlanCache::persistent(&dir, 4).unwrap();
+            assert!(cache.insert(&g, &plan));
+            let path = std::fs::read_dir(&dir)
+                .unwrap()
+                .filter_map(|e| e.ok().map(|e| e.path()))
+                .find(|p| p.extension().is_some_and(|x| x == "json"))
+                .unwrap();
+            let text = std::fs::read_to_string(&path).unwrap();
+            std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+        }
+        let cache = PlanCache::persistent(&dir, 4).unwrap();
+        assert!(cache.is_empty(), "truncated entry must not load");
+        assert_eq!(cache.stats().rejected_corrupt, 1);
+        assert!(matches!(cache.lookup(&g), CacheLookup::Miss));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // Bad offsets: every tensor at address 0 overlaps.
+        let dir = seeded_dir("badoffs", &g, &plan);
+        tamper(&dir, |m| {
+            let plan = m.get_mut("plan").unwrap();
+            if let Json::Obj(pm) = plan {
+                if let Some(Json::Arr(pairs)) = pm.get_mut("offsets") {
+                    for p in pairs {
+                        if let Json::Arr(kv) = p {
+                            kv[1] = num(0.0);
+                        }
+                    }
+                }
+            }
+        });
+        let cache = PlanCache::persistent(&dir, 4).unwrap();
+        assert!(cache.is_empty(), "overlapping offsets must not load");
+        assert_eq!(cache.stats().rejected_corrupt, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // Wrong spill certificate: intervals beyond the schedule.
+        let dir = seeded_dir("badspill", &g, &plan);
+        tamper(&dir, |m| {
+            let plan = m.get_mut("plan").unwrap();
+            if let Json::Obj(pm) = plan {
+                let cert = Json::Arr(vec![Json::Arr(vec![
+                    num(0.0),
+                    Json::Arr(vec![Json::Arr(vec![num(999_999.0), num(1_000_000.0)])]),
+                ])]);
+                pm.insert("spills".to_string(), cert);
+            }
+        });
+        let cache = PlanCache::persistent(&dir, 4).unwrap();
+        assert!(cache.is_empty(), "bogus spill certificate must not load");
+        assert_eq!(cache.stats().rejected_corrupt, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let graphs: Vec<Graph> =
+            vec![small_graph(29, 3), small_graph(31, 4), small_graph(37, 5)];
+        let plans: Vec<MemoryPlan> = graphs.iter().map(solve).collect();
+
+        let cache = PlanCache::in_memory(2);
+        assert!(cache.insert(&graphs[0], &plans[0]));
+        assert!(cache.insert(&graphs[1], &plans[1]));
+        expect_exact(cache.lookup(&graphs[0])); // touch g0 so g1 is LRU
+        assert!(cache.insert(&graphs[2], &plans[2]));
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().evictions, 1);
+        assert!(matches!(cache.lookup(&graphs[1]), CacheLookup::Miss));
+        expect_exact(cache.lookup(&graphs[0]));
+        expect_exact(cache.lookup(&graphs[2]));
+
+        // Persistent variant: eviction also removes the file.
+        let dir = tdir("lru");
+        let cache = PlanCache::persistent(&dir, 2).unwrap();
+        for (g, p) in graphs.iter().zip(&plans) {
+            assert!(cache.insert(g, p));
+        }
+        let files = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().is_some_and(|x| x == "json"))
+            .count();
+        assert_eq!(files, 2, "evicted entries must leave the directory");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Double the largest tensor of `g`: same skeleton, one size changed.
+    fn perturb_sizes(g: &Graph) -> Graph {
+        let mut h = g.clone();
+        let idx = h
+            .edges
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, e)| e.size)
+            .expect("graph has edges")
+            .0;
+        h.edges[idx].size *= 2;
+        h
+    }
+
+    #[test]
+    fn near_hit_refines_perturbed_sizes() {
+        let g = small_graph(41, 3);
+        let plan = solve(&g);
+        let cache = PlanCache::in_memory(4);
+        assert!(cache.insert(&g, &plan));
+
+        let g2 = perturb_sizes(&g);
+        match cache.lookup(&g2) {
+            CacheLookup::Near(NearHit { order, refined }) => {
+                check_order(&g2, &order).unwrap();
+                let refined = refined.expect("single-region entry must refine");
+                validate_plan(&g2, &refined).unwrap();
+            }
+            other => panic!("expected a near hit, got {other:?}"),
+        }
+        let st = cache.stats();
+        assert_eq!(st.near_hits, 1);
+        assert_eq!(st.refine_attempts, 1);
+
+        // A structural change is a different skeleton: no near hit.
+        let mut g3 = g.clone();
+        let extra = g3.add_node("extra", OpKind::Compute);
+        g3.add_edge("extra_e", NodeId(0), &[extra], 64);
+        assert!(matches!(cache.lookup(&g3), CacheLookup::Miss));
+    }
+
+    #[test]
+    fn near_hit_warm_resolve_matches_cold() {
+        let g = small_graph(43, 3);
+        let plan = solve(&g);
+        let cache = PlanCache::in_memory(4);
+        assert!(cache.insert(&g, &plan));
+
+        let g2 = perturb_sizes(&g);
+        let order = match cache.lookup(&g2) {
+            CacheLookup::Near(NearHit { order, .. }) => order,
+            other => panic!("expected a near hit, got {other:?}"),
+        };
+        let cold = solve(&g2);
+        let mut opts = PlannerOptions::fast_test();
+        opts.schedule.initial_order = Some(order);
+        let warm = optimize(&g2, &opts);
+        validate_plan(&g2, &warm).unwrap();
+        assert_eq!(
+            warm.arena_size, cold.arena_size,
+            "seeded re-solve must reach the cold objective"
+        );
+
+        // A stale/bogus seed (not a topological order) is rejected by the
+        // feasibility gate and the solve falls back to the greedy warm
+        // start, still reaching the cold objective.
+        let mut rev = cold.order.clone();
+        rev.reverse();
+        let mut opts = PlannerOptions::fast_test();
+        opts.schedule.initial_order = Some(rev);
+        let fallback = optimize(&g2, &opts);
+        validate_plan(&g2, &fallback).unwrap();
+        assert_eq!(fallback.arena_size, cold.arena_size);
+    }
+}

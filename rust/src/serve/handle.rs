@@ -26,8 +26,15 @@ use crate::graph::Graph;
 use crate::ilp::SolveControl;
 use crate::olla::planner::{optimize_anytime, MemoryPlan, PlanSink, PlannerOptions};
 use crate::olla::validate_plan;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Callback invoked exactly once when a pipeline finishes with a plan
+/// that survived validation (the plan cache's insert hook). Runs on the
+/// worker thread, before waiters are woken, so a `join()`er observes its
+/// effects.
+pub(crate) type OnFinal = Box<dyn Fn(&Graph, &MemoryPlan) + Send + Sync>;
 
 /// Lifecycle phase of a plan request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -91,6 +98,11 @@ pub(crate) struct HandleInner {
     state: Mutex<HandleState>,
     done: Condvar,
     started: Instant,
+    /// Live handles attached to this solve (request coalescing): the
+    /// underlying solve is cancelled only when *every* attached handle
+    /// has voted to cancel.
+    attached: AtomicUsize,
+    on_final: Option<OnFinal>,
 }
 
 /// What the serving layer minimizes across candidate plans: the device
@@ -146,7 +158,20 @@ impl HandleInner {
             st.final_plan = Some(plan);
         }
         st.phase = PlanPhase::Done;
+        // The plan `join()` will serve: best-of(final, best) by score.
+        let served = match (&st.final_plan, &st.best) {
+            (Some(fin), Some(b)) if plan_score(b) < plan_score(fin) => Some(b.clone()),
+            (Some(fin), _) => Some(fin.clone()),
+            (None, b) => b.clone(),
+        };
         drop(st);
+        // Run the insert hook *before* waking waiters so a join()er can
+        // rely on the cache already holding this plan (is_finished()
+        // pollers may still race ahead of the hook; they only read the
+        // handle, not the cache).
+        if let (Some(cb), Some(p)) = (&self.on_final, &served) {
+            cb(&self.graph, p);
+        }
         self.done.notify_all();
     }
 
@@ -189,6 +214,9 @@ impl HandleInner {
 pub struct PlanHandle {
     inner: Arc<HandleInner>,
     thread: Option<std::thread::JoinHandle<()>>,
+    /// Whether *this* handle has already cast its cancel vote (coalesced
+    /// handles share one solve; see [`PlanHandle::cancel`]).
+    cancelled: AtomicBool,
 }
 
 impl PlanHandle {
@@ -197,9 +225,22 @@ impl PlanHandle {
     /// pool; `spawn` is the one-request convenience wrapper.
     pub(crate) fn make(
         graph: Graph,
+        opts: PlannerOptions,
+        deadline: Option<Duration>,
+        gap: Option<f64>,
+    ) -> (PlanHandle, Box<dyn FnOnce() + Send + 'static>) {
+        PlanHandle::make_with(graph, opts, deadline, gap, None)
+    }
+
+    /// [`PlanHandle::make`] plus an optional completion hook (the plan
+    /// cache's insert path): called once with the served plan when the
+    /// pipeline finishes with a validated result.
+    pub(crate) fn make_with(
+        graph: Graph,
         mut opts: PlannerOptions,
         deadline: Option<Duration>,
         gap: Option<f64>,
+        on_final: Option<OnFinal>,
     ) -> (PlanHandle, Box<dyn FnOnce() + Send + 'static>) {
         let sched_control = SolveControl::new();
         let place_control = SolveControl::new();
@@ -225,6 +266,8 @@ impl PlanHandle {
             }),
             done: Condvar::new(),
             started: Instant::now(),
+            attached: AtomicUsize::new(1),
+            on_final,
         });
         let worker = inner.clone();
         let body: Box<dyn FnOnce() + Send + 'static> = Box::new(move || {
@@ -241,7 +284,55 @@ impl PlanHandle {
                 Err(_) => worker.fail(),
             }
         });
-        (PlanHandle { inner, thread: None }, body)
+        (PlanHandle { inner, thread: None, cancelled: AtomicBool::new(false) }, body)
+    }
+
+    /// Attach a new handle to an in-flight solve (request coalescing):
+    /// the returned handle polls and joins the *same* underlying pipeline
+    /// and holds its own cancel vote.
+    pub(crate) fn attach_inner(inner: &Arc<HandleInner>) -> PlanHandle {
+        inner.attached.fetch_add(1, Ordering::SeqCst);
+        PlanHandle {
+            inner: inner.clone(),
+            thread: None,
+            cancelled: AtomicBool::new(false),
+        }
+    }
+
+    /// Shared pipeline state, for the service's in-flight registry.
+    pub(crate) fn inner_arc(&self) -> Arc<HandleInner> {
+        self.inner.clone()
+    }
+
+    /// A handle that is already `Done` holding `plan` — the cache's
+    /// exact-hit fast path. The caller must have re-validated `plan`
+    /// against `graph` (the cache lookup does).
+    pub(crate) fn completed(graph: Graph, plan: MemoryPlan) -> PlanHandle {
+        let curve = vec![(0.0, plan.arena_size)];
+        let inner = Arc::new(HandleInner {
+            graph,
+            sched_control: SolveControl::new(),
+            place_control: SolveControl::new(),
+            state: Mutex::new(HandleState {
+                phase: PlanPhase::Done,
+                best: Some(plan.clone()),
+                final_plan: Some(plan),
+                curve,
+                failed: false,
+            }),
+            done: Condvar::new(),
+            started: Instant::now(),
+            attached: AtomicUsize::new(1),
+            on_final: None,
+        });
+        PlanHandle { inner, thread: None, cancelled: AtomicBool::new(false) }
+    }
+
+    /// Seed the handle with an externally produced plan snapshot (the
+    /// cache's near-hit refinement): it passes the same validation gate
+    /// as pipeline snapshots and becomes the first pollable incumbent.
+    pub(crate) fn publish_now(&self, plan: MemoryPlan) {
+        self.inner.publish(plan);
     }
 
     /// Start planning `graph` on a dedicated background thread. `deadline`
@@ -293,9 +384,18 @@ impl PlanHandle {
     /// Ask both embedded solves to stop at the next node boundary (the LP
     /// mid-pivot aborts within 64 iterations). The pipeline then finalizes
     /// its best incumbent; poll/join still return a valid plan.
+    ///
+    /// Coalesced handles share one underlying solve, so `cancel` is a
+    /// *vote*: the solve is actually stopped only when every attached
+    /// handle has cancelled. Repeated calls on one handle count once.
     pub fn cancel(&self) {
-        self.inner.sched_control.cancel();
-        self.inner.place_control.cancel();
+        if self.cancelled.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        if self.inner.attached.fetch_sub(1, Ordering::SeqCst) == 1 {
+            self.inner.sched_control.cancel();
+            self.inner.place_control.cancel();
+        }
     }
 
     /// True once the pipeline has finished (for any reason).

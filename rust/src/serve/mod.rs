@@ -27,12 +27,25 @@
 //! placed per region (greedy offload + per-region best-fit), so polls
 //! stay `validate_plan`-clean even under a capped device.
 //!
+//! A third layer amortizes solves *across* requests:
+//!
+//! * [`PlanCache`] — a content-addressed store of validated plans keyed by
+//!   the canonical [`crate::graph::fingerprint::GraphFingerprint`]. Exact
+//!   hits are re-validated and answered in microseconds, skeleton-only
+//!   (near) hits seed the ILPs from the cached incumbent, and a
+//!   `--cache-dir` persists the corpus across `olla serve` restarts. The
+//!   service front composes the cache with *request coalescing*: identical
+//!   in-flight fingerprints attach to one underlying solve
+//!   ([`service::ServeTier`] reports which tier answered).
+//!
 //! The CLI front ends live in `main.rs` (`olla plan --deadline-ms --gap
-//! --device-cap`, `olla serve`), and the anytime curves recorded by the
-//! handles feed the Figure 10 benchmark report.
+//! --device-cap`, `olla serve --cache-dir`), and the anytime curves
+//! recorded by the handles feed the Figure 10 benchmark report.
 
+pub mod cache;
 pub mod handle;
 pub mod service;
 
+pub use cache::{CacheLookup, CacheStats, NearHit, PlanCache};
 pub use handle::{PlanHandle, PlanPhase, PlanPoll};
-pub use service::{PlanRequest, PlanService, Priority, SubmitError};
+pub use service::{PlanRequest, PlanService, Priority, ServeTier, SubmitError};

@@ -14,14 +14,23 @@
 //!   edge rather than by latency collapse;
 //! * **two-level priority** — [`Priority::High`] requests (interactive
 //!   planning sessions) jump ahead of [`Priority::Normal`] batch work;
-//!   within a level, service stays FIFO.
+//!   within a level, service stays FIFO;
+//! * **plan cache + request coalescing** — [`PlanService::submit_tiered`]
+//!   consults an optional [`PlanCache`] (exact hits answer instantly,
+//!   near hits seed the solve) and, on a [`PlanService::coalescing`]
+//!   service, attaches submissions whose graph is identical to an
+//!   in-flight request onto that one solve. [`ServeTier`] reports which
+//!   path served each request.
 
-use super::handle::PlanHandle;
+use super::cache::{CacheLookup, NearHit, PlanCache};
+use super::handle::{HandleInner, OnFinal, PlanHandle};
+use crate::graph::fingerprint::{fingerprint, same_labeled_structure};
 use crate::graph::Graph;
 use crate::olla::planner::PlannerOptions;
-use std::collections::VecDeque;
+use crate::olla::MemoryPlan;
+use std::collections::{HashMap, VecDeque};
 use std::fmt;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -57,6 +66,34 @@ impl fmt::Display for SubmitError {
 }
 
 impl std::error::Error for SubmitError {}
+
+/// Which path of the serving front answered a
+/// [`PlanService::submit_tiered`] submission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeTier {
+    /// Cache exact hit: a stored plan, re-validated against the
+    /// submitted graph, returned without queueing a solve.
+    Exact,
+    /// Cache near hit: a fresh solve was queued, seeded with the cached
+    /// incumbent's order (and possibly an LP-refined starting plan).
+    Near,
+    /// Attached to an identical in-flight request's solve; no new solve
+    /// was queued.
+    Coalesced,
+    /// A plain cold solve was queued.
+    Solved,
+}
+
+impl fmt::Display for ServeTier {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            ServeTier::Exact => "exact",
+            ServeTier::Near => "near",
+            ServeTier::Coalesced => "coalesced",
+            ServeTier::Solved => "solved",
+        })
+    }
+}
 
 /// One plan request: a graph plus planner options and anytime limits.
 pub struct PlanRequest {
@@ -105,11 +142,29 @@ impl Queues {
     }
 }
 
+/// An in-flight (queued or running) solve that coalescing submissions can
+/// attach to.
+struct Inflight {
+    /// Registration id: the deregistration hook only removes the entry it
+    /// registered (a newer identical request may have replaced it).
+    id: u64,
+    /// Shared pipeline state new handles attach to.
+    inner: Arc<HandleInner>,
+    /// The graph being solved, to confirm a fingerprint match is a real
+    /// structural match before attaching.
+    graph: Graph,
+}
+
 struct ServiceShared {
     queue: Mutex<Queues>,
     cv: Condvar,
     shutdown: AtomicBool,
     capacity: usize,
+    /// Fingerprint hex → in-flight solve, for request coalescing. Locked
+    /// strictly after `queue` when both are held.
+    inflight: Mutex<HashMap<String, Inflight>>,
+    inflight_seq: AtomicU64,
+    coalesce: AtomicBool,
 }
 
 /// A fixed pool of planner workers serving queued [`PlanRequest`]s with a
@@ -145,6 +200,9 @@ impl PlanService {
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             capacity,
+            inflight: Mutex::new(HashMap::new()),
+            inflight_seq: AtomicU64::new(0),
+            coalesce: AtomicBool::new(false),
         });
         let mut handles = Vec::with_capacity(n);
         for _ in 0..n {
@@ -188,6 +246,115 @@ impl PlanService {
         drop(q);
         self.shared.cv.notify_one();
         Ok(handle)
+    }
+
+    /// Enable request coalescing: a [`PlanService::submit_tiered`]
+    /// submission whose graph is structurally identical to a queued or
+    /// running request attaches to that solve instead of queueing its
+    /// own ([`ServeTier::Coalesced`]). Attached handles poll and join
+    /// the shared pipeline and hold independent cancel votes (the solve
+    /// stops only when every attached handle cancels); they inherit the
+    /// original request's options and deadline, and attaching never
+    /// counts against — nor is rejected by — the queue capacity.
+    /// Opt-in because callers of plain [`PlanService::submit`] may rely
+    /// on identical submissions producing independent solves.
+    pub fn coalescing(self) -> PlanService {
+        self.shared.coalesce.store(true, Ordering::Relaxed);
+        self
+    }
+
+    /// [`PlanService::submit`] through the serving front's tiers: consult
+    /// `cache` (exact hit → immediate completed handle; near hit → seed
+    /// the solve with the cached order and publish the LP-refined plan as
+    /// its first incumbent), then coalesce onto an identical in-flight
+    /// solve when [`PlanService::coalescing`] is on, and only otherwise
+    /// queue a cold solve — whose validated result is inserted back into
+    /// `cache` on completion. Returns the handle plus the [`ServeTier`]
+    /// that served it. Backpressure is unchanged: queueing a new solve
+    /// can still fail with [`SubmitError::QueueFull`].
+    pub fn submit_tiered(
+        &self,
+        mut req: PlanRequest,
+        cache: Option<&Arc<PlanCache>>,
+    ) -> Result<(PlanHandle, ServeTier), SubmitError> {
+        let coalesce = self.shared.coalesce.load(Ordering::Relaxed);
+        if cache.is_none() && !coalesce {
+            return self.submit(req).map(|h| (h, ServeTier::Solved));
+        }
+        let fp = fingerprint(&req.graph);
+        let key = fp.to_hex();
+        let mut tier = ServeTier::Solved;
+        let mut refined: Option<MemoryPlan> = None;
+        if let Some(cache) = cache {
+            match cache.lookup_fp(&req.graph, fp) {
+                CacheLookup::Exact(plan) => {
+                    return Ok((PlanHandle::completed(req.graph, plan), ServeTier::Exact));
+                }
+                CacheLookup::Near(NearHit { order, refined: r }) => {
+                    tier = ServeTier::Near;
+                    req.opts.schedule.initial_order = Some(order);
+                    refined = r;
+                }
+                CacheLookup::Miss => {}
+            }
+        }
+        if coalesce {
+            let inflight = self.shared.inflight.lock().unwrap();
+            if let Some(inf) = inflight.get(&key) {
+                if same_labeled_structure(&inf.graph, &req.graph) {
+                    return Ok((PlanHandle::attach_inner(&inf.inner), ServeTier::Coalesced));
+                }
+            }
+        }
+        // The refined near-hit snapshot is single-region; only serve it
+        // as an incumbent when the request actually asked for a
+        // single-region plan (a capped/multi-region request must not see
+        // an uncapped snapshot).
+        let single_region = req.opts.schedule.topology.is_single()
+            && req.opts.placement.topology.is_single();
+        let mut q = self.shared.queue.lock().unwrap();
+        if q.len() >= self.shared.capacity {
+            return Err(SubmitError::QueueFull { capacity: self.shared.capacity });
+        }
+        let registry_graph = coalesce.then(|| req.graph.clone());
+        let on_final: Option<OnFinal> = cache.map(|c| {
+            let c = c.clone();
+            Box::new(move |g: &Graph, p: &MemoryPlan| {
+                c.insert(g, p);
+            }) as OnFinal
+        });
+        let (handle, body) =
+            PlanHandle::make_with(req.graph, req.opts, req.deadline, req.gap, on_final);
+        if single_region {
+            if let Some(p) = refined {
+                handle.publish_now(p);
+            }
+        }
+        let body: Job = if let Some(graph) = registry_graph {
+            let id = self.shared.inflight_seq.fetch_add(1, Ordering::Relaxed);
+            self.shared
+                .inflight
+                .lock()
+                .unwrap()
+                .insert(key.clone(), Inflight { id, inner: handle.inner_arc(), graph });
+            let shared = self.shared.clone();
+            Box::new(move || {
+                body();
+                let mut inflight = shared.inflight.lock().unwrap();
+                if inflight.get(&key).is_some_and(|inf| inf.id == id) {
+                    inflight.remove(&key);
+                }
+            })
+        } else {
+            body
+        };
+        match req.priority {
+            Priority::High => q.high.push_back(body),
+            Priority::Normal => q.normal.push_back(body),
+        }
+        drop(q);
+        self.shared.cv.notify_one();
+        Ok((handle, tier))
     }
 
     /// Requests waiting for a worker (excludes the ones already running).
@@ -390,5 +557,150 @@ mod tests {
         validate_plan(&g, &ph).unwrap();
         let pn = normal.join();
         validate_plan(&g, &pn).unwrap();
+    }
+
+    fn fast_request(g: &Graph) -> PlanRequest {
+        PlanRequest {
+            graph: g.clone(),
+            opts: PlannerOptions::fast_test(),
+            deadline: Some(Duration::from_secs(10)),
+            gap: None,
+            priority: Priority::Normal,
+        }
+    }
+
+    fn blocking_request(g: &Graph) -> PlanRequest {
+        PlanRequest {
+            graph: g.clone(),
+            opts: PlannerOptions::default(), // generous limits: runs long
+            deadline: None,
+            gap: None,
+            priority: Priority::Normal,
+        }
+    }
+
+    #[test]
+    fn identical_inflight_submissions_coalesce_to_one_solve() {
+        // One worker held by a blocker; three identical submissions of a
+        // different graph arrive. The first queues a solve, the other two
+        // must attach to it — and every handle still joins to a validated
+        // plan of that same solve.
+        let svc = PlanService::with_capacity(1, 8).coalescing();
+        let mut rng = Rng::new(37);
+        let blocker_g = random_trainlike(&mut rng, 4);
+        let g = random_trainlike(&mut rng, 2);
+        let (blocker, _) = svc.submit_tiered(blocking_request(&blocker_g), None).unwrap();
+        wait_until_pending(&svc, 0);
+        let (h1, t1) = svc.submit_tiered(fast_request(&g), None).unwrap();
+        let (h2, t2) = svc.submit_tiered(fast_request(&g), None).unwrap();
+        let (h3, t3) = svc.submit_tiered(fast_request(&g), None).unwrap();
+        assert_eq!(t1, ServeTier::Solved);
+        assert_eq!(t2, ServeTier::Coalesced);
+        assert_eq!(t3, ServeTier::Coalesced);
+        assert_eq!(svc.pending(), 1, "coalesced submissions must not queue new solves");
+        blocker.cancel();
+        let _ = blocker.join();
+        let p1 = h1.join();
+        let p2 = h2.join();
+        let p3 = h3.join();
+        for p in [&p1, &p2, &p3] {
+            validate_plan(&g, p).unwrap();
+        }
+        assert_eq!(p1.arena_size, p2.arena_size);
+        assert_eq!(p1.arena_size, p3.arena_size);
+        assert_eq!(p1.order, p2.order);
+        assert_eq!(p1.order, p3.order);
+    }
+
+    #[test]
+    fn cancel_of_one_coalesced_handle_spares_the_others() {
+        // A long-running solve with one attached follower: cancelling the
+        // follower is only a vote, so the underlying solve keeps running
+        // and the original handle still joins to a valid plan.
+        let svc = PlanService::with_capacity(1, 8).coalescing();
+        let mut rng = Rng::new(41);
+        let g = random_trainlike(&mut rng, 4);
+        let (original, t1) = svc.submit_tiered(blocking_request(&g), None).unwrap();
+        assert_eq!(t1, ServeTier::Solved);
+        wait_until_pending(&svc, 0);
+        let (follower, t2) = svc.submit_tiered(blocking_request(&g), None).unwrap();
+        assert_eq!(t2, ServeTier::Coalesced);
+        follower.cancel();
+        std::thread::sleep(Duration::from_millis(100));
+        assert!(
+            !original.is_finished(),
+            "one coalesced handle's cancel must not stop the shared solve"
+        );
+        // The last vote (the original's) actually cancels; both handles
+        // then drain to the same validated plan.
+        original.cancel();
+        let p1 = original.join();
+        validate_plan(&g, &p1).unwrap();
+        let p2 = follower.join();
+        validate_plan(&g, &p2).unwrap();
+        assert_eq!(p1.arena_size, p2.arena_size);
+    }
+
+    #[test]
+    fn priority_and_queue_full_hold_under_coalescing() {
+        // Queue capacity 1, coalescing on. A blocker occupies the worker,
+        // a distinct graph fills the queue, a third distinct graph must
+        // still bounce with QueueFull — but an identical re-submission of
+        // the queued graph attaches without counting against capacity.
+        let svc = PlanService::with_capacity(1, 1).coalescing();
+        let mut rng = Rng::new(43);
+        let blocker_g = random_trainlike(&mut rng, 4);
+        let queued_g = random_trainlike(&mut rng, 2);
+        let other_g = random_trainlike(&mut rng, 3);
+        let (blocker, _) = svc.submit_tiered(blocking_request(&blocker_g), None).unwrap();
+        wait_until_pending(&svc, 0);
+        let (queued, tq) = svc.submit_tiered(fast_request(&queued_g), None).unwrap();
+        assert_eq!(tq, ServeTier::Solved);
+        match svc.submit_tiered(fast_request(&other_g), None) {
+            Err(SubmitError::QueueFull { capacity }) => assert_eq!(capacity, 1),
+            other => panic!("expected QueueFull, got {:?}", other.map(|_| "handle")),
+        }
+        let (attached, ta) = svc.submit_tiered(fast_request(&queued_g), None).unwrap();
+        assert_eq!(ta, ServeTier::Coalesced, "attach must bypass a full queue");
+        blocker.cancel();
+        let _ = blocker.join();
+        let p1 = queued.join();
+        validate_plan(&queued_g, &p1).unwrap();
+        let p2 = attached.join();
+        validate_plan(&queued_g, &p2).unwrap();
+    }
+
+    #[test]
+    fn cache_serves_exact_and_near_hits_through_the_service() {
+        let svc = PlanService::new(1);
+        let cache = Arc::new(PlanCache::in_memory(4));
+        let mut rng = Rng::new(47);
+        let g = random_trainlike(&mut rng, 3);
+        let (h, tier) = svc.submit_tiered(fast_request(&g), Some(&cache)).unwrap();
+        assert_eq!(tier, ServeTier::Solved);
+        let cold = h.join();
+        validate_plan(&g, &cold).unwrap();
+        // The completion hook ran before join() returned: the solve is
+        // cached now, and resubmitting the same graph is an exact hit
+        // answered without queueing.
+        assert_eq!(cache.len(), 1);
+        let (h2, tier2) = svc.submit_tiered(fast_request(&g), Some(&cache)).unwrap();
+        assert_eq!(tier2, ServeTier::Exact);
+        assert!(h2.is_finished(), "an exact hit is served already completed");
+        let warm = h2.join();
+        validate_plan(&g, &warm).unwrap();
+        assert_eq!(warm.arena_size, cold.arena_size);
+        assert_eq!(warm.order, cold.order);
+        // Perturb one tensor size: same skeleton, so the cache seeds the
+        // solve instead of answering outright.
+        let mut g2 = g.clone();
+        let idx = g2.edges.iter().enumerate().max_by_key(|(_, e)| e.size).unwrap().0;
+        g2.edges[idx].size *= 2;
+        let (h3, tier3) = svc.submit_tiered(fast_request(&g2), Some(&cache)).unwrap();
+        assert_eq!(tier3, ServeTier::Near);
+        let near = h3.join();
+        validate_plan(&g2, &near).unwrap();
+        assert_eq!(cache.stats().exact_hits, 1);
+        assert_eq!(cache.stats().near_hits, 1);
     }
 }
