@@ -66,6 +66,8 @@ fn main() {
                     row.nodes,
                     row.warm_attempts,
                     row.warm_hits,
+                    0,
+                    0,
                 ),
             ),
         ]));

@@ -5,8 +5,11 @@
 //! hard cases (Figure 12) but reach <1% fragmentation within 5 minutes.
 //!
 //! Writes `BENCH_fig11_addrgen_time.json` with per-case solver statistics
-//! (simplex iterations, B&B nodes, warm-start hit rate) so engine
-//! efficiency is tracked alongside wall-clock.
+//! (simplex iterations, B&B nodes, warm-start hit rate, cutting planes) so
+//! engine efficiency is tracked alongside wall-clock. The sweep runs twice
+//! — cutting planes on (the default) and off — and the summary row records
+//! the geometric-mean node reduction the cut engine buys, against the
+//! >= 20% target, checking that both runs agree on every arena.
 
 use olla::bench_support::{
     bench_solver_threads, fmt_secs, phase_cap, section, solver_stats_json, BenchReport,
@@ -24,18 +27,37 @@ fn main() {
         solver_threads: bench_solver_threads(),
         ..Default::default()
     };
+    let no_cut_opts = PlacementOptions { use_cuts: false, ..opts.clone() };
     let cases = zoo_cases(&[1, 32], ModelScale::Reduced);
     // Cases run serially (threads = 1) so per-case wall-clock matches the
     // paper's protocol — the solver's own node pool still parallelizes
     // inside each case. Memory-metric benches (fig7/8/13) sweep in parallel.
     let rows = fragmentation_sweep(&cases, &opts, 1);
-    let mut table =
-        Table::new(&["model", "batch", "method", "frag", "iters", "nodes", "time"]);
+    let rows_off = fragmentation_sweep(&cases, &no_cut_opts, 1);
+    let mut table = Table::new(&[
+        "model", "batch", "method", "frag", "iters", "nodes", "nodes w/o cuts", "cuts", "time",
+    ]);
     let mut report = BenchReport::new("fig11_addrgen_time");
     let mut times = Vec::new();
-    for row in &rows {
+    let mut log_ratio_sum = 0.0f64;
+    let mut ratio_count = 0u32;
+    let mut arenas_agree = true;
+    for (row, off) in rows.iter().zip(&rows_off) {
         if !matches!(row.model.as_str(), "efficientnet" | "googlenet") {
             times.push(row.addr_secs);
+        }
+        // Geo-mean over cases where the cut-free solver actually branched:
+        // 1-node solves carry no signal about the tree cuts can shrink.
+        if off.nodes > 1 && row.method == "Ilp" && off.method == "Ilp" {
+            log_ratio_sum += (row.nodes.max(1) as f64 / off.nodes as f64).ln();
+            ratio_count += 1;
+        }
+        if row.method == "Ilp" && off.method == "Ilp" && row.olla_arena != off.olla_arena {
+            arenas_agree = false;
+            println!(
+                "note: arena mismatch on {} bs{}: with cuts {} vs without {}",
+                row.model, row.batch, row.olla_arena, off.olla_arena
+            );
         }
         table.row(vec![
             row.model.clone(),
@@ -44,6 +66,8 @@ fn main() {
             format!("{:.2}%", row.olla_frag_pct),
             row.simplex_iters.to_string(),
             row.nodes.to_string(),
+            off.nodes.to_string(),
+            row.cuts_applied.to_string(),
             fmt_secs(row.addr_secs),
         ]);
         report.push(obj(vec![
@@ -52,9 +76,18 @@ fn main() {
             ("method", s(&row.method)),
             ("olla_frag_pct", num(row.olla_frag_pct)),
             ("addr_secs", num(row.addr_secs)),
+            ("nodes_with_cuts", num(row.nodes as f64)),
+            ("nodes_without_cuts", num(off.nodes as f64)),
             (
                 "solver",
-                solver_stats_json(row.simplex_iters, row.nodes, row.warm_attempts, row.warm_hits),
+                solver_stats_json(
+                    row.simplex_iters,
+                    row.nodes,
+                    row.warm_attempts,
+                    row.warm_hits,
+                    row.cuts_applied,
+                    row.cut_rounds,
+                ),
             ),
         ]));
     }
@@ -67,11 +100,50 @@ fn main() {
     let total_nodes: u64 = rows.iter().map(|r| r.nodes).sum();
     let total_attempts: u64 = rows.iter().map(|r| r.warm_attempts).sum();
     let total_hits: u64 = rows.iter().map(|r| r.warm_hits).sum();
+    let total_cuts: u64 = rows.iter().map(|r| r.cuts_applied).sum();
+    let total_rounds: u64 = rows.iter().map(|r| r.cut_rounds).sum();
+    let total_nodes_off: u64 = rows_off.iter().map(|r| r.nodes).sum();
     println!("total simplex iterations: {total_iters}; total B&B nodes: {total_nodes}");
+    let geo_reduction_pct = if ratio_count == 0 {
+        0.0
+    } else {
+        100.0 * (1.0 - (log_ratio_sum / ratio_count as f64).exp())
+    };
+    println!(
+        "cuts: {total_cuts} applied in {total_rounds} rounds; nodes {total_nodes} (with) vs \
+         {total_nodes_off} (without); geo-mean node reduction {geo_reduction_pct:.1}% over \
+         {ratio_count} branchy cases (target: >= 20%) — {}",
+        if ratio_count == 0 {
+            "no branchy cases at this scale"
+        } else if geo_reduction_pct >= 20.0 {
+            "target met"
+        } else {
+            "target missed"
+        }
+    );
+    println!(
+        "optimal arenas with and without cuts: {}",
+        if arenas_agree { "identical (cut safety holds)" } else { "MISMATCH" }
+    );
     report.push(obj(vec![
         ("model", s("TOTAL")),
-        ("solver", solver_stats_json(total_iters, total_nodes, total_attempts, total_hits)),
+        (
+            "solver",
+            solver_stats_json(
+                total_iters,
+                total_nodes,
+                total_attempts,
+                total_hits,
+                total_cuts,
+                total_rounds,
+            ),
+        ),
         ("median_secs", Json::Num(median(&times))),
+        ("nodes_with_cuts", num(total_nodes as f64)),
+        ("nodes_without_cuts", num(total_nodes_off as f64)),
+        ("node_reduction_geomean_pct", num(geo_reduction_pct)),
+        ("node_reduction_cases", num(ratio_count as f64)),
+        ("cut_safety_arenas_agree", Json::Bool(arenas_agree)),
     ]));
     match report.write() {
         Ok(path) => println!("wrote {}", path.display()),

@@ -4,8 +4,11 @@
 //! EfficientNet is tracked separately (Figure 10).
 //!
 //! Writes `BENCH_fig9_ordering_time.json` with per-case solver statistics
-//! (simplex iterations, B&B nodes, warm-start hit rate) so engine
-//! efficiency is tracked alongside wall-clock.
+//! (simplex iterations, B&B nodes, warm-start hit rate, cutting planes) so
+//! engine efficiency is tracked alongside wall-clock. The sweep runs twice
+//! — cutting planes on (the default) and off — and the summary row records
+//! the geometric-mean node reduction the cut engine buys, against the
+//! >= 20% target, checking that both runs agree on every peak.
 
 use olla::bench_support::{
     bench_solver_threads, fmt_secs, phase_cap, section, solver_stats_json, BenchReport,
@@ -23,19 +26,39 @@ fn main() {
         solver_threads: bench_solver_threads(),
         ..Default::default()
     };
+    let no_cut_opts = ScheduleOptions { use_cuts: false, ..opts.clone() };
     let cases = zoo_cases(&[1, 32], ModelScale::Reduced);
     // Cases run serially (threads = 1) so per-case wall-clock matches the
     // paper's protocol — the solver's own node pool still parallelizes
     // inside each case. Memory-metric benches (fig7/8/13) sweep in parallel.
     let rows = reorder_sweep(&cases, &opts, 1);
+    let rows_off = reorder_sweep(&cases, &no_cut_opts, 1);
     let mut table = Table::new(&[
-        "model", "batch", "ilp vars", "ilp rows", "status", "iters", "nodes", "warm%", "time",
+        "model", "batch", "ilp vars", "ilp rows", "status", "iters", "nodes", "nodes w/o cuts",
+        "cuts", "warm%", "time",
     ]);
     let mut report = BenchReport::new("fig9_ordering_time");
     let mut times = Vec::new();
-    for row in &rows {
+    let mut log_ratio_sum = 0.0f64;
+    let mut ratio_count = 0u32;
+    let mut peaks_agree = true;
+    for (row, off) in rows.iter().zip(&rows_off) {
         if row.model != "efficientnet" {
             times.push(row.solve_secs);
+        }
+        // Geo-mean over cases where the cut-free solver actually branched:
+        // 1-node solves carry no signal about the tree cuts can shrink.
+        if off.nodes > 1 && row.status == "optimal" && off.status == "optimal" {
+            log_ratio_sum += (row.nodes.max(1) as f64 / off.nodes as f64).ln();
+            ratio_count += 1;
+        }
+        if row.status == "optimal" && off.status == "optimal" && row.olla_peak != off.olla_peak
+        {
+            peaks_agree = false;
+            println!(
+                "note: peak mismatch on {} bs{}: with cuts {} vs without {}",
+                row.model, row.batch, row.olla_peak, off.olla_peak
+            );
         }
         table.row(vec![
             row.model.clone(),
@@ -45,6 +68,8 @@ fn main() {
             row.status.clone(),
             row.simplex_iters.to_string(),
             row.nodes.to_string(),
+            off.nodes.to_string(),
+            row.cuts_applied.to_string(),
             format!("{:.0}%", 100.0 * row.warm_hit_rate),
             fmt_secs(row.solve_secs),
         ]);
@@ -55,9 +80,18 @@ fn main() {
             ("ilp_rows", num(row.model_size.1 as f64)),
             ("status", s(&row.status)),
             ("solve_secs", num(row.solve_secs)),
+            ("nodes_with_cuts", num(row.nodes as f64)),
+            ("nodes_without_cuts", num(off.nodes as f64)),
             (
                 "solver",
-                solver_stats_json(row.simplex_iters, row.nodes, row.warm_attempts, row.warm_hits),
+                solver_stats_json(
+                    row.simplex_iters,
+                    row.nodes,
+                    row.warm_attempts,
+                    row.warm_hits,
+                    row.cuts_applied,
+                    row.cut_rounds,
+                ),
             ),
         ]));
     }
@@ -70,11 +104,52 @@ fn main() {
     let total_nodes: u64 = rows.iter().map(|r| r.nodes).sum();
     let total_attempts: u64 = rows.iter().map(|r| r.warm_attempts).sum();
     let total_hits: u64 = rows.iter().map(|r| r.warm_hits).sum();
+    let total_cuts: u64 = rows.iter().map(|r| r.cuts_applied).sum();
+    let total_rounds: u64 = rows.iter().map(|r| r.cut_rounds).sum();
+    let total_nodes_off: u64 = rows_off.iter().map(|r| r.nodes).sum();
     println!("total simplex iterations: {total_iters}; total B&B nodes: {total_nodes}");
+    // Geometric-mean node reduction bought by the cut engine, over the
+    // branchy cases (>1 node without cuts): the tentpole's >= 20% target.
+    let geo_reduction_pct = if ratio_count == 0 {
+        0.0
+    } else {
+        100.0 * (1.0 - (log_ratio_sum / ratio_count as f64).exp())
+    };
+    println!(
+        "cuts: {total_cuts} applied in {total_rounds} rounds; nodes {total_nodes} (with) vs \
+         {total_nodes_off} (without); geo-mean node reduction {geo_reduction_pct:.1}% over \
+         {ratio_count} branchy cases (target: >= 20%) — {}",
+        if ratio_count == 0 {
+            "no branchy cases at this scale"
+        } else if geo_reduction_pct >= 20.0 {
+            "target met"
+        } else {
+            "target missed"
+        }
+    );
+    println!(
+        "optimal peaks with and without cuts: {}",
+        if peaks_agree { "identical (cut safety holds)" } else { "MISMATCH" }
+    );
     report.push(obj(vec![
         ("model", s("TOTAL")),
-        ("solver", solver_stats_json(total_iters, total_nodes, total_attempts, total_hits)),
+        (
+            "solver",
+            solver_stats_json(
+                total_iters,
+                total_nodes,
+                total_attempts,
+                total_hits,
+                total_cuts,
+                total_rounds,
+            ),
+        ),
         ("median_secs", Json::Num(median(&times))),
+        ("nodes_with_cuts", num(total_nodes as f64)),
+        ("nodes_without_cuts", num(total_nodes_off as f64)),
+        ("node_reduction_geomean_pct", num(geo_reduction_pct)),
+        ("node_reduction_cases", num(ratio_count as f64)),
+        ("cut_safety_peaks_agree", Json::Bool(peaks_agree)),
     ]));
     match report.write() {
         Ok(path) => println!("wrote {}", path.display()),

@@ -144,7 +144,7 @@ fn main() {
             ("warm_hit_rate", num(warm_rate)),
             (
                 "solver",
-                solver_stats_json(0, 0, st.refine_attempts, st.refine_warm_hits),
+                solver_stats_json(0, 0, st.refine_attempts, st.refine_warm_hits, 0, 0),
             ),
         ]));
     }

@@ -125,6 +125,8 @@ fn main() {
                     deco.nodes,
                     deco.warm_attempts,
                     deco.warm_hits,
+                    deco.cuts_applied,
+                    deco.cut_rounds,
                 ),
             ),
         ]));
@@ -195,7 +197,7 @@ fn main() {
             ("warm_median_secs", num(warm_med)),
             ("cold_median_secs", num(cold_med)),
             ("speedup", num(speedup)),
-            ("solver", solver_stats_json(warm_iters, 0, pm.warm_attempts, pm.warm_hits)),
+            ("solver", solver_stats_json(warm_iters, 0, pm.warm_attempts, pm.warm_hits, 0, 0)),
         ]));
     }
 

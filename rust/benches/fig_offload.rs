@@ -68,7 +68,14 @@ fn main() {
             ("solve_secs", num(row.solve_secs)),
             (
                 "solver",
-                solver_stats_json(row.simplex_iters, row.nodes, row.warm_attempts, row.warm_hits),
+                solver_stats_json(
+                    row.simplex_iters,
+                    row.nodes,
+                    row.warm_attempts,
+                    row.warm_hits,
+                    row.cuts_applied,
+                    row.cut_rounds,
+                ),
             ),
         ]));
     }

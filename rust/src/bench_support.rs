@@ -96,6 +96,8 @@ pub fn solver_stats_json(
     nodes: u64,
     warm_attempts: u64,
     warm_hits: u64,
+    cuts_applied: u64,
+    cut_rounds: u64,
 ) -> Json {
     let hit_rate =
         if warm_attempts == 0 { 0.0 } else { warm_hits as f64 / warm_attempts as f64 };
@@ -105,6 +107,8 @@ pub fn solver_stats_json(
         ("warm_start_attempts", Json::Num(warm_attempts as f64)),
         ("warm_start_hits", Json::Num(warm_hits as f64)),
         ("warm_start_hit_rate", Json::Num(hit_rate)),
+        ("cuts_applied", Json::Num(cuts_applied as f64)),
+        ("cut_rounds", Json::Num(cut_rounds as f64)),
     ])
 }
 
@@ -120,6 +124,11 @@ pub struct SolverSample {
     pub bnb_nodes: f64,
     /// Warm-start acceptance rate over child LPs.
     pub warm_hit_rate: f64,
+    /// Cutting planes appended (root loop + node rounds). Informational:
+    /// the regression gate runs on `bnb_nodes`, which is what cuts buy.
+    pub cuts_applied: f64,
+    /// Separation rounds that appended at least one cut.
+    pub cut_rounds: f64,
 }
 
 /// Extract the solver-efficiency samples of a `BENCH_*.json` document
@@ -143,6 +152,8 @@ pub fn solver_samples(report: &Json) -> Vec<SolverSample> {
                 .get("warm_start_hit_rate")
                 .and_then(Json::as_f64)
                 .unwrap_or(0.0),
+            cuts_applied: solver.get("cuts_applied").and_then(Json::as_f64).unwrap_or(0.0),
+            cut_rounds: solver.get("cut_rounds").and_then(Json::as_f64).unwrap_or(0.0),
         });
     }
     out
@@ -160,6 +171,8 @@ pub fn samples_to_baseline_json(samples: &[SolverSample]) -> Json {
                     ("simplex_iters", Json::Num(sm.simplex_iters)),
                     ("bnb_nodes", Json::Num(sm.bnb_nodes)),
                     ("warm_hit_rate", Json::Num(sm.warm_hit_rate)),
+                    ("cuts_applied", Json::Num(sm.cuts_applied)),
+                    ("cut_rounds", Json::Num(sm.cut_rounds)),
                 ])
             })
             .collect(),
@@ -176,6 +189,8 @@ pub fn samples_from_baseline_json(doc: &Json) -> Vec<SolverSample> {
                 simplex_iters: row.get("simplex_iters").and_then(Json::as_f64).unwrap_or(0.0),
                 bnb_nodes: row.get("bnb_nodes").and_then(Json::as_f64).unwrap_or(0.0),
                 warm_hit_rate: row.get("warm_hit_rate").and_then(Json::as_f64).unwrap_or(0.0),
+                cuts_applied: row.get("cuts_applied").and_then(Json::as_f64).unwrap_or(0.0),
+                cut_rounds: row.get("cut_rounds").and_then(Json::as_f64).unwrap_or(0.0),
             })
         })
         .collect()
@@ -440,11 +455,11 @@ mod tests {
         report.push(crate::util::json::obj(vec![
             ("model", crate::util::json::s("alexnet")),
             ("batch", Json::Num(1.0)),
-            ("solver", solver_stats_json(1000, 50, 40, 36)),
+            ("solver", solver_stats_json(1000, 50, 40, 36, 12, 3)),
         ]));
         report.push(crate::util::json::obj(vec![
             ("model", crate::util::json::s("TOTAL")),
-            ("solver", solver_stats_json(5000, 220, 180, 150)),
+            ("solver", solver_stats_json(5000, 220, 180, 150, 60, 14)),
         ]));
         let samples = solver_samples(&report.to_json());
         assert_eq!(samples.len(), 2);
@@ -452,6 +467,8 @@ mod tests {
         assert_eq!(samples[1].key, "fig9/TOTAL");
         assert_eq!(samples[0].simplex_iters, 1000.0);
         assert!((samples[1].warm_hit_rate - 150.0 / 180.0).abs() < 1e-12);
+        assert_eq!(samples[0].cuts_applied, 12.0);
+        assert_eq!(samples[1].cut_rounds, 14.0);
         // Round-trip through the baseline document format.
         let doc = samples_to_baseline_json(&samples);
         let parsed =
@@ -468,6 +485,8 @@ mod tests {
             simplex_iters: 1000.0,
             bnb_nodes: 100.0,
             warm_hit_rate: 0.8,
+            cuts_applied: 10.0,
+            cut_rounds: 2.0,
         }];
         // Within 25%: fine.
         let ok = vec![SolverSample {
@@ -475,6 +494,8 @@ mod tests {
             simplex_iters: 1200.0,
             bnb_nodes: 120.0,
             warm_hit_rate: 0.7,
+            cuts_applied: 0.0,
+            cut_rounds: 0.0,
         }];
         assert!(compare_solver_samples(&base, &ok, 0.25).is_empty());
         // Iterations +60%, nodes +200%, hit rate halved: three failures.
@@ -483,6 +504,8 @@ mod tests {
             simplex_iters: 1600.0,
             bnb_nodes: 300.0,
             warm_hit_rate: 0.4,
+            cuts_applied: 0.0,
+            cut_rounds: 0.0,
         }];
         let failures = compare_solver_samples(&base, &bad, 0.25);
         assert_eq!(failures.len(), 3, "{failures:?}");
@@ -493,6 +516,8 @@ mod tests {
             simplex_iters: 9.0e9,
             bnb_nodes: 9.0e9,
             warm_hit_rate: 0.0,
+            cuts_applied: 0.0,
+            cut_rounds: 0.0,
         }];
         assert!(compare_solver_samples(&base, &other, 0.25).is_empty());
     }
@@ -506,12 +531,16 @@ mod tests {
             simplex_iters: 10.0,
             bnb_nodes: 2.0,
             warm_hit_rate: 0.0,
+            cuts_applied: 0.0,
+            cut_rounds: 0.0,
         }];
         let cur = vec![SolverSample {
             key: "fig9/small".into(),
             simplex_iters: 20.0,
             bnb_nodes: 6.0,
             warm_hit_rate: 0.0,
+            cuts_applied: 0.0,
+            cut_rounds: 0.0,
         }];
         assert!(compare_solver_samples(&base, &cur, 0.25).is_empty());
     }
@@ -584,7 +613,7 @@ mod tests {
         assert!(report.is_empty());
         report.push(crate::util::json::obj(vec![
             ("model", crate::util::json::s("alexnet")),
-            ("solver", solver_stats_json(1234, 7, 6, 5)),
+            ("solver", solver_stats_json(1234, 7, 6, 5, 4, 1)),
         ]));
         assert_eq!(report.len(), 1);
         let path = report.write_to(&dir).unwrap();
@@ -598,5 +627,7 @@ mod tests {
         assert_eq!(solver.get("bnb_nodes").unwrap().as_u64(), Some(7));
         let rate = solver.get("warm_start_hit_rate").unwrap().as_f64().unwrap();
         assert!((rate - 5.0 / 6.0).abs() < 1e-12);
+        assert_eq!(solver.get("cuts_applied").unwrap().as_u64(), Some(4));
+        assert_eq!(solver.get("cut_rounds").unwrap().as_u64(), Some(1));
     }
 }

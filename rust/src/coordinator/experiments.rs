@@ -112,6 +112,10 @@ pub struct ReorderRow {
     pub warm_hits: u64,
     /// Warm-start acceptance rate over child LPs (0 when no children).
     pub warm_hit_rate: f64,
+    /// Cutting planes appended (root loop + node rounds).
+    pub cuts_applied: u64,
+    /// Separation rounds that appended at least one cut.
+    pub cut_rounds: u64,
 }
 
 /// Hit rate helper shared by the report rows.
@@ -155,6 +159,8 @@ pub fn reorder_experiment(case: &ModelCase, opts: &ScheduleOptions) -> ReorderRo
         warm_attempts: sched.warm_attempts,
         warm_hits: sched.warm_hits,
         warm_hit_rate: hit_rate(sched.warm_hits, sched.warm_attempts),
+        cuts_applied: sched.cuts_applied,
+        cut_rounds: sched.cut_rounds,
     }
 }
 
@@ -204,6 +210,10 @@ pub struct FragRow {
     pub warm_hits: u64,
     /// Warm-start acceptance rate over child LPs (0 when no children).
     pub warm_hit_rate: f64,
+    /// Cutting planes appended (root loop + node rounds).
+    pub cuts_applied: u64,
+    /// Separation rounds that appended at least one cut.
+    pub cut_rounds: u64,
 }
 
 /// Run the fragmentation experiment: replay the PyTorch-order trace through
@@ -231,6 +241,8 @@ pub fn fragmentation_experiment(case: &ModelCase, opts: &PlacementOptions) -> Fr
         warm_attempts: placement.warm_attempts,
         warm_hits: placement.warm_hits,
         warm_hit_rate: hit_rate(placement.warm_hits, placement.warm_attempts),
+        cuts_applied: placement.cuts_applied,
+        cut_rounds: placement.cut_rounds,
     }
 }
 
@@ -347,6 +359,10 @@ pub struct OffloadRow {
     pub warm_attempts: u64,
     /// Warm-start attempts accepted by the dual re-solve path.
     pub warm_hits: u64,
+    /// Cutting planes appended (root loop + node rounds).
+    pub cuts_applied: u64,
+    /// Separation rounds that appended at least one cut.
+    pub cut_rounds: u64,
 }
 
 /// Run the offload experiment on one case: place the PyTorch-order
@@ -393,6 +409,8 @@ pub fn offload_experiment(
                 nodes: r.nodes,
                 warm_attempts: r.warm_attempts,
                 warm_hits: r.warm_hits,
+                cuts_applied: r.cuts_applied,
+                cut_rounds: r.cut_rounds,
             }
         })
         .collect()
@@ -477,6 +495,10 @@ pub struct RecomputeRow {
     pub warm_attempts: u64,
     /// Warm-start attempts accepted by the dual re-solve path.
     pub warm_hits: u64,
+    /// Cutting planes appended (root loop + node rounds).
+    pub cuts_applied: u64,
+    /// Separation rounds that appended at least one cut.
+    pub cut_rounds: u64,
 }
 
 /// Run the recompute-frontier experiment on one case: schedule once
@@ -567,6 +589,8 @@ pub fn recompute_experiment(
                 nodes: r.nodes,
                 warm_attempts: r.warm_attempts,
                 warm_hits: r.warm_hits,
+                cuts_applied: r.cuts_applied,
+                cut_rounds: r.cut_rounds,
             }
         })
         .collect()

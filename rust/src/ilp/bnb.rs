@@ -27,12 +27,15 @@
 //! an honest [`Solution::best_bound`] harvested from the abandoned open
 //! nodes — never an `Optimal` label.
 
-use super::model::{Model, Solution, SolveStatus, VarKind};
+use super::cuts::{
+    separate_clique_cuts, separate_cover_cuts, separate_gomory_cuts, Cut, CutHints, CutPool,
+};
+use super::model::{Cmp, Model, Solution, SolveStatus, VarKind};
 use super::presolve::{presolve, PresolveStatus};
 use super::simplex::{BasisSnapshot, LpEngine, LpOptions, LpStatus, NodeLpResult, EPS};
 use crate::util::Stopwatch;
 use std::cmp::Ordering as CmpOrdering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashSet};
 use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -42,6 +45,19 @@ use std::time::Duration;
 const STRONG_BRANCH_CANDS: usize = 8;
 /// Simplex-iteration cap per strong-branching probe LP.
 const STRONG_BRANCH_ITERS: u64 = 2_000;
+/// Maximum root cut-loop iterations (separate → append → warm re-solve).
+const ROOT_CUT_ROUNDS: usize = 8;
+/// Cuts appended per root round, strongest violations first.
+const ROOT_CUTS_PER_ROUND: usize = 24;
+/// Consecutive tailing-off rounds (no meaningful bound movement) that end
+/// the root cut loop.
+const ROOT_CUT_TAIL: u32 = 2;
+/// Tree depth below which nodes run a local separation round.
+const NODE_CUT_DEPTH: u32 = 3;
+/// Cuts appended per node-local round.
+const NODE_CUTS_PER_NODE: usize = 8;
+/// Capacity of each worker's pool of globally-valid cuts.
+const CUT_POOL_CAP: usize = 64;
 
 /// Order in which open nodes are pulled from the shared pool.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -236,6 +252,17 @@ pub struct SolveOptions {
     /// External control handle (cancellation, progress snapshots,
     /// incumbent callbacks).
     pub control: Option<Arc<SolveControl>>,
+    /// Enable the cutting-plane layer: the root cut loop (Gomory +
+    /// knapsack-cover + overlap-clique separation alternating with warm LP
+    /// re-solves) and depth-limited node-local cut rounds. Cuts never
+    /// remove an integer-feasible point, so the optimum is unchanged;
+    /// disable for A/B node-count comparisons.
+    pub cuts: bool,
+    /// Structural cut hints registered by the model builder
+    /// ([`crate::ilp::IlpBuilder`]): capacity rows for cover separation and
+    /// pair-ordering gadgets for clique separation. `None` limits
+    /// separation to Gomory cuts.
+    pub cut_hints: Option<Arc<CutHints>>,
 }
 
 impl Default for SolveOptions {
@@ -251,6 +278,8 @@ impl Default for SolveOptions {
             search: SearchOrder::BestBound,
             stop_gap: None,
             control: None,
+            cuts: true,
+            cut_hints: None,
         }
     }
 }
@@ -278,6 +307,8 @@ struct Node {
     warm: Option<Arc<BasisSnapshot>>,
     /// How this node was created (None for the root).
     branch: Option<BranchInfo>,
+    /// Branching depth (0 for the root); gates node-local cut rounds.
+    depth: u32,
 }
 
 /// Max-heap wrapper ordering nodes by *smallest* parent bound first.
@@ -416,6 +447,8 @@ struct Shared<'a> {
     model: &'a Model,
     engine: LpEngine,
     int_vars: Vec<usize>,
+    /// Integrality mask over model variables, for Gomory separation.
+    is_int: Vec<bool>,
     opts: &'a SolveOptions,
     lp_opts: LpOptions,
     watch: &'a Stopwatch,
@@ -429,6 +462,8 @@ struct Shared<'a> {
     iters: AtomicU64,
     warm_attempts: AtomicU64,
     warm_hits: AtomicU64,
+    cuts_applied: AtomicU64,
+    cut_rounds: AtomicU64,
     stop: Arc<AtomicBool>,
     stopped_early: AtomicBool,
     lp_limited: AtomicBool,
@@ -495,12 +530,13 @@ pub fn solve(model: &Model, opts: &SolveOptions) -> Solution {
             0,
             0,
             (0, 0),
+            (0, 0),
         );
     }
 
     // One engine, shared by every worker: the standard form is built once
     // from the presolved root bounds.
-    let engine = LpEngine::new(model, &pre.lb, &pre.ub);
+    let mut engine = LpEngine::new(model, &pre.lb, &pre.ub);
     if engine.root_infeasible() {
         return finish(
             if incumbent.is_some() { SolveStatus::Optimal } else { SolveStatus::Infeasible },
@@ -510,6 +546,7 @@ pub fn solve(model: &Model, opts: &SolveOptions) -> Solution {
             incumbents_log,
             0,
             0,
+            (0, 0),
             (0, 0),
         );
     }
@@ -521,8 +558,35 @@ pub fn solve(model: &Model, opts: &SolveOptions) -> Solution {
         .filter(|(_, v)| matches!(v.kind, VarKind::Binary | VarKind::Integer))
         .map(|(i, _)| i)
         .collect();
+    let is_int: Vec<bool> = model
+        .vars
+        .iter()
+        .map(|v| matches!(v.kind, VarKind::Binary | VarKind::Integer))
+        .collect();
 
     let threads = effective_threads(opts, int_vars.len());
+
+    // Root cut loop: alternate LP re-solves (warm from the lifted basis)
+    // with separation rounds until the bound tails off. Every appended row
+    // is valid at the root bounds, so it stays in the engine for the whole
+    // search and tightens every node's relaxation.
+    let mut root_stats = RootCutStats::default();
+    let root_warm = if opts.cuts && !int_vars.is_empty() {
+        root_cut_loop(
+            &mut engine,
+            &pre.lb,
+            &pre.ub,
+            &int_vars,
+            &is_int,
+            opts,
+            &lp_opts,
+            threads,
+            &mut root_stats,
+        )
+    } else {
+        None
+    };
+
     let num_vars = model.num_vars();
     let mut queue = NodeQueue::new(opts.search);
     queue.push(Node {
@@ -530,13 +594,15 @@ pub fn solve(model: &Model, opts: &SolveOptions) -> Solution {
         ub: pre.ub,
         parent_bound: f64::NEG_INFINITY,
         parent_obj: f64::NEG_INFINITY,
-        warm: None,
+        warm: root_warm,
         branch: None,
+        depth: 0,
     });
     let shared = Shared {
         model,
         engine,
         int_vars,
+        is_int,
         opts,
         lp_opts,
         watch: &watch,
@@ -556,9 +622,11 @@ pub fn solve(model: &Model, opts: &SolveOptions) -> Solution {
         pc: Mutex::new(PcTable::new(num_vars)),
         control: opts.control.clone(),
         nodes: AtomicU64::new(0),
-        iters: AtomicU64::new(0),
+        iters: AtomicU64::new(root_stats.iters),
         warm_attempts: AtomicU64::new(0),
         warm_hits: AtomicU64::new(0),
+        cuts_applied: AtomicU64::new(root_stats.cuts_applied),
+        cut_rounds: AtomicU64::new(root_stats.cut_rounds),
         stop,
         stopped_early: AtomicBool::new(false),
         lp_limited: AtomicBool::new(false),
@@ -586,6 +654,10 @@ pub fn solve(model: &Model, opts: &SolveOptions) -> Solution {
         shared.warm_attempts.load(Ordering::Relaxed),
         shared.warm_hits.load(Ordering::Relaxed),
     );
+    let cut_stats = (
+        shared.cuts_applied.load(Ordering::Relaxed),
+        shared.cut_rounds.load(Ordering::Relaxed),
+    );
     let stopped_early = shared.stopped_early.load(Ordering::Relaxed);
     let lp_limited = shared.lp_limited.load(Ordering::Relaxed);
 
@@ -599,6 +671,7 @@ pub fn solve(model: &Model, opts: &SolveOptions) -> Solution {
             nodes_explored,
             simplex_iters,
             warm_stats,
+            cut_stats,
         );
     }
 
@@ -642,7 +715,124 @@ pub fn solve(model: &Model, opts: &SolveOptions) -> Solution {
         nodes_explored,
         simplex_iters,
         warm_stats,
+        cut_stats,
     )
+}
+
+/// Counters accumulated by the root cut loop.
+#[derive(Default)]
+struct RootCutStats {
+    iters: u64,
+    cuts_applied: u64,
+    cut_rounds: u64,
+}
+
+/// Solve the root LP, then alternate separation rounds with warm re-solves
+/// from the lifted basis until no violated cut is found, the relaxation
+/// goes integral, or the bound tails off. Returns the final root basis
+/// (dimensioned for the engine *with* its cut rows) to warm-start the root
+/// node.
+#[allow(clippy::too_many_arguments)]
+fn root_cut_loop(
+    engine: &mut LpEngine,
+    lb: &[f64],
+    ub: &[f64],
+    int_vars: &[usize],
+    is_int: &[bool],
+    opts: &SolveOptions,
+    lp_opts: &LpOptions,
+    threads: usize,
+    stats: &mut RootCutStats,
+) -> Option<Arc<BasisSnapshot>> {
+    let hints = opts.cut_hints.as_deref();
+    let mut seen: HashSet<u64> = HashSet::new();
+    let mut tail = 0u32;
+    let mut r = engine.solve_node(lb, ub, None, lp_opts);
+    stats.iters += r.iters;
+    for _ in 0..ROOT_CUT_ROUNDS {
+        if r.status != LpStatus::Optimal {
+            break;
+        }
+        let fractional = int_vars.iter().any(|&j| {
+            let f = r.x[j] - r.x[j].floor();
+            f.min(1.0 - f) > 1e-6
+        });
+        if !fractional {
+            break;
+        }
+        let Some(snap) = r.basis.as_ref() else { break };
+
+        // Separate the three families; they are independent, so run them
+        // on scoped threads when the solve is parallel anyway.
+        let mut found: Vec<Cut> = if threads > 1 && hints.is_some() {
+            let x = &r.x;
+            let eng = &*engine;
+            std::thread::scope(|sc| {
+                let gom = sc.spawn(move || {
+                    separate_gomory_cuts(eng, lb, ub, snap, is_int, ROOT_CUTS_PER_ROUND)
+                });
+                let cov = sc.spawn(move || {
+                    separate_cover_cuts(hints.unwrap(), x, ROOT_CUTS_PER_ROUND)
+                });
+                let mut cuts =
+                    separate_clique_cuts(hints.unwrap(), x, ROOT_CUTS_PER_ROUND);
+                cuts.extend(cov.join().unwrap());
+                cuts.extend(gom.join().unwrap());
+                cuts
+            })
+        } else {
+            let mut cuts =
+                separate_gomory_cuts(engine, lb, ub, snap, is_int, ROOT_CUTS_PER_ROUND);
+            if let Some(h) = hints {
+                cuts.extend(separate_cover_cuts(h, &r.x, ROOT_CUTS_PER_ROUND));
+                cuts.extend(separate_clique_cuts(h, &r.x, ROOT_CUTS_PER_ROUND));
+            }
+            cuts
+        };
+        found.retain(|c| c.is_violated(&r.x) && seen.insert(c.row_hash()));
+        found.sort_by(|a, b| {
+            b.violation(&r.x)
+                .partial_cmp(&a.violation(&r.x))
+                .unwrap_or(CmpOrdering::Equal)
+        });
+        found.truncate(ROOT_CUTS_PER_ROUND);
+        if found.is_empty() {
+            break;
+        }
+
+        let mut lifted = snap.clone();
+        for cut in &found {
+            let terms: Vec<(usize, f64)> =
+                cut.terms.iter().map(|&(v, a)| (v.0, a)).collect();
+            engine.append_model_con(&terms, Cmp::Le, cut.rhs, Some(&mut lifted));
+        }
+        stats.cuts_applied += found.len() as u64;
+        stats.cut_rounds += 1;
+
+        let prev_obj = r.obj;
+        let r2 = engine.solve_node(lb, ub, Some(&lifted), lp_opts);
+        stats.iters += r2.iters;
+        match r2.status {
+            LpStatus::Optimal => {
+                let moved = r2.obj - prev_obj > 1e-6 * (1.0 + prev_obj.abs());
+                r = r2;
+                if moved {
+                    tail = 0;
+                } else {
+                    tail += 1;
+                    if tail >= ROOT_CUT_TAIL {
+                        break;
+                    }
+                }
+            }
+            // Infeasible here means infeasible *with* rows that every
+            // integer point satisfies: the root node will rediscover it
+            // and report MILP infeasibility. Stop cutting either way; a
+            // basis from before the append would be stale anyway.
+            _ => return None,
+        }
+    }
+    r.basis.take().map(Arc::new)
 }
 
 fn effective_threads(opts: &SolveOptions, num_int_vars: usize) -> usize {
@@ -657,8 +847,16 @@ fn effective_threads(opts: &SolveOptions, num_int_vars: usize) -> usize {
 }
 
 /// Worker loop: steal the best open node from the shared pool, then dive
-/// depth-first.
+/// depth-first. Each worker owns a clone of the root engine so node-local
+/// cut rows can be appended without cross-thread coordination, plus a pool
+/// of globally-valid cuts it has separated before.
 fn worker(s: &Shared<'_>, wid: usize) {
+    let mut weng = s.engine.clone();
+    let mut cut_pool = CutPool::new(CUT_POOL_CAP);
+    // Engine rows appended during the current dive (node-local cuts).
+    // They are valid for the dive's subtree only, so the dive removes them
+    // on the way out and the engine returns to the shared root shape.
+    let mut local_rows: Vec<usize> = Vec::new();
     loop {
         let node = {
             let mut p = s.pool.lock().unwrap();
@@ -688,7 +886,12 @@ fn worker(s: &Shared<'_>, wid: usize) {
                 s.record_open_bound(n.parent_bound);
                 break;
             }
-            cur = process(s, n, wid);
+            cur = process(s, n, wid, &mut weng, &mut cut_pool, &mut local_rows);
+        }
+        // Drop the dive's cut rows, highest row first so the remaining
+        // indices stay valid.
+        while let Some(row) = local_rows.pop() {
+            weng.remove_con(row);
         }
         let mut p = s.pool.lock().unwrap();
         p.in_flight -= 1;
@@ -739,8 +942,17 @@ fn publish_progress(s: &Shared<'_>, wid: usize, node_bound: f64) -> bool {
 }
 
 /// Expand one node. Returns the preferred child for the worker to dive
-/// into (the sibling goes to the shared pool).
-fn process(s: &Shared<'_>, node: Node, wid: usize) -> Option<Node> {
+/// into (the sibling goes to the shared pool). `weng` is the worker's
+/// engine clone; rows this call appends are recorded in `local_rows` and
+/// removed by the worker when the dive ends.
+fn process(
+    s: &Shared<'_>,
+    node: Node,
+    wid: usize,
+    weng: &mut LpEngine,
+    cut_pool: &mut CutPool,
+    local_rows: &mut Vec<usize>,
+) -> Option<Node> {
     let cancelled = s.control.as_ref().is_some_and(|c| c.cancelled());
     if cancelled
         || s.watch.elapsed() >= s.opts.time_limit
@@ -758,7 +970,7 @@ fn process(s: &Shared<'_>, node: Node, wid: usize) -> Option<Node> {
         return None;
     }
 
-    let r = s.engine.solve_node(&node.lb, &node.ub, node.warm.as_deref(), &s.lp_opts);
+    let mut r = weng.solve_node(&node.lb, &node.ub, node.warm.as_deref(), &s.lp_opts);
     s.iters.fetch_add(r.iters, Ordering::Relaxed);
     if node.warm.is_some() {
         s.warm_attempts.fetch_add(1, Ordering::Relaxed);
@@ -817,12 +1029,31 @@ fn process(s: &Shared<'_>, node: Node, wid: usize) -> Option<Node> {
     }
 
     // Collect fractional integer variables.
-    let mut cands: Vec<(usize, f64)> = Vec::new();
-    for &j in &s.int_vars {
-        let xj = r.x[j];
-        let frac = xj - xj.floor();
-        if frac.min(1.0 - frac) > 1e-6 {
-            cands.push((j, frac));
+    let mut cands = fractional_cands(s, &r.x);
+
+    // Node-local cut round: shallow fractional nodes get one separation
+    // pass (pool first, then fresh cover/clique/Gomory) and a warm
+    // re-solve against the tightened relaxation.
+    if s.opts.cuts && node.depth <= NODE_CUT_DEPTH && !cands.is_empty() {
+        if let Some(r2) = node_cut_round(s, weng, cut_pool, local_rows, &node, &r) {
+            match r2.status {
+                LpStatus::Optimal => {
+                    r = r2;
+                    bound = r.obj;
+                    if s.opts.integral_objective {
+                        bound = (bound - 1e-6).ceil();
+                    }
+                    if bound >= prune_threshold(s.best_obj(), s.opts) {
+                        return None;
+                    }
+                    cands = fractional_cands(s, &r.x);
+                }
+                // The cut rows hold at every integer point of this
+                // subtree, so an infeasible re-solve prunes the node.
+                LpStatus::Infeasible => return None,
+                // Inconclusive re-solve: branch on the pre-cut optimum.
+                _ => {}
+            }
         }
     }
 
@@ -859,7 +1090,7 @@ fn process(s: &Shared<'_>, node: Node, wid: usize) -> Option<Node> {
 
     // Root node: seed the pseudo-cost table with strong branching probes.
     if node.parent_bound == f64::NEG_INFINITY && cands.len() >= 2 {
-        strong_branch_root(s, &node, &r, &cands);
+        strong_branch_root(s, weng, &node, &r, &cands);
     }
 
     let (j, frac) = select_branch(s, &cands);
@@ -876,6 +1107,7 @@ fn process(s: &Shared<'_>, node: Node, wid: usize) -> Option<Node> {
         parent_obj: r.obj,
         warm: warm.clone(),
         branch: Some(BranchInfo { var: j, dist: frac.max(1e-6), up: false }),
+        depth: node.depth + 1,
     };
     let mut up_lb = node.lb;
     up_lb[j] = floor + 1.0;
@@ -886,9 +1118,16 @@ fn process(s: &Shared<'_>, node: Node, wid: usize) -> Option<Node> {
         parent_obj: r.obj,
         warm,
         branch: Some(BranchInfo { var: j, dist: (1.0 - frac).max(1e-6), up: true }),
+        depth: node.depth + 1,
     };
     // Dive into the branch nearest the LP value; share the sibling.
-    let (dive, share) = if frac > 0.5 { (up, down) } else { (down, up) };
+    let (dive, mut share) = if frac > 0.5 { (up, down) } else { (down, up) };
+    if !local_rows.is_empty() {
+        // The sibling will be solved by some worker against the *base*
+        // engine shape; a basis dimensioned for this dive's cut rows
+        // would be rejected there, so don't ship it.
+        share.warm = None;
+    }
     {
         let mut p = s.pool.lock().unwrap();
         p.queue.push(share);
@@ -897,10 +1136,85 @@ fn process(s: &Shared<'_>, node: Node, wid: usize) -> Option<Node> {
     Some(dive)
 }
 
+/// Fractional integer variables of an LP solution (branching candidates).
+fn fractional_cands(s: &Shared<'_>, x: &[f64]) -> Vec<(usize, f64)> {
+    let mut cands: Vec<(usize, f64)> = Vec::new();
+    for &j in &s.int_vars {
+        let xj = x[j];
+        let frac = xj - xj.floor();
+        if frac.min(1.0 - frac) > 1e-6 {
+            cands.push((j, frac));
+        }
+    }
+    cands
+}
+
+/// One node-local separation round: collect violated cuts (the worker's
+/// pool first, then fresh cover/clique cuts — which are globally valid and
+/// get pooled — then Gomory cuts read off this node's basis, which are
+/// only subtree-valid and never pooled), append the strongest few, and
+/// warm re-solve from the lifted basis. Returns `None` when there was
+/// nothing to separate.
+fn node_cut_round(
+    s: &Shared<'_>,
+    weng: &mut LpEngine,
+    cut_pool: &mut CutPool,
+    local_rows: &mut Vec<usize>,
+    node: &Node,
+    r: &NodeLpResult,
+) -> Option<NodeLpResult> {
+    let snap = r.basis.as_ref()?;
+    let mut found: Vec<Cut> = cut_pool.violated(&r.x);
+    if let Some(h) = s.opts.cut_hints.as_deref() {
+        for c in separate_cover_cuts(h, &r.x, NODE_CUTS_PER_NODE) {
+            if cut_pool.insert(c.clone()) {
+                found.push(c);
+            }
+        }
+        for c in separate_clique_cuts(h, &r.x, NODE_CUTS_PER_NODE) {
+            if cut_pool.insert(c.clone()) {
+                found.push(c);
+            }
+        }
+    }
+    found.extend(separate_gomory_cuts(
+        weng,
+        &node.lb,
+        &node.ub,
+        snap,
+        &s.is_int,
+        NODE_CUTS_PER_NODE,
+    ));
+    let mut seen: HashSet<u64> = HashSet::new();
+    found.retain(|c| c.is_violated(&r.x) && seen.insert(c.row_hash()));
+    found.sort_by(|a, b| {
+        b.violation(&r.x).partial_cmp(&a.violation(&r.x)).unwrap_or(CmpOrdering::Equal)
+    });
+    found.truncate(NODE_CUTS_PER_NODE);
+    if found.is_empty() {
+        return None;
+    }
+
+    let mut lifted = snap.clone();
+    for cut in &found {
+        let row = weng.num_rows();
+        let terms: Vec<(usize, f64)> = cut.terms.iter().map(|&(v, a)| (v.0, a)).collect();
+        weng.append_model_con(&terms, Cmp::Le, cut.rhs, Some(&mut lifted));
+        local_rows.push(row);
+    }
+    s.cuts_applied.fetch_add(found.len() as u64, Ordering::Relaxed);
+    s.cut_rounds.fetch_add(1, Ordering::Relaxed);
+
+    let r2 = weng.solve_node(&node.lb, &node.ub, Some(&lifted), &s.lp_opts);
+    s.iters.fetch_add(r2.iters, Ordering::Relaxed);
+    Some(r2)
+}
+
 /// Probe the most fractional root candidates with iteration-capped child
 /// LPs and record their bound degradations as initial pseudo-costs.
 fn strong_branch_root(
     s: &Shared<'_>,
+    eng: &LpEngine,
     node: &Node,
     r: &NodeLpResult,
     cands: &[(usize, f64)],
@@ -925,7 +1239,7 @@ fn strong_branch_root(
         // Down probe: ub[j] = floor.
         let mut ub = node.ub.clone();
         ub[j] = floor;
-        let rd = s.engine.solve_node(&node.lb, &ub, r.basis.as_ref(), &sb_opts);
+        let rd = eng.solve_node(&node.lb, &ub, r.basis.as_ref(), &sb_opts);
         s.iters.fetch_add(rd.iters, Ordering::Relaxed);
         if rd.status == LpStatus::Optimal {
             let per_unit = (rd.obj - r.obj).max(0.0) / frac.max(1e-6);
@@ -934,7 +1248,7 @@ fn strong_branch_root(
         // Up probe: lb[j] = floor + 1.
         let mut lb = node.lb.clone();
         lb[j] = floor + 1.0;
-        let ru = s.engine.solve_node(&lb, &node.ub, r.basis.as_ref(), &sb_opts);
+        let ru = eng.solve_node(&lb, &node.ub, r.basis.as_ref(), &sb_opts);
         s.iters.fetch_add(ru.iters, Ordering::Relaxed);
         if ru.status == LpStatus::Optimal {
             let per_unit = (ru.obj - r.obj).max(0.0) / (1.0 - frac).max(1e-6);
@@ -993,6 +1307,7 @@ fn finish(
     nodes: u64,
     simplex_iters: u64,
     warm_stats: (u64, u64),
+    cut_stats: (u64, u64),
 ) -> Solution {
     Solution {
         status,
@@ -1004,6 +1319,8 @@ fn finish(
         simplex_iters,
         warm_attempts: warm_stats.0,
         warm_hits: warm_stats.1,
+        cuts_applied: cut_stats.0,
+        cut_rounds: cut_stats.1,
     }
 }
 
@@ -1270,7 +1587,9 @@ mod tests {
             .collect();
         m.constraint(xs.iter().map(|&x| (x, 2.0)).collect(), Cmp::Le, 7.0);
         m.constraint(xs.iter().enumerate().map(|(i, &x)| (x, 1.0 + (i % 3) as f64)).collect(), Cmp::Le, 9.0);
-        let opts = SolveOptions { threads: 1, ..default_opts() };
+        // Cuts off: root cuts can close the gap outright, and this test is
+        // about warm starts across *branching*.
+        let opts = SolveOptions { threads: 1, cuts: false, ..default_opts() };
         let s = solve(&m, &opts);
         assert_eq!(s.status, SolveStatus::Optimal);
         assert!(s.nodes > 1, "expected branching, got {} nodes", s.nodes);
@@ -1281,6 +1600,38 @@ mod tests {
             s.warm_hits,
             s.warm_attempts
         );
+    }
+
+    #[test]
+    fn root_cuts_tighten_without_changing_the_optimum() {
+        // Branchy knapsack with a fractional root LP: the cut loop must
+        // separate something, and the optimum must match the cut-free
+        // solve exactly.
+        let mut m = Model::new();
+        let n = 10;
+        let xs: Vec<_> = (0..n)
+            .map(|i| m.binary(format!("x{i}"), -((i % 5) as f64) - 1.5))
+            .collect();
+        m.constraint(xs.iter().map(|&x| (x, 2.0)).collect(), Cmp::Le, 7.0);
+        m.constraint(
+            xs.iter().enumerate().map(|(i, &x)| (x, 1.0 + (i % 3) as f64)).collect(),
+            Cmp::Le,
+            9.0,
+        );
+        let on = solve(&m, &default_opts());
+        let off = solve(&m, &SolveOptions { cuts: false, ..default_opts() });
+        assert_eq!(on.status, SolveStatus::Optimal);
+        assert_eq!(off.status, SolveStatus::Optimal);
+        assert!(
+            (on.objective - off.objective).abs() < 1e-6,
+            "cuts changed the optimum: {} vs {}",
+            on.objective,
+            off.objective
+        );
+        assert!(on.cuts_applied > 0, "root loop separated nothing");
+        assert!(on.cut_rounds > 0);
+        assert_eq!(off.cuts_applied, 0);
+        assert_eq!(off.cut_rounds, 0);
     }
 
     #[test]

@@ -22,6 +22,7 @@
 //! [`IlpMeta`] (groups + pair registry). The equation-by-equation map
 //! from the paper to these gadgets lives in `docs/FORMULATION.md`.
 
+use super::cuts::CutHints;
 use super::model::{Cmp, Model, VarId};
 use std::collections::HashMap;
 
@@ -51,6 +52,11 @@ pub struct IlpMeta {
     pub groups: HashMap<String, Vec<VarId>>,
     /// Pair-ordering binaries keyed by the caller's `(i, j)` key.
     pub pairs: HashMap<(usize, usize), PairVars>,
+    /// Structure registered for the cut separators: capacity rows
+    /// (declared via [`IlpBuilder::capacity_hint`]) and pair-ordering
+    /// gadgets (auto-registered by [`IlpBuilder::pair_no_overlap`] when
+    /// both sizes are positive).
+    pub cut_hints: CutHints,
 }
 
 /// Incremental model builder with named groups and formulation helpers.
@@ -235,7 +241,23 @@ impl IlpBuilder {
 
         let pv = PairVars { below, above };
         self.meta.pairs.insert(key, pv);
+        // Overlap-clique cuts chain the spatial rows `pos + size <= pos'`
+        // into an impossible cycle; that argument needs both sizes to be
+        // strictly positive, so zero-sized gadgets stay unregistered.
+        if size_i > 0.0 && size_j > 0.0 {
+            self.meta.cut_hints.pair_edge(key, pv);
+        }
         pv
+    }
+
+    /// Register a capacity row for knapsack-cover separation: 0/1-valued
+    /// `(weight, expression)` items against a constant `cap`. This adds
+    /// **no constraint** — the capacity must already be enforced by the
+    /// model (eq. 8/13 residency rows, region fit rows); the hint only
+    /// tells [`crate::ilp::cuts::separate_cover_cuts`] where the knapsack
+    /// structure lives. Rows that cannot overrun `cap` are dropped.
+    pub fn capacity_hint(&mut self, items: Vec<(f64, Vec<(VarId, f64)>)>, cap: f64) {
+        self.meta.cut_hints.capacity_row(items, cap);
     }
 
     /// The Checkmate-style spill/regeneration indicator of the

@@ -1,0 +1,762 @@
+//! Cutting planes for the branch-and-bound core.
+//!
+//! Three separators tighten the LP relaxation before (and sparsely during)
+//! the tree search in [`crate::ilp::bnb`]:
+//!
+//! * **Gomory mixed-integer cuts** — generic rounding cuts read directly
+//!   off the LU basis of the simplex engine
+//!   ([`LpEngine::gomory_cuts`](crate::ilp::simplex::LpEngine)); they need
+//!   no problem structure and close most of the root gap on the OLLA
+//!   big-M disjunction rows.
+//! * **Knapsack-cover cuts** ([`separate_cover_cuts`]) — on the
+//!   device-residency/capacity rows `Σ sizeᵢ·zᵢ ≤ cap`, where each `zᵢ`
+//!   is a 0/1-valued expression (a raw binary, or the scheduling
+//!   composite `C + P − S`): any subset whose sizes overrun the capacity
+//!   can have at most all-but-one of its members resident.
+//! * **Overlap-clique cuts** ([`separate_clique_cuts`]) — over the
+//!   eq. 6/7 pair-ordering binaries: around any triangle of mutually
+//!   overlapping tensors, a directed ordering cycle is spatially
+//!   impossible, so `below_ij + below_jk + below_ki ≤ 2` (and its
+//!   mirror).
+//!
+//! Separators do not rediscover structure from raw coefficients: the model
+//! assemblers in [`crate::olla`] register it in a [`CutHints`] registry
+//! while building ([`crate::ilp::builder::IlpBuilder`] auto-registers pair
+//! gadgets; capacity rows are declared with
+//! [`IlpBuilder::capacity_hint`](crate::ilp::builder::IlpBuilder::capacity_hint)).
+//!
+//! All cuts are `Σ coef·x ≤ rhs` rows over **model** variables ([`Cut`]),
+//! deduplicated by a quantized row hash, and managed at tree nodes by an
+//! age/capacity-bounded [`CutPool`]. Validity contract: cover and clique
+//! cuts are satisfied by *every* integer-feasible point (globally valid);
+//! Gomory cuts are valid under the bounds they were separated with (root
+//! bounds → globally valid, node bounds → subtree-valid). The property
+//! tests at the bottom of this module check both against brute-force
+//! enumeration.
+
+use super::builder::PairVars;
+use super::model::VarId;
+use super::simplex::{BasisSnapshot, LpEngine};
+use std::collections::HashMap;
+
+/// Relative violation threshold: a cut is only worth appending when the
+/// LP point exceeds its right-hand side by more than this.
+pub const VIOLATION_TOL: f64 = 1e-6;
+
+/// Pool entries not violated for this many consecutive checks are evicted.
+const POOL_MAX_AGE: u32 = 8;
+
+/// A valid inequality `Σ coef·x ≤ rhs` over model variables.
+#[derive(Debug, Clone)]
+pub struct Cut {
+    /// Sparse terms, sorted by variable id (duplicates merged).
+    pub terms: Vec<(VarId, f64)>,
+    /// Right-hand side of the `≤` row.
+    pub rhs: f64,
+}
+
+impl Cut {
+    /// Normalize raw terms into a cut: sort, merge duplicates, drop zeros.
+    pub fn new(terms: Vec<(VarId, f64)>, rhs: f64) -> Cut {
+        let mut sorted = terms;
+        sorted.sort_by_key(|&(v, _)| v);
+        let mut merged: Vec<(VarId, f64)> = Vec::with_capacity(sorted.len());
+        for (v, c) in sorted {
+            match merged.last_mut() {
+                Some((lv, lc)) if *lv == v => *lc += c,
+                _ => merged.push((v, c)),
+            }
+        }
+        merged.retain(|&(_, c)| c != 0.0);
+        Cut { terms: merged, rhs }
+    }
+
+    /// `lhs(x) - rhs`: positive when `x` violates the cut.
+    pub fn violation(&self, x: &[f64]) -> f64 {
+        let lhs: f64 = self.terms.iter().map(|&(v, c)| c * x[v.0]).sum();
+        lhs - self.rhs
+    }
+
+    /// True when the violation at `x` clears the relative threshold.
+    pub fn is_violated(&self, x: &[f64]) -> bool {
+        self.violation(x) > VIOLATION_TOL * (1.0 + self.rhs.abs())
+    }
+
+    /// Content hash for deduplication: FNV-1a over the sorted variable ids
+    /// and the coefficients quantized relative to the largest magnitude,
+    /// so float noise between two separations of the same row collapses
+    /// onto one hash.
+    pub fn row_hash(&self) -> u64 {
+        let maxabs = self
+            .terms
+            .iter()
+            .fold(self.rhs.abs(), |mx, &(_, c)| mx.max(c.abs()))
+            .max(1e-12);
+        let q = |v: f64| (v / maxabs * 1e6).round() as i64;
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut eat = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        };
+        eat(self.terms.len() as u64);
+        for &(v, c) in &self.terms {
+            eat(v.0 as u64);
+            eat(q(c) as u64);
+        }
+        eat(q(self.rhs) as u64);
+        h
+    }
+}
+
+/// One capacity row registered for cover separation: 0/1-valued item
+/// expressions with nonnegative weights against a constant capacity.
+#[derive(Debug, Clone)]
+pub struct CapacityHint {
+    /// `(weight, expression)` items; each expression is 0/1-valued in
+    /// every feasible integer solution.
+    pub items: Vec<(f64, Vec<(VarId, f64)>)>,
+    /// The capacity the weighted sum of the items must respect.
+    pub cap: f64,
+}
+
+/// Structure registry the model builders populate for the separators.
+///
+/// Lives in [`crate::ilp::builder::IlpMeta`] and is carried into
+/// [`crate::ilp::bnb::SolveOptions`] by the solve wrappers in
+/// [`crate::olla`].
+#[derive(Debug, Clone, Default)]
+pub struct CutHints {
+    /// Capacity rows eligible for knapsack-cover separation.
+    pub capacity_rows: Vec<CapacityHint>,
+    /// Pair-ordering gadgets keyed by the caller's `(i, j)` item key;
+    /// `below` means "item i strictly below item j". Only pairs where both
+    /// items have strictly positive sizes are registered (clique cuts are
+    /// invalid for zero-sized items).
+    pub pair_edges: Vec<((usize, usize), PairVars)>,
+}
+
+impl CutHints {
+    /// True when no structure was registered (separators have nothing to do
+    /// beyond Gomory rounding).
+    pub fn is_empty(&self) -> bool {
+        self.capacity_rows.is_empty() && self.pair_edges.is_empty()
+    }
+
+    /// Register a capacity row. Rows whose items cannot overrun the
+    /// capacity are dropped (no cover exists).
+    pub fn capacity_row(&mut self, items: Vec<(f64, Vec<(VarId, f64)>)>, cap: f64) {
+        let total: f64 = items.iter().map(|&(w, _)| w).sum();
+        if total > cap && items.len() >= 2 {
+            self.capacity_rows.push(CapacityHint { items, cap });
+        }
+    }
+
+    /// Register one pair-ordering gadget.
+    pub fn pair_edge(&mut self, key: (usize, usize), pv: PairVars) {
+        self.pair_edges.push((key, pv));
+    }
+
+    /// Merge another registry into this one (the joint formulation builds
+    /// its placement half on top of a finished scheduling model).
+    pub fn absorb(&mut self, other: CutHints) {
+        self.capacity_rows.extend(other.capacity_rows);
+        self.pair_edges.extend(other.pair_edges);
+    }
+}
+
+/// Separate violated knapsack-cover cuts at the LP point `x`.
+///
+/// For each registered capacity row, a *cover* is a subset `C` of items
+/// with `Σ_{i∈C} wᵢ > cap`: since all of them cannot be simultaneously 1,
+/// `Σ_{i∈C} zᵢ ≤ |C| − 1` is valid. Separation is the classic greedy: sort
+/// by LP value descending, take a prefix until the weights overrun the
+/// capacity, then minimalize by dropping low-value items the overrun does
+/// not need. Returns the violated cuts, strongest first.
+pub fn separate_cover_cuts(hints: &CutHints, x: &[f64], max_cuts: usize) -> Vec<Cut> {
+    let mut out: Vec<(Cut, f64)> = Vec::new();
+    for row in &hints.capacity_rows {
+        // LP value of each 0/1 item expression, clamped into [0, 1].
+        let mut idx: Vec<(usize, f64)> = row
+            .items
+            .iter()
+            .enumerate()
+            .map(|(i, (_, expr))| {
+                let z: f64 = expr.iter().map(|&(v, c)| c * x[v.0]).sum();
+                (i, z.clamp(0.0, 1.0))
+            })
+            .collect();
+        idx.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+        let mut cover: Vec<(usize, f64)> = Vec::new();
+        let mut weight = 0.0;
+        for &(i, z) in &idx {
+            if weight > row.cap {
+                break;
+            }
+            cover.push((i, z));
+            weight += row.items[i].0;
+        }
+        if weight <= row.cap {
+            continue; // all items together fit: no cover
+        }
+        // Minimalize from the low-value end: every dropped item tightens
+        // the cut by one on the rhs while the cover stays infeasible.
+        while let Some(&(i, _)) = cover.last() {
+            let w = row.items[i].0;
+            if weight - w > row.cap && cover.len() > 2 {
+                cover.pop();
+                weight -= w;
+            } else {
+                break;
+            }
+        }
+        let zsum: f64 = cover.iter().map(|&(_, z)| z).sum();
+        let rhs = cover.len() as f64 - 1.0;
+        if zsum - rhs <= VIOLATION_TOL * (1.0 + rhs) {
+            continue;
+        }
+        let mut terms: Vec<(VarId, f64)> = Vec::new();
+        for &(i, _) in &cover {
+            terms.extend(row.items[i].1.iter().copied());
+        }
+        let cut = Cut::new(terms, rhs);
+        let viol = cut.violation(x);
+        if viol > VIOLATION_TOL * (1.0 + rhs) {
+            out.push((cut, viol));
+        }
+    }
+    sort_truncate(out, max_cuts)
+}
+
+/// The `below` binary of the ordered pair `(i, j)` from an edge stored
+/// under either key orientation: "`i` below `j`" is `below` of the `(i,j)`
+/// gadget and `above` of the `(j,i)` gadget.
+fn below_of(edges: &HashMap<(usize, usize), PairVars>, i: usize, j: usize) -> Option<VarId> {
+    if let Some(pv) = edges.get(&(i, j)) {
+        Some(pv.below)
+    } else {
+        edges.get(&(j, i)).map(|pv| pv.above)
+    }
+}
+
+/// Separate violated overlap-clique (triangle) cuts at the LP point `x`.
+///
+/// For any three mutually-overlapping items `i, j, k` (all three pair
+/// gadgets present, all sizes positive), a directed ordering cycle is
+/// spatially impossible — `below_ij = below_jk = below_ki = 1` would chain
+/// `posᵢ + sᵢ ≤ posⱼ`, `posⱼ + sⱼ ≤ pos_k`, `pos_k + s_k ≤ posᵢ` into
+/// `sᵢ + sⱼ + s_k ≤ 0`. Both cycle orientations yield a cut
+/// `below_ij + below_jk + below_ki ≤ 2`. Triangle enumeration is budgeted
+/// so dense overlap graphs cannot blow up a separation round.
+pub fn separate_clique_cuts(hints: &CutHints, x: &[f64], max_cuts: usize) -> Vec<Cut> {
+    if hints.pair_edges.is_empty() {
+        return Vec::new();
+    }
+    let mut edges: HashMap<(usize, usize), PairVars> = HashMap::new();
+    let mut adj: HashMap<usize, Vec<usize>> = HashMap::new();
+    for &(key, pv) in &hints.pair_edges {
+        if edges.insert(key, pv).is_none() {
+            adj.entry(key.0).or_default().push(key.1);
+            adj.entry(key.1).or_default().push(key.0);
+        }
+    }
+    let mut nodes: Vec<usize> = adj.keys().copied().collect();
+    nodes.sort_unstable();
+    let mut out: Vec<(Cut, f64)> = Vec::new();
+    let mut budget = 200_000usize;
+    'outer: for &i in &nodes {
+        let mut nbrs: Vec<usize> = adj[&i].iter().copied().filter(|&j| j > i).collect();
+        nbrs.sort_unstable();
+        for (a, &j) in nbrs.iter().enumerate() {
+            for &k in &nbrs[a + 1..] {
+                if budget == 0 {
+                    break 'outer;
+                }
+                budget -= 1;
+                if !edges.contains_key(&(j, k)) && !edges.contains_key(&(k, j)) {
+                    continue;
+                }
+                let (Some(bij), Some(bjk), Some(bki)) = (
+                    below_of(&edges, i, j),
+                    below_of(&edges, j, k),
+                    below_of(&edges, k, i),
+                ) else {
+                    continue;
+                };
+                let (Some(aij), Some(ajk), Some(aki)) = (
+                    below_of(&edges, j, i),
+                    below_of(&edges, k, j),
+                    below_of(&edges, i, k),
+                ) else {
+                    continue;
+                };
+                for tri in [[bij, bjk, bki], [aij, ajk, aki]] {
+                    let lhs: f64 = tri.iter().map(|v| x[v.0]).sum();
+                    if lhs - 2.0 > VIOLATION_TOL * 3.0 {
+                        let cut =
+                            Cut::new(tri.iter().map(|&v| (v, 1.0)).collect(), 2.0);
+                        let viol = cut.violation(x);
+                        out.push((cut, viol));
+                    }
+                }
+            }
+        }
+    }
+    sort_truncate(out, max_cuts)
+}
+
+/// Separate Gomory mixed-integer cuts off the basis `snap` under bounds
+/// `lb`/`ub` (model-variable indexing). A thin wrapper over
+/// [`LpEngine::gomory_cuts`] that packages the engine's model-space rows
+/// as [`Cut`]s. Cuts are valid for every integer point within the given
+/// bounds: globally valid when separated at the root, subtree-valid at a
+/// tree node.
+pub fn separate_gomory_cuts(
+    eng: &LpEngine,
+    lb: &[f64],
+    ub: &[f64],
+    snap: &BasisSnapshot,
+    is_int: &[bool],
+    max_cuts: usize,
+) -> Vec<Cut> {
+    eng.gomory_cuts(lb, ub, snap, is_int, max_cuts)
+        .into_iter()
+        .map(|(terms, rhs)| {
+            Cut::new(terms.into_iter().map(|(o, c)| (VarId(o), c)).collect(), rhs)
+        })
+        .collect()
+}
+
+fn sort_truncate(mut cuts: Vec<(Cut, f64)>, max_cuts: usize) -> Vec<Cut> {
+    cuts.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+    cuts.truncate(max_cuts);
+    cuts.into_iter().map(|(c, _)| c).collect()
+}
+
+/// An age/capacity-bounded store of globally-valid cuts, shared across the
+/// dives of one branch-and-bound worker.
+///
+/// Only globally-valid families (cover, clique) belong in the pool —
+/// node-separated Gomory cuts are bound-dependent and must stay scoped to
+/// their dive. Entries are deduplicated by [`Cut::row_hash`]; an entry's
+/// age counts consecutive [`CutPool::violated`] probes that found it slack,
+/// and stale or overflow entries are evicted oldest-first.
+#[derive(Debug, Default)]
+pub struct CutPool {
+    entries: Vec<(Cut, u64, u32)>, // (cut, hash, age)
+    cap: usize,
+}
+
+impl CutPool {
+    /// Empty pool holding at most `cap` cuts.
+    pub fn new(cap: usize) -> CutPool {
+        CutPool { entries: Vec::new(), cap }
+    }
+
+    /// Number of pooled cuts.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when the pool holds nothing.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Insert a cut unless an identical row is already pooled. Returns
+    /// true when the cut was new. Over capacity, the oldest entry goes.
+    pub fn insert(&mut self, cut: Cut) -> bool {
+        let h = cut.row_hash();
+        if self.entries.iter().any(|&(_, eh, _)| eh == h) {
+            return false;
+        }
+        if self.entries.len() >= self.cap {
+            if let Some(pos) = self
+                .entries
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &(_, _, age))| age)
+                .map(|(p, _)| p)
+            {
+                self.entries.remove(pos);
+            }
+        }
+        self.entries.push((cut, h, 0));
+        true
+    }
+
+    /// Pooled cuts violated at `x`, aging every probed entry: violated
+    /// entries reset to age 0, slack ones age by one, and entries slack
+    /// for too many consecutive probes are dropped.
+    pub fn violated(&mut self, x: &[f64]) -> Vec<Cut> {
+        let mut out = Vec::new();
+        for (cut, _, age) in &mut self.entries {
+            if cut.is_violated(x) {
+                *age = 0;
+                out.push(cut.clone());
+            } else {
+                *age += 1;
+            }
+        }
+        self.entries.retain(|&(_, _, age)| age <= POOL_MAX_AGE);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ilp::model::{Cmp, Model, VarKind};
+    use crate::ilp::simplex::{LpEngine, LpOptions, LpStatus};
+    use crate::ilp::{self, IlpBuilder, Pos, SolveOptions, SolveStatus};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cut_normalization_and_hash_are_stable() {
+        let a = Cut::new(vec![(VarId(3), 1.0), (VarId(1), 2.0), (VarId(3), 1.0)], 4.0);
+        assert_eq!(a.terms, vec![(VarId(1), 2.0), (VarId(3), 2.0)]);
+        let b = Cut::new(vec![(VarId(1), 2.0), (VarId(3), 2.0)], 4.0);
+        assert_eq!(a.row_hash(), b.row_hash());
+        // A hash must see coefficient *ratios*, not magnitudes alone.
+        let c = Cut::new(vec![(VarId(1), 2.0), (VarId(3), 1.0)], 4.0);
+        assert_ne!(a.row_hash(), c.row_hash());
+        assert!(a.violation(&[0.0, 1.0, 0.0, 2.0]) > 0.0); // 2 + 4 - 4
+        assert!(!a.is_violated(&[0.0, 1.0, 0.0, 1.0]));
+    }
+
+    #[test]
+    fn cover_cuts_are_valid_for_every_feasible_binary_point() {
+        // Random capacity rows over plain binaries: every 0/1 point that
+        // respects the capacity must satisfy every cut separated at any
+        // fractional point.
+        let mut rng = Rng::new(7);
+        for _case in 0..40 {
+            let n = rng.range(3, 9);
+            let weights: Vec<f64> = (0..n).map(|_| 1.0 + rng.range(0, 9) as f64).collect();
+            let total: f64 = weights.iter().sum();
+            let cap = total * (0.3 + 0.4 * rng.f64());
+            let mut hints = CutHints::default();
+            hints.capacity_row(
+                weights.iter().enumerate().map(|(i, &w)| (w, vec![(VarId(i), 1.0)])).collect(),
+                cap,
+            );
+            let x: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            let cuts = separate_cover_cuts(&hints, &x, 8);
+            for mask in 0u32..(1 << n) {
+                let z: Vec<f64> =
+                    (0..n).map(|i| ((mask >> i) & 1) as f64).collect();
+                let used: f64 =
+                    z.iter().zip(&weights).map(|(zi, wi)| zi * wi).sum();
+                if used > cap {
+                    continue; // capacity-infeasible point: cuts owe it nothing
+                }
+                for cut in &cuts {
+                    assert!(
+                        cut.violation(&z) <= 1e-9,
+                        "cover cut cuts off feasible point {z:?}: {cut:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cover_cuts_separate_a_fractional_point() {
+        // 3 unit items of weight 2 against capacity 5: z = (1, 1, 0.9) is
+        // capacity-feasible fractionally but violates the cover z1+z2+z3<=2.
+        let mut hints = CutHints::default();
+        hints.capacity_row(
+            (0..3).map(|i| (2.0, vec![(VarId(i), 1.0)])).collect(),
+            5.0,
+        );
+        let cuts = separate_cover_cuts(&hints, &[1.0, 1.0, 0.9], 4);
+        assert!(!cuts.is_empty(), "violated cover must be found");
+        assert_eq!(cuts[0].rhs, 2.0);
+        assert_eq!(cuts[0].terms.len(), 3);
+    }
+
+    #[test]
+    fn clique_cuts_are_valid_for_every_realizable_ordering() {
+        // Three mutually-overlapping items: enumerate all below/above
+        // assignments, keep the spatially realizable ones (an acyclic
+        // orientation), and assert no clique cut excludes them.
+        let mut b = IlpBuilder::new();
+        let pos: Vec<VarId> =
+            (0..3).map(|i| b.continuous("A", format!("A[{i}]"), 0.0, 100.0, 0.0)).collect();
+        let sizes = [10.0, 20.0, 30.0];
+        let mut hints = CutHints::default();
+        for i in 0..3 {
+            for j in (i + 1)..3 {
+                let pv = b.pair_no_overlap(
+                    (i, j),
+                    Pos::Var(pos[i]),
+                    sizes[i],
+                    Pos::Var(pos[j]),
+                    sizes[j],
+                    200.0,
+                    true,
+                );
+                hints.pair_edge((i, j), pv);
+            }
+        }
+        let (model, _) = b.into_parts();
+        // A fractional point violating the cycle cut drives separation.
+        let mut x = vec![0.0; model.num_vars()];
+        let pv01 = hints.pair_edges[0].1;
+        let pv02 = hints.pair_edges[1].1;
+        let pv12 = hints.pair_edges[2].1;
+        x[pv01.below.0] = 0.9; // 0 below 1
+        x[pv12.below.0] = 0.9; // 1 below 2
+        x[pv02.above.0] = 0.9; // 2 below 0 → cycle
+        let cuts = separate_clique_cuts(&hints, &x, 8);
+        assert!(!cuts.is_empty(), "cycle point must be separated");
+        // Every acyclic ordering of 3 items is realizable: check the 6
+        // permutation assignments against every cut.
+        for perm in
+            [[0, 1, 2], [0, 2, 1], [1, 0, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0]]
+        {
+            let mut z = vec![0.0; model.num_vars()];
+            // rank[i] < rank[j] means i sits below j.
+            let mut rank = [0usize; 3];
+            for (r, &i) in perm.iter().enumerate() {
+                rank[i] = r;
+            }
+            for &(key, pv) in &hints.pair_edges {
+                if rank[key.0] < rank[key.1] {
+                    z[pv.below.0] = 1.0;
+                } else {
+                    z[pv.above.0] = 1.0;
+                }
+            }
+            for cut in &cuts {
+                assert!(
+                    cut.violation(&z) <= 1e-9,
+                    "clique cut excludes realizable ordering {perm:?}: {cut:?}"
+                );
+            }
+        }
+    }
+
+    /// Exhaustive integer optimum of a pure-binary model (≤ 16 vars).
+    fn brute_force_binary(m: &Model) -> Option<(f64, Vec<f64>)> {
+        let n = m.num_vars();
+        assert!(n <= 16);
+        let mut best: Option<(f64, Vec<f64>)> = None;
+        for mask in 0u32..(1 << n) {
+            let x: Vec<f64> = (0..n).map(|i| ((mask >> i) & 1) as f64).collect();
+            if m.check_feasible(&x, 1e-9).is_err() {
+                continue;
+            }
+            let obj = m.objective_value(&x);
+            if best.as_ref().map_or(true, |(b, _)| obj < *b) {
+                best = Some((obj, x));
+            }
+        }
+        best
+    }
+
+    fn random_binary_milp(rng: &mut Rng) -> Model {
+        let n = rng.range(3, 8);
+        let mut m = Model::new();
+        let xs: Vec<VarId> = (0..n)
+            .map(|i| m.binary(format!("x{i}"), rng.f64() * 4.0 - 2.0))
+            .collect();
+        for _ in 0..rng.range(2, 6) {
+            let k = rng.range(2, n);
+            let mut terms = Vec::new();
+            for _ in 0..k {
+                terms.push((xs[rng.range(0, n - 1)], rng.f64() * 6.0 - 2.0));
+            }
+            let cmp = if rng.range(0, 1) == 0 { Cmp::Le } else { Cmp::Ge };
+            m.constraint(terms, cmp, rng.f64() * 4.0 - 1.0);
+        }
+        m
+    }
+
+    #[test]
+    fn root_gomory_cuts_never_cut_off_any_feasible_integer_point() {
+        // The core validity property: every 0/1-feasible point of a random
+        // binary MILP satisfies every Gomory cut separated at the root LP
+        // optimum.
+        let mut rng = Rng::new(99);
+        let opts = LpOptions::default();
+        let mut separated = 0usize;
+        for _case in 0..60 {
+            let m = random_binary_milp(&mut rng);
+            let lb: Vec<f64> = m.vars.iter().map(|v| v.lb).collect();
+            let ub: Vec<f64> = m.vars.iter().map(|v| v.ub).collect();
+            let eng = LpEngine::new(&m, &lb, &ub);
+            if eng.root_infeasible() {
+                continue;
+            }
+            let r = eng.solve_node(&lb, &ub, None, &opts);
+            if r.status != LpStatus::Optimal {
+                continue;
+            }
+            let Some(snap) = r.basis.as_ref() else { continue };
+            let is_int: Vec<bool> = m
+                .vars
+                .iter()
+                .map(|v| matches!(v.kind, VarKind::Binary | VarKind::Integer))
+                .collect();
+            let cuts = separate_gomory_cuts(&eng, &lb, &ub, snap, &is_int, 16);
+            separated += cuts.len();
+            if cuts.is_empty() {
+                continue;
+            }
+            let n = m.num_vars();
+            for mask in 0u32..(1 << n) {
+                let z: Vec<f64> = (0..n).map(|i| ((mask >> i) & 1) as f64).collect();
+                if m.check_feasible(&z, 1e-9).is_err() {
+                    continue;
+                }
+                for cut in &cuts {
+                    assert!(
+                        cut.violation(&z) <= 1e-7 * (1.0 + cut.rhs.abs()),
+                        "gomory cut excludes feasible {z:?}: {cut:?}"
+                    );
+                }
+            }
+            // Each returned cut must actually separate the LP optimum.
+            for cut in &cuts {
+                assert!(cut.is_violated(&r.x), "non-violated cut returned: {cut:?}");
+            }
+        }
+        assert!(separated >= 10, "only {separated} cuts over 60 cases — separator inert?");
+    }
+
+    #[test]
+    fn gomory_cuts_tighten_a_knapsack_relaxation() {
+        // min -(5a + 4b + 3c) s.t. 2a + 3b + c <= 3 over binaries: the LP
+        // optimum is fractional; one Gomory round must cut it off while the
+        // integer optimum (a=1, c=1, obj -8) survives.
+        let mut m = Model::new();
+        let a = m.binary("a", -5.0);
+        let b = m.binary("b", -4.0);
+        let c = m.binary("c", -3.0);
+        m.constraint(vec![(a, 2.0), (b, 3.0), (c, 1.0)], Cmp::Le, 3.0);
+        let lb = vec![0.0; 3];
+        let ub = vec![1.0; 3];
+        let eng = LpEngine::new(&m, &lb, &ub);
+        let r = eng.solve_node(&lb, &ub, None, &LpOptions::default());
+        assert_eq!(r.status, LpStatus::Optimal);
+        let is_int = vec![true; 3];
+        let cuts =
+            separate_gomory_cuts(&eng, &lb, &ub, r.basis.as_ref().unwrap(), &is_int, 8);
+        assert!(!cuts.is_empty(), "fractional knapsack root must separate");
+        let opt = [1.0, 0.0, 1.0];
+        for cut in &cuts {
+            assert!(cut.is_violated(&r.x));
+            assert!(cut.violation(&opt) <= 1e-9, "integer optimum cut off: {cut:?}");
+        }
+        let _ = (a, b, c);
+    }
+
+    #[test]
+    fn appended_cuts_resolve_to_the_integer_optimum_value_or_better_bound() {
+        // Appending valid cuts through append_model_con must only *raise*
+        // the LP bound, never past the true integer optimum.
+        let mut rng = Rng::new(4242);
+        let opts = LpOptions::default();
+        for _case in 0..30 {
+            let m = random_binary_milp(&mut rng);
+            let Some((int_opt, _)) = brute_force_binary(&m) else { continue };
+            let lb: Vec<f64> = m.vars.iter().map(|v| v.lb).collect();
+            let ub: Vec<f64> = m.vars.iter().map(|v| v.ub).collect();
+            let mut eng = LpEngine::new(&m, &lb, &ub);
+            if eng.root_infeasible() {
+                continue;
+            }
+            let r = eng.solve_node(&lb, &ub, None, &opts);
+            if r.status != LpStatus::Optimal {
+                continue;
+            }
+            let lp0 = r.obj;
+            let is_int: Vec<bool> = vec![true; m.num_vars()];
+            let mut snap = r.basis.clone().unwrap();
+            let cuts =
+                separate_gomory_cuts(&eng, &lb, &ub, r.basis.as_ref().unwrap(), &is_int, 8);
+            if cuts.is_empty() {
+                continue;
+            }
+            for cut in &cuts {
+                let terms: Vec<(usize, f64)> =
+                    cut.terms.iter().map(|&(v, c)| (v.0, c)).collect();
+                eng.append_model_con(&terms, Cmp::Le, cut.rhs, Some(&mut snap));
+            }
+            let r2 = eng.solve_node(&lb, &ub, Some(&snap), &opts);
+            assert_eq!(r2.status, LpStatus::Optimal, "cuts made a feasible LP unsolvable");
+            assert!(r2.warm_used, "lifted basis must warm-start the re-solve");
+            assert!(
+                r2.obj >= lp0 - 1e-6 * (1.0 + lp0.abs()),
+                "cut loop lowered the bound: {} -> {}",
+                lp0,
+                r2.obj
+            );
+            assert!(
+                r2.obj <= int_opt + 1e-6 * (1.0 + int_opt.abs()),
+                "cut bound {} overshot the integer optimum {}",
+                r2.obj,
+                int_opt
+            );
+        }
+    }
+
+    #[test]
+    fn pool_dedups_ages_and_evicts() {
+        let mut pool = CutPool::new(2);
+        let c1 = Cut::new(vec![(VarId(0), 1.0)], 0.5);
+        let c2 = Cut::new(vec![(VarId(1), 1.0)], 0.5);
+        let c3 = Cut::new(vec![(VarId(2), 1.0)], 0.5);
+        assert!(pool.insert(c1.clone()));
+        assert!(!pool.insert(c1.clone()), "identical row must dedup");
+        assert!(pool.insert(c2));
+        // x violates only c2: c1 ages.
+        let hits = pool.violated(&[0.0, 1.0, 0.0]);
+        assert_eq!(hits.len(), 1);
+        // Over capacity, the older (aged) entry is evicted.
+        assert!(pool.insert(c3));
+        assert_eq!(pool.len(), 2);
+        // Entries slack for POOL_MAX_AGE+1 consecutive probes vanish.
+        for _ in 0..10 {
+            let _ = pool.violated(&[0.0, 0.0, 0.0]);
+        }
+        assert!(pool.is_empty());
+    }
+
+    #[test]
+    fn cut_enabled_and_cut_free_solves_agree_on_random_milps() {
+        // Cut safety at the solver level: cuts must never change the
+        // optimum, only how fast it is proven.
+        let mut rng = Rng::new(2025);
+        for _case in 0..12 {
+            let m = random_binary_milp(&mut rng);
+            let expected = brute_force_binary(&m);
+            let with_cuts = ilp::solve(&m, &SolveOptions::default());
+            let without = ilp::solve(
+                &m,
+                &SolveOptions { cuts: false, ..SolveOptions::default() },
+            );
+            match expected {
+                None => {
+                    assert_eq!(with_cuts.status, SolveStatus::Infeasible);
+                    assert_eq!(without.status, SolveStatus::Infeasible);
+                }
+                Some((obj, _)) => {
+                    assert_eq!(with_cuts.status, SolveStatus::Optimal);
+                    assert_eq!(without.status, SolveStatus::Optimal);
+                    assert!(
+                        (with_cuts.objective - obj).abs() <= 1e-6 * (1.0 + obj.abs()),
+                        "cuts changed the optimum: {} vs {}",
+                        with_cuts.objective,
+                        obj
+                    );
+                    assert!(
+                        (without.objective - obj).abs() <= 1e-6 * (1.0 + obj.abs())
+                    );
+                }
+            }
+        }
+    }
+}

@@ -24,9 +24,16 @@
 //!   [`SolveControl`] anytime interface (cooperative cancellation,
 //!   incumbent/bound progress snapshots, gap-target stopping) that the
 //!   `serve` layer builds on;
+//! * [`cuts`] — the cutting-plane layer: Gomory mixed-integer cuts read
+//!   off the LU basis, knapsack-cover cuts on registered capacity rows,
+//!   and overlap-clique cuts on the pair-ordering binaries, driven by the
+//!   root cut loop and the node-local cut rounds in [`bnb`] with an
+//!   age-managed [`cuts::CutPool`];
 //! * [`builder`] — [`builder::IlpBuilder`], the model-assembly API (named
 //!   variable groups, sum/indicator helpers, pair disjunctions) shared by
-//!   the eq. 9/14/15 formulations in [`crate::olla`];
+//!   the eq. 9/14/15 formulations in [`crate::olla`]; it doubles as the
+//!   [`cuts::CutHints`] registrar so separators see model structure
+//!   instead of raw coefficients;
 //! * [`patch`] — [`patch::PatchableModel`], the incremental re-solve
 //!   layer: in-place [`CscMatrix`](model::CscMatrix) edits (add/remove
 //!   rows and columns, bound/cost/rhs changes) plus dual-simplex
@@ -40,6 +47,7 @@
 pub mod basis;
 pub mod bnb;
 pub mod builder;
+pub mod cuts;
 #[cfg(test)]
 pub mod dense;
 pub mod model;
@@ -51,6 +59,7 @@ pub use bnb::{
     solve, IncumbentCallback, SearchOrder, SolveControl, SolveOptions, SolveProgress,
 };
 pub use builder::{IlpBuilder, IlpMeta, PairVars, Pos};
+pub use cuts::{Cut, CutHints, CutPool};
 pub use model::{Cmp, Constraint, CscMatrix, Model, Solution, SolveStatus, VarId, VarKind, Variable};
 pub use patch::{Patch, PatchableModel};
 pub use simplex::{BasisSnapshot, LpEngine};

@@ -112,6 +112,12 @@ pub struct Solution {
     /// Warm-start attempts that were accepted (dual re-solve, no cold
     /// two-phase restart).
     pub warm_hits: u64,
+    /// Cutting planes appended across the root cut loop and all
+    /// node-local rounds.
+    pub cuts_applied: u64,
+    /// Separation rounds run (root loop iterations + node rounds that
+    /// appended at least one cut).
+    pub cut_rounds: u64,
 }
 
 impl Solution {

@@ -533,6 +533,195 @@ impl LpEngine {
         self.ncols -= 2;
     }
 
+    /// Append a constraint expressed over **model** variable indices.
+    ///
+    /// Root-reduced engines renumber structural columns (`vmap`) and fold
+    /// root-fixed variables into the right-hand sides; cut separators work
+    /// in model space, so this translates a model-space row into the
+    /// engine's column space before delegating to [`LpEngine::append_con`].
+    pub(crate) fn append_model_con(
+        &mut self,
+        terms: &[(usize, f64)],
+        cmp: Cmp,
+        rhs: f64,
+        snap: Option<&mut BasisSnapshot>,
+    ) {
+        let mut eng_terms: Vec<(usize, f64)> = Vec::with_capacity(terms.len());
+        let mut r = rhs;
+        for &(o, a) in terms {
+            let k = self.vmap[o];
+            if k == usize::MAX {
+                r -= a * self.fixed_x[o];
+            } else {
+                eng_terms.push((k, a));
+            }
+        }
+        self.append_con(&eng_terms, cmp, r, snap);
+    }
+
+    /// Separate Gomory mixed-integer cuts off the LU basis in `snap`.
+    ///
+    /// For each basic integer-restricted structural column with a
+    /// fractional value, the tableau row `ρ = B⁻ᵀ eᵣ` is priced against
+    /// every nonbasic column, variables are shifted onto their active
+    /// bounds, and the mixed-integer rounding closure of the row yields a
+    /// valid inequality `Σ γⱼ tⱼ ≥ 1` over the shifted nonnegative
+    /// variables. Slack contributions are eliminated through their defining
+    /// rows so the cut comes back as a **model-space** `≤` row
+    /// `(terms, rhs)` ready for [`LpEngine::append_model_con`].
+    ///
+    /// Validity only needs a feasible basis and the bounds passed in: cuts
+    /// separated under root bounds are globally valid; cuts separated under
+    /// node bounds are valid for that subtree only. Numerical hygiene:
+    /// columns priced below `1e-9` are skipped and the final right-hand
+    /// side is relaxed by a relative `1e-7` to absorb the skipped mass;
+    /// cuts touching an infinite active bound, or whose coefficient range
+    /// exceeds `1e8`, are discarded.
+    pub(crate) fn gomory_cuts(
+        &self,
+        lb: &[f64],
+        ub: &[f64],
+        snap: &BasisSnapshot,
+        is_int: &[bool],
+        max_cuts: usize,
+    ) -> Vec<(Vec<(usize, f64)>, f64)> {
+        if self.infeasible || self.m == 0 || max_cuts == 0 {
+            return Vec::new();
+        }
+        let mut lo = self.root_lo.clone();
+        let mut up = self.root_up.clone();
+        for (k, &o) in self.kept.iter().enumerate() {
+            lo[k] = lb[o];
+            up[k] = ub[o];
+        }
+        let Some(sv) = Solver::from_snapshot(self, &lo, &up, snap) else {
+            return Vec::new();
+        };
+        // Row-major view of the structural block, for slack elimination.
+        let mut rows: Vec<Vec<(usize, f64)>> = vec![Vec::new(); self.m];
+        for k in 0..self.nk {
+            let (ri, rv) = self.mat.col(k);
+            for (&i, &a) in ri.iter().zip(rv.iter()) {
+                rows[i as usize].push((k, a));
+            }
+        }
+        let mut cuts: Vec<(Vec<(usize, f64)>, f64, f64)> = Vec::new();
+        'rows: for r in 0..self.m {
+            let bj = sv.basis[r];
+            if bj >= self.nk {
+                continue; // slack/artificial basic: no integrality to exploit
+            }
+            let o = self.kept[bj];
+            if !is_int[o] {
+                continue;
+            }
+            let xb = sv.x[bj];
+            let f0 = xb - xb.floor();
+            if !(0.01..=0.99).contains(&f0) {
+                continue; // (near-)integral basics give unusably weak cuts
+            }
+            let rho = sv.fac().btran_unit(r);
+            // Accumulate the x-space `≥` form: Σ w·x ≥ ge_rhs.
+            let mut w = vec![0.0f64; self.nk];
+            let mut ge_rhs = 1.0f64;
+            for j in 0..self.nk + self.m {
+                let at_lower = match sv.status[j] {
+                    State::Basic(_) => continue,
+                    State::AtLower => true,
+                    State::AtUpper => false,
+                };
+                if up[j] - lo[j] <= 1e-12 {
+                    continue; // fixed under these bounds: its shift is identically 0
+                }
+                let alpha = self.mat.col_dot(j, &rho);
+                if alpha.abs() <= 1e-9 {
+                    continue; // absorbed by the final rhs relaxation
+                }
+                let bound = if at_lower { lo[j] } else { up[j] };
+                if bound.abs() >= INF {
+                    continue 'rows; // shift onto an infinite bound: no valid cut
+                }
+                let s = if at_lower { 1.0 } else { -1.0 };
+                let abar = s * alpha;
+                let integral_shift = j < self.nk
+                    && is_int[self.kept[j]]
+                    && (bound - bound.round()).abs() <= 1e-9;
+                let gamma = if integral_shift {
+                    let fj = abar - abar.floor();
+                    if fj <= f0 {
+                        fj / f0
+                    } else {
+                        (1.0 - fj) / (1.0 - f0)
+                    }
+                } else if abar >= 0.0 {
+                    abar / f0
+                } else {
+                    -abar / (1.0 - f0)
+                };
+                if gamma == 0.0 {
+                    continue;
+                }
+                let c = gamma * s;
+                if j < self.nk {
+                    w[j] += c;
+                    ge_rhs += c * bound;
+                } else {
+                    // Slack elimination: slack_i = b_i − Σₖ a_ik x_k.
+                    let i = j - self.nk;
+                    ge_rhs += c * bound - c * self.b[i];
+                    for &(k, a) in &rows[i] {
+                        w[k] -= c * a;
+                    }
+                }
+            }
+            // Convert to a `≤` row over model variables, folding tiny
+            // coefficients into the rhs via their bound (a valid
+            // relaxation) and rejecting badly scaled rows.
+            let maxabs = w.iter().fold(0.0f64, |mx, &v| mx.max(v.abs()));
+            if maxabs <= 1e-9 {
+                continue;
+            }
+            let tiny = 1e-9 * maxabs;
+            let mut le_rhs = -ge_rhs;
+            let mut terms: Vec<(usize, f64)> = Vec::new();
+            let mut minabs = f64::INFINITY;
+            let mut lhs_at_x = 0.0f64;
+            for k in 0..self.nk {
+                let c = -w[k];
+                if c == 0.0 {
+                    continue;
+                }
+                if c.abs() <= tiny {
+                    // Dropping c·x_k from Σ c x ≤ rhs stays valid when the
+                    // rhs absorbs the term's minimum activity.
+                    let bnd = if c > 0.0 { lo[k] } else { up[k] };
+                    if bnd.abs() >= INF {
+                        continue 'rows;
+                    }
+                    le_rhs -= c * bnd;
+                    continue;
+                }
+                minabs = minabs.min(c.abs());
+                lhs_at_x += c * sv.x[k];
+                terms.push((self.kept[k], c));
+            }
+            if terms.is_empty() || maxabs / minabs > 1e8 {
+                continue;
+            }
+            // Relative safety relaxation: absorbs the skipped sub-1e-9
+            // pricing mass so float error can never cut a feasible point.
+            le_rhs += 1e-7 * (1.0 + le_rhs.abs());
+            let viol = lhs_at_x - le_rhs;
+            if viol <= 1e-6 * (1.0 + le_rhs.abs()) {
+                continue;
+            }
+            cuts.push((terms, le_rhs, viol));
+        }
+        cuts.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap_or(std::cmp::Ordering::Equal));
+        cuts.truncate(max_cuts);
+        cuts.into_iter().map(|(t, r, _)| (t, r)).collect()
+    }
+
     /// Solve the LP under node bounds `lb`/`ub` (original variable
     /// indexing), optionally warm-started from a parent basis.
     pub fn solve_node(

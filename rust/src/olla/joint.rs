@@ -128,6 +128,12 @@ pub fn optimize_joint_controlled(
     }
     let (model, meta) = b.into_parts();
     sm.model = model;
+    // Cut hints for the joint solve: the scheduling half's capacity rows
+    // (none here — the oracle is uncapped, kept for form) plus the pair
+    // ordering binaries registered by `pair_no_overlap` above, which feed
+    // the overlap-clique separator.
+    let mut hints = sm.hints.clone();
+    hints.absorb(meta.cut_hints.clone());
 
     // Warm start: greedy order + best-fit placement of its lifetimes.
     let order0 = greedy_order(g);
@@ -177,6 +183,7 @@ pub fn optimize_joint_controlled(
             initial: Some(warm),
             integral_objective: true,
             control,
+            cut_hints: if hints.is_empty() { None } else { Some(Arc::new(hints)) },
             ..Default::default()
         },
     );

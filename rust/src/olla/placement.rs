@@ -37,7 +37,9 @@ use crate::alloc::{
     check_placement, check_placement_regions, interference_components, resident_lower_bound,
     resident_segments, windows_of, PlacementItem,
 };
-use crate::ilp::{self, IlpBuilder, IlpMeta, Pos, SolveControl, SolveOptions, SolveStatus, VarId};
+use crate::ilp::{
+    self, CutHints, IlpBuilder, IlpMeta, Pos, SolveControl, SolveOptions, SolveStatus, VarId,
+};
 use crate::util::Stopwatch;
 use std::sync::Arc;
 use std::time::Duration;
@@ -78,6 +80,11 @@ pub struct PlacementOptions {
     /// exactly the monolithic one (property-tested below). `false` forces
     /// the monolithic solve — the decomposition benches compare both.
     pub decompose: bool,
+    /// Enable the solver's cutting-plane layer (Gomory cuts, plus
+    /// overlap-clique cuts on the pair-ordering binaries and cover cuts on
+    /// region fit rows). Cuts never change the optimal arena; disable for
+    /// A/B node-count comparisons.
+    pub use_cuts: bool,
 }
 
 impl Default for PlacementOptions {
@@ -93,6 +100,7 @@ impl Default for PlacementOptions {
             control: None,
             topology: MemoryTopology::single(),
             decompose: true,
+            use_cuts: true,
         }
     }
 }
@@ -137,6 +145,10 @@ pub struct PlacementResult {
     pub warm_attempts: u64,
     /// Warm-start attempts accepted by the dual re-solve path.
     pub warm_hits: u64,
+    /// Cutting planes appended across the root cut loop and node rounds.
+    pub cuts_applied: u64,
+    /// Separation rounds that appended at least one cut.
+    pub cut_rounds: u64,
     /// Region index per item (parallel to the input slice; all 0 for a
     /// single-region topology).
     pub regions: Vec<usize>,
@@ -290,6 +302,7 @@ fn optimize_placement_components(
     let mut method = PlacementMethod::BoundProven;
     let (mut vars, mut cons) = (0usize, 0usize);
     let (mut nodes, mut iters, mut wa, mut wh) = (0u64, 0u64, 0u64, 0u64);
+    let (mut cuts, mut rounds) = (0u64, 0u64);
     for (c, r) in comps.iter().zip(&results) {
         for (local, &global) in c.iter().enumerate() {
             offsets[global] = r.offsets[local];
@@ -303,6 +316,8 @@ fn optimize_placement_components(
         iters += r.simplex_iters;
         wa += r.warm_attempts;
         wh += r.warm_hits;
+        cuts += r.cuts_applied;
+        rounds += r.cut_rounds;
     }
     debug_assert!(check_placement(items, &offsets, arena).is_ok());
     let secs = watch.secs();
@@ -319,6 +334,8 @@ fn optimize_placement_components(
         simplex_iters: iters,
         warm_attempts: wa,
         warm_hits: wh,
+        cuts_applied: cuts,
+        cut_rounds: rounds,
         regions: vec![0; items.len()],
         region_sizes: vec![arena],
         bytes_offloaded: 0,
@@ -472,6 +489,8 @@ fn try_decompose_offload_free(
         simplex_iters: packed.simplex_iters,
         warm_attempts: packed.warm_attempts,
         warm_hits: packed.warm_hits,
+        cuts_applied: packed.cuts_applied,
+        cut_rounds: packed.cut_rounds,
         regions,
         region_sizes,
         bytes_offloaded: 0,
@@ -500,6 +519,8 @@ fn optimize_placement_once(
             simplex_iters: 0,
             warm_attempts: 0,
             warm_hits: 0,
+            cuts_applied: 0,
+            cut_rounds: 0,
             regions: Vec::new(),
             region_sizes: vec![0],
             bytes_offloaded: 0,
@@ -546,6 +567,8 @@ fn optimize_placement_once(
             simplex_iters: 0,
             warm_attempts: 0,
             warm_hits: 0,
+            cuts_applied: 0,
+            cut_rounds: 0,
             regions: vec![0; items.len()],
             region_sizes: vec![heur_size],
             bytes_offloaded: 0,
@@ -631,6 +654,8 @@ fn optimize_placement_once(
             threads: opts.solver_threads,
             stop_gap: opts.stop_gap,
             control: opts.control.clone(),
+            cuts: opts.use_cuts,
+            cut_hints: hints_arc(&meta),
             ..Default::default()
         },
     );
@@ -672,6 +697,8 @@ fn optimize_placement_once(
         simplex_iters: sol.simplex_iters,
         warm_attempts: sol.warm_attempts,
         warm_hits: sol.warm_hits,
+        cuts_applied: sol.cuts_applied,
+        cut_rounds: sol.cut_rounds,
         regions: vec![0; n],
         region_sizes: vec![size],
         bytes_offloaded: 0,
@@ -731,6 +758,8 @@ fn optimize_placement_regions(
             simplex_iters: 0,
             warm_attempts: 0,
             warm_hits: 0,
+            cuts_applied: 0,
+            cut_rounds: 0,
             regions: Vec::new(),
             region_sizes: vec![0; kk],
             bytes_offloaded: 0,
@@ -763,6 +792,8 @@ fn optimize_placement_regions(
         simplex_iters: 0,
         warm_attempts: 0,
         warm_hits: 0,
+        cuts_applied: 0,
+        cut_rounds: 0,
         regions: heur_regions.clone(),
         region_sizes: heur_sizes.clone(),
         bytes_offloaded: heur_off_bytes,
@@ -929,6 +960,8 @@ fn optimize_placement_regions(
             threads: opts.solver_threads,
             stop_gap: opts.stop_gap,
             control: opts.control.clone(),
+            cuts: opts.use_cuts,
+            cut_hints: hints_arc(&meta),
             ..Default::default()
         },
     );
@@ -939,6 +972,8 @@ fn optimize_placement_regions(
     out.simplex_iters = sol.simplex_iters;
     out.warm_attempts = sol.warm_attempts;
     out.warm_hits = sol.warm_hits;
+    out.cuts_applied = sol.cuts_applied;
+    out.cut_rounds = sol.cut_rounds;
     if sol.has_solution() {
         let mut regions = vec![0usize; n];
         let mut offs = vec![0u64; n];
@@ -1038,6 +1073,8 @@ fn optimize_placement_segments(
         simplex_iters: 0,
         warm_attempts: 0,
         warm_hits: 0,
+        cuts_applied: 0,
+        cut_rounds: 0,
         regions: heur.region_of.clone(),
         region_sizes: heur.region_sizes.clone(),
         bytes_offloaded: heur_off_bytes,
@@ -1262,6 +1299,8 @@ fn optimize_placement_segments(
             threads: opts.solver_threads,
             stop_gap: opts.stop_gap,
             control: opts.control.clone(),
+            cuts: opts.use_cuts,
+            cut_hints: hints_arc(&meta),
             ..Default::default()
         },
     );
@@ -1272,6 +1311,8 @@ fn optimize_placement_segments(
     out.simplex_iters = sol.simplex_iters;
     out.warm_attempts = sol.warm_attempts;
     out.warm_hits = sol.warm_hits;
+    out.cuts_applied = sol.cuts_applied;
+    out.cut_rounds = sol.cut_rounds;
     if sol.has_solution() {
         let mut regions = vec![0usize; n];
         let mut decoded = true;
@@ -1337,6 +1378,17 @@ fn optimize_placement_segments(
     out.incumbents = incumbents;
     out.solve_secs = watch.secs();
     out
+}
+
+/// The builder-collected cut hints in the form [`SolveOptions::cut_hints`]
+/// expects: `None` when the model registered nothing separable (so the
+/// solver skips the hint-driven separators entirely).
+fn hints_arc(meta: &IlpMeta) -> Option<Arc<CutHints>> {
+    if meta.cut_hints.is_empty() {
+        None
+    } else {
+        Some(Arc::new(meta.cut_hints.clone()))
+    }
 }
 
 fn frag(arena: u64, lb: u64) -> f64 {
@@ -1447,6 +1499,49 @@ mod tests {
             }
             ensure(r.arena_size == r.lower_bound, || {
                 format!("arena={} lb={} method={:?}", r.arena_size, r.lower_bound, r.method)
+            })
+        });
+    }
+
+    #[test]
+    fn cuts_on_and_off_reach_the_same_arena() {
+        // End-to-end cut safety at the placer level: Gomory + clique cuts
+        // may shrink the B&B tree but never move the optimal arena size.
+        check("placement_cut_safety", 10, |rng: &mut Rng| {
+            let n = rng.range(3, 12);
+            let items: Vec<PlacementItem> = (0..n)
+                .map(|i| {
+                    let start = rng.range(0, 8);
+                    let len = rng.range(1, 6);
+                    item(i as u32, 8 * rng.range(1, 32) as u64, start, start + len)
+                })
+                .collect();
+            let base = PlacementOptions {
+                skip_ilp_if_tight: false,
+                use_prealloc: false,
+                solver_threads: 1,
+                ..quick()
+            };
+            let on = optimize_placement(&items, &base);
+            let off = optimize_placement(
+                &items,
+                &PlacementOptions { use_cuts: false, ..base.clone() },
+            );
+            if !matches!(on.method, PlacementMethod::Ilp | PlacementMethod::BoundProven)
+                || !matches!(off.method, PlacementMethod::Ilp | PlacementMethod::BoundProven)
+            {
+                return crate::util::quickcheck::Outcome::Discard;
+            }
+            if check_placement(&items, &on.offsets, on.arena_size).is_err() {
+                return crate::util::quickcheck::Outcome::Fail(
+                    "cut-enabled placement is invalid".into(),
+                );
+            }
+            ensure(on.arena_size == off.arena_size, || {
+                format!(
+                    "cuts changed the optimum: {} with cuts vs {} without",
+                    on.arena_size, off.arena_size
+                )
             })
         });
     }

@@ -263,6 +263,8 @@ pub fn materialize_plan(
         simplex_iters: 0,
         warm_attempts: 0,
         warm_hits: 0,
+        cuts_applied: 0,
+        cut_rounds: 0,
     };
     let placement = PlacementResult {
         offsets: offs,
@@ -277,6 +279,8 @@ pub fn materialize_plan(
         simplex_iters: 0,
         warm_attempts: 0,
         warm_hits: 0,
+        cuts_applied: 0,
+        cut_rounds: 0,
         bytes_offloaded: bytes_offloaded(&items, &regions),
         transfer_cost: transfer_cost_segments(&items, &windows, &regions, topology),
         regions,

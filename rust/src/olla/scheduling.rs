@@ -27,7 +27,9 @@
 use super::topology::MemoryTopology;
 use crate::graph::analysis::Spans;
 use crate::graph::{EdgeId, Graph, NodeId, OpKind};
-use crate::ilp::{self, IlpBuilder, Model, SolveControl, SolveOptions, SolveStatus, VarId};
+use crate::ilp::{
+    self, CutHints, IlpBuilder, Model, SolveControl, SolveOptions, SolveStatus, VarId,
+};
 use crate::sched::sim::{check_order, simulate};
 use crate::sched::greedy_order;
 use crate::util::Stopwatch;
@@ -130,6 +132,11 @@ pub struct ScheduleOptions {
     /// warm start applies. Only the monolithic ILP path consumes it; the
     /// windowed and greedy fallback paths keep their own seeding.
     pub initial_order: Option<Vec<NodeId>>,
+    /// Enable the solver's cutting-plane layer (Gomory everywhere, plus
+    /// knapsack-cover cuts on the capacity rows a capped topology
+    /// registers). Cuts never change the optimum; disable for A/B
+    /// node-count comparisons.
+    pub use_cuts: bool,
 }
 
 /// Default [`ScheduleOptions::recompute_penalty`]: cheap enough that
@@ -152,6 +159,7 @@ impl Default for ScheduleOptions {
             topology: MemoryTopology::single(),
             recompute_penalty: DEFAULT_RECOMPUTE_PENALTY,
             initial_order: None,
+            use_cuts: true,
         }
     }
 }
@@ -194,6 +202,9 @@ pub struct SchedulingModel {
     /// The `peak_mem_no_frag` objective variable (device peak under a
     /// capped topology).
     pub peak: VarId,
+    /// Cut hints the builder registered (capacity rows under a capped
+    /// topology), forwarded to the solver's separators.
+    pub hints: CutHints,
 }
 
 /// Result of the scheduling optimization.
@@ -233,6 +244,10 @@ pub struct ScheduleResult {
     pub warm_attempts: u64,
     /// Warm-start attempts accepted by the dual re-solve path.
     pub warm_hits: u64,
+    /// Cutting planes appended across the root cut loop and node rounds.
+    pub cuts_applied: u64,
+    /// Separation rounds that appended at least one cut.
+    pub cut_rounds: u64,
 }
 
 /// Build the eq.-14 scheduling model for `g` on the shared
@@ -384,19 +399,30 @@ pub fn build_capacity_model(
     for t in 0..t_max {
         let mut terms: Vec<(VarId, f64)> = Vec::new();
         let mut spilled: Vec<(VarId, f64)> = Vec::new();
+        // Under a hard cap, each timestep's accounting row is a knapsack
+        // over 0/1 per-tensor residency expressions `C + P - S`: register
+        // it for cover separation.
+        let mut hint_items: Vec<(f64, Vec<(VarId, f64)>)> = Vec::new();
         for e in g.edge_ids() {
             let size = g.edge(e).size as f64;
             if size == 0.0 {
                 continue; // control edges occupy no memory
             }
+            let mut expr: Vec<(VarId, f64)> = Vec::new();
             if let Some(&cv) = c.get(&(g.edge(e).src, t)) {
                 terms.push((cv, size));
+                expr.push((cv, 1.0));
             }
             if let Some(&pv) = p.get(&(e, t)) {
                 terms.push((pv, size));
+                expr.push((pv, 1.0));
             }
             if let Some(&sv) = s.get(&(e, t)) {
                 spilled.push((sv, size));
+                expr.push((sv, -1.0));
+            }
+            if device_cap.is_some() && !expr.is_empty() {
+                hint_items.push((size, expr));
             }
         }
         if !terms.is_empty() {
@@ -405,11 +431,14 @@ pub fn build_capacity_model(
             } else {
                 b.resident_le_var(terms, &spilled, peak);
             }
+            if let Some(cap) = device_cap {
+                b.capacity_hint(hint_items, cap as f64);
+            }
         }
     }
 
-    let (model, _meta) = b.into_parts();
-    SchedulingModel { model, spans, c, p, s, device_cap, peak }
+    let (model, meta) = b.into_parts();
+    SchedulingModel { model, spans, c, p, s, device_cap, peak, hints: meta.cut_hints }
 }
 
 /// Build a feasible assignment from per-node creation timesteps. Times must
@@ -806,6 +835,8 @@ pub fn optimize_schedule_anytime(
                 simplex_iters: wo.simplex_iters,
                 warm_attempts: wo.warm_attempts,
                 warm_hits: wo.warm_hits,
+                cuts_applied: wo.cuts_applied,
+                cut_rounds: wo.cut_rounds,
             };
         }
         // Capped capacity fallback: keep the greedy order (the paper's
@@ -838,6 +869,8 @@ pub fn optimize_schedule_anytime(
             simplex_iters: 0,
             warm_attempts: 0,
             warm_hits: 0,
+            cuts_applied: 0,
+            cut_rounds: 0,
         };
     }
 
@@ -907,6 +940,12 @@ pub fn optimize_schedule_anytime(
         threads: opts.solver_threads,
         stop_gap: opts.stop_gap,
         control: control.clone(),
+        cuts: opts.use_cuts,
+        cut_hints: if sm.hints.is_empty() {
+            None
+        } else {
+            Some(Arc::new(sm.hints.clone()))
+        },
         ..Default::default()
     };
     let sol = ilp::solve(&sm.model, &solve_opts);
@@ -982,6 +1021,8 @@ pub fn optimize_schedule_anytime(
         simplex_iters: sol.simplex_iters,
         warm_attempts: sol.warm_attempts,
         warm_hits: sol.warm_hits,
+        cuts_applied: sol.cuts_applied,
+        cut_rounds: sol.cut_rounds,
     }
 }
 
@@ -995,6 +1036,8 @@ struct WindowedOutcome {
     simplex_iters: u64,
     warm_attempts: u64,
     warm_hits: u64,
+    cuts_applied: u64,
+    cut_rounds: u64,
 }
 
 /// One window's synthetic eq.-14 sub-graph over `order[lo..hi]`, plus the
@@ -1111,6 +1154,8 @@ fn optimize_schedule_windowed(
         simplex_iters: 0,
         warm_attempts: 0,
         warm_hits: 0,
+        cuts_applied: 0,
+        cut_rounds: 0,
     };
     // Row growth is roughly quadratic in window span (pairwise rows), so
     // the linear scale-down is only a starting point; the per-window
@@ -1152,6 +1197,12 @@ fn optimize_schedule_windowed(
                 threads: opts.solver_threads,
                 stop_gap: opts.stop_gap,
                 control: None,
+                cuts: opts.use_cuts,
+                cut_hints: if sm.hints.is_empty() {
+                    None
+                } else {
+                    Some(Arc::new(sm.hints.clone()))
+                },
                 ..Default::default()
             },
         );
@@ -1161,6 +1212,8 @@ fn optimize_schedule_windowed(
         acc.simplex_iters += sol.simplex_iters;
         acc.warm_attempts += sol.warm_attempts;
         acc.warm_hits += sol.warm_hits;
+        acc.cuts_applied += sol.cuts_applied;
+        acc.cut_rounds += sol.cut_rounds;
         if sol.has_solution() {
             let decoded = decode_order(&wg, &sm, &sol.values);
             // Node 0 of the window graph is the synthetic source.
@@ -1661,6 +1714,33 @@ mod tests {
             let (dp_peak, _) = optimal_order_dp(&g).unwrap();
             ensure(r.sim_peak == dp_peak, || {
                 format!("ilp sim_peak={} dp={}", r.sim_peak, dp_peak)
+            })
+        });
+    }
+
+    #[test]
+    fn cuts_on_and_off_reach_the_same_optimal_peak() {
+        // End-to-end cut safety at the scheduler level: the cut loop may
+        // only change how fast B&B proves the optimum, never which peak
+        // is optimal.
+        check("schedule_cut_safety", 6, |rng| {
+            let nodes = rng.range(5, 11);
+            let g = random_dag(
+                rng,
+                &RandomDagConfig { num_nodes: nodes, ..Default::default() },
+            );
+            let base = ScheduleOptions { solver_threads: 1, ..quick_opts() };
+            let on = optimize_schedule(&g, &base);
+            let off =
+                optimize_schedule(&g, &ScheduleOptions { use_cuts: false, ..base.clone() });
+            if on.status != SolveStatus::Optimal || off.status != SolveStatus::Optimal {
+                return crate::util::quickcheck::Outcome::Discard;
+            }
+            ensure(on.ilp_peak == off.ilp_peak, || {
+                format!(
+                    "cuts changed the optimum: {} with cuts vs {} without",
+                    on.ilp_peak, off.ilp_peak
+                )
             })
         });
     }

@@ -205,6 +205,8 @@ fn rebuild_plan(g: &Graph, parts: PlanParts) -> Result<MemoryPlan, String> {
         simplex_iters: 0,
         warm_attempts: 0,
         warm_hits: 0,
+        cuts_applied: 0,
+        cut_rounds: 0,
     };
     let placement = PlacementResult {
         offsets: offs,
@@ -223,6 +225,8 @@ fn rebuild_plan(g: &Graph, parts: PlanParts) -> Result<MemoryPlan, String> {
         simplex_iters: 0,
         warm_attempts: 0,
         warm_hits: 0,
+        cuts_applied: 0,
+        cut_rounds: 0,
         bytes_offloaded: bytes_offloaded(&items, &regions),
         transfer_cost: transfer_cost_segments(&items, &windows, &regions, &parts.topology),
         regions,
