@@ -1,0 +1,134 @@
+//! KV-cache frontier: peak tier-0 (vram) memory vs context length for
+//! decode-step inference graphs, at f16 vs q8 cache dtypes (no paper
+//! figure — the inference extension of the memory-topology machinery).
+//!
+//! For each (preset, ctx) the f16 decode step is placed once
+//! unconstrained to fix a shared tier-0 cap, then both dtype variants are
+//! placed against the same three-tier vram/ram/disk topology under that
+//! cap. Writes `BENCH_fig_kv.json`: one row per (model, ctx, dtype) with
+//! the tier-0 peak, the offloaded bytes, the transfer cost and the solver
+//! statistics, plus one comparison row per (preset, ctx) pair asserting
+//! that the q8 variant dominates f16 (no more offloading, no higher
+//! transfer cost) under the identical budget.
+
+use olla::bench_support::{
+    bench_solver_threads, fmt_secs, has_flag, phase_cap, section, solver_stats_json, BenchReport,
+};
+use olla::coordinator::{kv_sweep, KvRow, Table};
+use olla::models::ModelScale;
+use olla::olla::PlacementOptions;
+use olla::util::human_bytes;
+use olla::util::json::{num, obj, s, Json};
+use std::collections::BTreeMap;
+
+fn main() {
+    section("KV frontier — peak tier-0 memory vs context length, f16 vs q8");
+    let presets = ["tiny", "small", "7b"];
+    let ctxs = [256usize, 1024, 4096];
+    let cap_fraction = 0.5; // tier-0 cap as a fraction of the f16 peak
+    let opts = PlacementOptions {
+        time_limit: phase_cap(),
+        solver_threads: bench_solver_threads(),
+        ..Default::default()
+    };
+    let threads = if has_flag("--serial") { 1 } else { 0 };
+    let rows = kv_sweep(&presets, &ctxs, 1, ModelScale::Reduced, cap_fraction, &opts, threads);
+
+    let mut table = Table::new(&[
+        "model", "kv bytes", "tier-0 cap", "tier-0 peak", "offloaded", "ok", "method", "time",
+    ]);
+    let mut report = BenchReport::new("fig_kv");
+    let mut satisfied = 0usize;
+    for row in &rows {
+        if row.cap_satisfied {
+            satisfied += 1;
+        }
+        table.row(vec![
+            row.model.clone(),
+            human_bytes(row.kv_bytes),
+            human_bytes(row.tier0_cap),
+            human_bytes(row.tier0_peak),
+            human_bytes(row.offloaded_bytes),
+            if row.cap_satisfied { "yes".into() } else { "NO".into() },
+            row.method.clone(),
+            fmt_secs(row.solve_secs),
+        ]);
+        report.push(obj(vec![
+            ("model", s(&row.model)),
+            ("batch", num(row.batch as f64)),
+            ("ctx", num(row.ctx as f64)),
+            ("dtype", s(&row.dtype)),
+            ("kv_bytes", num(row.kv_bytes as f64)),
+            ("tier0_cap_bytes", num(row.tier0_cap as f64)),
+            ("unconstrained_peak_bytes", num(row.unconstrained_peak as f64)),
+            ("tier0_peak_bytes", num(row.tier0_peak as f64)),
+            ("offloaded_bytes", num(row.offloaded_bytes as f64)),
+            ("transfer_cost", num(row.transfer_cost)),
+            ("cap_satisfied", Json::Bool(row.cap_satisfied)),
+            ("method", s(&row.method)),
+            ("solve_secs", num(row.solve_secs)),
+            (
+                "solver",
+                solver_stats_json(
+                    row.simplex_iters,
+                    row.nodes,
+                    row.warm_attempts,
+                    row.warm_hits,
+                    row.cuts_applied,
+                    row.cut_rounds,
+                ),
+            ),
+        ]));
+    }
+    table.print();
+
+    // Pair up the dtype variants of each (preset, ctx) point and record
+    // whether q8 dominates f16 under the shared cap: the halved cache must
+    // never offload more bytes nor pay a higher transfer cost.
+    let mut pairs: BTreeMap<String, (Option<&KvRow>, Option<&KvRow>)> = BTreeMap::new();
+    for row in &rows {
+        // "kv-tiny-c256-f16" and "kv-tiny-c256-q8" pair under "kv-tiny-c256".
+        let point = row.model.rsplit_once('-').map_or(row.model.as_str(), |p| p.0).to_string();
+        let slot = pairs.entry(point).or_default();
+        match row.dtype.as_str() {
+            "f16" => slot.0 = Some(row),
+            _ => slot.1 = Some(row),
+        }
+    }
+    let mut dominated = 0usize;
+    let mut compared = 0usize;
+    for (point, (f16, q8)) in &pairs {
+        let (Some(f16), Some(q8)) = (f16, q8) else { continue };
+        compared += 1;
+        let dominates = q8.offloaded_bytes <= f16.offloaded_bytes
+            && q8.transfer_cost <= f16.transfer_cost + 1e-9;
+        if dominates {
+            dominated += 1;
+        } else {
+            println!(
+                "q8 does NOT dominate f16 at {point}: offloaded {} vs {}, cost {} vs {}",
+                q8.offloaded_bytes, f16.offloaded_bytes, q8.transfer_cost, f16.transfer_cost
+            );
+        }
+        report.push(obj(vec![
+            ("model", s(&format!("pair:{point}"))),
+            ("ctx", num(q8.ctx as f64)),
+            ("f16_offloaded_bytes", num(f16.offloaded_bytes as f64)),
+            ("q8_offloaded_bytes", num(q8.offloaded_bytes as f64)),
+            ("f16_transfer_cost", num(f16.transfer_cost)),
+            ("q8_transfer_cost", num(q8.transfer_cost)),
+            ("q8_dominates", Json::Bool(dominates)),
+        ]));
+    }
+    println!(
+        "{satisfied}/{} capacity cases satisfied; q8 dominates f16 on {dominated}/{compared} points",
+        rows.len()
+    );
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench report: {e}"),
+    }
+    if dominated < compared {
+        std::process::exit(1);
+    }
+}

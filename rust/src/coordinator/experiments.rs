@@ -438,6 +438,164 @@ pub fn offload_sweep(
     .collect()
 }
 
+/// KV-cache frontier row (`BENCH_fig_kv.json`): one decode-step inference
+/// graph ([`crate::models::kv`]) placed against a three-tier
+/// vram/ram/disk topology under a constrained tier-0 capacity. The f16
+/// and q8 variants of each (preset, ctx) share the *same absolute* tier-0
+/// cap, so the rows directly compare how much of each cache dtype the
+/// planner keeps in the fast tier.
+#[derive(Debug, Clone)]
+pub struct KvRow {
+    /// Graph name (`kv-<preset>-c<ctx>-<dtype>`).
+    pub model: String,
+    /// Decode batch size.
+    pub batch: usize,
+    /// Context length.
+    pub ctx: usize,
+    /// Cache dtype name (`f16` / `q8`).
+    pub dtype: String,
+    /// Analytic KV-cache bytes of the graph (the oracle formula).
+    pub kv_bytes: u64,
+    /// Tier-0 (vram) capacity the case ran under (bytes).
+    pub tier0_cap: u64,
+    /// Arena of the unconstrained single-region placement (bytes).
+    pub unconstrained_peak: u64,
+    /// Peak tier-0 memory actually used under the cap (bytes).
+    pub tier0_peak: u64,
+    /// Bytes placed in the slower tiers.
+    pub offloaded_bytes: u64,
+    /// Transfer-cost objective term of the returned placement.
+    pub transfer_cost: f64,
+    /// True when the placement satisfies the tier-0 capacity.
+    pub cap_satisfied: bool,
+    /// Placement method used (`Ilp`, `HeuristicFallback`, …).
+    pub method: String,
+    /// Placement wall-clock seconds.
+    pub solve_secs: f64,
+    /// Total simplex iterations (0 when the ILP was skipped).
+    pub simplex_iters: u64,
+    /// Branch-and-bound nodes explored (0 when the ILP was skipped).
+    pub nodes: u64,
+    /// Child LPs that attempted a warm start from their parent's basis.
+    pub warm_attempts: u64,
+    /// Warm-start attempts accepted by the dual re-solve path.
+    pub warm_hits: u64,
+    /// Cutting planes appended (root loop + node rounds).
+    pub cuts_applied: u64,
+    /// Separation rounds that appended at least one cut.
+    pub cut_rounds: u64,
+}
+
+/// The fig_kv tier hierarchy: vram (capped) over uncapped ram and disk.
+/// Bandwidths 900/50/2 GB/s derive exactly integral per-byte penalties
+/// (0 / 18 / 450), keeping the placement ILP's integral-cost fast paths
+/// live.
+fn kv_tier_topology(tier0_cap: u64) -> crate::olla::MemoryTopology {
+    use crate::olla::TierSpec;
+    crate::olla::MemoryTopology::tiers(&[
+        TierSpec { name: "vram".into(), capacity: Some(tier0_cap), bandwidth_gbps: 900.0 },
+        TierSpec { name: "ram".into(), capacity: None, bandwidth_gbps: 50.0 },
+        TierSpec { name: "disk".into(), capacity: None, bandwidth_gbps: 2.0 },
+    ])
+    .expect("static tier hierarchy is well-formed")
+}
+
+/// Run the KV experiment for one (preset, ctx, batch) point: place the
+/// f16 decode step unconstrained to fix the tier-0 cap
+/// (`cap_fraction · f16 peak`, clamped so the largest tensor fits), then
+/// place both the f16 and the q8 variant against the same three-tier
+/// topology under that *same* cap. Returns one row per dtype.
+pub fn kv_experiment(
+    preset: &str,
+    ctx: usize,
+    batch: usize,
+    scale: ModelScale,
+    cap_fraction: f64,
+    opts: &PlacementOptions,
+) -> Vec<KvRow> {
+    use crate::models::kv::kv_cache_bytes;
+    let names = [format!("kv-{preset}-c{ctx}-f16"), format!("kv-{preset}-c{ctx}-q8")];
+    let per_dtype: Vec<_> = names
+        .iter()
+        .map(|name| {
+            let g = build_graph(name, batch, scale)
+                .unwrap_or_else(|| panic!("unknown KV model '{name}'"));
+            let order = pytorch_order(&g);
+            let trace = simulate(&g, &order);
+            let items = items_from_trace(&g, &trace);
+            (kv_cache_bytes(&g), items)
+        })
+        .collect();
+    // The cap derives from the f16 (larger) variant so both dtypes face
+    // the identical budget; clamp so every tensor of either graph fits.
+    let base = olla::optimize_placement(&per_dtype[0].1, opts);
+    let unconstrained = base.arena_size;
+    let max_item = per_dtype
+        .iter()
+        .flat_map(|(_, items)| items.iter().map(|it| it.size))
+        .max()
+        .unwrap_or(0);
+    let cap = ((unconstrained as f64 * cap_fraction) as u64).max(max_item).max(1);
+    let topo = kv_tier_topology(cap);
+    names
+        .iter()
+        .zip(&per_dtype)
+        .map(|(name, (kv_bytes, items))| {
+            let case_opts = PlacementOptions { topology: topo.clone(), ..opts.clone() };
+            let r = olla::optimize_placement(items, &case_opts);
+            KvRow {
+                model: name.clone(),
+                batch,
+                ctx,
+                dtype: name.rsplit('-').next().unwrap_or("").to_string(),
+                kv_bytes: *kv_bytes,
+                tier0_cap: cap,
+                unconstrained_peak: unconstrained,
+                tier0_peak: r.arena_size,
+                offloaded_bytes: r.bytes_offloaded,
+                transfer_cost: r.transfer_cost,
+                cap_satisfied: r.arena_size <= cap,
+                method: format!("{:?}", r.method),
+                solve_secs: r.solve_secs,
+                simplex_iters: r.simplex_iters,
+                nodes: r.nodes,
+                warm_attempts: r.warm_attempts,
+                warm_hits: r.warm_hits,
+                cuts_applied: r.cuts_applied,
+                cut_rounds: r.cut_rounds,
+            }
+        })
+        .collect()
+}
+
+/// Run the KV experiment over every (preset, ctx) pair on a worker pool;
+/// rows come back flattened in input order (two rows — f16 then q8 — per
+/// pair).
+pub fn kv_sweep(
+    presets: &[&str],
+    ctxs: &[usize],
+    batch: usize,
+    scale: ModelScale,
+    cap_fraction: f64,
+    opts: &PlacementOptions,
+    threads: usize,
+) -> Vec<KvRow> {
+    let mut per_case = opts.clone();
+    if threads != 1 {
+        per_case.solver_threads = 1;
+    }
+    let points: Vec<(String, usize)> = presets
+        .iter()
+        .flat_map(|p| ctxs.iter().map(move |&c| (p.to_string(), c)))
+        .collect();
+    par_map(&points, threads, |(preset, ctx)| {
+        kv_experiment(preset, *ctx, batch, scale, cap_fraction, &per_case)
+    })
+    .into_iter()
+    .flatten()
+    .collect()
+}
+
 /// Recompute-frontier row (`BENCH_fig_recompute.json`): one zoo model
 /// scheduled by the capacity-aware eq.-14 extension under one constrained
 /// device capacity (see `docs/FORMULATION.md`, §"Capacity & recomputation
@@ -909,6 +1067,13 @@ mod tests {
     fn zoo_cases_builds_everything() {
         let cases = zoo_cases(&[1], ModelScale::Reduced);
         assert_eq!(cases.len(), ZOO.len());
+        // AlexNet has no repeated blocks, so its builder documents (and we
+        // pin here) that the scale knob is a no-op: Full and Reduced must
+        // produce the identical graph, not just similar ones.
+        let full = build_graph("alexnet", 1, ModelScale::Full).unwrap();
+        let red = build_graph("alexnet", 1, ModelScale::Reduced).unwrap();
+        use crate::graph::fingerprint::fingerprint;
+        assert_eq!(fingerprint(&full), fingerprint(&red), "alexnet scale must be inert");
     }
 
     #[test]

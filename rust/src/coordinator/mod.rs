@@ -7,10 +7,10 @@ pub mod experiments;
 pub mod table;
 
 pub use experiments::{
-    anytime_experiment, fragmentation_experiment, fragmentation_sweep, offload_experiment,
-    offload_sweep, par_map, recompute_experiment, recompute_sweep, reorder_experiment,
-    reorder_sweep, runtime_overhead_experiment, total_experiment, total_sweep, zoo_cases,
-    AnytimeRow, FragRow, ModelCase, OffloadRow, RecomputeRow, ReorderRow, RuntimeRow,
-    TotalRow,
+    anytime_experiment, fragmentation_experiment, fragmentation_sweep, kv_experiment, kv_sweep,
+    offload_experiment, offload_sweep, par_map, recompute_experiment, recompute_sweep,
+    reorder_experiment, reorder_sweep, runtime_overhead_experiment, total_experiment,
+    total_sweep, zoo_cases, AnytimeRow, FragRow, KvRow, ModelCase, OffloadRow, RecomputeRow,
+    ReorderRow, RuntimeRow, TotalRow,
 };
 pub use table::Table;

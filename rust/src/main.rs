@@ -15,11 +15,13 @@
 use olla::coordinator::{reorder_sweep, zoo_cases, Table};
 use olla::graph::dot::to_dot;
 use olla::models::{build_graph, ModelScale, ZOO};
-use olla::olla::{MemoryTopology, PlacementOptions, PlannerOptions, ScheduleOptions};
+use olla::olla::{
+    parse_topology_spec, MemoryTopology, PlacementOptions, PlannerOptions, ScheduleOptions,
+};
 use olla::runtime::{Engine, Manifest, Trainer};
 use olla::serve::{PlanCache, PlanHandle, PlanPhase, PlanRequest, PlanService};
 use olla::util::anyhow;
-use olla::util::{human_bytes, human_duration};
+use olla::util::{human_bytes, human_duration, parse_bytes};
 use std::path::PathBuf;
 use std::time::Duration;
 
@@ -59,7 +61,8 @@ fn print_help() {
 USAGE: olla <COMMAND> [FLAGS]
 
 COMMANDS:
-  zoo                         list models and training-graph stats
+  zoo                         list models and training-graph stats, plus the
+                              kv-<preset>-c<ctx>-<f16|q8> decode-step grammar
   optimize                    run the OLLA pipeline on one model
       --model NAME            zoo model (see `olla zoo`)
       --batch N               batch size (default 1)
@@ -68,6 +71,11 @@ COMMANDS:
       --device-cap BYTES      device memory capacity, e.g. 64MB (optional:
                               enables offload-aware device+host placement)
       --host-penalty COST     objective cost per offloaded byte (default 0.5)
+      --topology SPEC         N-tier topology, fastest first, as
+                              name:capacity:bandwidth_gbps tiers, e.g.
+                              vram:16G:900,ram:64G:50,disk::2 (empty capacity =
+                              unbounded; per-byte penalties derive from the
+                              bandwidth ratios; wins over --device-cap)
       --sched-device-cap B    make the eq.-14 scheduler capacity-aware: bound
                               per-step device residency by B, spilling /
                               recomputing tensors to fit (implies a device+host
@@ -81,6 +89,8 @@ COMMANDS:
       --poll-ms MS            progress print cadence (default 500)
       --device-cap BYTES      device capacity for offload-aware placement
       --host-penalty COST     objective cost per offloaded byte (default 0.5)
+      --topology SPEC         N-tier topology (see `optimize`), e.g.
+                              vram:16G:900,ram::50
       --sched-device-cap B    capacity-aware scheduling under cap B (see above)
       --recompute-penalty C   off-device cost per byte-step (default 0.05)
   serve                       queue plan requests through the PlanService
@@ -126,32 +136,18 @@ fn parse_secs(rest: &[String], name: &str, default: f64) -> Duration {
     Duration::from_secs_f64(flag(rest, name).and_then(|s| s.parse().ok()).unwrap_or(default))
 }
 
-/// Parse a byte size like `1048576`, `512KB`, `64MB` or `1.5GB`
-/// (case-insensitive, 1024-based).
-fn parse_bytes(text: &str) -> Option<u64> {
-    let t = text.trim().to_ascii_uppercase();
-    let (digits, mult) = if let Some(p) = t.strip_suffix("GB") {
-        (p, 1u64 << 30)
-    } else if let Some(p) = t.strip_suffix("MB") {
-        (p, 1u64 << 20)
-    } else if let Some(p) = t.strip_suffix("KB") {
-        (p, 1u64 << 10)
-    } else if let Some(p) = t.strip_suffix('B') {
-        (p, 1u64)
-    } else {
-        (t.as_str(), 1u64)
-    };
-    let v: f64 = digits.trim().parse().ok()?;
-    if v < 0.0 {
-        return None;
-    }
-    Some((v * mult as f64).round() as u64)
-}
-
-/// Build the memory topology requested by `--device-cap BYTES`
-/// (+ optional `--host-penalty COST_PER_BYTE`, default 0.5). Without
-/// `--device-cap` the planner keeps the single-region default.
+/// Build the memory topology requested by `--topology SPEC`
+/// (`name:capacity:bandwidth_gbps` tiers, fastest first, e.g.
+/// `vram:16G:900,ram:64G:50,disk::2`) or `--device-cap BYTES`
+/// (+ optional `--host-penalty COST_PER_BYTE`, default 0.5). An explicit
+/// `--topology` wins over `--device-cap`; without either the planner
+/// keeps the single-region default.
 fn parse_topology(rest: &[String]) -> anyhow::Result<Option<MemoryTopology>> {
+    if let Some(spec) = flag(rest, "--topology") {
+        let topo = parse_topology_spec(&spec)
+            .map_err(|e| anyhow::anyhow!("bad --topology '{spec}': {e}"))?;
+        return Ok(Some(topo));
+    }
     let Some(cap_text) = flag(rest, "--device-cap") else { return Ok(None) };
     let cap = parse_bytes(&cap_text)
         .ok_or_else(|| anyhow::anyhow!("bad --device-cap '{cap_text}' (try 64MB, 1.5GB)"))?;
@@ -213,6 +209,28 @@ fn cmd_zoo() -> anyhow::Result<()> {
         ]);
     }
     t.print();
+    println!();
+    println!("decode-step inference models: kv-<preset>-c<ctx>-<f16|q8>");
+    println!("(e.g. `olla plan --model kv-small-c1024-q8 --topology vram:1M:900,ram::50`)");
+    let mut k = Table::new(&["kv preset", "layers", "heads", "head_dim", "kv cache @c4096 f16"]);
+    for p in olla::models::KV_PRESETS {
+        let cfg = olla::models::KvConfig {
+            layers: p.layers,
+            heads: p.heads,
+            head_dim: p.head_dim,
+            ctx: 4096,
+            batch: 1,
+            dtype: olla::models::KvDtype::F16,
+        };
+        k.row(vec![
+            p.name.to_string(),
+            p.layers.to_string(),
+            p.heads.to_string(),
+            p.head_dim.to_string(),
+            human_bytes(cfg.kv_bytes()),
+        ]);
+    }
+    k.print();
     Ok(())
 }
 
@@ -263,6 +281,15 @@ fn cmd_optimize(rest: &[String]) -> anyhow::Result<()> {
             if plan.arena_size <= cap { "satisfied" } else { "VIOLATED" },
             human_bytes(plan.bytes_offloaded()),
         );
+        if topo.num_regions() > 2 {
+            let view: Vec<String> = topo
+                .regions
+                .iter()
+                .zip(&plan.region_sizes)
+                .map(|(r, sz)| format!("{}={}", r.name, human_bytes(*sz)))
+                .collect();
+            println!("tier usage          : {}", view.join("  "));
+        }
     }
     if sched_topology.is_some() {
         let byte_steps = olla::olla::spilled_byte_steps(&g, &plan.spills);
@@ -362,6 +389,15 @@ fn cmd_plan(rest: &[String]) -> anyhow::Result<()> {
             human_bytes(plan.bytes_offloaded()),
             human_bytes(plan.region_sizes.first().copied().unwrap_or(0)),
         );
+        if let Some(topo) = topology.as_ref().filter(|t| t.num_regions() > 2) {
+            let view: Vec<String> = topo
+                .regions
+                .iter()
+                .zip(&plan.region_sizes)
+                .map(|(r, sz)| format!("{}={}", r.name, human_bytes(*sz)))
+                .collect();
+            println!("  tier usage         : {}", view.join("  "));
+        }
     }
     if sched_topology.is_some() {
         println!(

@@ -1,0 +1,364 @@
+//! Decode-step LLM inference graphs with per-layer KV caches.
+//!
+//! The training zoo ([`crate::models::zoo`]) covers the paper's §5.2
+//! evaluation; the dominant memory problem OLLA's joint lifetime +
+//! location machinery should also attack is LLM *inference*: per-layer
+//! attention K/V caches that grow linearly with context length and spill
+//! across device/host/disk tiers ([`crate::olla::topology`]). A decode
+//! step reads every layer's K and V cache exactly once, layer by layer —
+//! the staggered access pattern that lets the planner keep only a few
+//! layers' caches resident in the fast tier at a time.
+//!
+//! Every tensor here has a closed-form byte count, so the whole generator
+//! is verifiable against an analytic oracle: the KV cache bytes of a
+//! config are exactly
+//! `2 · layers · heads · head_dim · ctx · batch · dtype_bytes`
+//! ([`KvConfig::kv_bytes`]), with the quantized `q8` cache dtype
+//! byte-for-byte half of `f16`. Property tests below hold the generators
+//! to that formula.
+
+use crate::graph::{Graph, OpKind};
+
+use super::zoo::ModelScale;
+
+/// Bytes per activation entry (activations stay f32).
+pub const ACT_BYTES: u64 = 4;
+/// Bytes per weight entry (weights are served in f16).
+pub const WEIGHT_BYTES: u64 = 2;
+
+/// KV-cache element type: the dtype knob of the zoo slice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvDtype {
+    /// Half-precision cache entries (2 bytes each).
+    F16,
+    /// 8-bit quantized cache entries (1 byte each) — byte-for-byte half
+    /// the `F16` footprint.
+    Q8,
+}
+
+impl KvDtype {
+    /// Bytes per cache entry.
+    pub fn bytes_per_entry(self) -> u64 {
+        match self {
+            KvDtype::F16 => 2,
+            KvDtype::Q8 => 1,
+        }
+    }
+
+    /// Canonical name used in graph names and the CLI (`f16` / `q8`).
+    pub fn name(self) -> &'static str {
+        match self {
+            KvDtype::F16 => "f16",
+            KvDtype::Q8 => "q8",
+        }
+    }
+
+    /// Parse a canonical dtype name.
+    pub fn parse(text: &str) -> Option<KvDtype> {
+        match text {
+            "f16" => Some(KvDtype::F16),
+            "q8" => Some(KvDtype::Q8),
+            _ => None,
+        }
+    }
+}
+
+/// Full parameterization of one decode-step instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvConfig {
+    /// Transformer layers (each with its own K and V cache).
+    pub layers: usize,
+    /// Attention heads.
+    pub heads: usize,
+    /// Per-head dimension.
+    pub head_dim: usize,
+    /// Context length: cached positions the decode step attends over.
+    pub ctx: usize,
+    /// Decode batch size (concurrent sequences).
+    pub batch: usize,
+    /// Cache element dtype.
+    pub dtype: KvDtype,
+}
+
+impl KvConfig {
+    /// Model width `heads · head_dim`.
+    pub fn d_model(&self) -> usize {
+        self.heads * self.head_dim
+    }
+
+    /// Bytes of one layer's K *and* V cache:
+    /// `2 · heads · head_dim · ctx · batch · dtype_bytes`.
+    pub fn kv_bytes_per_layer(&self) -> u64 {
+        2 * (self.heads * self.head_dim * self.ctx * self.batch) as u64
+            * self.dtype.bytes_per_entry()
+    }
+
+    /// The analytic oracle: total KV cache bytes across all layers,
+    /// `2 · layers · heads · head_dim · ctx · batch · dtype_bytes`.
+    pub fn kv_bytes(&self) -> u64 {
+        self.layers as u64 * self.kv_bytes_per_layer()
+    }
+}
+
+/// Sum of the KV-cache tensor bytes actually present in a graph (edges
+/// named `…k_cache` / `…v_cache`) — what the oracle tests compare
+/// against [`KvConfig::kv_bytes`].
+pub fn kv_cache_bytes(g: &Graph) -> u64 {
+    g.edges
+        .iter()
+        .filter(|e| e.name.ends_with("k_cache") || e.name.ends_with("v_cache"))
+        .map(|e| e.size)
+        .sum()
+}
+
+/// Build one decode step as a dataflow graph.
+///
+/// Per layer: a `kv_load` parameter node produces the layer's K and V
+/// cache tensors (consumed only by that layer's attention — the
+/// layer-by-layer access pattern), a `w_load` node produces the layer's
+/// fused weights, and `attn` + `mlp` compute nodes thread the hidden
+/// state through. A final `lm_head` projects the last hidden state to
+/// logits. The graph has no backward pass and no weight updates — it is
+/// an inference graph.
+pub fn decode_graph(name: &str, cfg: &KvConfig) -> Graph {
+    let mut g = Graph::new(name);
+    let d = cfg.d_model() as u64;
+    let hidden_bytes = d * cfg.batch as u64 * ACT_BYTES;
+    // Fused per-layer weights: qkv + output projection (4·d²) plus a
+    // 4×-expansion MLP (8·d²).
+    let weight_bytes = 12 * d * d * WEIGHT_BYTES;
+    let half_kv = cfg.kv_bytes_per_layer() / 2;
+
+    let input = g.add_node("input", OpKind::Input);
+    let mut hidden = g.add_edge("hidden0", input, &[], hidden_bytes);
+    for l in 0..cfg.layers {
+        let w_load = g.add_node(format!("layer{l}.w_load"), OpKind::Parameter);
+        let kv_load = g.add_node(format!("layer{l}.kv_load"), OpKind::Parameter);
+        let attn = g.add_node(format!("layer{l}.attn"), OpKind::Compute);
+        let mlp = g.add_node(format!("layer{l}.mlp"), OpKind::Compute);
+        g.add_sink(hidden, attn);
+        g.add_edge(format!("layer{l}.k_cache"), kv_load, &[attn], half_kv);
+        g.add_edge(format!("layer{l}.v_cache"), kv_load, &[attn], half_kv);
+        g.add_edge(format!("layer{l}.weights"), w_load, &[attn, mlp], weight_bytes);
+        g.add_edge(format!("layer{l}.attn_out"), attn, &[mlp], hidden_bytes);
+        hidden = g.add_edge(format!("layer{l}.hidden"), mlp, &[], hidden_bytes);
+    }
+    let head = g.add_node("lm_head", OpKind::Compute);
+    g.add_sink(hidden, head);
+    let out = g.add_node("output", OpKind::Output);
+    // A modest vocabulary proportional to the width keeps the logits from
+    // dwarfing the caches at small context lengths.
+    let vocab = 4 * cfg.d_model() as u64;
+    g.add_edge("logits", head, &[out], vocab * cfg.batch as u64 * ACT_BYTES);
+    g
+}
+
+/// A named decode-step architecture (layer geometry; context length,
+/// batch and dtype come from the graph name / CLI).
+#[derive(Debug, Clone, Copy)]
+pub struct KvPreset {
+    /// Architecture name (the middle of `kv-<arch>-c<ctx>-<dtype>`).
+    pub name: &'static str,
+    /// Transformer layers at `ModelScale::Full`.
+    pub layers: usize,
+    /// Attention heads.
+    pub heads: usize,
+    /// Per-head dimension.
+    pub head_dim: usize,
+}
+
+/// The KV zoo slice: decode-step architectures from toy to 7B-class.
+pub const KV_PRESETS: &[KvPreset] = &[
+    KvPreset { name: "tiny", layers: 2, heads: 2, head_dim: 16 },
+    KvPreset { name: "small", layers: 4, heads: 4, head_dim: 32 },
+    KvPreset { name: "7b", layers: 32, heads: 32, head_dim: 128 },
+];
+
+/// Parse a KV graph name of the form `kv-<arch>-c<ctx>-<dtype>`
+/// (e.g. `kv-small-c1024-f16`, `kv-7b-c4096-q8`). Returns `None` for
+/// anything else — including regular zoo model names, so this composes
+/// with [`super::zoo::build_graph`]'s lookup.
+pub fn parse_kv_name(name: &str) -> Option<(&'static KvPreset, usize, KvDtype)> {
+    let rest = name.strip_prefix("kv-")?;
+    let parts: Vec<&str> = rest.split('-').collect();
+    if parts.len() != 3 {
+        return None;
+    }
+    let preset = KV_PRESETS.iter().find(|p| p.name == parts[0])?;
+    let ctx: usize = parts[1].strip_prefix('c')?.parse().ok()?;
+    if ctx == 0 {
+        return None;
+    }
+    let dtype = KvDtype::parse(parts[2])?;
+    Some((preset, ctx, dtype))
+}
+
+/// Build a decode-step graph by zoo name ([`parse_kv_name`] grammar);
+/// `None` for non-KV names. `ModelScale::Reduced` caps the layer count
+/// at 2 (ILP-tractable benchmarking, matching the training zoo's knob)
+/// without touching any tensor size.
+pub fn build_kv_graph(name: &str, batch: usize, scale: ModelScale) -> Option<Graph> {
+    let (preset, ctx, dtype) = parse_kv_name(name)?;
+    let layers = match scale {
+        ModelScale::Full => preset.layers,
+        ModelScale::Reduced => preset.layers.min(2),
+    };
+    let cfg = KvConfig {
+        layers,
+        heads: preset.heads,
+        head_dim: preset.head_dim,
+        ctx,
+        batch: batch.max(1),
+        dtype,
+    };
+    Some(decode_graph(&format!("{name}-bs{batch}"), &cfg))
+}
+
+/// The canonical names of the KV zoo slice: every preset crossed with
+/// the given context lengths and both cache dtypes.
+pub fn kv_zoo_names(ctxs: &[usize]) -> Vec<String> {
+    let mut names = Vec::new();
+    for p in KV_PRESETS {
+        for &ctx in ctxs {
+            for dtype in [KvDtype::F16, KvDtype::Q8] {
+                names.push(format!("kv-{}-c{ctx}-{}", p.name, dtype.name()));
+            }
+        }
+    }
+    names
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::fingerprint::fingerprint;
+    use crate::util::quickcheck::{check, ensure};
+
+    #[test]
+    fn kv_bytes_match_the_analytic_oracle_on_a_sampled_grid() {
+        // For every sampled (layers, heads, head_dim, ctx, batch, dtype)
+        // the graph's KV tensor bytes must equal the closed form exactly
+        // — no rounding, no padding, no off-by-one in the generator.
+        check("kv_oracle", 40, |rng| {
+            let cfg = KvConfig {
+                layers: rng.range(1, 8),
+                heads: rng.range(1, 9),
+                head_dim: 8 * rng.range(1, 9),
+                ctx: rng.range(1, 4096),
+                batch: rng.range(1, 9),
+                dtype: if rng.chance(0.5) { KvDtype::F16 } else { KvDtype::Q8 },
+            };
+            let g = decode_graph("kv-grid", &cfg);
+            if g.validate().is_err() {
+                return crate::util::quickcheck::Outcome::Fail("invalid graph".into());
+            }
+            let closed_form = 2
+                * (cfg.layers * cfg.heads * cfg.head_dim * cfg.ctx * cfg.batch) as u64
+                * cfg.dtype.bytes_per_entry();
+            ensure(
+                kv_cache_bytes(&g) == closed_form && cfg.kv_bytes() == closed_form,
+                || {
+                    format!(
+                        "oracle mismatch for {cfg:?}: graph {} vs closed form {closed_form}",
+                        kv_cache_bytes(&g)
+                    )
+                },
+            )
+        });
+    }
+
+    #[test]
+    fn q8_graphs_halve_the_f16_kv_footprint_byte_for_byte() {
+        check("kv_q8_half", 25, |rng| {
+            let f16 = KvConfig {
+                layers: rng.range(1, 8),
+                heads: rng.range(1, 9),
+                head_dim: 8 * rng.range(1, 9),
+                ctx: rng.range(1, 4096),
+                batch: rng.range(1, 9),
+                dtype: KvDtype::F16,
+            };
+            let q8 = KvConfig { dtype: KvDtype::Q8, ..f16 };
+            let g16 = decode_graph("kv-f16", &f16);
+            let g8 = decode_graph("kv-q8", &q8);
+            ensure(
+                2 * kv_cache_bytes(&g8) == kv_cache_bytes(&g16)
+                    && 2 * q8.kv_bytes() == f16.kv_bytes(),
+                || {
+                    format!(
+                        "q8 must be exactly half of f16: {} vs {}",
+                        kv_cache_bytes(&g8),
+                        kv_cache_bytes(&g16)
+                    )
+                },
+            )
+        });
+    }
+
+    #[test]
+    fn kv_zoo_fingerprints_are_collision_free_and_deterministic() {
+        // Across the whole zoo slice (presets × contexts × dtypes ×
+        // batches), size-aware fingerprints must be pairwise distinct —
+        // the serve cache keys on them — and rebuilding the same name
+        // must reproduce the identical fingerprint.
+        let mut seen: std::collections::HashMap<String, String> = Default::default();
+        for name in kv_zoo_names(&[256, 1024]) {
+            for batch in [1usize, 4] {
+                let g = super::super::build_graph(&name, batch, ModelScale::Full).unwrap();
+                g.validate().unwrap_or_else(|e| panic!("{name} bs{batch}: {e}"));
+                let fp = fingerprint(&g).to_hex();
+                let again = super::super::build_graph(&name, batch, ModelScale::Full).unwrap();
+                assert_eq!(fp, fingerprint(&again).to_hex(), "{name} bs{batch} drifted");
+                if let Some(prev) = seen.insert(fp.clone(), format!("{name} bs{batch}")) {
+                    panic!("fingerprint collision: {prev} vs {name} bs{batch} ({fp})");
+                }
+            }
+        }
+        assert_eq!(seen.len(), KV_PRESETS.len() * 2 * 2 * 2);
+    }
+
+    #[test]
+    fn kv_names_parse_and_reject() {
+        let (p, ctx, dt) = parse_kv_name("kv-small-c1024-f16").unwrap();
+        assert_eq!(p.name, "small");
+        assert_eq!(ctx, 1024);
+        assert_eq!(dt, KvDtype::F16);
+        assert!(parse_kv_name("kv-7b-c4096-q8").is_some());
+        assert!(parse_kv_name("alexnet").is_none());
+        assert!(parse_kv_name("kv-huge-c1024-f16").is_none(), "unknown preset");
+        assert!(parse_kv_name("kv-small-1024-f16").is_none(), "missing c prefix");
+        assert!(parse_kv_name("kv-small-c0-f16").is_none(), "zero context");
+        assert!(parse_kv_name("kv-small-c1024-f32").is_none(), "unknown dtype");
+    }
+
+    #[test]
+    fn reduced_scale_caps_layers_without_touching_sizes() {
+        let full = build_kv_graph("kv-7b-c256-f16", 1, ModelScale::Full).unwrap();
+        let red = build_kv_graph("kv-7b-c256-f16", 1, ModelScale::Reduced).unwrap();
+        assert!(red.num_nodes() < full.num_nodes());
+        // Per-layer cache sizes are identical; only the layer count drops.
+        let cfg_full = KvConfig {
+            layers: 32,
+            heads: 32,
+            head_dim: 128,
+            ctx: 256,
+            batch: 1,
+            dtype: KvDtype::F16,
+        };
+        let cfg_red = KvConfig { layers: 2, ..cfg_full };
+        assert_eq!(kv_cache_bytes(&full), cfg_full.kv_bytes());
+        assert_eq!(kv_cache_bytes(&red), cfg_red.kv_bytes());
+    }
+
+    #[test]
+    fn decode_graphs_are_inference_only() {
+        let g = build_kv_graph("kv-tiny-c512-q8", 2, ModelScale::Full).unwrap();
+        g.validate().unwrap();
+        assert_eq!(
+            g.nodes.iter().filter(|n| n.kind == OpKind::WeightUpdate).count(),
+            0,
+            "decode steps train nothing"
+        );
+        assert!(g.nodes.iter().any(|n| n.kind == OpKind::Output));
+    }
+}

@@ -9,9 +9,11 @@
 //! `python/compile/graph_export.py` from a jaxpr.
 
 pub mod cnn;
+pub mod kv;
 pub mod net;
 pub mod transformer;
 pub mod zoo;
 
+pub use kv::{build_kv_graph, kv_zoo_names, KvConfig, KvDtype, KvPreset, KV_PRESETS};
 pub use net::{Net, OpSpec, INPUT};
 pub use zoo::{build_graph, build_net, ModelScale, ZooEntry, ZOO};

@@ -29,6 +29,14 @@ fn rep(scale: ModelScale, full: usize, reduced: usize) -> usize {
 }
 
 /// AlexNet (Krizhevsky et al., 2012).
+///
+/// The architecture has no repeated blocks for the `scale` knob to shrink
+/// (every conv/fc layer is architecturally distinct), so `Full` and
+/// `Reduced` are deliberately identical — the parameter is accepted only
+/// for [`ZooEntry`] signature uniformity. The
+/// `zoo_cases_builds_everything` test in the coordinator pins this
+/// invariance with a fingerprint equality check; if AlexNet ever gains a
+/// depth knob, start consuming `scale` here and update that test.
 pub fn alexnet(batch: usize, _scale: ModelScale) -> Net {
     let (mut b, x) = CnnBuilder::new("alexnet", batch, 3, 227, 227);
     let c1 = b.conv("conv1", x, 64, 11, 4, 2);
@@ -453,8 +461,14 @@ pub const ZOO: &[ZooEntry] = &[
     ZooEntry { name: "unet", build: unet },
 ];
 
-/// Build a model's training graph by name.
+/// Build a model's graph by name: either a `kv-…` decode-step inference
+/// graph ([`super::kv::parse_kv_name`] grammar) or a training graph from
+/// the [`ZOO`]. KV models live outside the `ZOO` table because that table
+/// promises training graphs (weight updates, batch-1/32 benchmarks).
 pub fn build_graph(name: &str, batch: usize, scale: ModelScale) -> Option<Graph> {
+    if let Some(g) = super::kv::build_kv_graph(name, batch, scale) {
+        return Some(g);
+    }
     ZOO.iter()
         .find(|z| z.name == name)
         .map(|z| (z.build)(batch, scale).training_graph())

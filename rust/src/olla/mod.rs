@@ -34,4 +34,4 @@ pub use scheduling::{
     optimize_schedule_anytime, spilled_byte_steps, OrderSink, ScheduleOptions,
     ScheduleResult, SpillIntervals,
 };
-pub use topology::{MemoryRegion, MemoryTopology};
+pub use topology::{parse_topology_spec, MemoryRegion, MemoryTopology, TierSpec};

@@ -1624,6 +1624,110 @@ mod tests {
     }
 
     #[test]
+    fn two_tier_tiers_topology_matches_device_host_through_placement_ilp() {
+        // N-tier safety rail at the ILP layer: a two-tier bandwidth
+        // hierarchy with derived penalty 2.0 (900/450) must reproduce the
+        // legacy device_host(cap, 2.0) result bit for bit through
+        // optimize_placement_regions (serial solver for determinism).
+        check("tiers_two_tier_placement_identity", 8, |rng: &mut Rng| {
+            let n = rng.range(2, 10);
+            let items: Vec<PlacementItem> = (0..n)
+                .map(|i| {
+                    let start = rng.range(0, 8);
+                    let len = rng.range(1, 6);
+                    item(i as u32, 8 * rng.range(1, 24) as u64, start, start + len)
+                })
+                .collect();
+            let cap = 8 * rng.range(16, 128) as u64;
+            let tiered = MemoryTopology::tiers(&[
+                crate::olla::topology::TierSpec {
+                    name: "vram".into(),
+                    capacity: Some(cap),
+                    bandwidth_gbps: 900.0,
+                },
+                crate::olla::topology::TierSpec {
+                    name: "ram".into(),
+                    capacity: None,
+                    bandwidth_gbps: 450.0,
+                },
+            ])
+            .unwrap();
+            let legacy_opts = PlacementOptions {
+                topology: MemoryTopology::device_host(cap, 2.0),
+                solver_threads: 1,
+                ..quick()
+            };
+            let tiered_opts =
+                PlacementOptions { topology: tiered, solver_threads: 1, ..quick() };
+            let a = optimize_placement(&items, &legacy_opts);
+            let b = optimize_placement(&items, &tiered_opts);
+            ensure(
+                a.offsets == b.offsets
+                    && a.regions == b.regions
+                    && a.arena_size == b.arena_size
+                    && a.region_sizes == b.region_sizes
+                    && (a.transfer_cost - b.transfer_cost).abs() < 1e-9,
+                || {
+                    format!(
+                        "two-tier placement diverged from device_host: \
+                         arena {} vs {}, regions {:?} vs {:?}",
+                        a.arena_size, b.arena_size, a.regions, b.regions
+                    )
+                },
+            )
+        });
+    }
+
+    #[test]
+    fn three_tier_ilp_beats_greedy_tier_assignment() {
+        // The covering instance under a three-tier hierarchy (vram 12
+        // bytes, unbounded ram at derived penalty 2, unbounded disk at
+        // derived penalty 4): greedy relief evicts A and C (20 bytes to
+        // ram, cost 40) while the region ILP offloads only the long-lived
+        // B (8 bytes, cost 16) — and picks the *cheaper* middle tier, not
+        // the disk.
+        let items = vec![item(0, 10, 0, 2), item(1, 8, 0, 4), item(2, 10, 2, 4)];
+        let topo = MemoryTopology::tiers(&[
+            crate::olla::topology::TierSpec {
+                name: "vram".into(),
+                capacity: Some(12),
+                bandwidth_gbps: 900.0,
+            },
+            crate::olla::topology::TierSpec {
+                name: "ram".into(),
+                capacity: None,
+                bandwidth_gbps: 450.0,
+            },
+            crate::olla::topology::TierSpec {
+                name: "disk".into(),
+                capacity: None,
+                bandwidth_gbps: 225.0,
+            },
+        ])
+        .unwrap();
+        let (greedy_regions, _, _) = crate::olla::topology::assign_and_pack(&items, &topo, 1);
+        let greedy_cost =
+            crate::olla::topology::transfer_cost(&items, &greedy_regions, &topo);
+        assert_eq!(
+            crate::olla::topology::bytes_offloaded(&items, &greedy_regions),
+            20,
+            "greedy must offload A and C here: {greedy_regions:?}"
+        );
+        let opts = PlacementOptions { topology: topo.clone(), ..quick() };
+        let r = optimize_placement(&items, &opts);
+        assert_eq!(r.bytes_offloaded, 8, "ILP must offload only B: {:?}", r.regions);
+        assert_eq!(r.regions[1], 1, "B belongs in the cheaper ram tier: {:?}", r.regions);
+        assert!(r.arena_size <= 12);
+        assert!(
+            r.transfer_cost < greedy_cost,
+            "ILP cost {} must beat greedy cost {greedy_cost}",
+            r.transfer_cost
+        );
+        assert!(matches!(r.method, PlacementMethod::Ilp | PlacementMethod::IlpTimeLimit));
+        check_placement_regions(&items, &r.regions, &r.offsets, &topo.capacities()).unwrap();
+    }
+
+    #[test]
     fn cheap_host_penalty_prefers_offloading_even_without_cap_pressure() {
         // At 0.25/byte, offloading beats device residency byte for byte,
         // so the tight fast path must not claim BoundProven: the true
@@ -1651,11 +1755,13 @@ mod tests {
                     name: "tiny".into(),
                     capacity: Some(8),
                     penalty_per_byte: 0.0,
+                    bandwidth_gbps: None,
                 },
                 crate::olla::topology::MemoryRegion {
                     name: "small".into(),
                     capacity: Some(16),
                     penalty_per_byte: 1.0,
+                    bandwidth_gbps: None,
                 },
             ],
         };
@@ -1843,11 +1949,13 @@ mod tests {
                     name: "device".into(),
                     capacity: None,
                     penalty_per_byte: 0.0,
+                    bandwidth_gbps: None,
                 },
                 crate::olla::topology::MemoryRegion {
                     name: "host".into(),
                     capacity: None,
                     penalty_per_byte: 2.5,
+                    bandwidth_gbps: None,
                 },
             ],
         };
@@ -1892,11 +2000,13 @@ mod tests {
                     name: "device".into(),
                     capacity: None,
                     penalty_per_byte: 0.0,
+                    bandwidth_gbps: None,
                 },
                 crate::olla::topology::MemoryRegion {
                     name: "host".into(),
                     capacity: None,
                     penalty_per_byte: 2.5,
+                    bandwidth_gbps: None,
                 },
             ],
         };

@@ -635,6 +635,50 @@ mod tests {
     }
 
     #[test]
+    fn two_tier_tiers_topology_matches_device_host_through_materialize() {
+        // Tier safety rail at the planner layer: a two-tier bandwidth
+        // hierarchy whose derived penalty equals the legacy host penalty
+        // (900/450 = 2.0) must materialize the identical plan to
+        // device_host — offsets, regions, arenas and segments.
+        let g = fig3_graph();
+        let single = materialize_plan(
+            &g,
+            pytorch_order(&g),
+            0.0,
+            0,
+            &MemoryTopology::single(),
+            SpillIntervals::new(),
+        )
+        .unwrap();
+        let cap = single.arena_size - 1;
+        let legacy = MemoryTopology::device_host(cap, 2.0);
+        let tiered = MemoryTopology::tiers(&[
+            crate::olla::topology::TierSpec {
+                name: "vram".into(),
+                capacity: Some(cap),
+                bandwidth_gbps: 900.0,
+            },
+            crate::olla::topology::TierSpec {
+                name: "ram".into(),
+                capacity: None,
+                bandwidth_gbps: 450.0,
+            },
+        ])
+        .unwrap();
+        let a = materialize_plan(&g, pytorch_order(&g), 0.0, 0, &legacy, SpillIntervals::new())
+            .unwrap();
+        let b = materialize_plan(&g, pytorch_order(&g), 0.0, 0, &tiered, SpillIntervals::new())
+            .unwrap();
+        validate_plan(&g, &b).unwrap();
+        assert_eq!(a.offsets, b.offsets);
+        assert_eq!(a.region_of, b.region_of);
+        assert_eq!(a.region_sizes, b.region_sizes);
+        assert_eq!(a.arena_size, b.arena_size);
+        assert_eq!(a.segment_offsets, b.segment_offsets);
+        assert!(b.bytes_offloaded() > 0, "the cap below peak must offload");
+    }
+
+    #[test]
     fn materialize_plan_places_spilled_tensors_per_segment() {
         // Hand a materialization the scheduler's spill certificate for a
         // tensor with an idle interior step: instead of exiling the whole

@@ -25,7 +25,12 @@ use crate::alloc::PlacementItem;
 /// ```
 /// use olla::olla::topology::MemoryRegion;
 ///
-/// let hbm = MemoryRegion { name: "device".into(), capacity: Some(16 << 30), penalty_per_byte: 0.0 };
+/// let hbm = MemoryRegion {
+///     name: "device".into(),
+///     capacity: Some(16 << 30),
+///     penalty_per_byte: 0.0,
+///     bandwidth_gbps: None,
+/// };
 /// assert!(hbm.fits(1 << 20));
 /// assert!(!hbm.fits(32 << 30));
 /// ```
@@ -40,6 +45,13 @@ pub struct MemoryRegion {
     /// access penalty of eq. 15's offload extension). The device region
     /// conventionally has penalty 0.
     pub penalty_per_byte: f64,
+    /// Link bandwidth in GB/s when the region was built from a tier spec
+    /// ([`MemoryTopology::tiers`]), from which `penalty_per_byte` is
+    /// derived; `None` when the penalty was given directly (the legacy
+    /// [`MemoryTopology::device_host`] constructors). Informational for
+    /// serve snapshots and cache round-trips — the optimizers only read
+    /// the derived penalty.
+    pub bandwidth_gbps: Option<f64>,
 }
 
 impl MemoryRegion {
@@ -85,6 +97,7 @@ impl MemoryTopology {
                 name: "device".to_string(),
                 capacity: None,
                 penalty_per_byte: 0.0,
+                bandwidth_gbps: None,
             }],
         }
     }
@@ -99,14 +112,80 @@ impl MemoryTopology {
                     name: "device".to_string(),
                     capacity: Some(device_capacity),
                     penalty_per_byte: 0.0,
+                    bandwidth_gbps: None,
                 },
                 MemoryRegion {
                     name: "host".to_string(),
                     capacity: None,
                     penalty_per_byte: host_penalty_per_byte,
+                    bandwidth_gbps: None,
                 },
             ],
         }
+    }
+
+    /// Build an N-tier topology from ordered tier specs, fastest tier
+    /// first. Each tier carries a hard capacity (`None` = unbounded) and
+    /// a link bandwidth; the per-byte placement penalty of tier `k > 0`
+    /// is *derived* from the bandwidth ratio `bandwidth(0) /
+    /// bandwidth(k)` — a tier half as fast as the device costs 2 per
+    /// byte — instead of one flat host penalty. Tier 0 is the device and
+    /// pays no penalty.
+    ///
+    /// Bandwidths must be positive and non-increasing (the tiers are an
+    /// *ordered* hierarchy; eviction only ever moves tensors to later,
+    /// slower tiers). The derived penalties are therefore always ≥ 1, so
+    /// the offload-free fast paths of the placement ILP stay usable.
+    ///
+    /// ```
+    /// use olla::olla::topology::{MemoryTopology, TierSpec};
+    ///
+    /// let topo = MemoryTopology::tiers(&[
+    ///     TierSpec { name: "vram".into(), capacity: Some(16 << 30), bandwidth_gbps: 900.0 },
+    ///     TierSpec { name: "ram".into(), capacity: Some(64 << 30), bandwidth_gbps: 50.0 },
+    ///     TierSpec { name: "disk".into(), capacity: None, bandwidth_gbps: 2.0 },
+    /// ])
+    /// .unwrap();
+    /// assert_eq!(topo.num_regions(), 3);
+    /// assert_eq!(topo.regions[0].penalty_per_byte, 0.0);
+    /// assert_eq!(topo.regions[1].penalty_per_byte, 18.0);
+    /// assert_eq!(topo.regions[2].penalty_per_byte, 450.0);
+    /// ```
+    pub fn tiers(specs: &[TierSpec]) -> Result<MemoryTopology, String> {
+        if specs.is_empty() {
+            return Err("a topology needs at least one tier".into());
+        }
+        for sp in specs {
+            if sp.name.is_empty() {
+                return Err("tier names must be non-empty".into());
+            }
+            if sp.bandwidth_gbps.is_nan() || sp.bandwidth_gbps <= 0.0 {
+                return Err(format!(
+                    "tier '{}' has non-positive bandwidth {}",
+                    sp.name, sp.bandwidth_gbps
+                ));
+            }
+        }
+        for w in specs.windows(2) {
+            if w[1].bandwidth_gbps > w[0].bandwidth_gbps {
+                return Err(format!(
+                    "tiers must be ordered fastest first: '{}' ({} GB/s) is faster than '{}' ({} GB/s)",
+                    w[1].name, w[1].bandwidth_gbps, w[0].name, w[0].bandwidth_gbps
+                ));
+            }
+        }
+        let bw0 = specs[0].bandwidth_gbps;
+        let regions = specs
+            .iter()
+            .enumerate()
+            .map(|(k, sp)| MemoryRegion {
+                name: sp.name.clone(),
+                capacity: sp.capacity,
+                penalty_per_byte: if k == 0 { 0.0 } else { bw0 / sp.bandwidth_gbps },
+                bandwidth_gbps: Some(sp.bandwidth_gbps),
+            })
+            .collect();
+        Ok(MemoryTopology { regions })
     }
 
     /// True for a one-region topology (the pre-topology fast path).
@@ -123,6 +202,56 @@ impl MemoryTopology {
     pub fn capacities(&self) -> Vec<Option<u64>> {
         self.regions.iter().map(|r| r.capacity).collect()
     }
+}
+
+/// Specification of one memory tier for [`MemoryTopology::tiers`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierSpec {
+    /// Tier name (`"vram"`, `"ram"`, `"disk"`, …).
+    pub name: String,
+    /// Hard byte capacity, or `None` for an unbounded tier.
+    pub capacity: Option<u64>,
+    /// Link bandwidth in GB/s (any consistent relative unit works — only
+    /// the ratios to tier 0 enter the derived penalties).
+    pub bandwidth_gbps: f64,
+}
+
+/// Parse a `--topology` spec: comma-separated `name:capacity:bandwidth`
+/// tiers, fastest first — e.g. `vram:16G:900,ram:64G:50,disk::2`. An
+/// empty capacity field means unbounded; capacities take the byte forms
+/// of [`crate::util::parse_bytes`] (`16G`, `512MB`, …); bandwidth is a
+/// plain number in GB/s. The result goes through
+/// [`MemoryTopology::tiers`], so tier ordering and positivity are
+/// enforced here too.
+pub fn parse_topology_spec(spec: &str) -> Result<MemoryTopology, String> {
+    let mut tiers = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        let fields: Vec<&str> = part.split(':').collect();
+        if fields.len() != 3 {
+            return Err(format!(
+                "tier '{part}' must be name:capacity:bandwidth (e.g. vram:16G:900 or disk::2)"
+            ));
+        }
+        let name = fields[0].trim();
+        if name.is_empty() {
+            return Err(format!("tier '{part}' has an empty name"));
+        }
+        let cap_text = fields[1].trim();
+        let capacity = if cap_text.is_empty() {
+            None
+        } else {
+            Some(crate::util::parse_bytes(cap_text).ok_or_else(|| {
+                format!("bad capacity '{cap_text}' in tier '{part}' (try 16G, 512MB)")
+            })?)
+        };
+        let bandwidth_gbps: f64 = fields[2]
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad bandwidth '{}' in tier '{part}'", fields[2].trim()))?;
+        tiers.push(TierSpec { name: name.to_string(), capacity, bandwidth_gbps });
+    }
+    MemoryTopology::tiers(&tiers)
 }
 
 /// Total objective penalty of a region assignment:
@@ -599,6 +728,10 @@ mod tests {
         PlacementItem { edge: EdgeId(id), size, start, end }
     }
 
+    fn region(name: &str, capacity: Option<u64>, penalty_per_byte: f64) -> MemoryRegion {
+        MemoryRegion { name: name.into(), capacity, penalty_per_byte, bandwidth_gbps: None }
+    }
+
     #[test]
     fn single_topology_assigns_everything_to_region_zero() {
         let items = vec![item(0, 100, 0, 4), item(1, 50, 1, 3)];
@@ -760,9 +893,9 @@ mod tests {
         let items = vec![item(0, 10, 0, 4), item(1, 6, 0, 4)];
         let topo = MemoryTopology {
             regions: vec![
-                MemoryRegion { name: "device".into(), capacity: Some(4), penalty_per_byte: 0.0 },
-                MemoryRegion { name: "mid".into(), capacity: Some(10), penalty_per_byte: 1.0 },
-                MemoryRegion { name: "big".into(), capacity: Some(32), penalty_per_byte: 2.0 },
+                region("device", Some(4), 0.0),
+                region("mid", Some(10), 1.0),
+                region("big", Some(32), 2.0),
             ],
         };
         let region_of = vec![1, 0]; // A already fills mid; victim 1 leaves device
@@ -787,9 +920,9 @@ mod tests {
         let items = vec![item(0, 10, 0, 4), item(1, 6, 0, 4), item(2, 12, 0, 4)];
         let topo = MemoryTopology {
             regions: vec![
-                MemoryRegion { name: "device".into(), capacity: Some(12), penalty_per_byte: 0.0 },
-                MemoryRegion { name: "mid".into(), capacity: Some(10), penalty_per_byte: 1.0 },
-                MemoryRegion { name: "big".into(), capacity: Some(6), penalty_per_byte: 2.0 },
+                region("device", Some(12), 0.0),
+                region("mid", Some(10), 1.0),
+                region("big", Some(6), 2.0),
             ],
         };
         let (region_of, offs, sizes) = assign_and_pack(&items, &topo, 1);
@@ -817,5 +950,104 @@ mod tests {
         assert!((segd - (5.0 + 8.0)).abs() < 1e-9, "crossing(A) + host(B): {segd}");
         let plain = transfer_cost_segments(&items, &[], &region_of, &topo);
         assert!((plain - transfer_cost(&items, &region_of, &topo)).abs() < 1e-9);
+    }
+
+    fn tier(name: &str, capacity: Option<u64>, bandwidth_gbps: f64) -> TierSpec {
+        TierSpec { name: name.into(), capacity, bandwidth_gbps }
+    }
+
+    #[test]
+    fn tiers_derive_penalties_from_bandwidth_ratios() {
+        let topo = MemoryTopology::tiers(&[
+            tier("vram", Some(16 << 30), 900.0),
+            tier("ram", Some(64 << 30), 50.0),
+            tier("disk", None, 2.0),
+        ])
+        .unwrap();
+        assert_eq!(topo.num_regions(), 3);
+        assert_eq!(topo.regions[0].penalty_per_byte, 0.0);
+        assert_eq!(topo.regions[1].penalty_per_byte, 18.0);
+        assert_eq!(topo.regions[2].penalty_per_byte, 450.0);
+        assert_eq!(topo.regions[1].bandwidth_gbps, Some(50.0));
+        assert_eq!(topo.capacities(), vec![Some(16 << 30), Some(64 << 30), None]);
+        // The derived penalties keep every non-device tier at >= 1 above
+        // the (zero-penalty) device, so the placement fast paths that
+        // assume offloading can never pay for itself stay usable.
+        assert!(topo.regions[1..]
+            .iter()
+            .all(|r| r.penalty_per_byte >= 1.0 + topo.regions[0].penalty_per_byte));
+    }
+
+    #[test]
+    fn tiers_reject_malformed_hierarchies() {
+        assert!(MemoryTopology::tiers(&[]).is_err(), "no tiers");
+        assert!(
+            MemoryTopology::tiers(&[tier("vram", None, 0.0)]).is_err(),
+            "zero bandwidth"
+        );
+        assert!(
+            MemoryTopology::tiers(&[tier("vram", None, -2.0)]).is_err(),
+            "negative bandwidth"
+        );
+        assert!(
+            MemoryTopology::tiers(&[tier("", None, 1.0)]).is_err(),
+            "empty name"
+        );
+        assert!(
+            MemoryTopology::tiers(&[tier("ram", None, 50.0), tier("vram", None, 900.0)])
+                .is_err(),
+            "tiers must be fastest-first"
+        );
+    }
+
+    #[test]
+    fn topology_spec_parses_the_cli_grammar() {
+        let topo = parse_topology_spec("vram:16G:900,ram:64G:50,disk::2").unwrap();
+        assert_eq!(topo.num_regions(), 3);
+        assert_eq!(topo.regions[0].name, "vram");
+        assert_eq!(topo.regions[0].capacity, Some(16 << 30));
+        assert_eq!(topo.regions[1].capacity, Some(64 << 30));
+        assert_eq!(topo.regions[2].capacity, None, "empty capacity = unbounded");
+        assert_eq!(topo.regions[2].penalty_per_byte, 450.0);
+        assert!(parse_topology_spec("").is_err());
+        assert!(parse_topology_spec("vram:16G").is_err(), "missing bandwidth field");
+        assert!(parse_topology_spec("vram:16G:fast").is_err(), "non-numeric bandwidth");
+        assert!(parse_topology_spec("vram:sixteen:900").is_err(), "bad capacity");
+        assert!(parse_topology_spec(":16G:900").is_err(), "empty name");
+    }
+
+    #[test]
+    fn two_tier_topology_reproduces_device_host_bit_for_bit() {
+        // The N-tier safety rail (the same pattern MemoryTopology::single
+        // uses for the single-region fast path): a two-tier hierarchy
+        // whose derived penalty equals the legacy host penalty must
+        // reproduce device_host exactly through greedy assignment and
+        // packing — regions, offsets and per-region arenas.
+        check("tiers_two_tier_identity", 30, |rng| {
+            let n = rng.range(1, 20);
+            let items: Vec<PlacementItem> = (0..n)
+                .map(|i| {
+                    let start = rng.range(0, 10);
+                    let len = rng.range(1, 6);
+                    item(i as u32, 4 * rng.range(1, 40) as u64, start, start + len)
+                })
+                .collect();
+            let cap = 4 * rng.range(10, 200) as u64;
+            // 900/450 = 2.0 exactly: bit-equal to the legacy penalty.
+            let legacy = MemoryTopology::device_host(cap, 2.0);
+            let tiered = MemoryTopology::tiers(&[
+                tier("vram", Some(cap), 900.0),
+                tier("ram", None, 450.0),
+            ])
+            .unwrap();
+            let g1 = assign_regions_greedy(&items, &legacy);
+            let g2 = assign_regions_greedy(&items, &tiered);
+            let (r1, o1, s1) = assign_and_pack(&items, &legacy, 1);
+            let (r2, o2, s2) = assign_and_pack(&items, &tiered, 1);
+            ensure(
+                g1 == g2 && r1 == r2 && o1 == o2 && s1 == s2,
+                || "two-tier topology diverged from device_host".into(),
+            )
+        });
     }
 }

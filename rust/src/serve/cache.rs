@@ -762,6 +762,10 @@ fn plan_to_json(plan: &MemoryPlan) -> Json {
                                 r.capacity.map_or(Json::Null, |c| num(c as f64)),
                             ),
                             ("penalty_per_byte", num(r.penalty_per_byte)),
+                            (
+                                "bandwidth_gbps",
+                                r.bandwidth_gbps.map_or(Json::Null, num),
+                            ),
                         ])
                     })
                     .collect(),
@@ -847,6 +851,9 @@ fn parts_from_json(v: &Json) -> Result<PlanParts, String> {
                     c => Some(c.as_u64()?),
                 },
                 penalty_per_byte: r.get("penalty_per_byte")?.as_f64()?,
+                // Absent in entries persisted before tiered topologies:
+                // tolerate, the optimizers only read the penalty.
+                bandwidth_gbps: r.get("bandwidth_gbps").and_then(Json::as_f64),
             })
         })
         .collect::<Option<_>>()

@@ -49,6 +49,35 @@ pub fn human_bytes(bytes: u64) -> String {
     }
 }
 
+/// Parse a byte size like `1048576`, `512KB`, `64MB`, `1.5GB`, or the
+/// single-letter forms `4K`/`512M`/`16G` (case-insensitive, 1024-based).
+/// Returns `None` for negative or unparseable input.
+pub fn parse_bytes(text: &str) -> Option<u64> {
+    let t = text.trim().to_ascii_uppercase();
+    let (digits, mult) = if let Some(p) = t.strip_suffix("GB") {
+        (p, 1u64 << 30)
+    } else if let Some(p) = t.strip_suffix("MB") {
+        (p, 1u64 << 20)
+    } else if let Some(p) = t.strip_suffix("KB") {
+        (p, 1u64 << 10)
+    } else if let Some(p) = t.strip_suffix('G') {
+        (p, 1u64 << 30)
+    } else if let Some(p) = t.strip_suffix('M') {
+        (p, 1u64 << 20)
+    } else if let Some(p) = t.strip_suffix('K') {
+        (p, 1u64 << 10)
+    } else if let Some(p) = t.strip_suffix('B') {
+        (p, 1u64)
+    } else {
+        (t.as_str(), 1u64)
+    };
+    let v: f64 = digits.trim().parse().ok()?;
+    if v < 0.0 {
+        return None;
+    }
+    Some((v * mult as f64).round() as u64)
+}
+
 /// Format a duration compactly (`431ms`, `2.41s`, `3m12s`).
 pub fn human_duration(d: Duration) -> String {
     let s = d.as_secs_f64();
@@ -94,6 +123,20 @@ mod tests {
         assert_eq!(human_bytes(512), "512 B");
         assert_eq!(human_bytes(2048), "2.00 KiB");
         assert_eq!(human_bytes(3 * 1024 * 1024 / 2), "1.50 MiB");
+    }
+
+    #[test]
+    fn bytes_parsing() {
+        assert_eq!(parse_bytes("1048576"), Some(1 << 20));
+        assert_eq!(parse_bytes("512KB"), Some(512 << 10));
+        assert_eq!(parse_bytes("64mb"), Some(64 << 20));
+        assert_eq!(parse_bytes("1.5GB"), Some(3 << 29));
+        assert_eq!(parse_bytes("16G"), Some(16 << 30));
+        assert_eq!(parse_bytes("512M"), Some(512 << 20));
+        assert_eq!(parse_bytes("4k"), Some(4 << 10));
+        assert_eq!(parse_bytes("100B"), Some(100));
+        assert_eq!(parse_bytes("-1"), None);
+        assert_eq!(parse_bytes("12 parsecs"), None);
     }
 
     #[test]
