@@ -1,0 +1,1343 @@
+//! Static model auditor: a lint pass over a built [`Model`] plus the
+//! metadata its [`IlpBuilder`](crate::ilp::IlpBuilder) recorded, and a
+//! deletion-filter IIS explainer that names the constraint groups behind
+//! an `Infeasible` verdict.
+//!
+//! The lint pass ([`audit_model`]) **never solves**: every check is a
+//! linear scan over the columns, rows, and builder metadata (named
+//! groups, pair registry, indicator registry, capacity hints), so it is
+//! cheap enough to run at every build site under `debug_assertions` (and
+//! in release via `OLLA_AUDIT=1` — see [`enabled`]). Two kinds of
+//! findings come out:
+//!
+//! * **malformed encodings** ([`Severity::Error`]) — the builders
+//!   produced a gadget whose shape cannot mean what the formulation
+//!   intends (a dropped separation row, a corrupted indicator
+//!   coefficient, `lb > ub`);
+//! * **certified infeasibility** ([`Severity::Infeasible`]) — the model
+//!   is well-formed but provably has no solution before the solver ever
+//!   runs (a row whose minimum activity already exceeds its rhs, a
+//!   capacity hint whose must-fit load exceeds the cap). Callers with
+//!   fallbacks (greedy order, heuristic packing) build such models
+//!   legitimately, so these never panic.
+//!
+//! The IIS half ([`explain_infeasible`]) runs *after* the solver returned
+//! [`SolveStatus::Infeasible`]: it partitions the rows into families named
+//! by the builder's variable groups (plus bound-relaxation families for
+//! capped variables and forced binaries) and runs a deletion filter —
+//! drop a family, re-solve with a short limit, keep the family out only
+//! when infeasibility is still *proven* without it. What survives is a
+//! minimal conflicting set expressed in the formulation's own vocabulary
+//! ("upper bounds on `obj` × rows over `C`+`P`+`S`+`obj`") instead of raw
+//! row indices.
+
+use super::bnb::{solve, SolveOptions};
+use super::builder::{IlpMeta, PairVars};
+use super::cuts::Cut;
+use super::model::{Cmp, Model, SolveStatus, VarId, VarKind};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::fmt;
+use std::time::Duration;
+
+/// Per-row coefficient dynamic range above which the lint pass warns.
+///
+/// `simplex.rs` accepts pivots down to [`EPS`](crate::ilp::simplex::EPS)
+/// `= 1e-7` (scaled by row magnitudes); once the largest and smallest
+/// coefficients of one row differ by more than nine orders of magnitude,
+/// the small coefficients are within two decades of the pivot tolerance
+/// of the large ones and feasibility checks on that row degrade to noise.
+pub const DYNAMIC_RANGE_LIMIT: f64 = 1e9;
+
+/// Bounds at or beyond this magnitude are treated as infinite, matching
+/// the solver's [`INF`](crate::ilp::simplex::INF) convention (`1e30`).
+const BOUND_INF: f64 = 1e29;
+
+/// Feasibility tolerance for activity-vs-rhs comparisons, scaled by the
+/// row magnitude exactly like [`Model::check_feasible`].
+fn row_tol(rhs: f64) -> f64 {
+    1e-6 * (1.0 + rhs.abs())
+}
+
+/// Is the auditor active? `true` under `debug_assertions`; the
+/// `OLLA_AUDIT` environment variable overrides in both directions
+/// (`OLLA_AUDIT=1` forces it on in release builds, any other value
+/// forces it off).
+pub fn enabled() -> bool {
+    match std::env::var("OLLA_AUDIT") {
+        Ok(v) => v == "1",
+        Err(_) => cfg!(debug_assertions),
+    }
+}
+
+/// Was the auditor explicitly requested (`OLLA_AUDIT=1`)? Explicit runs
+/// print warnings to stderr; implicit debug-build runs only enforce
+/// errors, so test output stays quiet.
+pub fn verbose() -> bool {
+    std::env::var("OLLA_AUDIT").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Process-wide sink for build-site audit reports. While a window is
+/// open (see [`begin_collection`]) every
+/// [`IlpBuilder::debug_audit`](crate::ilp::IlpBuilder::debug_audit)
+/// deposits a copy of its report here — from whichever thread happens to
+/// build the model, so grids driven through the parallel planner are
+/// captured too. The `olla audit` CLI uses this to gather the reports of
+/// a whole model grid without threading a sink through every build site.
+static COLLECTOR: std::sync::Mutex<Option<Vec<AuditReport>>> = std::sync::Mutex::new(None);
+
+/// Open a collection window, clearing any previous batch. While the
+/// window is open, build-site audits run and deposit their reports even
+/// in release builds with the auditor otherwise disabled.
+pub fn begin_collection() {
+    *COLLECTOR.lock().unwrap() = Some(Vec::new());
+}
+
+/// Close the window and return every report deposited since
+/// [`begin_collection`] (empty if no window was open).
+pub fn end_collection() -> Vec<AuditReport> {
+    COLLECTOR.lock().unwrap().take().unwrap_or_default()
+}
+
+/// Is a collection window open?
+pub fn collecting() -> bool {
+    COLLECTOR.lock().unwrap().is_some()
+}
+
+/// Deposit a report into the open window (no-op when none is open).
+pub fn collect(report: AuditReport) {
+    if let Some(batch) = COLLECTOR.lock().unwrap().as_mut() {
+        batch.push(report);
+    }
+}
+
+/// How bad a [`Lint`] is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Suspicious but harmless: dangling column, duplicate row, wide
+    /// coefficient dynamic range.
+    Warning,
+    /// Well-formed but provably without solutions: the solver will
+    /// return [`SolveStatus::Infeasible`] and the caller's fallback
+    /// engages. Reported so the infeasibility is explained *before* the
+    /// solve instead of after it.
+    Infeasible,
+    /// The encoding is malformed — a builder gadget lost its shape. The
+    /// model may still solve, to a plan that does not mean what the
+    /// formulation intended.
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Severity::Warning => write!(f, "warning"),
+            Severity::Infeasible => write!(f, "infeasible"),
+            Severity::Error => write!(f, "error"),
+        }
+    }
+}
+
+/// The lint catalog (see `docs/FORMULATION.md` §"Model audits").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LintKind {
+    /// A variable that appears in no row and carries no objective.
+    DanglingColumn,
+    /// A row whose terms all cancelled away.
+    EmptyRow,
+    /// Two rows with identical terms, sense, and rhs.
+    DuplicateRow,
+    /// `lb > ub` on a column.
+    ContradictoryBounds,
+    /// A non-finite bound, objective, coefficient, or rhs.
+    NonFinite,
+    /// A row no point inside the variable bounds can satisfy.
+    InfeasibleRow,
+    /// Per-row coefficient ratio beyond [`DYNAMIC_RANGE_LIMIT`].
+    DynamicRange,
+    /// An eq. 6/7 pair-ordering gadget with a broken shape.
+    PairGadget,
+    /// An indicator/spill/cap-row gadget with a broken shape.
+    Indicator,
+    /// A capacity hint whose must-fit load already exceeds the cap.
+    CapacityOversubscribed,
+    /// A malformed cutting plane (see [`audit_cut`]).
+    CutShape,
+}
+
+impl fmt::Display for LintKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            LintKind::DanglingColumn => "dangling-column",
+            LintKind::EmptyRow => "empty-row",
+            LintKind::DuplicateRow => "duplicate-row",
+            LintKind::ContradictoryBounds => "contradictory-bounds",
+            LintKind::NonFinite => "non-finite",
+            LintKind::InfeasibleRow => "infeasible-row",
+            LintKind::DynamicRange => "dynamic-range",
+            LintKind::PairGadget => "pair-gadget",
+            LintKind::Indicator => "indicator",
+            LintKind::CapacityOversubscribed => "capacity-oversubscribed",
+            LintKind::CutShape => "cut-shape",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// One finding of the lint pass.
+#[derive(Debug, Clone)]
+pub struct Lint {
+    /// Which catalog entry fired.
+    pub kind: LintKind,
+    /// How bad it is.
+    pub severity: Severity,
+    /// Human-readable description naming the variables/rows involved.
+    pub message: String,
+}
+
+impl fmt::Display for Lint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} [{}]: {}", self.severity, self.kind, self.message)
+    }
+}
+
+/// Everything [`audit_model`] found, plus enough context to render it.
+#[derive(Debug, Clone)]
+pub struct AuditReport {
+    /// Which build site produced the model (e.g. `"scheduling cap=…"`)
+    pub context: String,
+    /// Columns in the audited model.
+    pub num_vars: usize,
+    /// Rows in the audited model.
+    pub num_cons: usize,
+    /// Findings, in scan order.
+    pub lints: Vec<Lint>,
+}
+
+impl AuditReport {
+    fn new(context: &str, model: &Model) -> AuditReport {
+        AuditReport {
+            context: context.to_string(),
+            num_vars: model.num_vars(),
+            num_cons: model.num_cons(),
+            lints: Vec::new(),
+        }
+    }
+
+    fn push(&mut self, kind: LintKind, severity: Severity, message: String) {
+        self.lints.push(Lint { kind, severity, message });
+    }
+
+    /// No findings of any severity.
+    pub fn is_clean(&self) -> bool {
+        self.lints.is_empty()
+    }
+
+    /// Number of findings at a given severity.
+    pub fn count(&self, severity: Severity) -> usize {
+        self.lints.iter().filter(|l| l.severity == severity).count()
+    }
+
+    /// Number of [`Severity::Error`] findings (malformed encodings).
+    pub fn error_count(&self) -> usize {
+        self.count(Severity::Error)
+    }
+
+    /// Number of [`Severity::Infeasible`] findings (certified infeasible
+    /// before solving).
+    pub fn infeasible_count(&self) -> usize {
+        self.count(Severity::Infeasible)
+    }
+
+    /// Number of [`Severity::Warning`] findings.
+    pub fn warning_count(&self) -> usize {
+        self.count(Severity::Warning)
+    }
+
+    /// One-line `N errors, M infeasibilities, K warnings` summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} vars, {} rows: {} errors, {} infeasibilities, {} warnings",
+            self.num_vars,
+            self.num_cons,
+            self.error_count(),
+            self.infeasible_count(),
+            self.warning_count()
+        )
+    }
+
+    /// Findings whose kind matches, for targeted assertions in tests.
+    pub fn of_kind(&self, kind: LintKind) -> Vec<&Lint> {
+        self.lints.iter().filter(|l| l.kind == kind).collect()
+    }
+}
+
+impl fmt::Display for AuditReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "audit[{}]: {}", self.context, self.summary())?;
+        for l in &self.lints {
+            writeln!(f, "  {l}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Map a stored bound to the extended-real line.
+fn ext(b: f64) -> f64 {
+    if b >= BOUND_INF {
+        f64::INFINITY
+    } else if b <= -BOUND_INF {
+        f64::NEG_INFINITY
+    } else {
+        b
+    }
+}
+
+/// `[min, max]` activity of a linear expression over the variable box.
+fn activity_range(terms: &[(VarId, f64)], model: &Model) -> (f64, f64) {
+    let mut lo = 0.0f64;
+    let mut hi = 0.0f64;
+    for &(v, c) in terms {
+        let var = &model.vars[v.0];
+        let (l, u) = (ext(var.lb), ext(var.ub));
+        let (a, b) = if c >= 0.0 { (c * l, c * u) } else { (c * u, c * l) };
+        // 0 * inf = NaN; a zero coefficient contributes nothing either way.
+        lo += if a.is_nan() { 0.0 } else { a };
+        hi += if b.is_nan() { 0.0 } else { b };
+    }
+    (lo, hi)
+}
+
+/// FNV-1a row digest in the same quantized-coefficient scheme as
+/// [`Cut::row_hash`], extended with the constraint sense so `<=` and `>=`
+/// rows over the same terms never collide. Equal rows hash equal; the
+/// duplicate-row lint confirms candidates term-by-term afterwards.
+fn con_hash(model: &Model, row: usize) -> u64 {
+    let c = &model.cons[row];
+    let mut maxabs = c.rhs.abs();
+    for &(_, a) in &c.terms {
+        maxabs = maxabs.max(a.abs());
+    }
+    let maxabs = maxabs.max(1e-12);
+    let q = |v: f64| -> i64 { (v / maxabs * 1e6).round() as i64 };
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |x: u64| {
+        h ^= x;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    };
+    eat(match c.cmp {
+        Cmp::Le => 0,
+        Cmp::Ge => 1,
+        Cmp::Eq => 2,
+    });
+    eat(c.terms.len() as u64);
+    for &(v, a) in &c.terms {
+        eat(v.0 as u64);
+        eat(q(a) as u64);
+    }
+    eat(q(c.rhs) as u64);
+    h
+}
+
+/// Exact structural equality of two rows (terms are kept sorted and
+/// merged by [`Model::constraint`], so positional comparison is sound).
+fn same_row(a: &super::model::Constraint, b: &super::model::Constraint) -> bool {
+    a.cmp == b.cmp
+        && (a.rhs - b.rhs).abs() <= 1e-9 * (1.0 + a.rhs.abs())
+        && a.terms.len() == b.terms.len()
+        && a.terms.iter().zip(&b.terms).all(|(&(v1, c1), &(v2, c2))| {
+            v1 == v2 && (c1 - c2).abs() <= 1e-9 * (1.0 + c1.abs())
+        })
+}
+
+/// Short display name for a variable.
+fn vname(model: &Model, v: VarId) -> String {
+    model.vars.get(v.0).map(|x| x.name.clone()).unwrap_or_else(|| format!("#{}", v.0))
+}
+
+/// Run every structural and semantic lint over `model` + `meta`.
+/// Purely static — no LP or MILP is ever solved here.
+pub fn audit_model(context: &str, model: &Model, meta: &IlpMeta) -> AuditReport {
+    let mut rep = AuditReport::new(context, model);
+    let rows_of = rows_by_var(model);
+    lint_columns(model, &rows_of, &mut rep);
+    lint_rows(model, &mut rep);
+    lint_pairs(model, meta, &rows_of, &mut rep);
+    lint_indicators(model, meta, &mut rep);
+    lint_capacity_hints(model, meta, &mut rep);
+    rep
+}
+
+/// Row indices touching each variable.
+fn rows_by_var(model: &Model) -> Vec<Vec<usize>> {
+    let mut rows_of: Vec<Vec<usize>> = vec![Vec::new(); model.num_vars()];
+    for (r, c) in model.cons.iter().enumerate() {
+        for &(v, _) in &c.terms {
+            if v.0 < rows_of.len() {
+                rows_of[v.0].push(r);
+            }
+        }
+    }
+    rows_of
+}
+
+/// Column lints: contradictory/non-finite bounds and dangling columns.
+fn lint_columns(model: &Model, rows_of: &[Vec<usize>], rep: &mut AuditReport) {
+    for (i, var) in model.vars.iter().enumerate() {
+        if var.lb.is_nan() || var.ub.is_nan() || !var.obj.is_finite() {
+            rep.push(
+                LintKind::NonFinite,
+                Severity::Error,
+                format!("column `{}`: non-finite bound or objective", var.name),
+            );
+            continue;
+        }
+        if var.lb > var.ub + 1e-9 {
+            rep.push(
+                LintKind::ContradictoryBounds,
+                Severity::Error,
+                format!(
+                    "column `{}`: lb {} > ub {} (no value satisfies the box)",
+                    var.name, var.lb, var.ub
+                ),
+            );
+        }
+        if rows_of[i].is_empty() && var.obj == 0.0 {
+            rep.push(
+                LintKind::DanglingColumn,
+                Severity::Warning,
+                format!(
+                    "column `{}`: appears in no row and has zero objective",
+                    var.name
+                ),
+            );
+        }
+    }
+}
+
+/// Row lints: empty rows, trivially infeasible rows, coefficient dynamic
+/// range, and exact duplicates (bucketed by [`con_hash`]).
+fn lint_rows(model: &Model, rep: &mut AuditReport) {
+    let mut buckets: HashMap<u64, Vec<usize>> = HashMap::new();
+    for (r, c) in model.cons.iter().enumerate() {
+        if !c.rhs.is_finite() || c.terms.iter().any(|&(_, a)| !a.is_finite()) {
+            rep.push(
+                LintKind::NonFinite,
+                Severity::Error,
+                format!("row {r}: non-finite coefficient or rhs"),
+            );
+            continue;
+        }
+        if c.terms.iter().any(|&(v, _)| v.0 >= model.num_vars()) {
+            rep.push(
+                LintKind::NonFinite,
+                Severity::Error,
+                format!("row {r}: references a column past the end of the model"),
+            );
+            continue;
+        }
+        if c.terms.is_empty() {
+            let violated = match c.cmp {
+                Cmp::Le => 0.0 > c.rhs + row_tol(c.rhs),
+                Cmp::Ge => 0.0 < c.rhs - row_tol(c.rhs),
+                Cmp::Eq => c.rhs.abs() > row_tol(c.rhs),
+            };
+            let (sev, what) = if violated {
+                (Severity::Infeasible, "and is unsatisfiable")
+            } else {
+                (Severity::Warning, "(vacuous)")
+            };
+            rep.push(
+                LintKind::EmptyRow,
+                sev,
+                format!("row {r}: every term cancelled {what}; rhs {}", c.rhs),
+            );
+            continue;
+        }
+
+        let (lo, hi) = activity_range(&c.terms, model);
+        let tol = row_tol(c.rhs);
+        let impossible = match c.cmp {
+            Cmp::Le => lo > c.rhs + tol,
+            Cmp::Ge => hi < c.rhs - tol,
+            Cmp::Eq => lo > c.rhs + tol || hi < c.rhs - tol,
+        };
+        if impossible {
+            rep.push(
+                LintKind::InfeasibleRow,
+                Severity::Infeasible,
+                format!(
+                    "row {r}: activity range [{lo:.6e}, {hi:.6e}] cannot meet rhs {} \
+                     (first term `{}`)",
+                    c.rhs,
+                    vname(model, c.terms[0].0)
+                ),
+            );
+        }
+
+        let mut maxc = 0.0f64;
+        let mut minc = f64::INFINITY;
+        for &(_, a) in &c.terms {
+            maxc = maxc.max(a.abs());
+            minc = minc.min(a.abs());
+        }
+        if minc > 0.0 && maxc / minc > DYNAMIC_RANGE_LIMIT {
+            rep.push(
+                LintKind::DynamicRange,
+                Severity::Warning,
+                format!(
+                    "row {r}: coefficient range {maxc:.3e}/{minc:.3e} exceeds 1e9 \
+                     (pivot tolerance erosion; first term `{}`)",
+                    vname(model, c.terms[0].0)
+                ),
+            );
+        }
+
+        buckets.entry(con_hash(model, r)).or_default().push(r);
+    }
+
+    for rows in buckets.values() {
+        if rows.len() < 2 {
+            continue;
+        }
+        for (k, &r) in rows.iter().enumerate() {
+            for &r2 in &rows[k + 1..] {
+                if same_row(&model.cons[r], &model.cons[r2]) {
+                    rep.push(
+                        LintKind::DuplicateRow,
+                        Severity::Warning,
+                        format!(
+                            "rows {r} and {r2} are identical (first term `{}`)",
+                            vname(model, model.cons[r].terms[0].0)
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Pair-gadget lints over the builder's pair registry: the ordering row
+/// must exist, both binaries must still drive a separation row, region
+/// couplings must keep their eq.-(6/7) shape, and the two orderings must
+/// not both be forced.
+fn lint_pairs(model: &Model, meta: &IlpMeta, rows_of: &[Vec<usize>], rep: &mut AuditReport) {
+    for (&key, &PairVars { below, above }) in &meta.pairs {
+        if below.0 >= model.num_vars() || above.0 >= model.num_vars() {
+            rep.push(
+                LintKind::PairGadget,
+                Severity::Error,
+                format!("pair {key:?}: ordering binaries out of range"),
+            );
+            continue;
+        }
+        // Ordering row: below + above <= 1 (or == 1 under must_order).
+        let ordering = rows_of[below.0].iter().copied().find(|&r| {
+            let c = &model.cons[r];
+            c.terms.len() == 2
+                && c.terms.iter().any(|&(v, a)| v == below && (a - 1.0).abs() < 1e-9)
+                && c.terms.iter().any(|&(v, a)| v == above && (a - 1.0).abs() < 1e-9)
+                && (c.rhs - 1.0).abs() < 1e-9
+                && matches!(c.cmp, Cmp::Le | Cmp::Eq)
+        });
+        let Some(ordering) = ordering else {
+            rep.push(
+                LintKind::PairGadget,
+                Severity::Error,
+                format!(
+                    "pair {key:?}: ordering row `{} + {} <= 1` is missing",
+                    vname(model, below),
+                    vname(model, above)
+                ),
+            );
+            continue;
+        };
+
+        // Each ordering binary must still gate a big-M separation row.
+        for (which, v) in [("below", below), ("above", above)] {
+            let has_sep = rows_of[v.0].iter().any(|&r| {
+                r != ordering
+                    && model.cons[r].cmp == Cmp::Le
+                    && model.cons[r].terms.iter().any(|&(t, a)| t == v && a > 0.0)
+            });
+            if !has_sep {
+                rep.push(
+                    LintKind::PairGadget,
+                    Severity::Error,
+                    format!(
+                        "pair {key:?}: separation row gated by `{}` ({which}) is missing",
+                        vname(model, v)
+                    ),
+                );
+            }
+            // The only `>=` rows these binaries appear in are coupling
+            // rows — region guards (`below + above >= r_i + r_j - 1`) or
+            // the joint model's per-timestep liveness rows (`below +
+            // above >= live_i + live_j - 1`, with merged coefficients
+            // when the tensors share a source). All keep the shape:
+            // both binaries at +1, every other term negative, rhs -1.
+            for &r in &rows_of[v.0] {
+                let c = &model.cons[r];
+                if c.cmp != Cmp::Ge {
+                    continue;
+                }
+                let ok = (c.rhs + 1.0).abs() < 1e-9
+                    && c.terms.iter().any(|&(t, a)| t == below && (a - 1.0).abs() < 1e-9)
+                    && c.terms.iter().any(|&(t, a)| t == above && (a - 1.0).abs() < 1e-9)
+                    && c.terms
+                        .iter()
+                        .filter(|&&(t, _)| t != below && t != above)
+                        .all(|&(_, a)| a < 0.0)
+                    && c.terms.len() > 2;
+                if !ok {
+                    rep.push(
+                        LintKind::PairGadget,
+                        Severity::Error,
+                        format!(
+                            "pair {key:?}: row {r} involving `{}` is not a \
+                             coupling row (`below + above >= indicators - 1`)",
+                            vname(model, v)
+                        ),
+                    );
+                }
+            }
+        }
+
+        let (bl, ab) = (&model.vars[below.0], &model.vars[above.0]);
+        if bl.lb > 0.5 && ab.lb > 0.5 {
+            rep.push(
+                LintKind::PairGadget,
+                Severity::Infeasible,
+                format!(
+                    "pair {key:?}: both orderings are forced on \
+                     (`{}` and `{}` have lb 1) against the ordering row",
+                    bl.name, ab.name
+                ),
+            );
+        }
+        if model.cons[ordering].cmp == Cmp::Eq && bl.ub < 0.5 && ab.ub < 0.5 {
+            rep.push(
+                LintKind::PairGadget,
+                Severity::Infeasible,
+                format!("pair {key:?}: must-order gadget with both orderings forced off"),
+            );
+        }
+    }
+}
+
+/// Indicator-gadget lints over the builder's indicator/spill/cap-row
+/// registries: the recorded row must keep its sense, its guard (or cap)
+/// coefficient, and — for big-M indicators — its vacuity when the guard
+/// is off.
+fn lint_indicators(model: &Model, meta: &IlpMeta, rep: &mut AuditReport) {
+    for ind in &meta.indicators {
+        let Some(c) = model.cons.get(ind.row) else {
+            rep.push(
+                LintKind::Indicator,
+                Severity::Error,
+                format!("indicator row {} was dropped from the model", ind.row),
+            );
+            continue;
+        };
+        let gname = vname(model, ind.guard);
+        if c.cmp != Cmp::Le {
+            rep.push(
+                LintKind::Indicator,
+                Severity::Error,
+                format!("indicator row {} (guard `{gname}`): sense is not `<=`", ind.row),
+            );
+            continue;
+        }
+        let Some(&(_, gc)) = c.terms.iter().find(|&&(v, _)| v == ind.guard) else {
+            rep.push(
+                LintKind::Indicator,
+                Severity::Error,
+                format!("indicator row {}: guard `{gname}` vanished from the row", ind.row),
+            );
+            continue;
+        };
+        if (gc - ind.big_m).abs() > 1e-6 * (1.0 + ind.big_m.abs()) || ind.big_m <= 0.0 {
+            rep.push(
+                LintKind::Indicator,
+                Severity::Error,
+                format!(
+                    "indicator row {}: guard `{gname}` coefficient {gc} does not \
+                     match the recorded big-M {}",
+                    ind.row, ind.big_m
+                ),
+            );
+            continue;
+        }
+        // With the guard off the row must be vacuous over the box —
+        // unless the guard is fixed on, in which case off never happens.
+        if model.vars[ind.guard.0].lb > 0.5 {
+            continue;
+        }
+        let rest: Vec<(VarId, f64)> =
+            c.terms.iter().copied().filter(|&(v, _)| v != ind.guard).collect();
+        let (_, hi) = activity_range(&rest, model);
+        if hi.is_finite() {
+            if hi > c.rhs + row_tol(c.rhs) {
+                rep.push(
+                    LintKind::Indicator,
+                    Severity::Error,
+                    format!(
+                        "indicator row {} (guard `{gname}`): big-M too small — the row \
+                         still binds when the guard is off (max activity {hi:.6e} > rhs {:.6e})",
+                        ind.row, c.rhs
+                    ),
+                );
+            }
+        } else {
+            rep.push(
+                LintKind::Indicator,
+                Severity::Warning,
+                format!(
+                    "indicator row {} (guard `{gname}`): vacuity unverifiable \
+                     (unbounded term in the row)",
+                    ind.row
+                ),
+            );
+        }
+    }
+
+    for sp in &meta.spills {
+        let Some(c) = model.cons.get(sp.row) else {
+            rep.push(
+                LintKind::Indicator,
+                Severity::Error,
+                format!("spill-implication row {} was dropped from the model", sp.row),
+            );
+            continue;
+        };
+        let ok = c.cmp == Cmp::Le
+            && c.rhs.abs() < 1e-9
+            && c.terms.len() == 2
+            && c.terms.iter().any(|&(v, a)| v == sp.spill && (a - 1.0).abs() < 1e-9)
+            && c.terms.iter().any(|&(v, a)| v == sp.preserved && (a + 1.0).abs() < 1e-9);
+        if !ok {
+            rep.push(
+                LintKind::Indicator,
+                Severity::Error,
+                format!(
+                    "spill-implication row {} lost its `{} <= {}` shape",
+                    sp.row,
+                    vname(model, sp.spill),
+                    vname(model, sp.preserved)
+                ),
+            );
+        }
+    }
+
+    for cr in &meta.cap_rows {
+        let Some(c) = model.cons.get(cr.row) else {
+            rep.push(
+                LintKind::Indicator,
+                Severity::Error,
+                format!("capacity row {} was dropped from the model", cr.row),
+            );
+            continue;
+        };
+        let ok = c.cmp == Cmp::Le
+            && c.rhs.abs() < 1e-9
+            && c.terms.iter().any(|&(v, a)| v == cr.cap && (a + 1.0).abs() < 1e-9);
+        if !ok {
+            rep.push(
+                LintKind::Indicator,
+                Severity::Error,
+                format!(
+                    "capacity row {} lost its `sum - {} <= 0` shape",
+                    cr.row,
+                    vname(model, cr.cap)
+                ),
+            );
+        }
+    }
+}
+
+/// Capacity-hint lint: sum the *forced* load of every registered
+/// capacity row — items whose 0/1 indicator expression has a strictly
+/// positive minimum over the box — and certify infeasibility when it
+/// already exceeds the cap.
+fn lint_capacity_hints(model: &Model, meta: &IlpMeta, rep: &mut AuditReport) {
+    for (k, hint) in meta.cut_hints.capacity_rows.iter().enumerate() {
+        let mut forced = 0.0f64;
+        let mut culprits: Vec<String> = Vec::new();
+        for (w, expr) in &hint.items {
+            let (lo, _) = activity_range(expr, model);
+            if lo > 0.0 && lo.is_finite() {
+                forced += w * lo.min(1.0);
+                if culprits.len() < 6 {
+                    if let Some(&(v, _)) = expr.first() {
+                        culprits.push(vname(model, v));
+                    }
+                }
+            }
+        }
+        if forced > hint.cap * (1.0 + 1e-9) + 1e-6 {
+            rep.push(
+                LintKind::CapacityOversubscribed,
+                Severity::Infeasible,
+                format!(
+                    "capacity hint {k}: must-fit load {forced:.6e} exceeds cap {:.6e} \
+                     (forced items: {})",
+                    hint.cap,
+                    culprits.join(", ")
+                ),
+            );
+        }
+    }
+}
+
+/// Lint one cutting plane `terms <= rhs` against the variable box
+/// (`lb`/`ub` are the solver's column bounds for the model the cut was
+/// separated from). A valid cut may tighten the LP relaxation but must
+/// keep every integer point of the current (non-empty) subtree; a cut
+/// whose *minimum* activity over the box exceeds its rhs cuts off the
+/// whole box and is structurally wrong.
+pub fn audit_cut(cut: &Cut, lb: &[f64], ub: &[f64]) -> Vec<Lint> {
+    let mut lints = Vec::new();
+    if cut.terms.is_empty() {
+        lints.push(Lint {
+            kind: LintKind::CutShape,
+            severity: Severity::Error,
+            message: "cut with no terms".to_string(),
+        });
+        return lints;
+    }
+    if !cut.rhs.is_finite() || cut.terms.iter().any(|&(_, a)| !a.is_finite()) {
+        lints.push(Lint {
+            kind: LintKind::CutShape,
+            severity: Severity::Error,
+            message: "cut with a non-finite coefficient or rhs".to_string(),
+        });
+        return lints;
+    }
+    if cut.terms.iter().any(|&(v, _)| v.0 >= lb.len()) {
+        lints.push(Lint {
+            kind: LintKind::CutShape,
+            severity: Severity::Error,
+            message: "cut references a column past the end of the model".to_string(),
+        });
+        return lints;
+    }
+    let mut lo = 0.0f64;
+    let mut maxc = 0.0f64;
+    let mut minc = f64::INFINITY;
+    for &(v, c) in &cut.terms {
+        let (l, u) = (ext(lb[v.0]), ext(ub[v.0]));
+        let a = if c >= 0.0 { c * l } else { c * u };
+        lo += if a.is_nan() { 0.0 } else { a };
+        maxc = maxc.max(c.abs());
+        minc = minc.min(c.abs());
+    }
+    if lo > cut.rhs + row_tol(cut.rhs) {
+        // A warning, not an error: on an integer-empty subtree a *valid*
+        // Gomory cut may legitimately exclude the whole box — that is
+        // the cut proving infeasibility, which the node LP then reports.
+        lints.push(Lint {
+            kind: LintKind::CutShape,
+            severity: Severity::Warning,
+            message: format!(
+                "cut excludes the entire box (min activity {lo:.6e} > rhs {:.6e})",
+                cut.rhs
+            ),
+        });
+    }
+    if minc > 0.0 && maxc / minc > DYNAMIC_RANGE_LIMIT {
+        lints.push(Lint {
+            kind: LintKind::CutShape,
+            severity: Severity::Warning,
+            message: format!("cut coefficient range {maxc:.3e}/{minc:.3e} exceeds 1e9"),
+        });
+    }
+    lints
+}
+
+/// Enforce a batch of cut lints at a separation site: errors panic in
+/// debug builds (a malformed cut is a separator bug) and go to stderr in
+/// release; warnings print only under `OLLA_AUDIT=1`.
+pub fn enforce_cut_lints(context: &str, lints: &[Lint]) {
+    for l in lints {
+        match l.severity {
+            Severity::Error | Severity::Infeasible => {
+                if cfg!(debug_assertions) {
+                    panic!("cut audit failed at {context}: {l}");
+                }
+                eprintln!("cut audit failed at {context}: {l}");
+            }
+            Severity::Warning => {
+                if verbose() {
+                    eprintln!("cut audit at {context}: {l}");
+                }
+            }
+        }
+    }
+}
+
+/// Enforce a model audit at a build site: [`Severity::Error`] findings
+/// panic in debug builds and go to stderr in release; everything else
+/// prints only under `OLLA_AUDIT=1`. Certified-infeasible findings never
+/// fail the build — callers construct over-capped models deliberately
+/// and rely on their solver fallbacks.
+pub fn enforce_report(rep: &AuditReport) {
+    if rep.is_clean() {
+        return;
+    }
+    if verbose() {
+        eprint!("{rep}");
+    }
+    if rep.error_count() > 0 {
+        let first = rep
+            .lints
+            .iter()
+            .find(|l| l.severity == Severity::Error)
+            .map(|l| l.message.clone())
+            .unwrap_or_default();
+        if cfg!(debug_assertions) {
+            panic!(
+                "model audit failed in {} ({} errors; first: {first})",
+                rep.context,
+                rep.error_count()
+            );
+        }
+        eprintln!(
+            "model audit failed in {} ({} errors; first: {first})",
+            rep.context,
+            rep.error_count()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deletion-filter IIS over named groups
+// ---------------------------------------------------------------------------
+
+/// How one family relaxes a column when the family is deleted.
+#[derive(Debug, Clone, Copy)]
+enum BoundRelax {
+    /// Drop a finite upper bound to `INF` (capacity-style bounds).
+    UbToInf,
+    /// Un-force a binary fixed on (`lb` back to 0).
+    LbToZero,
+    /// Un-force a binary fixed off (`ub` back to 1).
+    UbToOne,
+}
+
+/// One deletable unit of the infeasible system: either a set of rows
+/// sharing a group signature, or a set of bound tightenings on a group.
+#[derive(Debug, Clone)]
+struct Family {
+    name: String,
+    rows: Vec<usize>,
+    relax: Vec<(usize, BoundRelax)>,
+}
+
+/// A minimal conflicting set of named families, as produced by
+/// [`explain_infeasible`].
+#[derive(Debug, Clone)]
+pub struct InfeasibilityExplanation {
+    /// Names of the surviving (conflicting) families.
+    pub families: Vec<String>,
+    /// `false` when a re-solve hit its time limit and the filter had to
+    /// keep a family conservatively, so the set may not be minimal.
+    pub minimal: bool,
+    /// Number of MILP re-solves the filter spent.
+    pub solves: usize,
+}
+
+impl InfeasibilityExplanation {
+    /// Render as `family × family × …` — the formulation-level
+    /// explanation printed next to an `Infeasible` verdict.
+    pub fn render(&self) -> String {
+        let mut s = self.families.join(" × ");
+        if !self.minimal {
+            s.push_str(" (time-limited; may not be minimal)");
+        }
+        s
+    }
+}
+
+/// Group name of each variable: the first group claiming it, else
+/// `"(ungrouped)"`.
+fn var_groups(num_vars: usize, groups: &HashMap<String, Vec<VarId>>) -> Vec<String> {
+    let mut names: Vec<String> = vec![String::new(); num_vars];
+    // Deterministic claim order regardless of hash-map iteration.
+    let ordered: BTreeMap<&String, &Vec<VarId>> = groups.iter().collect();
+    for (name, vars) in ordered {
+        for &v in vars.iter() {
+            if v.0 < num_vars && names[v.0].is_empty() {
+                names[v.0] = name.clone();
+            }
+        }
+    }
+    for n in names.iter_mut() {
+        if n.is_empty() {
+            *n = "(ungrouped)".to_string();
+        }
+    }
+    names
+}
+
+/// Partition the model into named families for the deletion filter:
+/// one row family per distinct group signature, plus bound families for
+/// capped continuous/integer columns and forced binaries of each group.
+fn build_families(model: &Model, groups: &HashMap<String, Vec<VarId>>) -> Vec<Family> {
+    let vg = var_groups(model.num_vars(), groups);
+    let mut row_fams: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    for (r, c) in model.cons.iter().enumerate() {
+        let sig: BTreeSet<&str> = c.terms.iter().map(|&(v, _)| vg[v.0].as_str()).collect();
+        let name = format!(
+            "rows over {}",
+            sig.iter().map(|s| format!("`{s}`")).collect::<Vec<_>>().join("+")
+        );
+        row_fams.entry(name).or_default().push(r);
+    }
+
+    let mut ub_fams: BTreeMap<String, Vec<(usize, BoundRelax)>> = BTreeMap::new();
+    let mut fix_fams: BTreeMap<String, Vec<(usize, BoundRelax)>> = BTreeMap::new();
+    for (i, var) in model.vars.iter().enumerate() {
+        match var.kind {
+            VarKind::Binary => {
+                if var.lb > 0.5 {
+                    fix_fams
+                        .entry(format!("forced-on binaries in `{}`", vg[i]))
+                        .or_default()
+                        .push((i, BoundRelax::LbToZero));
+                } else if var.ub < 0.5 {
+                    fix_fams
+                        .entry(format!("forced-off binaries in `{}`", vg[i]))
+                        .or_default()
+                        .push((i, BoundRelax::UbToOne));
+                }
+            }
+            VarKind::Continuous | VarKind::Integer => {
+                if var.ub < BOUND_INF {
+                    ub_fams
+                        .entry(format!("upper bounds on `{}`", vg[i]))
+                        .or_default()
+                        .push((i, BoundRelax::UbToInf));
+                }
+            }
+        }
+    }
+
+    let mut fams: Vec<Family> = Vec::new();
+    for (name, rows) in row_fams {
+        fams.push(Family { name, rows, relax: Vec::new() });
+    }
+    for (name, relax) in ub_fams.into_iter().chain(fix_fams) {
+        fams.push(Family { name, rows: Vec::new(), relax });
+    }
+    fams
+}
+
+/// The candidate model with every *inactive* family deleted: its rows
+/// dropped and its bound tightenings relaxed.
+fn reduced_model(model: &Model, fams: &[Family], active: &[bool]) -> Model {
+    let mut m = model.clone();
+    let mut drop_row = vec![false; m.num_cons()];
+    for (f, fam) in fams.iter().enumerate() {
+        if active[f] {
+            continue;
+        }
+        for &r in &fam.rows {
+            drop_row[r] = true;
+        }
+        for &(v, relax) in &fam.relax {
+            match relax {
+                BoundRelax::UbToInf => m.vars[v].ub = super::simplex::INF,
+                BoundRelax::LbToZero => m.vars[v].lb = 0.0,
+                BoundRelax::UbToOne => m.vars[v].ub = 1.0,
+            }
+        }
+    }
+    let cons = std::mem::take(&mut m.cons);
+    let mut keep = Vec::with_capacity(cons.len());
+    for (r, c) in cons.into_iter().enumerate() {
+        if !drop_row[r] {
+            keep.push(c);
+        }
+    }
+    m.cons = keep;
+    m
+}
+
+/// Short, serial feasibility probe for the deletion filter.
+fn probe(model: &Model, per_solve: Duration) -> SolveStatus {
+    let opts = SolveOptions {
+        time_limit: per_solve,
+        threads: 1,
+        cuts: false,
+        ..SolveOptions::default()
+    };
+    solve(model, &opts).status
+}
+
+/// Deletion-filter IIS finder over the builder's named groups.
+///
+/// Call it after the solver returned [`SolveStatus::Infeasible`]. The
+/// rows are partitioned into families named by the variable groups they
+/// touch, plus bound-relaxation families (capacity-style upper bounds,
+/// forced binaries) per group. Each family is tentatively deleted and
+/// the remainder re-solved with `per_solve` as a limit: the family stays
+/// deleted only when infeasibility is still *proven* without it, so a
+/// time-out can make the answer conservative (larger), never wrong.
+/// Returns `None` when infeasibility of the full system cannot be
+/// (re-)proven within the limit at all.
+pub fn explain_infeasible(
+    model: &Model,
+    groups: &HashMap<String, Vec<VarId>>,
+    per_solve: Duration,
+) -> Option<InfeasibilityExplanation> {
+    let fams = build_families(model, groups);
+    let mut active = vec![true; fams.len()];
+    let mut solves = 0usize;
+
+    solves += 1;
+    if probe(model, per_solve) != SolveStatus::Infeasible {
+        return None;
+    }
+
+    let mut minimal = true;
+    // Try dropping big row families first so the system shrinks early.
+    let mut order: Vec<usize> = (0..fams.len()).collect();
+    order.sort_by_key(|&f| std::cmp::Reverse(fams[f].rows.len()));
+    for f in order {
+        active[f] = false;
+        let cand = reduced_model(model, &fams, &active);
+        solves += 1;
+        match probe(&cand, per_solve) {
+            SolveStatus::Infeasible => {} // still infeasible without it: drop for good
+            SolveStatus::TimeLimitNoSolution => {
+                active[f] = true; // unknown: keep conservatively
+                minimal = false;
+            }
+            _ => active[f] = true, // feasible/unbounded: the family is needed
+        }
+    }
+
+    let families: Vec<String> =
+        fams.iter().zip(&active).filter(|&(_, &a)| a).map(|(f, _)| f.name.clone()).collect();
+    Some(InfeasibilityExplanation { families, minimal, solves })
+}
+
+/// Convenience for the solve sites: when the auditor is enabled, explain
+/// an `Infeasible` verdict on stderr in terms of named groups.
+pub fn report_infeasible(
+    context: &str,
+    model: &Model,
+    groups: &HashMap<String, Vec<VarId>>,
+    per_solve: Duration,
+) {
+    if !enabled() {
+        return;
+    }
+    match explain_infeasible(model, groups, per_solve) {
+        Some(e) => eprintln!(
+            "audit[{context}]: infeasible; minimal conflicting groups: {}",
+            e.render()
+        ),
+        None => eprintln!(
+            "audit[{context}]: infeasible, but the deletion filter could not \
+             re-prove it within the per-solve limit"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ilp::{IlpBuilder, Pos};
+    use crate::models::{build_graph, ModelScale};
+    use crate::olla::scheduling::{build_capacity_model, build_scheduling_model};
+    use crate::olla::topology::MemoryTopology;
+
+    fn assert_no_defects(rep: &AuditReport) {
+        assert_eq!(rep.error_count(), 0, "{rep}");
+        assert_eq!(rep.infeasible_count(), 0, "{rep}");
+    }
+
+    /// The zoo model grid audits clean: the uncapped eq. 14 model and a
+    /// generously capped capacity model for training and KV graphs. The
+    /// reports travel through the collection window (exactly what `olla
+    /// audit` uses); since the window is process-global and tests run
+    /// concurrently, each of our builds is matched back by context plus
+    /// exact model dimensions.
+    #[test]
+    fn zoo_models_audit_clean() {
+        let names = ["alexnet", "transformer", "kv-tiny-c128-f16"];
+        begin_collection();
+        let mut mine: Vec<(String, usize, usize)> = Vec::new();
+        for name in names {
+            let g = build_graph(name, 1, ModelScale::Reduced).unwrap();
+            let sm = build_scheduling_model(&g, None);
+            mine.push((
+                "scheduling (eq. 14)".into(),
+                sm.model.num_vars(),
+                sm.model.num_cons(),
+            ));
+            let topo = MemoryTopology::device_host(g.total_bytes().max(1), 0.5);
+            let capped = build_capacity_model(&g, None, &topo, 0.05);
+            assert!(capped.device_cap.is_some());
+            mine.push((
+                "scheduling (capped eq. 14)".into(),
+                capped.model.num_vars(),
+                capped.model.num_cons(),
+            ));
+        }
+        let reports = end_collection();
+        for (ctx, nv, nc) in mine {
+            let rep = reports
+                .iter()
+                .find(|r| r.context == ctx && r.num_vars == nv && r.num_cons == nc)
+                .unwrap_or_else(|| panic!("no collected report for {ctx} ({nv}x{nc})"));
+            assert_no_defects(rep);
+        }
+    }
+
+    /// Seeded defect: deleting a pair gadget's ordering row is caught.
+    #[test]
+    fn dropped_pair_ordering_row_is_caught() {
+        let mut b = IlpBuilder::new();
+        let x = b.continuous("A", "A[0]", 0.0, 100.0, 0.0);
+        let y = b.continuous("A", "A[1]", 0.0, 100.0, 1.0);
+        b.pair_no_overlap((0, 1), Pos::Var(x), 10.0, Pos::Var(y), 10.0, 100.0, true);
+        let (mut model, meta) = b.into_parts();
+        assert_no_defects(&audit_model("intact", &model, &meta));
+        let idx = model
+            .cons
+            .iter()
+            .position(|c| c.terms.len() == 2 && (c.rhs - 1.0).abs() < 1e-9)
+            .expect("ordering row");
+        model.cons.remove(idx);
+        let rep = audit_model("seeded", &model, &meta);
+        assert!(
+            rep.of_kind(LintKind::PairGadget).iter().any(|l| l.severity == Severity::Error),
+            "{rep}"
+        );
+    }
+
+    /// Seeded defect: a flipped bound pair (`lb > ub`) is caught.
+    #[test]
+    fn flipped_bounds_are_caught() {
+        let mut b = IlpBuilder::new();
+        let x = b.continuous("A", "x", 0.0, 10.0, 1.0);
+        let (mut model, meta) = b.into_parts();
+        assert_no_defects(&audit_model("intact", &model, &meta));
+        let (lb, ub) = (model.vars[x.0].lb, model.vars[x.0].ub);
+        model.vars[x.0].lb = ub;
+        model.vars[x.0].ub = lb;
+        let rep = audit_model("seeded", &model, &meta);
+        assert!(
+            rep.of_kind(LintKind::ContradictoryBounds)
+                .iter()
+                .any(|l| l.severity == Severity::Error),
+            "{rep}"
+        );
+    }
+
+    /// Seeded defect: a duplicated row is caught (FNV bucket + exact
+    /// comparison).
+    #[test]
+    fn duplicated_row_is_caught() {
+        let mut b = IlpBuilder::new();
+        let x = b.continuous("A", "x", 0.0, 10.0, 1.0);
+        let y = b.continuous("A", "y", 0.0, 10.0, 1.0);
+        b.le(vec![(x, 1.0), (y, 1.0)], 5.0);
+        let (mut model, meta) = b.into_parts();
+        assert_no_defects(&audit_model("intact", &model, &meta));
+        let dup = model.cons[0].clone();
+        model.cons.push(dup);
+        let rep = audit_model("seeded", &model, &meta);
+        assert!(!rep.of_kind(LintKind::DuplicateRow).is_empty(), "{rep}");
+    }
+
+    /// Seeded defect: corrupting an indicator's guard coefficient breaks
+    /// the recorded big-M shape and is caught.
+    #[test]
+    fn corrupted_indicator_is_caught() {
+        let mut b = IlpBuilder::new();
+        let guard = b.binary("G", "g", 0.0);
+        let x = b.continuous("A", "x", 0.0, 10.0, 1.0);
+        b.indicator_le(guard, vec![(x, 1.0)], 2.0, 20.0);
+        let (mut model, meta) = b.into_parts();
+        assert_no_defects(&audit_model("intact", &model, &meta));
+        let row = meta.indicators[0].row;
+        for t in model.cons[row].terms.iter_mut() {
+            if t.0 == guard {
+                t.1 *= 0.5;
+            }
+        }
+        let rep = audit_model("seeded", &model, &meta);
+        assert!(
+            rep.of_kind(LintKind::Indicator).iter().any(|l| l.severity == Severity::Error),
+            "{rep}"
+        );
+    }
+
+    /// Seeded defect: an over-subscribed capacity row (forced load beyond
+    /// the cap) is certified infeasible before any solve.
+    #[test]
+    fn oversubscribed_capacity_row_is_caught() {
+        let mut b = IlpBuilder::new();
+        let u = b.binary("R", "u", 0.0);
+        let v = b.binary("R", "v", 0.0);
+        b.fix(u, 1.0);
+        b.fix(v, 1.0);
+        let cap = b.continuous("obj", "cap", 0.0, 5.0, 1.0);
+        b.sum_le_var(vec![(u, 4.0), (v, 4.0)], cap);
+        b.capacity_hint(vec![(4.0, vec![(u, 1.0)]), (4.0, vec![(v, 1.0)])], 5.0);
+        let (model, meta) = b.into_parts();
+        let rep = audit_model("seeded", &model, &meta);
+        assert!(
+            rep.of_kind(LintKind::CapacityOversubscribed)
+                .iter()
+                .any(|l| l.severity == Severity::Infeasible),
+            "{rep}"
+        );
+        assert_eq!(rep.error_count(), 0, "over-capacity is not a malformed encoding: {rep}");
+    }
+
+    /// Structural cut lints: an empty cut is an error, a box-excluding
+    /// cut only a warning (valid Gomory cuts may prove a subtree empty).
+    #[test]
+    fn cut_lints() {
+        let empty = Cut { terms: vec![], rhs: 0.0 };
+        let lints = audit_cut(&empty, &[], &[]);
+        assert!(lints.iter().any(|l| l.severity == Severity::Error));
+
+        let excluding = Cut { terms: vec![(VarId(0), 1.0)], rhs: -5.0 };
+        let lints = audit_cut(&excluding, &[0.0], &[1.0]);
+        assert!(lints
+            .iter()
+            .all(|l| l.kind == LintKind::CutShape && l.severity == Severity::Warning));
+        assert!(!lints.is_empty());
+    }
+
+    /// The deletion filter returns exactly the conflicting families, in
+    /// group vocabulary, and drops the irrelevant group entirely.
+    #[test]
+    fn iis_is_minimal_on_crafted_conflict() {
+        let mut b = IlpBuilder::new();
+        let x = b.binary("a", "x", 0.0);
+        let y = b.binary("b", "y", 0.0);
+        let z = b.binary("c", "z", 0.0);
+        b.fix(x, 1.0);
+        b.fix(y, 1.0);
+        b.le(vec![(x, 1.0), (y, 1.0)], 1.0); // the conflict
+        b.le(vec![(z, 1.0)], 1.0); // satisfiable, group `c` only
+        let (model, meta) = b.into_parts();
+        let e = explain_infeasible(&model, &meta.groups, Duration::from_secs(10))
+            .expect("infeasibility is provable instantly");
+        assert!(e.minimal);
+        assert!(e.families.contains(&"rows over `a`+`b`".to_string()), "{:?}", e.families);
+        assert!(e.families.contains(&"forced-on binaries in `a`".to_string()), "{:?}", e.families);
+        assert!(e.families.contains(&"forced-on binaries in `b`".to_string()), "{:?}", e.families);
+        assert!(
+            e.families.iter().all(|f| !f.contains("`c`")),
+            "irrelevant group survived: {:?}",
+            e.families
+        );
+        assert_eq!(e.families.len(), 3, "{}", e.render());
+    }
+}

@@ -800,6 +800,18 @@ fn root_cut_loop(
             break;
         }
 
+        // Audit every accepted cut row before it reaches the engine
+        // (debug builds / OLLA_AUDIT=1): a malformed cut silently
+        // corrupts every node solved after the append.
+        if crate::ilp::audit::enabled() {
+            for cut in &found {
+                crate::ilp::audit::enforce_cut_lints(
+                    "root cut loop",
+                    &crate::ilp::audit::audit_cut(cut, lb, ub),
+                );
+            }
+        }
+
         let mut lifted = snap.clone();
         for cut in &found {
             let terms: Vec<(usize, f64)> =
@@ -1193,6 +1205,16 @@ fn node_cut_round(
     found.truncate(NODE_CUTS_PER_NODE);
     if found.is_empty() {
         return None;
+    }
+
+    // Same audit as the root loop, against this node's bound box.
+    if crate::ilp::audit::enabled() {
+        for cut in &found {
+            crate::ilp::audit::enforce_cut_lints(
+                "node cut round",
+                &crate::ilp::audit::audit_cut(cut, &node.lb, &node.ub),
+            );
+        }
     }
 
     let mut lifted = snap.clone();

@@ -45,6 +45,41 @@ pub enum Pos {
     Fixed(f64),
 }
 
+/// One recorded big-M indicator row (see [`IlpBuilder::indicator_le`]):
+/// when `guard` is 0 the row must be vacuous over the variable box. The
+/// auditor ([`crate::ilp::audit`]) re-checks that shape after the build.
+#[derive(Debug, Clone, Copy)]
+pub struct IndicatorInfo {
+    /// The gating binary.
+    pub guard: VarId,
+    /// Row index of the indicator constraint.
+    pub row: usize,
+    /// The big-M the guard was multiplied by.
+    pub big_m: f64,
+}
+
+/// One recorded spill-implication row (see
+/// [`IlpBuilder::spill_indicator`]): `spill <= preserved`.
+#[derive(Debug, Clone, Copy)]
+pub struct SpillInfo {
+    /// The spill binary `S`.
+    pub spill: VarId,
+    /// The preservation binary it is dominated by.
+    pub preserved: VarId,
+    /// Row index of the implication.
+    pub row: usize,
+}
+
+/// One recorded variable-capacity row (see [`IlpBuilder::sum_le_var`] /
+/// [`IlpBuilder::resident_le_var`]): `sum(terms) - cap <= 0`.
+#[derive(Debug, Clone, Copy)]
+pub struct CapRowInfo {
+    /// The capacity variable carrying coefficient `-1`.
+    pub cap: VarId,
+    /// Row index of the accounting row.
+    pub row: usize,
+}
+
 /// Metadata extracted from a finished builder.
 #[derive(Debug, Clone, Default)]
 pub struct IlpMeta {
@@ -57,6 +92,12 @@ pub struct IlpMeta {
     /// gadgets (auto-registered by [`IlpBuilder::pair_no_overlap`] when
     /// both sizes are positive).
     pub cut_hints: CutHints,
+    /// Big-M indicator rows, for the auditor's shape checks.
+    pub indicators: Vec<IndicatorInfo>,
+    /// Spill-implication rows, for the auditor's shape checks.
+    pub spills: Vec<SpillInfo>,
+    /// Variable-capacity accounting rows, for the auditor's shape checks.
+    pub cap_rows: Vec<CapRowInfo>,
 }
 
 /// Incremental model builder with named groups and formulation helpers.
@@ -182,8 +223,10 @@ impl IlpBuilder {
 
     /// `sum(terms) <= cap` for a variable cap (eq. 8/13 peak accounting).
     pub fn sum_le_var(&mut self, mut terms: Vec<(VarId, f64)>, cap: VarId) {
+        let row = self.model.num_cons();
         terms.push((cap, -1.0));
         self.model.constraint(terms, Cmp::Le, 0.0);
+        self.meta.cap_rows.push(CapRowInfo { cap, row });
     }
 
     /// Indicator row: `sum(terms) <= rhs` enforced only when `guard = 1`
@@ -195,8 +238,10 @@ impl IlpBuilder {
         rhs: f64,
         big_m: f64,
     ) {
+        let row = self.model.num_cons();
         terms.push((guard, big_m));
         self.model.constraint(terms, Cmp::Le, rhs + big_m);
+        self.meta.indicators.push(IndicatorInfo { guard, row, big_m });
     }
 
     /// The eq. 6/7a/7b pair gadget: two ordering binaries `below`/`above`
@@ -282,7 +327,9 @@ impl IlpBuilder {
         uses: impl IntoIterator<Item = VarId>,
     ) -> VarId {
         let s = self.binary(group, name, cost);
+        let row = self.model.num_cons();
         self.implies(s, preserved);
+        self.meta.spills.push(SpillInfo { spill: s, preserved, row });
         for u in uses {
             self.at_most_one([s, u]);
         }
@@ -352,6 +399,44 @@ impl IlpBuilder {
     /// Read-only view of the model under construction.
     pub fn model(&self) -> &Model {
         &self.model
+    }
+
+    /// Merge externally known variable groups into this builder's
+    /// metadata. Used by the joint formulation, which wraps an already
+    /// built scheduling model via [`IlpBuilder::from_model`] and would
+    /// otherwise lose the `C`/`P`/`S` group names the auditor and the
+    /// IIS explainer report in.
+    pub fn adopt_groups(&mut self, groups: &HashMap<String, Vec<VarId>>) {
+        for (name, vars) in groups {
+            self.meta.groups.entry(name.clone()).or_default().extend(vars.iter().copied());
+        }
+    }
+
+    /// Run the static model auditor (see [`crate::ilp::audit`]) over the
+    /// model built so far.
+    pub fn audit(&self, context: &str) -> crate::ilp::audit::AuditReport {
+        crate::ilp::audit::audit_model(context, &self.model, &self.meta)
+    }
+
+    /// Audit-and-enforce at a build site: no-op unless the auditor is
+    /// [`enabled`](crate::ilp::audit::enabled) (debug builds, or
+    /// `OLLA_AUDIT=1`) or an `olla audit` collection window is open
+    /// (see [`crate::ilp::audit::begin_collection`]). Malformed-encoding
+    /// findings panic in debug builds; see
+    /// [`crate::ilp::audit::enforce_report`].
+    pub fn debug_audit(&self, context: &str) {
+        use crate::ilp::audit;
+        let collecting = audit::collecting();
+        if !audit::enabled() && !collecting {
+            return;
+        }
+        let report = self.audit(context);
+        if collecting {
+            audit::collect(report.clone());
+        }
+        if audit::enabled() {
+            audit::enforce_report(&report);
+        }
     }
 
     /// Finish: the model plus group/pair metadata.

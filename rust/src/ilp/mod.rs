@@ -34,6 +34,12 @@
 //!   the eq. 9/14/15 formulations in [`crate::olla`]; it doubles as the
 //!   [`cuts::CutHints`] registrar so separators see model structure
 //!   instead of raw coefficients;
+//! * [`audit`] — the static model auditor: structural and semantic lints
+//!   over every built model (dangling columns, duplicate rows, broken
+//!   pair/indicator gadgets, certified-infeasible capacity rows) run at
+//!   the build sites under `debug_assertions` / `OLLA_AUDIT=1`, plus the
+//!   deletion-filter IIS explainer that names the conflicting constraint
+//!   groups behind an `Infeasible` verdict;
 //! * [`patch`] — [`patch::PatchableModel`], the incremental re-solve
 //!   layer: in-place [`CscMatrix`](model::CscMatrix) edits (add/remove
 //!   rows and columns, bound/cost/rhs changes) plus dual-simplex
@@ -44,6 +50,7 @@
 //! (`ilp::dense`) so property tests can assert the sparse and dense paths
 //! agree.
 
+pub mod audit;
 pub mod basis;
 pub mod bnb;
 pub mod builder;
@@ -55,6 +62,7 @@ pub mod patch;
 pub mod presolve;
 pub mod simplex;
 
+pub use audit::{audit_model, explain_infeasible, AuditReport, InfeasibilityExplanation, Lint};
 pub use bnb::{
     solve, IncumbentCallback, SearchOrder, SolveControl, SolveOptions, SolveProgress,
 };

@@ -32,6 +32,14 @@
 //! lifecycle of a solve, and `README.md` for build/run/bench quickstarts.
 
 #![warn(missing_docs)]
+// The default build contains no unsafe code at all, and the compiler
+// enforces that. The `pjrt` feature needs exactly two `from_raw_parts`
+// casts to hand host slices to the PJRT FFI (`runtime/pjrt.rs`); those
+// opt out item-by-item with `#[allow(unsafe_code)]` + SAFETY comments,
+// which `forbid` would reject — hence the feature-conditional downgrade
+// to `deny`.
+#![cfg_attr(not(feature = "pjrt"), forbid(unsafe_code))]
+#![cfg_attr(feature = "pjrt", deny(unsafe_code))]
 
 
 

@@ -9,6 +9,7 @@
 //!   olla inspect --model NAME [--dot F]   dump graph stats / DOT
 //!   olla plan-artifacts [--artifacts D]   plan memory for the real jaxpr graph
 //!   olla train [--steps N] [..]           end-to-end PJRT training run
+//!   olla audit <model> [..]               lint every ILP the pipeline builds
 //!
 //! (clap is not vendored in this offline image; flags are parsed by hand.)
 
@@ -38,6 +39,7 @@ fn main() {
         "inspect" => cmd_inspect(rest),
         "plan-artifacts" => cmd_plan_artifacts(rest),
         "train" => cmd_train(rest),
+        "audit" => cmd_audit(rest),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -116,7 +118,23 @@ COMMANDS:
       --artifacts DIR         (default ./artifacts)
       --steps N               training steps (default 100)
       --log-every N           loss log cadence (default 10)
-      --seed N                init/data seed (default 0)",
+      --seed N                init/data seed (default 0)
+  audit                       static lint pass over every ILP the pipeline
+                              builds for one model (no solving needed for the
+                              lints; see docs/FORMULATION.md §Model audits)
+      <model> | --model NAME  zoo model, positionally or by flag
+      --batch N               batch size (default 1)
+      --scale full|reduced    depth scale (default reduced)
+      --time-limit SECS       per-phase cap for the pipeline drive (default 10)
+      --topology SPEC         audit the tiered-region placement models too
+      --device-cap BYTES      shorthand for a device+host topology
+      --sched-device-cap B    audit the capacity-aware scheduling model; when
+                              the cap certifies infeasibility, a deletion-
+                              filter IIS names the conflicting groups
+      --recompute-penalty C   off-device cost per byte-step (default 0.05)
+      --iis-secs SECS         per-probe limit for the IIS filter (default 2)
+      --joint                 audit the joint (program 9) oracle model as well
+                              (automatic for graphs of up to 12 nodes)",
         olla::version()
     );
 }
@@ -312,6 +330,123 @@ fn cmd_optimize(rest: &[String]) -> anyhow::Result<()> {
         human_duration(Duration::from_secs_f64(plan.schedule.solve_secs)),
         human_duration(Duration::from_secs_f64(plan.placement.solve_secs)),
     );
+    Ok(())
+}
+
+/// `olla audit <model>`: build the full model grid the pipeline would
+/// build for one zoo graph and print the static lint report of every
+/// model ([`olla::ilp::audit`]), without relying on any solve succeeding.
+/// The scheduling models are built directly so the model plus its named
+/// variable groups stay in hand for the deletion-filter IIS explainer;
+/// the placement (and, under a topology, tiered-region / spill-segment)
+/// models are assembled deep inside the planner, so the real pipeline is
+/// driven with a collection window open and the build sites deposit
+/// their own reports.
+fn cmd_audit(rest: &[String]) -> anyhow::Result<()> {
+    use olla::ilp::audit;
+    let model = rest
+        .first()
+        .filter(|a| !a.starts_with("--"))
+        .cloned()
+        .or_else(|| flag(rest, "--model"))
+        .ok_or_else(|| anyhow::anyhow!("usage: olla audit <model> [flags] (see `olla help`)"))?;
+    let batch: usize = flag(rest, "--batch").and_then(|s| s.parse().ok()).unwrap_or(1);
+    let scale = parse_scale(rest);
+    let cap = parse_secs(rest, "--time-limit", 10.0);
+    let iis_cap = parse_secs(rest, "--iis-secs", 2.0);
+    let g = build_graph(&model, batch, scale)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
+    let topology = parse_topology(rest)?;
+    let sched_topology = parse_sched_topology(rest)?;
+    println!(
+        "auditing {model} (batch {batch}, {scale:?}): {} nodes, {} edges",
+        g.num_nodes(),
+        g.num_edges()
+    );
+
+    audit::begin_collection();
+
+    // Scheduling models, built directly: uncapped eq. 14 always, the
+    // capacity-aware extension when a scheduling cap was requested.
+    let sched = olla::olla::scheduling::build_scheduling_model(&g, None);
+    let capped = sched_topology
+        .as_ref()
+        .map(|(topo, pen)| olla::olla::scheduling::build_capacity_model(&g, None, topo, *pen));
+
+    // Drive the production pipeline for the placement-side models.
+    let mut opts = PlannerOptions {
+        schedule: ScheduleOptions { time_limit: cap, ..Default::default() },
+        placement: PlacementOptions { time_limit: cap, ..Default::default() },
+        ..Default::default()
+    };
+    if let Some(topo) = &topology {
+        opts.placement.topology = topo.clone();
+    }
+    apply_sched_topology(&mut opts, &sched_topology, topology.is_some());
+    let plan = olla::olla::optimize(&g, &opts);
+    println!(
+        "pipeline drove to arena {} (schedule {}, placement {:?})",
+        human_bytes(plan.arena_size),
+        plan.schedule.status,
+        plan.placement.method,
+    );
+    if rest.iter().any(|a| a == "--joint") || g.num_nodes() <= 12 {
+        let _ = olla::olla::joint::optimize_joint(&g, cap);
+    }
+
+    let reports = audit::end_collection();
+    let mut errors = 0usize;
+    let mut infeasibilities = 0usize;
+    let mut warnings = 0usize;
+    let mut seen_clean: std::collections::BTreeSet<&str> = std::collections::BTreeSet::new();
+    for r in &reports {
+        errors += r.error_count();
+        infeasibilities += r.infeasible_count();
+        warnings += r.warning_count();
+        // Decomposed solves re-build the same site per component; one
+        // clean verdict per context is enough, findings always print.
+        if r.is_clean() && !seen_clean.insert(r.context.as_str()) {
+            continue;
+        }
+        print!("{r}");
+    }
+    println!(
+        "audit: {} models, {errors} errors, {infeasibilities} infeasibilities, {warnings} warnings",
+        reports.len()
+    );
+    if errors == 0 {
+        println!("model audit clean: no malformed encodings");
+    }
+
+    // Name the conflict behind an infeasible scheduling model. The capped
+    // model is probed even without a static certificate — a cap can be
+    // unsatisfiable for reasons no linear-scan lint sees; `explain_infeasible`
+    // quietly returns `None` when the probe finds the model feasible.
+    let mut iis_targets = vec![(&sched, "scheduling (eq. 14)", false)];
+    if let Some(sm) = capped.as_ref() {
+        iis_targets.push((sm, "scheduling (capped eq. 14)", true));
+    }
+    for (sm, ctx, probe_anyway) in iis_targets {
+        let certified = reports.iter().any(|r| r.context == ctx && r.infeasible_count() > 0);
+        if !certified && !probe_anyway {
+            continue;
+        }
+        match audit::explain_infeasible(&sm.model, &sm.groups, iis_cap) {
+            Some(e) => {
+                println!("infeasible [{ctx}]: minimal conflicting groups: {}", e.render());
+            }
+            None if certified => println!(
+                "infeasible [{ctx}]: certified by the lint pass, but the deletion \
+                 filter could not re-prove it within --iis-secs {:.1}",
+                iis_cap.as_secs_f64()
+            ),
+            None => {}
+        }
+    }
+
+    if errors > 0 {
+        return Err(anyhow::anyhow!("{errors} malformed-encoding findings (see report above)"));
+    }
     Ok(())
 }
 

@@ -126,6 +126,11 @@ pub fn optimize_joint_controlled(
             }
         }
     }
+    // The joint builder wrapped an already built model, so adopt the
+    // scheduling groups (`C`, `P`, `obj`) before auditing: the lint pass
+    // and the IIS explainer both report in group vocabulary.
+    b.adopt_groups(&sm.groups);
+    b.debug_audit("joint (program 9)");
     let (model, meta) = b.into_parts();
     sm.model = model;
     // Cut hints for the joint solve: the scheduling half's capacity rows
@@ -197,6 +202,14 @@ pub fn optimize_joint_controlled(
         let arena = sol.objective.round() as u64;
         (order, offsets, arena)
     } else {
+        if sol.status == SolveStatus::Infeasible {
+            ilp::audit::report_infeasible(
+                "optimize_joint",
+                &sm.model,
+                &meta.groups,
+                Duration::from_secs(2),
+            );
+        }
         let order = order0;
         let trace = simulate(g, &order);
         let items = crate::alloc::items_from_trace(g, &trace);

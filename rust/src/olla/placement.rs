@@ -640,6 +640,7 @@ fn optimize_placement_once(
         }
     }
     let model_size = (b.num_vars(), b.num_cons());
+    b.debug_audit("placement (eq. 15)");
     let (m, meta) = b.into_parts();
 
     // Warm start from the heuristic placement.
@@ -681,6 +682,14 @@ fn optimize_placement_once(
             (heur_offsets, heur_size, PlacementMethod::HeuristicFallback)
         }
     } else {
+        if sol.status == SolveStatus::Infeasible {
+            ilp::audit::report_infeasible(
+                "optimize_placement",
+                &m,
+                &meta.groups,
+                Duration::from_secs(2),
+            );
+        }
         (heur_offsets, heur_size, PlacementMethod::HeuristicFallback)
     };
     incumbents.extend(sol.incumbents.iter().map(|&(t, o)| (watch.secs().min(t + 0.0), o)));
@@ -925,6 +934,7 @@ fn optimize_placement_regions(
         }
     }
     let model_size = (b.num_vars(), b.num_cons());
+    b.debug_audit("placement (tiered regions)");
     let (m, meta) = b.into_parts();
 
     // Warm start straight from the greedy incumbent.
@@ -1009,6 +1019,13 @@ fn optimize_placement_regions(
                 }
             }
         }
+    } else if sol.status == SolveStatus::Infeasible {
+        ilp::audit::report_infeasible(
+            "optimize_placement_regions",
+            &m,
+            &meta.groups,
+            Duration::from_secs(2),
+        );
     }
     incumbents.extend(sol.incumbents.iter().copied());
     out.incumbents = incumbents;
@@ -1237,6 +1254,7 @@ fn optimize_placement_segments(
         }
     }
     let model_size = (b.num_vars(), b.num_cons());
+    b.debug_audit("placement (spill segments)");
     let (m, meta) = b.into_parts();
 
     // Warm start straight from the segment-aware greedy incumbent —
@@ -1373,6 +1391,13 @@ fn optimize_placement_segments(
                 }
             }
         }
+    } else if sol.status == SolveStatus::Infeasible {
+        ilp::audit::report_infeasible(
+            "optimize_placement_segments",
+            &m,
+            &meta.groups,
+            Duration::from_secs(2),
+        );
     }
     incumbents.extend(sol.incumbents.iter().copied());
     out.incumbents = incumbents;

@@ -205,6 +205,10 @@ pub struct SchedulingModel {
     /// Cut hints the builder registered (capacity rows under a capped
     /// topology), forwarded to the solver's separators.
     pub hints: CutHints,
+    /// Named variable groups (`C`, `P`, `S`, `obj`) the builder recorded,
+    /// kept for the auditor's IIS explainer and for the joint
+    /// formulation, which re-wraps this model and adopts them.
+    pub groups: HashMap<String, Vec<VarId>>,
 }
 
 /// Result of the scheduling optimization.
@@ -437,8 +441,22 @@ pub fn build_capacity_model(
         }
     }
 
+    b.debug_audit(match device_cap {
+        Some(_) => "scheduling (capped eq. 14)",
+        None => "scheduling (eq. 14)",
+    });
     let (model, meta) = b.into_parts();
-    SchedulingModel { model, spans, c, p, s, device_cap, peak, hints: meta.cut_hints }
+    SchedulingModel {
+        model,
+        spans,
+        c,
+        p,
+        s,
+        device_cap,
+        peak,
+        hints: meta.cut_hints,
+        groups: meta.groups,
+    }
 }
 
 /// Build a feasible assignment from per-node creation timesteps. Times must
@@ -969,6 +987,16 @@ pub fn optimize_schedule_anytime(
         };
         (order, ilp_peak, spills, trace)
     } else {
+        // Explain a proven-infeasible model in the builder's own group
+        // vocabulary before falling back (debug builds / OLLA_AUDIT=1).
+        if sol.status == SolveStatus::Infeasible {
+            ilp::audit::report_infeasible(
+                "optimize_schedule",
+                &sm.model,
+                &sm.groups,
+                Duration::from_secs(2),
+            );
+        }
         // Paper protocol: fall back to the best heuristic order.
         let o = greedy_order(g);
         let trace = simulate(g, &o);

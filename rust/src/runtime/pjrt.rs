@@ -56,14 +56,24 @@ impl Executable {
 }
 
 /// Build an f32 literal from a host slice.
+#[allow(unsafe_code)]
 pub fn literal_f32(data: &[f32], dims: &[usize]) -> anyhow::Result<Literal> {
+    // SAFETY: viewing `&[f32]` as `&[u8]`. f32 is plain-old-data with no
+    // invalid bit patterns as bytes; the byte length `data.len() * 4`
+    // exactly covers the source allocation (`size_of::<f32>() == 4`);
+    // u8's alignment of 1 is satisfied by any pointer; the borrow of
+    // `data` outlives the view, which is consumed before returning.
     let bytes: &[u8] =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     Ok(Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, bytes)?)
 }
 
 /// Build an i32 literal from a host slice.
+#[allow(unsafe_code)]
 pub fn literal_i32(data: &[i32], dims: &[usize]) -> anyhow::Result<Literal> {
+    // SAFETY: as in `literal_f32` — i32 is plain-old-data, the length
+    // `data.len() * 4` matches the allocation exactly, u8 alignment is 1,
+    // and the view does not outlive the borrowed slice.
     let bytes: &[u8] =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     Ok(Literal::create_from_shape_and_untyped_data(ElementType::S32, dims, bytes)?)
